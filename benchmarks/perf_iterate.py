@@ -1,0 +1,105 @@
+"""§Perf hillclimb driver: run a (cell, variant) dry-run in a subprocess and
+report the three roofline terms vs. the baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate --arch granite-moe-3b-a800m \
+        --shape train_4k --mesh single --variant no_fsdp,mb=1
+
+Variants (env-driven, see launch/dryrun.py):
+    no_fsdp          REPRO_NO_FSDP=1      no ZeRO weight sharding (replicate over data)
+    no_sp            REPRO_NO_SP=1        no sequence-parallel residual hints
+    no_remat         flags.remat=False
+    mb=N             gradient-accumulation microbatches
+    loss_chunks=N    streamed-CE chunk count
+    kvq=int8         int8 KV cache (decode cells)
+Results append to results/perf_iterations.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.roofline.analyze import from_record
+
+
+def run_variant(arch: str, shape: str, mesh: str, variant: str,
+                timeout: int = 2400) -> dict:
+    out = pathlib.Path(f"results/perf/{arch}.{shape}.{mesh}."
+                       f"{variant.replace(',', '+').replace('=', '') or 'baseline'}.json")
+    out.parent.mkdir(parents=True, exist_ok=True)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_VARIANT"] = variant
+    if "no_fsdp" in variant:
+        env["REPRO_NO_FSDP"] = "1"
+    if "no_sp" in variant:
+        env["REPRO_NO_SP"] = "1"
+    if "no_moe_tp" in variant:
+        env["REPRO_NO_MOE_TP"] = "1"
+    if "repl_unembed" in variant:
+        env["REPRO_REPLICATE_UNEMBED"] = "1"
+    for tok in variant.split(","):
+        if tok.startswith("attn_chunk="):
+            env["REPRO_ATTN_CHUNK"] = tok.split("=")[1]
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(out)]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    if not out.exists():
+        raise RuntimeError((proc.stderr or proc.stdout)[-2000:])
+    return json.loads(out.read_text())
+
+
+def report(rec: dict, base: dict = None) -> str:
+    t = from_record(rec)
+    line = (f"comp={t.t_compute:8.3f}s mem={t.t_memory:8.3f}s "
+            f"coll={t.t_collective:8.3f}s dom={t.dominant:10s} "
+            f"rf={100*t.roofline_fraction:6.2f}% "
+            f"peak={rec['memory']['peak_projected_tpu']/2**30:5.1f}GiB "
+            f"fits={rec.get('fits_hbm')}")
+    if base is not None:
+        tb = from_record(base)
+        dom = tb.dominant
+        attr = {"compute": ("t_compute",), "memory": ("t_memory",),
+                "collective": ("t_collective",)}[dom][0]
+        before, after = getattr(tb, attr), getattr(t, attr)
+        line += (f"  | dominant({dom}): {before:.3f}s -> {after:.3f}s "
+                 f"({before/max(after,1e-12):.2f}x)")
+    return line
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--baseline", default=None,
+                    help="path to baseline cell JSON for delta reporting")
+    args = ap.parse_args()
+    base = None
+    bp = args.baseline or f"results/dryrun/cells/{args.arch}.{args.shape}.{args.mesh}.json"
+    if pathlib.Path(bp).exists():
+        base = json.loads(pathlib.Path(bp).read_text())
+    rec = run_variant(args.arch, args.shape, args.mesh, args.variant)
+    tag = args.variant or "baseline"
+    print(f"[{args.arch} {args.shape} {args.mesh}] {tag}")
+    print("  " + report(rec, base if args.variant else None))
+    log = pathlib.Path("results/perf_iterations.json")
+    hist = json.loads(log.read_text()) if log.exists() else []
+    hist.append({"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                 "variant": tag, "record": {k: rec[k] for k in
+                                            ("cost", "collectives", "memory",
+                                             "model_flops", "n_devices")
+                                            if k in rec}})
+    log.write_text(json.dumps(hist, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only l2|fa|roofline|ablations|dryrun]
+
+Prints per-kernel tables and a ``name,us_per_call,derived`` CSV summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["l2", "fa", "roofline", "ablations", "dryrun"])
+    args = ap.parse_args()
+    csv_rows = []
+
+    if args.only in (None, "l2"):
+        from benchmarks.kernelbench_l2 import run as run_l2
+        summary = run_l2()
+        for r in summary.results:
+            csv_rows.append((r.name, r.optimized_us,
+                             f"x{r.speedup_vs_eager:.2f}_vs_eager"))
+
+    if args.only in (None, "fa"):
+        from benchmarks.flash_attention import run as run_fa
+        fa = run_fa(csv_rows=csv_rows)
+
+    if args.only in (None, "roofline"):
+        from benchmarks.kernel_roofline import run as run_rl
+        run_rl(max_problems=12 if args.only is None else None)
+
+    if args.only in (None, "ablations"):
+        from benchmarks.ablations import run as run_ab
+        run_ab()
+
+    if args.only == "dryrun":
+        from repro.roofline.report import print_report
+        print_report(pathlib.Path("results/dryrun/all.json"))
+
+    print("\n== CSV summary (name,us_per_call,derived) ==")
+    for name, us, derived in csv_rows:
+        if isinstance(us, tuple):
+            name, us, derived = us
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.aibench.spec import ProblemSpec, Variant, load_specs, safe_eval
+from repro.aibench.suite import BUILDERS, build_program, naive_schedule
+from repro.aibench.runner import KernelRunner, SuiteRunner, SuiteSummary
+from repro.aibench.compare import compare_programs, set_all_seeds
+from repro.aibench.timing import time_fn
+from repro.aibench.csvlog import CSVLogger
+
+__all__ = [
+    "ProblemSpec", "Variant", "load_specs", "safe_eval", "BUILDERS",
+    "build_program", "naive_schedule", "KernelRunner", "SuiteRunner",
+    "SuiteSummary", "compare_programs", "set_all_seeds", "time_fn",
+    "CSVLogger",
+]

@@ -1,0 +1,92 @@
+"""Standalone benchmark_compare (paper §V-A-f): validates an optimized
+program against the reference with seeded weights, cloned inputs and
+structured mismatch diagnostics. The pipeline's verifier embeds the same
+logic; this module is the user-facing entry point AI Bench exposes."""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import run_program
+from repro.ir.interpreter import evaluate, make_inputs, make_params
+from repro.ir.schedule import KernelProgram
+
+
+def set_all_seeds(seed: int = 0):
+    """Seed every RNG domain (numpy, python; jax keys are explicit)."""
+    np.random.seed(seed)
+    random.seed(seed)
+    return jax.random.PRNGKey(seed)
+
+
+@dataclasses.dataclass
+class ComparisonResult:
+    correct: bool
+    max_abs_diff: float
+    mean_diff: float
+    max_rel_diff: float
+    exceed_count: int
+    exceed_pct: float
+    nan_in_output: bool
+    inf_introduced: bool
+    feedback: str
+
+
+def compare_programs(reference: KernelProgram, optimized: KernelProgram,
+                     rtol: float = 1e-2, atol: float = 1e-5,
+                     seed: int = 0, use_pallas: bool = True) -> ComparisonResult:
+    set_all_seeds(seed)
+    inputs = make_inputs(reference.graph, seed=seed + 1)
+    params = make_params(reference.graph, seed=seed)
+    # weight copy: state_dict-style by name; shape-matched positional fallback
+    opt_params = {}
+    opt_names = [p.name for p in optimized.graph.params()]
+    for name in opt_names:
+        if name in params:
+            opt_params[name] = params[name]
+    if len(opt_params) != len(opt_names):
+        ref_left = [v for k, v in params.items() if k not in opt_params]
+        for name in opt_names:
+            if name in opt_params:
+                continue
+            shape = optimized.graph.node(name).shape
+            for i, v in enumerate(ref_left):
+                if v.shape == shape:
+                    opt_params[name] = ref_left.pop(i)
+                    break
+    # cloned inputs guard against in-place mutation
+    ref_out = evaluate(reference.graph, {k: jnp.array(v) for k, v in inputs.items()},
+                       params)
+    opt_out = run_program(optimized, {k: jnp.array(v) for k, v in inputs.items()},
+                          opt_params, use_pallas=use_pallas)
+
+    worst = None
+    nan_found = False
+    inf_introduced = False
+    for (rk, rv), (ok_, ov) in zip(ref_out.items(), opt_out.items()):
+        rv = np.asarray(rv, np.float64)
+        ov = np.asarray(ov, np.float64)
+        nan_found |= bool(np.isnan(ov).any())
+        inf_introduced |= bool(np.isinf(ov).any() and not np.isinf(rv).any())
+        adiff = np.abs(ov - rv)
+        rdiff = adiff / np.maximum(np.abs(rv), 1e-12)
+        exceed = adiff > (atol + rtol * np.abs(rv))
+        stats = (float(adiff.max()), float(adiff.mean()), float(rdiff.max()),
+                 int(exceed.sum()), 100.0 * float(exceed.mean()))
+        if worst is None or stats[0] > worst[0]:
+            worst = stats
+    correct = (not nan_found and not inf_introduced
+               and worst is not None and worst[3] == 0)
+    feedback = ("PASS" if correct else
+                f"max_abs={worst[0]:.3e} mean={worst[1]:.3e} "
+                f"max_rel={worst[2]:.3e} exceed={worst[3]} ({worst[4]:.2f}%)"
+                + (" NaN!" if nan_found else "")
+                + (" Inf introduced!" if inf_introduced else ""))
+    return ComparisonResult(correct, worst[0], worst[1], worst[2], worst[3],
+                            worst[4], nan_found, inf_introduced, feedback)

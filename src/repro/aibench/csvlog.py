@@ -1,0 +1,44 @@
+"""CSV result logging (paper §V-A-g): one row per variant execution, with
+REPRO_BENCH_*-prefixed environment variables captured as extra columns."""
+
+from __future__ import annotations
+
+import csv
+import json
+import os
+import pathlib
+from typing import Dict, Optional
+
+ENV_PREFIX = "REPRO_BENCH_"
+
+
+class CSVLogger:
+    def __init__(self, path: pathlib.Path):
+        self.path = pathlib.Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fieldnames = None
+
+    def _env_cols(self) -> Dict[str, str]:
+        return {k.lower(): v for k, v in os.environ.items()
+                if k.startswith(ENV_PREFIX)}
+
+    def log(self, *, kernel: str, backend: str, level: str = "L2",
+            flops: Optional[float] = None, tflops: Optional[float] = None,
+            bytes_: Optional[float] = None, gbps: Optional[float] = None,
+            time_us: Optional[float] = None, dims: Optional[Dict] = None,
+            note: str = "", **extra):
+        row = {
+            "kernel": kernel, "backend": backend, "level": level,
+            "flops": flops, "tflops": tflops, "bytes": bytes_, "gbps": gbps,
+            "time_us": time_us,
+            "dims": json.dumps(dims or {}, sort_keys=True),
+            "note": note,
+        }
+        row.update(extra)
+        row.update(self._env_cols())
+        exists = self.path.exists() and self.path.stat().st_size > 0
+        with self.path.open("a", newline="") as f:
+            writer = csv.DictWriter(f, fieldnames=list(row))
+            if not exists:
+                writer.writeheader()
+            writer.writerow(row)

@@ -1,0 +1,169 @@
+"""Kernel runners (paper §V-A integration): KernelRunner executes one
+problem spec end to end — builds the three baselines and the pipeline's
+optimized program, derives modeled TPU timings + TFLOPS for every backend,
+validates correctness, measures CPU wall-clock at ci shapes as a secondary
+signal, and logs CSV rows. SuiteRunner batches the full suite and aggregates
+the paper's headline metrics (geomean speedup, %improved, >5x set)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.aibench.compare import compare_programs
+from repro.aibench.csvlog import CSVLogger
+from repro.aibench.spec import ProblemSpec, load_specs
+from repro.aibench.suite import build_program
+from repro.aibench.timing import time_fn
+from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.hw.specs import TPU_V5E
+from repro.ir.cost import CostModel
+from repro.ir.interpreter import make_inputs, make_params
+from repro.core.executor import run_program
+
+
+@dataclasses.dataclass
+class KernelResult:
+    name: str
+    family: str
+    eager_us: float
+    compiled_us: float
+    naive_us: float
+    optimized_us: float
+    correct: bool
+    stage_log: List
+    tflops_optimized: float
+
+    @property
+    def speedup_vs_eager(self) -> float:
+        return self.eager_us / self.optimized_us
+
+    @property
+    def speedup_vs_best_baseline(self) -> float:
+        return min(self.eager_us, self.compiled_us) / self.optimized_us
+
+    @property
+    def speedup_vs_naive(self) -> float:
+        return self.naive_us / self.optimized_us
+
+
+class KernelRunner:
+    def __init__(self, pipeline: Optional[ForgePipeline] = None,
+                 logger: Optional[CSVLogger] = None,
+                 measure_wallclock: bool = False):
+        self.pipeline = pipeline or ForgePipeline()
+        self.cost = CostModel(self.pipeline.spec)
+        self.logger = logger
+        self.measure_wallclock = measure_wallclock
+
+    def run(self, spec: ProblemSpec) -> KernelResult:
+        eager = build_program(spec.builder, spec.dims("bench"), "eager",
+                              meta=spec.meta)
+        compiled = build_program(spec.builder, spec.dims("bench"), "compiled",
+                                 meta=spec.meta)
+        naive_ci = build_program(spec.builder, spec.dims("ci"), "naive",
+                                 meta=spec.meta)
+        naive_bench = build_program(spec.builder, spec.dims("bench"), "naive",
+                                    meta=spec.meta)
+
+        res: PipelineResult = self.pipeline.optimize(
+            spec.name, naive_ci, naive_bench, tags=tuple(spec.tags),
+            target_dtype=spec.target_dtype, rtol=spec.rtol, atol=spec.atol,
+            meta=spec.meta)
+
+        cmp_res = compare_programs(
+            build_program(spec.builder, spec.dims("ci"), "eager", meta=spec.meta),
+            res.ci_program, rtol=spec.rtol, atol=spec.atol)
+
+        t_eager = self.cost.program_time(eager)
+        t_compiled = self.cost.program_time(compiled)
+        t_naive = self.cost.program_time(naive_bench)
+        t_opt = self.cost.program_time(res.bench_program)
+        opt_cost = self.cost.program_cost(res.bench_program)
+
+        result = KernelResult(
+            name=spec.name, family=spec.family,
+            eager_us=t_eager * 1e6, compiled_us=t_compiled * 1e6,
+            naive_us=t_naive * 1e6, optimized_us=t_opt * 1e6,
+            correct=cmp_res.correct, stage_log=res.stage_records,
+            tflops_optimized=opt_cost.tflops_effective)
+
+        if self.logger:
+            flops = spec.flops("bench") or res.bench_program.original_flops
+            for backend, us in (("pytorch", result.eager_us),
+                                ("pytorch-compile", result.compiled_us),
+                                ("triton-unoptimized", result.naive_us),
+                                ("triton-optimized", result.optimized_us)):
+                self.logger.log(kernel=spec.name, backend=backend,
+                                flops=flops, tflops=flops / (us * 1e6),
+                                time_us=us, dims=spec.dims("bench"),
+                                note=f"correct={cmp_res.correct}")
+        if self.measure_wallclock:
+            ci_in = make_inputs(res.ci_program.graph, seed=1)
+            ci_par = make_params(res.ci_program.graph, seed=0)
+            wc = time_fn(lambda: run_program(res.ci_program, ci_in, ci_par,
+                                             use_pallas=False),
+                         warmup=2, iters=5)
+            if self.logger:
+                self.logger.log(kernel=spec.name, backend="ci-wallclock-cpu",
+                                time_us=wc["mean_us"], dims=spec.dims("ci"))
+        return result
+
+
+@dataclasses.dataclass
+class SuiteSummary:
+    results: List[KernelResult]
+
+    def _geomean(self, vals: List[float]) -> float:
+        vals = [max(v, 1e-9) for v in vals]
+        return math.exp(sum(math.log(v) for v in vals) / len(vals)) if vals else 0.0
+
+    @property
+    def geomean_vs_eager(self) -> float:
+        return self._geomean([r.speedup_vs_eager for r in self.results])
+
+    @property
+    def geomean_vs_best(self) -> float:
+        return self._geomean([r.speedup_vs_best_baseline for r in self.results])
+
+    @property
+    def pct_improved(self) -> float:
+        n = sum(1 for r in self.results if r.speedup_vs_eager > 1.0)
+        return 100.0 * n / len(self.results) if self.results else 0.0
+
+    @property
+    def over_5x(self) -> List[KernelResult]:
+        return [r for r in self.results if r.speedup_vs_best_baseline > 5.0]
+
+    @property
+    def all_correct(self) -> bool:
+        return all(r.correct for r in self.results)
+
+
+class SuiteRunner:
+    def __init__(self, pipeline: Optional[ForgePipeline] = None,
+                 csv_path: Optional[pathlib.Path] = None,
+                 families: Optional[List[str]] = None):
+        logger = CSVLogger(csv_path) if csv_path else None
+        self.runner = KernelRunner(pipeline, logger)
+        self.families = families
+
+    def run(self, specs: Optional[List[ProblemSpec]] = None,
+            verbose: bool = True) -> SuiteSummary:
+        specs = specs or load_specs()
+        if self.families:
+            specs = [s for s in specs if s.family in self.families]
+        results = []
+        for spec in specs:
+            r = self.runner.run(spec)
+            results.append(r)
+            if verbose:
+                print(f"  {r.name:28s} [{r.family:7s}] eager={r.eager_us:9.1f}us "
+                      f"compile={r.compiled_us:9.1f}us naive={r.naive_us:10.1f}us "
+                      f"-> opt={r.optimized_us:9.1f}us  "
+                      f"x{r.speedup_vs_eager:7.2f} vs eager  "
+                      f"x{r.speedup_vs_best_baseline:6.2f} vs best  "
+                      f"correct={r.correct}")
+        return SuiteSummary(results)

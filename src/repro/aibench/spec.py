@@ -1,0 +1,107 @@
+"""AI Bench problem specifications (paper §V-A-b).
+
+Problems are declared in YAML with symbolic dimensions, per-variant bindings
+(``ci`` for fast validation, ``bench`` for deployment shapes), FLOP / byte
+formulas evaluated by a safe AST evaluator (only + - * / ** and names), dtypes
+and tolerances. The graph *builder* is referenced by name and resolved from
+the suite registry — specs describe the contract, builders the computation.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import operator
+import pathlib
+from typing import Any, Dict, List, Optional
+
+import yaml
+
+_BINOPS = {
+    ast.Add: operator.add, ast.Sub: operator.sub, ast.Mult: operator.mul,
+    ast.Div: operator.truediv, ast.Pow: operator.pow,
+    ast.FloorDiv: operator.floordiv,
+}
+
+
+def safe_eval(expr: str, env: Dict[str, float]) -> float:
+    """Evaluate an arithmetic formula over dimension variables.
+    Only numbers, names, + - * / ** // and unary minus are allowed."""
+
+    def ev(node):
+        if isinstance(node, ast.Expression):
+            return ev(node.body)
+        if isinstance(node, ast.Constant):
+            if not isinstance(node.value, (int, float)):
+                raise ValueError(f"non-numeric constant {node.value!r}")
+            return node.value
+        if isinstance(node, ast.Name):
+            if node.id not in env:
+                raise KeyError(f"unknown dimension {node.id!r}")
+            return env[node.id]
+        if isinstance(node, ast.BinOp) and type(node.op) in _BINOPS:
+            return _BINOPS[type(node.op)](ev(node.left), ev(node.right))
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            return -ev(node.operand)
+        raise ValueError(f"disallowed syntax: {ast.dump(node)}")
+
+    return ev(ast.parse(expr, mode="eval"))
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str                      # ci | bench
+    dims: Dict[str, int]
+    dtype: str = "float32"
+
+
+@dataclasses.dataclass
+class ProblemSpec:
+    name: str
+    family: str                    # gemm | matmul | bmm | conv2d | ...
+    builder: str                   # suite registry key
+    tags: List[str]
+    variants: Dict[str, Variant]
+    flops_formula: Optional[str] = None
+    bytes_formula: Optional[str] = None
+    rtol: float = 1e-2
+    atol: float = 1e-5
+    target_dtype: str = "bfloat16"
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def dims(self, variant: str) -> Dict[str, int]:
+        return dict(self.variants[variant].dims)
+
+    def flops(self, variant: str) -> Optional[float]:
+        if not self.flops_formula:
+            return None
+        return safe_eval(self.flops_formula, self.dims(variant))
+
+    def bytes(self, variant: str) -> Optional[float]:
+        if not self.bytes_formula:
+            return None
+        return safe_eval(self.bytes_formula, self.dims(variant))
+
+
+def load_specs(path: Optional[pathlib.Path] = None) -> List[ProblemSpec]:
+    path = pathlib.Path(path or pathlib.Path(__file__).parent / "specs")
+    specs: List[ProblemSpec] = []
+    for f in sorted(path.glob("*.yaml")):
+        doc = yaml.safe_load(f.read_text()) or {}
+        for p in doc.get("problems", []) or []:
+            variants = {}
+            for vname, v in (p.get("variants") or {}).items():
+                variants[vname] = Variant(name=vname, dims=dict(v.get("dims", {})),
+                                          dtype=v.get("dtype", "float32"))
+            specs.append(ProblemSpec(
+                name=p["name"], family=p.get("family", "gemm"),
+                builder=p.get("builder", p["name"]),
+                tags=list(p.get("tags", []) or []),
+                variants=variants,
+                flops_formula=p.get("flops"),
+                bytes_formula=p.get("bytes"),
+                rtol=float(p.get("rtol", 1e-2)),
+                atol=float(p.get("atol", 1e-5)),
+                target_dtype=p.get("target_dtype", "bfloat16"),
+                meta=dict(p.get("meta", {}) or {})))
+    return specs

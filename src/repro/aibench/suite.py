@@ -1,0 +1,355 @@
+"""The Level-2 kernel suite (KernelBench-L2 analogue, paper §VI-B/C).
+
+Each builder constructs the problem graph at given dims and returns a
+:class:`KernelProgram` in one of four schedules:
+
+  * ``eager``    — singleton XLA groups          (PyTorch-eager analogue)
+  * ``compiled`` — greedy-fused XLA groups       (torch.compile analogue)
+  * ``naive``    — KernelFalcon-analogue input: contractions as naive Pallas
+                   kernels with imported NVIDIA-default configs (128,128,32),
+                   everything else eager — the pipeline's starting point
+  * (the pipeline's output is the fourth column)
+
+Builders are registered by name; the YAML specs bind dims/tolerances.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.ir.cost import graph_flops
+from repro.ir.graph import Graph, GraphBuilder
+from repro.ir.schedule import (KernelProgram, PallasConfig, Schedule,
+                               eager_schedule, greedy_fused_schedule)
+
+BUILDERS: Dict[str, Callable[..., Graph]] = {}
+
+
+def register(name):
+    def deco(fn):
+        BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+NVIDIA_DEFAULT = dict(block_m=128, block_n=128, block_k=32, num_stages=1)
+
+
+def naive_schedule(g: Graph) -> Schedule:
+    s = eager_schedule(g)
+    for grp in s.groups:
+        root = g.node(grp.root)
+        if root.op == "matmul" and len(root.shape) == 2:
+            grp.impl = "pallas_naive"
+            grp.config = PallasConfig(**NVIDIA_DEFAULT)
+    return s
+
+
+def build_program(name: str, dims: Dict[str, int], schedule: str = "naive",
+                  meta: Dict = None) -> KernelProgram:
+    g = BUILDERS[name](**dims)
+    sched = {"eager": eager_schedule, "compiled": greedy_fused_schedule,
+             "naive": naive_schedule}[schedule](g)
+    p = KernelProgram(name, g, sched, original_flops=graph_flops(g),
+                      meta=dict(meta or {}))
+    p.validate()
+    return p
+
+
+# ======================================================================
+# GEMM family
+# ======================================================================
+
+@register("gemm_bias_gelu")
+def _(M, N, K):
+    b = GraphBuilder("gemm_bias_gelu")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    bias = b.param((N,), name="bias")
+    mm = b.matmul(x, w, name="mm")
+    y = b.bias_add(mm, bias, name="biased")
+    return b.done(b.gelu(y, name="act"))
+
+
+@register("gemm_swish_tanh_scale")
+def _(M, N, K):
+    b = GraphBuilder("gemm_swish_tanh_scale")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    return b.done(b.scale(b.tanh(b.silu(mm, name="sw"), name="th"),
+                          value=2.0, name="sc"))
+
+
+@register("gemm_max_subtract_gelu")
+def _(M, N, K):
+    b = GraphBuilder("gemm_max_subtract_gelu")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    mx = b.reduce_max(mm, axes=(1,), name="rowmax")
+    return b.done(b.gelu(b.add_scalar(mx, value=-0.5, name="sub"), name="act"))
+
+
+@register("gemm_divide_sum")
+def _(M, N, K):
+    b = GraphBuilder("gemm_divide_sum")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    return b.done(b.reduce_sum(b.scale(mm, value=0.5, name="half"),
+                               axes=(1,), name="rowsum"))
+
+
+@register("gemm_scale_residual")
+def _(M, N, K):
+    b = GraphBuilder("gemm_scale_residual")
+    x = b.input((M, K), name="x")
+    r = b.input((M, N), name="resid")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    return b.done(b.add(b.scale(mm, value=0.125, name="sc"), r, name="res"))
+
+
+@register("gemm_branch_duplicate")
+def _(M, N, K):
+    b = GraphBuilder("gemm_branch_duplicate")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    m1 = b.matmul(x, w, name="mm1")
+    g1 = b.gelu(m1, name="g1")
+    m2 = b.matmul(x, w, name="mm2")
+    g2 = b.gelu(m2, name="g2")
+    return b.done(b.add(g1, g2, name="sum"))
+
+
+@register("gemm_f64_sigmoid")
+def _(M, N, K):
+    b = GraphBuilder("gemm_f64_sigmoid", dtype="float64")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    return b.done(b.sigmoid(mm, name="sig"))
+
+
+@register("gemm_mean_scale")
+def _(M, N, K):
+    b = GraphBuilder("gemm_mean_scale")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    mean = b.reduce_mean(mm, axes=(1,), name="rowmean")
+    return b.done(b.scale(mean, value=3.0, name="sc"))
+
+
+@register("gemm_softplus_min")
+def _(M, N, K):
+    b = GraphBuilder("gemm_softplus_min")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    return b.done(b.reduce_min(b.softplus(mm, name="sp"), axes=(1,), name="rowmin"))
+
+
+@register("gemm_transpose_transpose")
+def _(M, N, K):
+    b = GraphBuilder("gemm_transpose_transpose")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    t1 = b.transpose(x, perm=(1, 0), name="t1")
+    t2 = b.transpose(t1, perm=(1, 0), name="t2")
+    mm = b.matmul(t2, w, name="mm")
+    return b.done(b.relu(mm, name="act"))
+
+
+# ======================================================================
+# MatMul family (layout / cleanup)
+# ======================================================================
+
+@register("matmul_t_gelu")
+def _(M, N, K):
+    b = GraphBuilder("matmul_t_gelu")
+    x = b.input((M, K), name="x")
+    w = b.param((N, K), name="w")       # torch Linear layout
+    mm = b.matmul(x, w, transpose_b=True, name="mm")
+    return b.done(b.gelu(mm, name="act"))
+
+
+@register("matmul_min_subtract")
+def _(M, N, K):
+    b = GraphBuilder("matmul_min_subtract")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    mn = b.reduce_min(mm, axes=(1,), name="rowmin")
+    return b.done(b.add_scalar(mn, value=-1.0, name="sub"))
+
+
+@register("matmul_t_scale_swish")
+def _(M, N, K):
+    b = GraphBuilder("matmul_t_scale_swish")
+    x = b.input((M, K), name="x")
+    w = b.param((N, K), name="w")
+    mm = b.matmul(x, w, transpose_b=True, name="mm")
+    return b.done(b.silu(b.scale(mm, value=0.25, name="sc"), name="sw"))
+
+
+@register("matmul_serial_sum")
+def _(M, N, K):
+    b = GraphBuilder("matmul_serial_sum")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    s = b.g.add("reduce_sum", (mm,), name="rowsum", axes=(1,),
+                accumulate="serial")
+    return b.done(s)
+
+
+@register("matmul_materialized_t")
+def _(M, N, K):
+    b = GraphBuilder("matmul_materialized_t")
+    x = b.input((K, M), name="x")
+    w = b.param((K, N), name="w")
+    xt = b.transpose(x, perm=(1, 0), name="xt")
+    mm = b.matmul(xt, w, name="mm")
+    return b.done(b.tanh(mm, name="act"))
+
+
+@register("matmul_dropout_tanh")
+def _(M, N, K):
+    b = GraphBuilder("matmul_dropout_tanh")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    dp = b.dropout(mm, name="drop")
+    return b.done(b.tanh(dp, name="act"))
+
+
+@register("matmul_double_cast")
+def _(M, N, K):
+    b = GraphBuilder("matmul_double_cast")
+    x = b.input((M, K), name="x")
+    w = b.param((K, N), name="w")
+    mm = b.matmul(x, w, name="mm")
+    c1 = b.cast(mm, dtype="float32", name="c1")
+    c2 = b.cast(c1, dtype="float32", name="c2")
+    return b.done(b.gelu(c2, name="act"))
+
+
+# ======================================================================
+# BMM
+# ======================================================================
+
+@register("bmm_instnorm_sum_residual")
+def _(B, M, N, K):
+    b = GraphBuilder("bmm_instnorm_sum_residual")
+    x = b.input((B, M, K), name="x")
+    y = b.input((B, K, N), name="y")
+    r = b.input((B, M), name="resid")
+    mm = b.bmm(x, y, name="mm")
+    nrm = b.instancenorm(mm, name="inorm")
+    s = b.reduce_sum(nrm, axes=(2,), name="sum")
+    return b.done(b.mul(b.add(s, r, name="res"), r, name="mul"))
+
+
+# ======================================================================
+# Conv families (NCHW graphs; optimizer may run channels-last internally)
+# ======================================================================
+
+@register("conv2d_bn_relu")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("conv2d_bn_relu")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS), name="w")
+    scale = b.param((Cout,), name="bn_scale", init="uniform01")
+    bias = b.param((Cout,), name="bn_bias")
+    mean = b.param((Cout,), name="bn_mean")
+    var = b.param((Cout,), name="bn_var", init="uniform01")
+    cv = b.conv2d(x, w, name="conv")
+    bn = b.batchnorm(cv, scale, bias, mean, var, name="bn")
+    return b.done(b.relu(bn, name="act"))
+
+
+@register("conv2d_gelu_scale")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("conv2d_gelu_scale")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS), name="w")
+    cv = b.conv2d(x, w, name="conv")
+    return b.done(b.scale(b.gelu(cv, name="act"), value=1.5, name="sc"))
+
+
+@register("conv2d_f64_tanh")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("conv2d_f64_tanh", dtype="float64")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS), name="w")
+    cv = b.conv2d(x, w, name="conv")
+    return b.done(b.tanh(cv, name="act"))
+
+
+@register("conv2d_min_clamp")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("conv2d_min_clamp")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS), name="w")
+    cv = b.conv2d(x, w, name="conv")
+    return b.done(b.clamp_max(b.clamp_min(cv, value=-1.0, name="lo"),
+                              value=1.0, name="hi"))
+
+
+@register("conv3d_relu_scale")
+def _(B, Cin, Cout, D, H, W, KS):
+    b = GraphBuilder("conv3d_relu_scale")
+    x = b.input((B, Cin, D, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS, KS), name="w")
+    cv = b.conv3d(x, w, name="conv")
+    return b.done(b.scale(b.relu(cv, name="act"), value=0.5, name="sc"))
+
+
+@register("conv3d_groupnorm_mish")
+def _(B, Cin, Cout, D, H, W, KS):
+    b = GraphBuilder("conv3d_groupnorm_mish")
+    x = b.input((B, Cin, D, H, W), name="x")
+    w = b.param((Cout, Cin, KS, KS, KS), name="w")
+    cv = b.conv3d(x, w, name="conv")
+    gn = b.groupnorm(cv, groups=8, name="gn")
+    return b.done(b.mish(gn, name="act"))
+
+
+@register("convt2d_multiply_gap")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("convt2d_multiply_gap")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cin, Cout, KS, KS), name="w")
+    cv = b.conv_transpose2d(x, w, stride=2, name="convt")
+    sc = b.scale(cv, value=0.7, name="mul")
+    return b.done(b.globalavgpool(sc, name="gap"))
+
+
+@register("convt2d_tanh")
+def _(B, Cin, Cout, H, W, KS):
+    b = GraphBuilder("convt2d_tanh")
+    x = b.input((B, Cin, H, W), name="x")
+    w = b.param((Cin, Cout, KS, KS), name="w")
+    cv = b.conv_transpose2d(x, w, stride=2, name="convt")
+    return b.done(b.tanh(cv, name="act"))
+
+
+@register("convt3d_silu")
+def _(B, Cin, Cout, D, H, W, KS):
+    b = GraphBuilder("convt3d_silu")
+    x = b.input((B, Cin, D, H, W), name="x")
+    w = b.param((Cin, Cout, KS, KS, KS), name="w")
+    cv = b.conv_transpose3d(x, w, stride=2, name="convt")
+    return b.done(b.silu(cv, name="act"))
+
+
+@register("convt3d_add_relu")
+def _(B, Cin, Cout, D, H, W, KS):
+    b = GraphBuilder("convt3d_add_relu")
+    x = b.input((B, Cin, D, H, W), name="x")
+    w = b.param((Cin, Cout, KS, KS, KS), name="w")
+    cv = b.conv_transpose3d(x, w, stride=1, name="convt")
+    r = b.input((B, Cout, D, H, W), name="resid")
+    return b.done(b.relu(b.add(cv, r, name="res"), name="act"))

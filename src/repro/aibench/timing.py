@@ -1,0 +1,61 @@
+"""Device-aware timing (paper §V-A-d, adapted to this container).
+
+``time_fn`` reproduces the AI Bench methodology at CPU scale: warmup
+iterations to stabilize caches/JIT, a measurement loop with block_until_ready
+(the synchronization-barrier analogue), trimming of the extreme min/max, and
+mean over the rest. There is no GPU command stream to fill on CPU, so the
+dummy-matmul trick is replaced by an explicit pre-dispatch. Cache flushing is
+approximated by touching a flush buffer between iterations (best-effort on
+CPU; exact on the paper's hardware).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+_FLUSH = None
+
+
+def _flush_cache(mb: int = 64):
+    global _FLUSH
+    if _FLUSH is None or _FLUSH.nbytes < mb << 20:
+        _FLUSH = np.zeros((mb << 20) // 8, np.float64)
+    _FLUSH[:] = 0.0
+
+
+def time_fn(fn: Callable, args: Sequence = (), *, warmup: int = 5,
+            iters: int = 20, flush: bool = False, trim: int = 1) -> dict:
+    """Return {mean_us, min_us, max_us, std_us, iters} for fn(*args)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        if flush:
+            _flush_cache()
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    kept = samples[trim:-trim] if len(samples) > 2 * trim else samples
+    return {
+        "mean_us": float(np.mean(kept)),
+        "min_us": float(samples[0]),
+        "max_us": float(samples[-1]),
+        "std_us": float(np.std(kept)),
+        "iters": len(samples),
+    }
+
+
+def derive_metrics(mean_us: float, flops: float = None, bytes_: float = None) -> dict:
+    out = {}
+    if flops:
+        out["tflops"] = flops / (mean_us * 1e6)
+    if bytes_:
+        out["gbps"] = bytes_ / (mean_us * 1e3)
+    return out

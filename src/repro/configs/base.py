@@ -1,0 +1,128 @@
+"""Model configuration schema + registry for the assigned architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+ARCH_IDS = (
+    "whisper-small", "grok-1-314b", "granite-moe-3b-a800m", "llava-next-34b",
+    "olmo-1b", "qwen3-8b", "codeqwen1.5-7b", "qwen2-7b", "mamba2-780m",
+    "recurrentgemma-2b",
+)
+
+_MODULES = {
+    "whisper-small": "whisper_small",
+    "grok-1-314b": "grok1_314b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "llava-next-34b": "llava_next_34b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-8b": "qwen3_8b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "qwen2-7b": "qwen2_7b",
+    "mamba2-780m": "mamba2_780m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64          # P per head; heads = d_inner / head_dim
+    expand: int = 2
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                  # dense | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # variants
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    non_parametric_ln: bool = False        # olmo
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    activation: str = "silu"               # silu(swiglu) | gelu
+    glu: bool = True
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (recurrentgemma): pattern period — ("rglru","rglru","attn")
+    block_pattern: Optional[Tuple[str, ...]] = None
+    window: Optional[int] = None           # local attention window
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 0                # stub frontend sequence length
+    # vlm
+    num_prefix_embeds: int = 0             # stub patch-embedding prefix
+    max_seq_len: int = 524288
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // max(self.num_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch serve 500k-token contexts sub-quadratically?"""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw: Dict = dataclasses.asdict(self)
+        kw.update(
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            kv_heads=min(max(1, self.kv_heads * 4 // max(self.num_heads, 1)), 4),
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_frames=min(self.encoder_frames, 16) if self.encoder_frames else 0,
+            num_prefix_embeds=min(self.num_prefix_embeds, 8),
+            window=min(self.window, 32) if self.window else None,
+            max_seq_len=2048,
+        )
+        if self.moe:
+            kw["moe"] = MoEConfig(num_experts=min(self.moe.num_experts, 4),
+                                  top_k=min(self.moe.top_k, 2))
+        else:
+            kw["moe"] = None
+        if self.ssm:
+            kw["ssm"] = SSMConfig(d_state=32, head_dim=16, expand=2, chunk=32)
+        else:
+            kw["ssm"] = None
+        if self.block_pattern:
+            kw["block_pattern"] = tuple(self.block_pattern)
+            kw["num_layers"] = min(self.num_layers, 3)
+        for k in ("moe", "ssm"):
+            pass
+        return ModelConfig(**kw)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,11 @@
+"""granite-moe-3b-a800m [moe]: 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8. NOTE: the assignment text lists both
+"40e top-8" and "32 experts"; we take the config field (40 experts), see
+DESIGN.md. [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, num_heads=24, kv_heads=8, d_ff=512,
+    vocab=49155, moe=MoEConfig(num_experts=40, top_k=8),
+)

@@ -1,0 +1,10 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000; anyres tiling frontend is a stub (patch embeddings via
+input_specs, 576-token prefix). [hf:llava-hf/llava-v1.6-...; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="llava-next-34b", family="dense",
+    num_layers=60, d_model=7168, num_heads=56, kv_heads=8, d_ff=20480,
+    vocab=64000, num_prefix_embeds=576,
+)

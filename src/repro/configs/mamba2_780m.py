@@ -1,0 +1,9 @@
+"""mamba2-780m [ssm]: 48L d_model=1536 attention-free d_ff=0 vocab=50280,
+ssm_state=128 (SSD). [arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch="mamba2-780m", family="ssm",
+    num_layers=48, d_model=1536, num_heads=0, kv_heads=0, d_ff=0,
+    vocab=50280, ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=128),
+)

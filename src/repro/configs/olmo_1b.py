@@ -1,0 +1,10 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (kv=16) d_ff=8192 vocab=50304;
+non-parametric LayerNorm. [arXiv:2402.00838; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="olmo-1b", family="dense",
+    num_layers=16, d_model=2048, num_heads=16, kv_heads=16, d_ff=8192,
+    vocab=50304, norm="layernorm", non_parametric_ln=True,
+    activation="silu", glu=True, tie_embeddings=True,
+)

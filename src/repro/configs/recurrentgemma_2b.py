@@ -1,0 +1,12 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000; RG-LRU + local attention (window 2048), pattern 2:1
+(rglru, rglru, attn). [arXiv:2402.19427; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, kv_heads=1, d_ff=7680,
+    vocab=256000, activation="gelu", glu=True,
+    block_pattern=("rglru", "rglru", "attn"), window=2048,
+    head_dim=256,
+)

@@ -1,0 +1,43 @@
+"""Assigned input shapes and (arch x shape) applicability."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicability(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runs, reason). long_500k needs sub-quadratic attention — full-attention
+    archs skip it (recorded, per the assignment)."""
+    s = SHAPES[shape]
+    if s.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "SKIP(full-attention): 500k-ctx decode needs a sub-quadratic mechanism"
+    return True, "ok"
+
+
+def applicable_cells(cfgs: Dict[str, ModelConfig]) -> List[Tuple[str, str]]:
+    cells = []
+    for arch, cfg in cfgs.items():
+        for shape in SHAPES:
+            ok, _ = applicability(cfg, shape)
+            if ok:
+                cells.append((arch, shape))
+    return cells

@@ -1,0 +1,11 @@
+"""whisper-small [audio enc-dec]: 12L d_model=768 12H (kv=12) d_ff=3072
+vocab=51865; conv frontend is a stub (frame embeddings via input_specs).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="whisper-small", family="encdec",
+    num_layers=12, d_model=768, num_heads=12, kv_heads=12, d_ff=3072,
+    vocab=51865, norm="layernorm", activation="gelu", glu=False,
+    qkv_bias=True, encoder_layers=12, encoder_frames=1500,
+)

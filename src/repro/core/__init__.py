@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — the multi-stage CoVeR optimization
+pipeline with knowledge-base-driven proposers and 4-level verification."""
+
+from repro.core.analyzer import analyze
+from repro.core.context import ProblemContext
+from repro.core.cover import CoVeRAgent, Trajectory
+from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
+from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.planner import plan, DEFAULT_ORDER, HARD_DEPS
+from repro.core.verify import compile_and_verify, VerifyReport, SUCCESS
+
+__all__ = [
+    "analyze", "ProblemContext", "CoVeRAgent", "Trajectory", "Issue",
+    "ISSUE_TO_STAGE", "register_issue_type", "ForgePipeline",
+    "PipelineResult", "plan", "DEFAULT_ORDER", "HARD_DEPS",
+    "compile_and_verify", "VerifyReport", "SUCCESS",
+]

@@ -1,0 +1,268 @@
+"""Rule-based analyzer (paper §IV-C stage 1).
+
+Produces a typed issue inventory from a :class:`KernelProgram`. The paper's
+analyzer is an LLM prompted with the kernel source + KB + problem context;
+ours inspects the same information structurally. Severity scores (1-5) are
+advisory. Re-invoked between stages (paper §IV-A-c) so the issue list tracks
+the actual program state.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.context import ProblemContext
+from repro.core.issues import Issue
+from repro.hw.specs import dtype_itemsize
+from repro.ir.cost import node_flops_bytes
+from repro.ir.graph import Graph
+from repro.ir.rewrite import find_rewrites
+from repro.ir.schedule import FusionGroup, KernelProgram
+
+_REWRITE_ISSUE = {
+    "matmul_reduce_to_vecmat": ("gemm_feeding_reduction", 5,
+                                "GEMM output only consumed by a row/col sum — "
+                                "the GEMM is algebraically eliminable",
+                                "pre-reduce the operand (sum(xW, n) = x @ W.sum)"),
+    "fold_scale_into_weights": ("foldable_scalar_epilogue", 3,
+                                "scalar multiplier after GEMM/conv re-reads the "
+                                "full output", "fold the scalar into the weights"),
+    "fold_bn_into_conv": ("bn_after_conv", 3,
+                          "inference batchnorm follows a conv",
+                          "fold BN stats into conv weights/bias"),
+    "cse": ("duplicated_subexpression", 3, "identical subexpressions computed "
+            "twice", "compute once, reuse"),
+    "mean_to_sum_scale": ("mean_uncanonicalized", 2, "mean hides a foldable sum",
+                          "canonicalize to sum x (1/n)"),
+    "tree_reduction": ("serial_accumulation", 3, "serial accumulator chain",
+                       "use a tree reduction"),
+    "transpose_elimination": ("materialized_transpose", 3,
+                              "materialized transpose feeding a matmul",
+                              "absorb into the matmul operand flag"),
+}
+
+
+def _vmem_working_set(graph: Graph, group: FusionGroup, compute_dtype: str) -> int:
+    cfg = group.config
+    if cfg is None:
+        return 0
+    isz = dtype_itemsize(compute_dtype)
+    stream = (cfg.block_m * cfg.block_k + cfg.block_k * cfg.block_n) * isz
+    acc = cfg.block_m * cfg.block_n * 4
+    n_ops = sum(1 for n in group.nodes
+                if len(graph.node(n).inputs) > 1) if group.nodes else 0
+    epi = n_ops * cfg.block_m * cfg.block_n * isz
+    return stream * max(1, cfg.num_stages) + acc + epi
+
+
+def analyze(program: KernelProgram, ctx: ProblemContext) -> List[Issue]:
+    g = program.graph
+    sched = program.schedule
+    issues: List[Issue] = []
+
+    # ---- graph-level (algorithmic / discovery) -------------------------
+    for rw in find_rewrites(g):
+        if rw.rule in _REWRITE_ISSUE:
+            typ, sev, desc, fix = _REWRITE_ISSUE[rw.rule]
+            issues.append(Issue(typ, sev, f"{desc}: {rw.description}", fix,
+                                rw.estimated_speedup,
+                                proposal={"rule": rw.rule}))
+        else:
+            issues.append(Issue("open_ended", 4, rw.description,
+                                rw.why_valid, rw.estimated_speedup,
+                                proposal={"rule": rw.rule,
+                                          "what": rw.description,
+                                          "why_valid": rw.why_valid,
+                                          "sketch": f"apply rewrite {rw.rule}",
+                                          "estimated_speedup": rw.estimated_speedup}))
+
+    for n in g.toposorted():
+        if n.op in ("identity", "dropout"):
+            issues.append(Issue("fusion_noop", 1,
+                                f"{n.name} is a no-op in inference", "remove it",
+                                node=n.name))
+        if n.op == "sigmoid" and n.attrs.get("naive_exp"):
+            issues.append(Issue("sigmoid_slow_exp", 2,
+                                f"{n.name} computes sigmoid via 1/(1+exp(-x)) "
+                                "with a division", "use the fused sigmoid",
+                                node=n.name))
+        if str(n.dtype) == "float64":
+            issues.append(Issue("dtype_float64", 5,
+                                f"{n.name} is float64 (no MXU support; XLA "
+                                "emulates it)", "demote to float32",
+                                "2-10x", node=n.name))
+        if n.op == "input" and n.attrs.get("contiguous") is False:
+            issues.append(Issue("non_contiguous_input", 2,
+                                f"{n.name} arrives non-contiguous",
+                                "normalize layout at the graph edge",
+                                node=n.name))
+        if n.op in ("conv2d", "conv3d", "conv_transpose2d", "conv_transpose3d"):
+            layout = n.attrs.get("layout", "NCHW" if "2d" in n.op else "NCDHW")
+            if layout.startswith("NC"):
+                issues.append(Issue("suboptimal_conv_layout", 3,
+                                    f"{n.name} uses {layout}; channels-last puts "
+                                    "C on the 128-lane axis", "convert to NHWC",
+                                    "1.1-1.7x", node=n.name))
+
+    if ((program.meta.get("host_sync") or ctx.meta.get("host_sync"))
+            and not program.meta.get("host_sync_removed")):
+        issues.append(Issue("device_host_sync", 4,
+                            "host-device synchronization in the hot path "
+                            "(.item()-style stall between launches)",
+                            "keep control flow on device", "varies"))
+
+    # ---- dtype ----------------------------------------------------------
+    if (sched.compute_dtype == "float32"
+            and ctx.target_dtype in ("bfloat16", "bf16")):
+        issues.append(Issue("dtype_precision", 4,
+                            "compute dtype is f32; target allows bf16 inputs "
+                            "with f32 accumulation (2x MXU rate, half traffic)",
+                            "switch compute dtype to bfloat16", "2-4x"))
+    casts = [n for n in g.toposorted() if n.op == "cast"]
+    for n in casts:
+        src = g.node(n.inputs[0])
+        if src.op == "cast" or src.dtype == n.dtype:
+            issues.append(Issue("dtype_input_conversion", 2,
+                                f"redundant cast chain at {n.name}",
+                                "cast once at the boundary", node=n.name))
+
+    # ---- fusion ---------------------------------------------------------
+    owner = {n: grp for grp in sched.groups for n in grp.nodes}
+    for grp in sched.groups:
+        last = g.node(grp.nodes[-1])
+        consumers = g.consumers(last.name)
+        if len(consumers) == 1 and last.name not in g.outputs:
+            c = consumers[0]
+            cg = owner.get(c.name)
+            if cg is not None and cg is not grp:
+                if last.is_contraction() or len(grp.nodes) > 0:
+                    if c.is_elementwise():
+                        typ = ("unfused_kernels" if last.is_contraction()
+                               else "unfused_elementwise_chain")
+                        issues.append(Issue(typ, 4,
+                                            f"{c.name} launches separately from its "
+                                            f"producer group {grp.name}",
+                                            "fuse into one kernel", "2-3x",
+                                            node=grp.name))
+                    elif (c.op in ("reduce_sum", "reduce_max", "reduce_min",
+                                   "reduce_mean")
+                          and any(g.node(n).is_contraction() for n in grp.nodes)
+                          and tuple(ax % 2 for ax in c.attrs.get("axes", ())) == (1,)):
+                        issues.append(Issue("unfused_reduction_epilogue", 5,
+                                            f"row reduction {c.name} materializes the "
+                                            f"full GEMM output of {grp.name}",
+                                            "accumulate the reduction in-tile",
+                                            "2-10x", node=grp.name))
+        ws = _vmem_working_set(g, grp, sched.compute_dtype)
+        if ws > ctx.spec.vmem_bytes:
+            issues.append(Issue("fusion_register_pressure", 4,
+                                f"group {grp.name} working set {ws >> 20} MiB "
+                                f"exceeds VMEM budget "
+                                f"{ctx.spec.vmem_bytes >> 20} MiB",
+                                "shrink blocks or split the fusion",
+                                node=grp.name))
+        if len(grp.nodes) > 8:
+            issues.append(Issue("long_liveness", 2,
+                                f"group {grp.name} keeps {len(grp.nodes)} "
+                                "intermediates live", "reorder the chain",
+                                node=grp.name))
+
+    # ---- kernel-level (memory / block pointers / persistent / tpu) ------
+    hw = ctx.hw
+    for grp in sched.groups:
+        root = g.node(grp.root)
+        if grp.impl == "pallas_naive":
+            issues.append(Issue("manual_pointer_arithmetic", 4,
+                                f"group {grp.name} indexes tiles manually "
+                                "(pl.load + pl.ds): Mosaic cannot pipeline",
+                                "modernize to BlockSpec tiling", "1.3-2.5x",
+                                node=grp.name))
+            issues.append(Issue("missing_boundary_check", 3,
+                                f"group {grp.name} has no ragged-edge masking",
+                                "add bounds masks", node=grp.name))
+        if root.op == "matmul" and root.attrs.get("transpose_b") \
+                and grp.operand_layouts.get("b") != "packed":
+            issues.append(Issue("uncoalesced_access", 4,
+                                f"{grp.name}: B operand read column-strided "
+                                "(transposed layout)", "repack to "
+                                "lane-contiguous layout once", "1.5-2.8x",
+                                node=grp.name))
+            issues.append(Issue("missing_packed_transpose", 3,
+                                f"{grp.name}: transpose re-done every call",
+                                "cache the packed transpose", node=grp.name))
+        cfg = grp.config
+        if cfg is None:
+            continue
+        if grp.impl == "pallas_blockspec":
+            if root.op == "matmul" and len(root.shape) == 2:
+                m, n_ = root.shape
+                a_shape = g.node(root.inputs[0]).shape
+                k = a_shape[0] if root.attrs.get("transpose_a") else a_shape[-1]
+                rec = hw.get_optimal_params(m, n_, k, sched.compute_dtype)
+                if cfg.block_k < 128:
+                    issues.append(Issue("suboptimal_tile_size", 4,
+                                        f"{grp.name}: BLOCK_K={cfg.block_k} < 128 "
+                                        "runs the MXU below native rate",
+                                        f"use >=128 (query suggests {rec.block_k})",
+                                        node=grp.name))
+                elif (max(cfg.block_m, rec.block_m) >= 2 * min(cfg.block_m, rec.block_m)
+                      or max(cfg.block_n, rec.block_n) >= 2 * min(cfg.block_n, rec.block_n)):
+                    issues.append(Issue("suboptimal_tile_size", 3,
+                                        f"{grp.name}: blocks ({cfg.block_m},"
+                                        f"{cfg.block_n},{cfg.block_k}) far from "
+                                        f"shape-aware recommendation "
+                                        f"({rec.block_m},{rec.block_n},{rec.block_k})",
+                                        "apply hw-query tiles", node=grp.name))
+                mt = -(-m // cfg.block_m)
+                nt = -(-n_ // cfg.block_n)
+                if cfg.group_m <= 1 and mt > 1 and mt * nt >= 16 and rec.group_m > 1:
+                    issues.append(Issue("no_swizzling", 3,
+                                        f"{grp.name}: no GROUP_M traversal; A "
+                                        f"re-streamed {nt}x from HBM",
+                                        f"set group_m={rec.group_m}", "1.1-1.6x",
+                                        node=grp.name))
+                kt = -(-k // cfg.block_k)
+                if kt > 1 and not cfg.persistent:
+                    issues.append(Issue("missing_persistent", 4,
+                                        f"{grp.name}: K split {kt}x without a "
+                                        "persistent VMEM accumulator (partials "
+                                        "spill to HBM)", "accumulate across the "
+                                        "arbitrary K grid dim", "1.3-3x",
+                                        node=grp.name))
+            sub, lane = ctx.spec.min_tile(sched.compute_dtype)
+            if cfg.block_m % sub or cfg.block_n % lane:
+                issues.append(Issue("misaligned_block_shape", 4,
+                                    f"{grp.name}: blocks ({cfg.block_m},"
+                                    f"{cfg.block_n}) not ({sub},{lane})-aligned",
+                                    "round to native tile multiples",
+                                    node=grp.name))
+            if cfg.num_stages < 2:
+                issues.append(Issue("missing_pipeline_stages", 3,
+                                    f"{grp.name}: num_stages={cfg.num_stages}; "
+                                    "no copy/compute overlap",
+                                    "double-buffer (stages>=2)", node=grp.name))
+            if not cfg.dimension_semantics:
+                issues.append(Issue("missing_dimension_semantics", 3,
+                                    f"{grp.name}: no dimension_semantics; Mosaic "
+                                    "serializes the grid", "mark parallel dims",
+                                    node=grp.name))
+            if cfg.acc_dtype != "float32":
+                issues.append(Issue("bf16_accumulator", 5,
+                                    f"{grp.name}: accumulates in {cfg.acc_dtype}",
+                                    "accumulate f32", node=grp.name))
+    if ctx.meta.get("hardcoded_grid"):
+        issues.append(Issue("persistent_num_progs_hardcoded", 3,
+                            "grid size hardcoded for one shape",
+                            "derive from pl.cdiv(problem, block)"))
+
+    # ---- autotuning -----------------------------------------------------
+    has_pallas = any(grp.impl.startswith("pallas") for grp in sched.groups)
+    if has_pallas and not program.meta.get("autotuned"):
+        issues.append(Issue("missing_autotune", 2,
+                            "no autotune grid evaluated for the final kernel "
+                            "structure", "sweep the curated config grid",
+                            "1.05-1.4x"))
+
+    order = {i.type: k for k, i in enumerate(issues)}
+    issues.sort(key=lambda i: (-i.severity, order.get(i.type, 0)))
+    return issues

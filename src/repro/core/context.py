@@ -1,0 +1,32 @@
+"""Problem context shared across pipeline components."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.hw.query import HardwareQuery
+from repro.hw.specs import TPUSpec, TPU_V5E
+
+
+@dataclasses.dataclass
+class ProblemContext:
+    """Everything a stage may consult (but not mutate)."""
+
+    name: str
+    target_dtype: str = "bfloat16"
+    rtol: float = 1e-2                   # the paper's tolerances
+    atol: float = 1e-5
+    spec: TPUSpec = TPU_V5E
+    tags: tuple = ()                     # e.g. ("gemm", "reduction")
+    # trusted harness data (owned by the runner, never by candidates):
+    ci_inputs: Optional[Dict[str, jnp.ndarray]] = None
+    ci_params: Optional[Dict[str, jnp.ndarray]] = None
+    oracle_outputs: Optional[Dict[str, jnp.ndarray]] = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def hw(self) -> HardwareQuery:
+        return HardwareQuery(self.spec)

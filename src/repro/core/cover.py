@@ -1,0 +1,165 @@
+"""CoVeR agent: Chain-of-Verification-and-Refinement (paper §IV-B, Alg. 1).
+
+The agent owns a *trajectory* — a growing log of thoughts, tool invocations
+and observations — and loops: propose candidate → run the single
+``compile_and_verify`` tool → on the success sentinel, return; otherwise the
+observation (a structured error) feeds the next proposal. After T iterations a
+fallback extractor returns the best-effort candidate, which the pipeline
+re-verifies independently; if that fails the stage returns the original
+program unchanged (never-degrade).
+
+Trajectory management reproduces the paper's truncation policy: when the
+formatted trajectory exceeds the context budget, the four oldest entries
+(thought, tool, args, observation) are dropped; if only one tool call remains
+the agent raises instead of operating without diagnostic context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.context import ProblemContext
+from repro.core.proposers import BaseProposer, Candidate
+from repro.core.verify import VerifyReport, compile_and_verify
+from repro.ir.cost import CostModel
+from repro.ir.schedule import KernelProgram
+from repro.kb.loader import KnowledgeBase
+
+
+class TrajectoryOverflow(RuntimeError):
+    pass
+
+
+class Trajectory:
+    """Key-value log with context-budget truncation."""
+
+    def __init__(self, max_chars: int = 60_000):
+        self.entries: List[Dict[str, str]] = []
+        self.max_chars = max_chars
+
+    def add(self, thought: str, tool: str, args: str, observation: str):
+        self.entries.append({"thought": thought, "tool": tool, "args": args,
+                             "observation": observation})
+        while len(self.format()) > self.max_chars:
+            self.truncate_oldest()
+
+    def truncate_oldest(self):
+        if len(self.entries) <= 1:
+            raise TrajectoryOverflow(
+                "cannot truncate further: a single tool call exceeds the "
+                "context budget")
+        self.entries.pop(0)
+
+    def format(self) -> str:
+        lines = []
+        for i, e in enumerate(self.entries):
+            lines += [f"[{i}] thought: {e['thought']}",
+                      f"[{i}] tool: {e['tool']}({e['args']})",
+                      f"[{i}] observation: {e['observation']}"]
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class StageResult:
+    stage: str
+    improved: bool
+    ci_program: KernelProgram
+    bench_program: KernelProgram
+    report: Optional[VerifyReport]
+    iterations: int
+    trajectory: Trajectory
+    accepted: Optional[Candidate] = None
+    fallback_used: bool = False
+
+
+class CoVeRAgent:
+    def __init__(self, stage: str, proposer: BaseProposer, kb: KnowledgeBase,
+                 max_iterations: int = 5,
+                 dump_dir: Optional[pathlib.Path] = None,
+                 use_pallas_exec: bool = True):
+        self.stage = stage
+        self.proposer = proposer
+        self.kb = kb
+        self.T = max_iterations
+        self.dump_dir = dump_dir
+        self.use_pallas_exec = use_pallas_exec
+
+    # ------------------------------------------------------------------
+    def run(self, ci_program: KernelProgram, bench_program: KernelProgram,
+            issues, ctx: ProblemContext, incumbent_time: float,
+            cost_model: Optional[CostModel] = None,
+            start_offset: int = 0) -> StageResult:
+        cost_model = cost_model or CostModel(ctx.spec)
+        trajectory = Trajectory()
+        # the stage-scoped KB knowledge is the static part of the "prompt"
+        _ = self.kb.format_for_llm(self.stage, list(ctx.tags))
+
+        cands = list(self.proposer.candidates(bench_program, issues,
+                                              trajectory.entries))
+        if start_offset:
+            cands = cands[start_offset:] + cands[:start_offset]
+        tried: List[Tuple[Candidate, KernelProgram, KernelProgram, VerifyReport]] = []
+
+        i = 0
+        while i < self.T:
+            # regenerate adaptively once the proposer has error feedback
+            if i > 0:
+                fresh = list(self.proposer.candidates(bench_program, issues,
+                                                      trajectory.entries))
+                seen = {c.description for c, *_ in tried}
+                cands = [c for c in fresh if c.description not in seen] or cands
+            if not cands:
+                break
+            cand = cands.pop(0)
+            try:
+                new_ci = cand.transform(ci_program)
+                new_bench = cand.transform(bench_program)
+            except Exception as e:  # noqa: BLE001 — transform bugs are observations
+                trajectory.add(cand.thought, "compile_and_verify",
+                               cand.description,
+                               f"TRANSFORM ERROR: {type(e).__name__}: {e}")
+                i += 1
+                continue
+            report = compile_and_verify(new_ci, new_bench, incumbent_time, ctx,
+                                        self.kb, cost_model,
+                                        use_pallas=self.use_pallas_exec)
+            trajectory.add(cand.thought, "compile_and_verify",
+                           cand.description, report.observation)
+            tried.append((cand, new_ci, new_bench, report))
+            if report.ok:
+                return StageResult(self.stage, True, new_ci, new_bench, report,
+                                   i + 1, trajectory, accepted=cand)
+            i += 1
+
+        # ---- fallback: ChainOfThought extraction over the trajectory ------
+        correct = [(c, ci, b, r) for c, ci, b, r in tried
+                   if r.level == "performance"]
+        if correct:
+            best = min(correct, key=lambda t: t[3].candidate_time or 1e9)
+            cand, new_ci, new_bench, _ = best
+            report = compile_and_verify(new_ci, new_bench, incumbent_time, ctx,
+                                        self.kb, cost_model,
+                                        use_pallas=self.use_pallas_exec)
+            if report.ok:  # e.g. modeled time noise — accept if it now passes
+                return StageResult(self.stage, True, new_ci, new_bench, report,
+                                   self.T, trajectory, accepted=cand,
+                                   fallback_used=True)
+        self._dump_failure(ci_program, trajectory)
+        return StageResult(self.stage, False, ci_program, bench_program, None,
+                           min(i, self.T), trajectory, fallback_used=bool(tried))
+
+    # ------------------------------------------------------------------
+    def _dump_failure(self, program: KernelProgram, trajectory: Trajectory):
+        if self.dump_dir is None:
+            return
+        self.dump_dir.mkdir(parents=True, exist_ok=True)
+        fname = self.dump_dir / f"{program.name}.{self.stage}.{int(time.time())}.json"
+        fname.write_text(json.dumps({
+            "program": program.dumps(),
+            "stage": self.stage,
+            "trajectory": trajectory.entries,
+        }, indent=2))

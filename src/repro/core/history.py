@@ -1,0 +1,42 @@
+"""Optimization history (paper §VIII future work, implemented).
+
+Successful (stage, pattern_id) transformations are recorded per run; proposers
+can consult the success counts to prioritize historically productive patterns
+on future kernels ("learning from optimization history" as few-shot priority
+rather than free generation).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+
+class History:
+    def __init__(self, path: Optional[pathlib.Path] = None):
+        self.path = pathlib.Path(path) if path else None
+        self.records: List[dict] = []
+        self.success_counts: Dict[str, int] = defaultdict(int)
+        if self.path and self.path.exists():
+            data = json.loads(self.path.read_text())
+            self.records = data.get("records", [])
+            for r in self.records:
+                if r.get("improved"):
+                    self.success_counts[r.get("pattern_id", "")] += 1
+
+    def record(self, problem: str, stage: str, pattern_id: str,
+               improved: bool, speedup: Optional[float], iterations: int):
+        rec = {"problem": problem, "stage": stage, "pattern_id": pattern_id,
+               "improved": improved, "speedup": speedup,
+               "iterations": iterations}
+        self.records.append(rec)
+        if improved:
+            self.success_counts[pattern_id] += 1
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self.path.write_text(json.dumps({"records": self.records}, indent=2))
+
+    def priority(self, pattern_id: str) -> int:
+        return self.success_counts.get(pattern_id, 0)

@@ -1,0 +1,85 @@
+"""LLM client interface (paper Listing 1 config surface).
+
+The paper drives every stage with GPT-5.4 through an OpenAI-compatible API.
+This container is offline, so the default proposers are deterministic
+(KB-pattern engines, see ``proposers.py``); this module keeps the drop-in
+seam: configure ``LLM_MODEL`` / ``OPENAI_API_BASE`` / ``OPENAI_API_KEY`` and
+pass an :class:`OpenAIClient` to the pipeline to restore LLM-driven
+generation. :class:`MockLLM` scripts responses for tests (including
+adversarial ones — see tests/test_harness_separation.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class LLMConfig:
+    model: str = os.environ.get("LLM_MODEL", "")
+    api_base: str = os.environ.get("OPENAI_API_BASE", "")
+    api_key: str = os.environ.get("OPENAI_API_KEY", "")
+    temperature: float = float(os.environ.get("LLM_TEMPERATURE", "1.0"))
+    max_tokens: int = int(os.environ.get("LLM_MAX_TOKENS", "50000"))
+
+    @property
+    def configured(self) -> bool:
+        return bool(self.model and self.api_base)
+
+
+class LLMClient:
+    """Interface: complete(system, prompt) -> str."""
+
+    def complete(self, system: str, prompt: str) -> str:  # pragma: no cover
+        raise NotImplementedError
+
+
+class OpenAIClient(LLMClient):
+    """Minimal OpenAI-compatible chat client (stdlib only; used when the
+    operator provides an endpoint — never in offline CI)."""
+
+    def __init__(self, config: Optional[LLMConfig] = None):
+        self.config = config or LLMConfig()
+        if not self.config.configured:
+            raise RuntimeError(
+                "OpenAIClient requires LLM_MODEL and OPENAI_API_BASE; "
+                "offline runs use the deterministic proposer bank instead.")
+
+    def complete(self, system: str, prompt: str) -> str:  # pragma: no cover
+        import urllib.request
+        body = json.dumps({
+            "model": self.config.model,
+            "temperature": self.config.temperature,
+            "max_tokens": self.config.max_tokens,
+            "messages": [{"role": "system", "content": system},
+                         {"role": "user", "content": prompt}],
+        }).encode()
+        req = urllib.request.Request(
+            self.config.api_base.rstrip("/") + "/chat/completions",
+            data=body,
+            headers={"Content-Type": "application/json",
+                     "Authorization": f"Bearer {self.config.api_key}"})
+        with urllib.request.urlopen(req, timeout=120) as resp:
+            out = json.loads(resp.read())
+        return out["choices"][0]["message"]["content"]
+
+
+class MockLLM(LLMClient):
+    """Scripted responses for tests."""
+
+    def __init__(self, responses: Optional[List[str]] = None,
+                 fn: Optional[Callable[[str, str], str]] = None):
+        self.responses = list(responses or [])
+        self.fn = fn
+        self.calls: List[dict] = []
+
+    def complete(self, system: str, prompt: str) -> str:
+        self.calls.append({"system": system, "prompt": prompt})
+        if self.fn is not None:
+            return self.fn(system, prompt)
+        if self.responses:
+            return self.responses.pop(0)
+        raise RuntimeError("MockLLM exhausted")

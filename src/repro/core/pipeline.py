@@ -1,0 +1,182 @@
+"""The Forge pipeline (paper §IV-A): analysis → planner → dependency-ordered
+CoVeR stages with issue-driven skip logic, re-analysis between stages,
+best-of-k selection, and never-degrade semantics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.analyzer import analyze
+from repro.core.context import ProblemContext
+from repro.core.cover import CoVeRAgent, StageResult
+from repro.core.history import History
+from repro.core.llm import LLMClient
+from repro.core.planner import plan
+from repro.core.proposers import make_proposer
+from repro.core.verify import compile_and_verify
+from repro.hw.specs import TPUSpec, TPU_V5E
+from repro.ir.cost import CostModel, ProgramCost
+from repro.ir.interpreter import evaluate, make_inputs, make_params
+from repro.ir.schedule import KernelProgram
+from repro.kb.loader import KnowledgeBase, load_default
+
+
+@dataclasses.dataclass
+class StageRecord:
+    stage: str
+    improved: bool
+    iterations: int
+    speedup: Optional[float]
+    description: str
+    fallback_used: bool
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    name: str
+    original_time: float
+    optimized_time: float
+    ci_program: KernelProgram
+    bench_program: KernelProgram
+    stage_records: List[StageRecord]
+    issues_initial: List
+    k_used: int = 1
+
+    @property
+    def speedup(self) -> float:
+        return self.original_time / self.optimized_time if self.optimized_time else 1.0
+
+
+class ForgePipeline:
+    def __init__(self,
+                 kb: Optional[KnowledgeBase] = None,
+                 spec: TPUSpec = TPU_V5E,
+                 max_iterations: int = 5,
+                 best_of_k: int = 1,
+                 use_pallas_exec: bool = True,
+                 llm: Optional[LLMClient] = None,
+                 history: Optional[History] = None,
+                 dump_dir: Optional[pathlib.Path] = None,
+                 stages_enabled: Optional[List[str]] = None,
+                 use_planner: bool = True):
+        self.kb = kb or load_default()
+        self.spec = spec
+        self.T = max_iterations
+        self.k = best_of_k
+        self.use_pallas_exec = use_pallas_exec
+        self.llm = llm
+        self.history = history or History()
+        self.dump_dir = dump_dir
+        self.stages_enabled = stages_enabled          # ablation hook
+        self.use_planner = use_planner                # ablation hook
+        self.cost_model = CostModel(spec)
+
+    # ------------------------------------------------------------------
+    def _prepare_ctx(self, name: str, ci_program: KernelProgram,
+                     tags, target_dtype: str, rtol: float, atol: float,
+                     meta: Dict) -> ProblemContext:
+        """Build the trusted harness context: seeded inputs/weights and the
+        oracle outputs computed from the ORIGINAL graph in f32 (the candidate
+        can never influence this path)."""
+        g = ci_program.graph
+        inputs = make_inputs(g, seed=1)
+        params = make_params(g, seed=0)
+        oracle = evaluate(g, inputs, params)
+        oracle = {k: v.astype(jnp.float32) for k, v in oracle.items()}
+        return ProblemContext(name=name, target_dtype=target_dtype,
+                              rtol=rtol, atol=atol, spec=self.spec,
+                              tags=tuple(tags), ci_inputs=inputs,
+                              ci_params=params, oracle_outputs=oracle,
+                              meta=dict(meta))
+
+    # ------------------------------------------------------------------
+    def optimize(self, name: str,
+                 ci_program: KernelProgram,
+                 bench_program: KernelProgram,
+                 tags=(), target_dtype: str = "bfloat16",
+                 rtol: float = 1e-2, atol: float = 1e-5,
+                 meta: Optional[Dict] = None) -> PipelineResult:
+        ctx = self._prepare_ctx(name, ci_program, tags, target_dtype,
+                                rtol, atol, meta or {})
+        original_cost = self.cost_model.program_cost(bench_program)
+
+        best: Optional[PipelineResult] = None
+        for pass_idx in range(max(1, self.k)):
+            result = self._single_pass(name, ci_program.copy(),
+                                       bench_program.copy(), ctx,
+                                       original_cost, pass_idx)
+            if best is None or result.optimized_time < best.optimized_time:
+                best = result
+        best.k_used = max(1, self.k)
+        return best
+
+    # ------------------------------------------------------------------
+    def _single_pass(self, name: str, ci_prog: KernelProgram,
+                     bench_prog: KernelProgram, ctx: ProblemContext,
+                     original_cost: ProgramCost, pass_idx: int) -> PipelineResult:
+        records: List[StageRecord] = []
+        issues = analyze(bench_prog, ctx)
+        issues_initial = list(issues)
+        order = plan(issues, llm=self.llm) if self.use_planner else [
+            s for s in ("algorithmic", "discovery", "dtype_fix", "fusion",
+                        "memory_access", "block_pointers", "persistent_kernel",
+                        "gpu_specific", "autotuning")]
+        if self.stages_enabled is not None:
+            order = [s for s in order if s in self.stages_enabled]
+
+        executed = set()
+        while order:
+            stage = order.pop(0)
+            if stage in executed:
+                continue
+            executed.add(stage)
+            stage_issues = [i for i in issues if i.stage == stage]
+            if not stage_issues:
+                continue  # skip logic: no issues -> no stage execution
+            proposer = make_proposer(stage, self.kb, ctx)
+            agent = CoVeRAgent(stage, proposer, self.kb,
+                               max_iterations=self.T,
+                               dump_dir=self.dump_dir,
+                               use_pallas_exec=self.use_pallas_exec)
+            incumbent = self.cost_model.program_time(bench_prog)
+            res: StageResult = agent.run(ci_prog, bench_prog, stage_issues, ctx,
+                                         incumbent, self.cost_model,
+                                         start_offset=pass_idx)
+            speedup = res.report.speedup if (res.report and res.improved) else None
+            records.append(StageRecord(stage, res.improved, res.iterations,
+                                       speedup,
+                                       res.accepted.description if res.accepted else "",
+                                       res.fallback_used))
+            self.history.record(name, stage,
+                                res.accepted.pattern_id if res.accepted else "",
+                                res.improved, speedup, res.iterations)
+            if res.improved:
+                ci_prog, bench_prog = res.ci_program, res.bench_program
+                # re-analysis (paper §IV-A-c): refresh the issue list; newly
+                # surfaced issues can activate not-yet-run stages
+                issues = analyze(bench_prog, ctx)
+                pos = {s: i for i, s in enumerate(order)}
+                for i in issues:
+                    if i.stage not in executed and i.stage not in pos:
+                        new_order = plan(issues, llm=self.llm)
+                        order = [s for s in new_order if s not in executed]
+                        if self.stages_enabled is not None:
+                            order = [s for s in order
+                                     if s in self.stages_enabled]
+                        break
+            else:
+                issues = analyze(bench_prog, ctx)
+
+        final_time = self.cost_model.program_time(bench_prog)
+        # pipeline-level never-degrade (paper §IV-B-e)
+        if final_time > original_cost.total_s:
+            return PipelineResult(name, original_cost.total_s,
+                                  original_cost.total_s, ci_prog, bench_prog,
+                                  records, issues_initial)
+        return PipelineResult(name, original_cost.total_s, final_time,
+                              ci_prog, bench_prog, records, issues_initial)

@@ -1,0 +1,81 @@
+"""Stage planner (paper §IV-A): order the stage subset that has issues,
+subject to hard dependency constraints encoding decreasing semantic scope.
+
+The paper's planner is an LLM constrained by the DAG, falling back to the
+default sequence on failure. Ours: an optional LLM client proposes an order
+(validated against the DAG; invalid -> fallback); offline, a severity-greedy
+topological sort — for equal dependency rank, stages whose issues carry the
+highest severity go first.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.issues import Issue, stages_with_issues
+from repro.core.llm import LLMClient
+
+DEFAULT_ORDER = [
+    "algorithmic", "discovery", "dtype_fix", "fusion", "memory_access",
+    "block_pointers", "persistent_kernel", "gpu_specific", "autotuning",
+]
+
+# hard constraints: (before, after)
+HARD_DEPS = [
+    ("algorithmic", "dtype_fix"),
+    ("algorithmic", "fusion"),
+    ("discovery", "dtype_fix"),
+    ("discovery", "fusion"),
+    ("dtype_fix", "fusion"),
+    ("memory_access", "block_pointers"),
+    ("fusion", "gpu_specific"),
+    ("block_pointers", "gpu_specific"),
+    ("gpu_specific", "autotuning"),
+]
+
+
+def _respects_deps(order: List[str]) -> bool:
+    pos = {s: i for i, s in enumerate(order)}
+    for a, b in HARD_DEPS:
+        if a in pos and b in pos and pos[a] > pos[b]:
+            return False
+    return True
+
+
+def plan(issues: List[Issue], llm: Optional[LLMClient] = None) -> List[str]:
+    """Return the ordered subset of stages to execute (skip logic included:
+    a stage with no associated issue is not scheduled)."""
+    active = stages_with_issues(issues)
+    if not active:
+        return []
+
+    if llm is not None:
+        try:
+            resp = llm.complete(
+                "You order kernel-optimization stages subject to hard "
+                "dependency constraints. Reply with a comma-separated list.",
+                f"stages: {active}\ndeps(before->after): {HARD_DEPS}\n"
+                f"issues: {[(i.type, i.severity) for i in issues]}")
+            order = [s.strip() for s in resp.split(",") if s.strip() in active]
+            if len(set(order)) == len(active) and _respects_deps(order):
+                return order
+        except Exception:  # noqa: BLE001 — LLM failure -> default sequence
+            pass
+        return [s for s in DEFAULT_ORDER if s in active]
+
+    # offline heuristic: severity-greedy topological sort
+    sev: Dict[str, int] = {}
+    for i in issues:
+        sev[i.stage] = max(sev.get(i.stage, 0), i.severity)
+    remaining = set(active)
+    order: List[str] = []
+    while remaining:
+        ready = [s for s in remaining
+                 if not any(a in remaining for a, b in HARD_DEPS if b == s)]
+        if not ready:  # should not happen (DAG), but never deadlock
+            ready = [s for s in DEFAULT_ORDER if s in remaining]
+        ready.sort(key=lambda s: (-sev.get(s, 0), DEFAULT_ORDER.index(s)))
+        nxt = ready[0]
+        order.append(nxt)
+        remaining.remove(nxt)
+    return order

@@ -1,0 +1,642 @@
+"""Per-stage candidate proposers.
+
+Each proposer is the deterministic stand-in for the paper's LLM at one stage:
+it reads the detected issues + the stage-scoped knowledge base (exactly the
+prompt content ``format_for_llm`` assembles) and yields
+:class:`Candidate` program transformations in priority order. Proposers are
+*adaptive*: they read the trajectory's latest observation and react to
+structured errors (VMEM overflow -> shrink BLOCK_K, alignment -> round up),
+reproducing the refine half of CoVeR.
+
+Candidates are pure functions ``KernelProgram -> KernelProgram``; they are
+applied by the agent to both the ci- and bench-shaped programs so correctness
+(small shapes) and structure/performance (deployment shapes) stay in sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, Iterator, List, Optional
+
+from repro.core.context import ProblemContext
+from repro.core.issues import Issue
+from repro.ir.graph import Graph, retype_graph
+from repro.ir.rewrite import find_rewrites
+from repro.ir.schedule import (FusionGroup, KernelProgram, PallasConfig,
+                               Schedule, eager_schedule)
+from repro.kb.loader import KnowledgeBase
+
+
+@dataclasses.dataclass
+class Candidate:
+    thought: str
+    description: str
+    transform: Callable[[KernelProgram], KernelProgram]
+    pattern_id: str = ""
+
+
+Trajectory = List[Dict[str, str]]   # entries: {thought, tool, args, observation}
+
+
+def _last_observation(trajectory: Trajectory) -> str:
+    for entry in reversed(trajectory):
+        if entry.get("observation"):
+            return entry["observation"]
+    return ""
+
+
+def _rebuild_schedule_like(program: KernelProgram, new_graph: Graph) -> Schedule:
+    """After a graph rewrite, rebuild the schedule: nodes that survived keep
+    their group impl/config where the whole group survived; new/changed nodes
+    get eager singleton groups."""
+    old = program.schedule
+    new_names = set(new_graph.nodes)
+    groups: List[FusionGroup] = []
+    claimed = set()
+    for g in old.groups:
+        if all(n in new_names for n in g.nodes):
+            groups.append(FusionGroup.from_dict(g.to_dict()))
+            claimed.update(g.nodes)
+    for n in new_graph.toposorted():
+        if n.op in ("input", "param", "const") or n.name in claimed:
+            continue
+        groups.append(FusionGroup(f"g_{n.name}", [n.name], n.name, "xla", None))
+    return Schedule(groups=groups, compute_dtype=old.compute_dtype)
+
+
+def _with_graph(program: KernelProgram, new_graph: Graph) -> KernelProgram:
+    p = program.copy()
+    p.graph = new_graph
+    p.schedule = _rebuild_schedule_like(program, new_graph)
+    p.validate()
+    return p
+
+
+def _mutate_group(program: KernelProgram, group_name: str,
+                  fn: Callable[[FusionGroup], None]) -> KernelProgram:
+    p = program.copy()
+    for g in p.schedule.groups:
+        if g.name == group_name:
+            fn(g)
+            return p
+    # group names can differ between ci/bench programs only if a transform
+    # diverged — treat as no-op rather than corrupt the program
+    return p
+
+
+def _main_matmul_groups(program: KernelProgram) -> List[FusionGroup]:
+    g = program.graph
+    return [grp for grp in program.schedule.groups
+            if g.node(grp.root).op == "matmul" and len(g.node(grp.root).shape) == 2]
+
+
+def _matmul_dims(program: KernelProgram, grp: FusionGroup):
+    g = program.graph
+    root = g.node(grp.root)
+    m, n = root.shape[-2], root.shape[-1]
+    a_shape = g.node(root.inputs[0]).shape
+    k = a_shape[-2] if root.attrs.get("transpose_a") else a_shape[-1]
+    return m, n, k
+
+
+# ======================================================================
+# stage proposers
+# ======================================================================
+
+class BaseProposer:
+    stage = "base"
+
+    def __init__(self, kb: KnowledgeBase, ctx: ProblemContext):
+        self.kb = kb
+        self.ctx = ctx
+
+    def candidates(self, program: KernelProgram, issues: List[Issue],
+                   trajectory: Trajectory) -> Iterator[Candidate]:
+        raise NotImplementedError
+
+
+class RewriteProposer(BaseProposer):
+    """Algorithmic + discovery stages: apply KB-named graph rewrite rules."""
+
+    def __init__(self, kb, ctx, stage: str):
+        super().__init__(kb, ctx)
+        self.stage = stage
+
+    def candidates(self, program, issues, trajectory):
+        rules: List[str] = []
+        for i in issues:
+            rule = i.proposal.get("rule")
+            if rule and rule not in rules:
+                rules.append(rule)
+        # KB priority: patterns for this stage whose action names a rule
+        kb_rules = [p.action.get("rule") for p in self.kb.patterns_for(self.stage)
+                    if p.action.get("type") == "rewrite"]
+        rules.sort(key=lambda r: kb_rules.index(r) if r in kb_rules else 99)
+
+        if len(rules) > 1 or any(r in ("fold_scale_into_weights",
+                                       "mean_to_sum_scale") for r in rules):
+            # composite candidate first: the LLM rewrites holistically, so the
+            # deterministic equivalent chains all applicable rules to fixpoint
+            # (canonicalize -> fold -> eliminate compositions unlock the big
+            # GEMM-elimination wins).
+            all_rules = list(dict.fromkeys(rules + kb_rules))
+
+            def fixpoint(p: KernelProgram, all_rules=tuple(all_rules)) -> KernelProgram:
+                g = p.graph
+                for _ in range(8):
+                    cands = find_rewrites(g, rules=[r for r in all_rules if r])
+                    if not cands:
+                        break
+                    g = cands[0].apply(g)
+                if g is p.graph:
+                    return p
+                return _with_graph(p, g)
+
+            yield Candidate(
+                thought=f"[{self.stage}] chain all applicable algebraic rewrites "
+                        f"to fixpoint ({', '.join(r for r in all_rules if r)}): "
+                        "canonicalizations expose eliminations.",
+                description="rewrite:fixpoint",
+                transform=fixpoint,
+                pattern_id="rewrite_fixpoint")
+
+        for rule in rules:
+            rewrites = find_rewrites(program.graph, rules=[rule])
+            for rw in rewrites[:2]:
+                why = rw.why_valid
+
+                def transform(p: KernelProgram, rw_rule=rule) -> KernelProgram:
+                    # re-find on the target program (ci/bench graphs differ in shape)
+                    cands = find_rewrites(p.graph, rules=[rw_rule])
+                    if not cands:
+                        return p
+                    return _with_graph(p, cands[0].apply(p.graph))
+
+                yield Candidate(
+                    thought=f"[{self.stage}] {rw.description}. Valid because: "
+                            f"{why}. Expected {rw.estimated_speedup}.",
+                    description=f"rewrite:{rule}",
+                    transform=transform,
+                    pattern_id=rule)
+
+
+class DtypeProposer(BaseProposer):
+    stage = "dtype_fix"
+
+    def candidates(self, program, issues, trajectory):
+        has_f64 = any(i.type == "dtype_float64" for i in issues)
+        wants_bf16 = (any(i.type == "dtype_precision" for i in issues)
+                      or has_f64) and self.ctx.target_dtype in ("bfloat16", "bf16")
+        if has_f64 and wants_bf16:
+            def to_bf16_direct(p: KernelProgram) -> KernelProgram:
+                g2 = retype_graph(p.graph, lambda d: "float32" if d == "float64" else d)
+                p2 = p.copy()
+                p2.graph = g2
+                p2.schedule = _rebuild_schedule_like(p, g2)
+                p2.schedule.compute_dtype = "bfloat16"
+                for grp in p2.schedule.groups:
+                    if grp.config is not None:
+                        grp.config.acc_dtype = "float32"
+                return p2
+            yield Candidate(
+                thought="[dtype_fix] f64 storage on a bf16-native MXU: demote "
+                        "straight to bf16 io with f32 accumulation (KB: "
+                        "no_float64_on_tpu + mixed_precision_bf16).",
+                description="dtype:f64->bf16+f32acc", transform=to_bf16_direct,
+                pattern_id="mixed_precision_bf16")
+        if has_f64:
+            def demote(p: KernelProgram) -> KernelProgram:
+                g2 = retype_graph(p.graph, lambda d: "float32" if d == "float64" else d)
+                p2 = p.copy()
+                p2.graph = g2
+                p2.schedule = _rebuild_schedule_like(p, g2)
+                return p2
+            yield Candidate(
+                thought="[dtype_fix] float64 has no MXU support; demote to f32 "
+                        "and keep f32 accumulation (KB: no_float64_on_tpu).",
+                description="dtype:f64->f32", transform=demote,
+                pattern_id="demote_f64_to_f32")
+        if any(i.type == "dtype_precision" for i in issues) \
+                and self.ctx.target_dtype in ("bfloat16", "bf16"):
+            def to_bf16(p: KernelProgram) -> KernelProgram:
+                p2 = p.copy()
+                p2.schedule.compute_dtype = "bfloat16"
+                for grp in p2.schedule.groups:
+                    if grp.config is not None:
+                        grp.config.acc_dtype = "float32"
+                return p2
+            yield Candidate(
+                thought="[dtype_fix] switch io/compute storage to bf16 with f32 "
+                        "accumulators: 2x MXU rate, half the HBM traffic "
+                        "(KB: mixed_precision_bf16).",
+                description="dtype:f32->bf16+f32acc", transform=to_bf16,
+                pattern_id="mixed_precision_bf16")
+        if any(i.type == "dtype_input_conversion" for i in issues):
+            def drop_casts(p: KernelProgram) -> KernelProgram:
+                cands = find_rewrites(p.graph, rules=["eliminate_identities"])
+                if not cands:
+                    return p
+                return _with_graph(p, cands[0].apply(p.graph))
+            yield Candidate(
+                thought="[dtype_fix] remove redundant cast chains (KB: "
+                        "cast_at_boundaries_only).",
+                description="dtype:drop-redundant-casts", transform=drop_casts,
+                pattern_id="cast_at_boundaries_only")
+
+
+class FusionProposer(BaseProposer):
+    stage = "fusion"
+
+    def _fuse_chain(self, p: KernelProgram, group_name: str,
+                    include_reduction: bool) -> KernelProgram:
+        """Greedily merge the single-consumer elementwise chain (and optional
+        terminal row-reduction) following ``group_name`` into it."""
+        p = p.copy()
+        sched = p.schedule
+        g = p.graph
+        by_name = {grp.name: grp for grp in sched.groups}
+        grp = by_name.get(group_name)
+        if grp is None:
+            # ci/bench name drift: locate by structure (first matmul group)
+            mm = _main_matmul_groups(p)
+            if not mm:
+                return p
+            grp = mm[0]
+        owner = {n: gg for gg in sched.groups for n in gg.nodes}
+        while True:
+            last = g.node(grp.nodes[-1])
+            cons = g.consumers(last.name)
+            if len(cons) != 1 or last.name in g.outputs:
+                break
+            c = cons[0]
+            cg = owner.get(c.name)
+            if cg is None or cg is grp or len(cg.nodes) != 1:
+                break
+            is_red = (c.op in ("reduce_sum", "reduce_max", "reduce_min",
+                               "reduce_mean")
+                      and tuple(ax % 2 for ax in c.attrs.get("axes", ())) == (1,)
+                      and not c.attrs.get("keepdims", False))
+            if not (c.is_elementwise() or (include_reduction and is_red)):
+                break
+            grp.nodes.append(c.name)
+            owner[c.name] = grp
+            sched.groups.remove(cg)
+            if is_red:
+                break
+        return p
+
+    def candidates(self, program, issues, trajectory):
+        fusion_issues = [i for i in issues
+                         if i.type in ("unfused_kernels",
+                                       "unfused_reduction_epilogue",
+                                       "unfused_elementwise_chain")]
+        red = [i for i in fusion_issues if i.type == "unfused_reduction_epilogue"]
+        targets = []
+        for i in red + fusion_issues:
+            if i.node and i.node not in targets:
+                targets.append(i.node)
+        for t in targets:
+            include_red = any(i.node == t and i.type == "unfused_reduction_epilogue"
+                              for i in issues)
+            yield Candidate(
+                thought=f"[fusion] merge the pointwise chain after {t} into one "
+                        f"kernel{' and accumulate the row-reduction in-tile (the '
+                        '[M,N] product never hits HBM)' if include_red else ''} "
+                        "(KB: fuse_epilogue_into_matmul"
+                        + ("/fuse_reduction_epilogue" if include_red else "") + ").",
+                description=f"fuse:{t}{'+reduction' if include_red else ''}",
+                transform=lambda p, t=t, r=include_red: self._fuse_chain(p, t, r),
+                pattern_id="fuse_reduction_epilogue" if include_red
+                else "fuse_epilogue_into_matmul")
+        if any(i.type == "fusion_noop" for i in issues):
+            def drop_noops(p: KernelProgram) -> KernelProgram:
+                cands = find_rewrites(p.graph, rules=["eliminate_identities"])
+                if not cands:
+                    return p
+                return _with_graph(p, cands[0].apply(p.graph))
+            yield Candidate(
+                thought="[fusion] dead/no-op elimination (KB: eliminate_dead_fusion).",
+                description="fuse:drop-noops", transform=drop_noops,
+                pattern_id="eliminate_dead_fusion")
+        if any(i.type == "fusion_register_pressure" for i in issues):
+            def shrink(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                for grp in p.schedule.groups:
+                    if grp.config and grp.config.block_k > 128:
+                        grp.config.block_k //= 2
+                return p
+            yield Candidate(
+                thought="[fusion] working set exceeds VMEM: shrink BLOCK_K "
+                        "(KB: fusion_vmem_pressure — K only changes pipeline "
+                        "granularity).",
+                description="fuse:shrink-blocks", transform=shrink,
+                pattern_id="fusion_vmem_pressure")
+
+
+class MemoryProposer(BaseProposer):
+    stage = "memory_access"
+
+    def candidates(self, program, issues, trajectory):
+        for i in issues:
+            if i.type in ("uncoalesced_access", "missing_packed_transpose") and i.node:
+                yield Candidate(
+                    thought=f"[memory_access] {i.description} — repack the B "
+                            "operand once to lane-contiguous layout "
+                            "(KB: pack_transposed_operand).",
+                    description=f"mem:pack-b:{i.node}",
+                    transform=lambda p, n=i.node: _mutate_group(
+                        p, n, lambda grp: grp.operand_layouts.__setitem__("b", "packed")),
+                    pattern_id="pack_transposed_operand")
+                break
+        for i in issues:
+            if i.type == "missing_boundary_check" and i.node:
+                yield Candidate(
+                    thought=f"[memory_access] add ragged-edge masking on {i.node} "
+                            "(KB: insert_bounds_masks).",
+                    description=f"mem:mask:{i.node}",
+                    transform=lambda p, n=i.node: _mutate_group(
+                        p, n, lambda grp: setattr(grp.config or PallasConfig(),
+                                                  "masked", True)),
+                    pattern_id="insert_bounds_masks")
+                break
+        for i in issues:
+            if i.type == "suboptimal_conv_layout" and i.node:
+                def to_nhwc(p: KernelProgram, node=i.node) -> KernelProgram:
+                    p = p.copy()
+                    if node in p.graph.nodes:
+                        p.graph.node(node).attrs["internal_layout"] = "NHWC"
+                    else:
+                        for n in p.graph.toposorted():
+                            if n.op.startswith("conv"):
+                                n.attrs["internal_layout"] = "NHWC"
+                    return p
+                yield Candidate(
+                    thought=f"[memory_access] run {i.node} channels-last so C "
+                            "lands on the 128-lane axis (KB: nhwc_for_conv).",
+                    description=f"mem:nhwc:{i.node}", transform=to_nhwc,
+                    pattern_id="nhwc_for_conv")
+                break
+        if any(i.type == "device_host_sync" for i in issues):
+            def fix_sync(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                p.meta["host_sync_removed"] = True
+                return p
+            yield Candidate(
+                thought="[memory_access] hoist host-device sync out of the hot "
+                        "path (KB: no_host_sync_in_hot_path).",
+                description="mem:remove-host-sync", transform=fix_sync,
+                pattern_id="no_host_sync_in_hot_path")
+        memgrps = [i.node for i in issues if i.type == "long_liveness" and i.node]
+        for n in memgrps[:1]:
+            yield Candidate(
+                thought=f"[memory_access] enable prefetch + early intermediate "
+                        f"death in {n} (KB: prefetch_next_tile / "
+                        "reduce_live_intermediates).",
+                description=f"mem:prefetch:{n}",
+                transform=lambda p, n=n: _mutate_group(
+                    p, n, lambda grp: setattr(grp, "prefetch", True)),
+                pattern_id="prefetch_next_tile")
+
+
+class BlockPointerProposer(BaseProposer):
+    stage = "block_pointers"
+
+    def candidates(self, program, issues, trajectory):
+        last_err = _last_observation(trajectory)
+        shrink = "VMEM" in last_err
+        targets = [i.node for i in issues
+                   if i.type == "manual_pointer_arithmetic" and i.node]
+        for attempt, div in enumerate((1, 2, 4)):
+            def modernize(p: KernelProgram, div=div) -> KernelProgram:
+                p = p.copy()
+                hw = self.ctx.hw
+                for grp in p.schedule.groups:
+                    if grp.impl != "pallas_naive":
+                        continue
+                    grp.impl = "pallas_blockspec"
+                    root = p.graph.node(grp.root)
+                    if root.op == "matmul" and len(root.shape) == 2:
+                        mm_grp = next(gg for gg in _main_matmul_groups(p)
+                                      if gg.name == grp.name)
+                        m, n, k = _matmul_dims(p, mm_grp)
+                        rec = hw.get_optimal_params(m, n, k,
+                                                    p.schedule.compute_dtype)
+                        grp.config = PallasConfig(
+                            block_m=max(8, rec.block_m // div),
+                            block_n=max(128, rec.block_n // div),
+                            block_k=max(128, rec.block_k // div),
+                            group_m=1, num_stages=2, masked=True)
+                    else:
+                        grp.config = grp.config or PallasConfig(masked=True)
+                return p
+            if attempt > 0 and not shrink:
+                break
+            yield Candidate(
+                thought="[block_pointers] modernize manual pl.load/pl.ds tile "
+                        "indexing to BlockSpec index maps so Mosaic pipelines "
+                        "HBM->VMEM copies (KB: tpu_block_modernization)"
+                        + (f"; shrinking blocks /{div} after VMEM feedback"
+                           if attempt else "") + ".",
+                description=f"blockspec:modernize/{div}",
+                transform=modernize,
+                pattern_id="tpu_block_modernization")
+            shrink = True  # allow further shrink attempts on repeated failures
+
+
+class PersistentProposer(BaseProposer):
+    stage = "persistent_kernel"
+
+    def candidates(self, program, issues, trajectory):
+        targets = [i.node for i in issues if i.type == "missing_persistent" and i.node]
+        if targets:
+            def persist(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                for grp in p.schedule.groups:
+                    if grp.impl == "pallas_blockspec" and grp.config:
+                        grp.config.persistent = True
+                        sem = list(grp.config.dimension_semantics or
+                                   ("parallel", "arbitrary"))
+                        if "arbitrary" not in sem:
+                            sem[-1] = "arbitrary"
+                        grp.config.dimension_semantics = tuple(sem)
+                return p
+            yield Candidate(
+                thought="[persistent_kernel] keep the f32 accumulator in VMEM "
+                        "scratch across the (arbitrary-marked) K grid dim; "
+                        "partials stop round-tripping through HBM "
+                        "(KB: persistent_accumulate).",
+                description="persistent:acc", transform=persist,
+                pattern_id="persistent_accumulate")
+
+
+class GpuSpecificProposer(BaseProposer):
+    stage = "gpu_specific"
+
+    def candidates(self, program, issues, trajectory):
+        hw = self.ctx.hw
+
+        def apply_query(p: KernelProgram, shrink: int = 1) -> KernelProgram:
+            p = p.copy()
+            for grp in _main_matmul_groups(p):
+                if not grp.impl.startswith("pallas"):
+                    continue
+                m, n, k = _matmul_dims(p, grp)
+                rec = hw.get_optimal_params(m, n, k, p.schedule.compute_dtype)
+                old = grp.config or PallasConfig()
+                grp.config = PallasConfig(
+                    block_m=max(8, rec.block_m // shrink),
+                    block_n=max(128, rec.block_n // shrink),
+                    block_k=max(128, rec.block_k // shrink),
+                    group_m=rec.group_m,
+                    num_stages=rec.num_stages,
+                    dimension_semantics=("parallel", "arbitrary"),
+                    acc_dtype="float32",
+                    persistent=old.persistent,
+                    masked=True)
+            return p
+
+        types = {i.type for i in issues}
+        if types & {"suboptimal_tile_size", "misaligned_block_shape"}:
+            last_err = _last_observation(trajectory)
+            shrink = 2 if "VMEM" in last_err else 1
+            yield Candidate(
+                thought="[gpu_specific] replace imported NVIDIA-default tiles "
+                        "with shape-aware MXU-aligned tiles from the hardware "
+                        "query (KB: tpu_shape_aware_tiles).",
+                description="tpu:query-tiles",
+                transform=lambda p, s=shrink: apply_query(p, s),
+                pattern_id="tpu_shape_aware_tiles")
+            if shrink == 1:
+                yield Candidate(
+                    thought="[gpu_specific] VMEM feedback — halve streamed tiles.",
+                    description="tpu:query-tiles/2",
+                    transform=lambda p: apply_query(p, 2),
+                    pattern_id="tpu_shape_aware_tiles")
+        if "no_swizzling" in types:
+            def swizzle(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                for grp in _main_matmul_groups(p):
+                    if grp.config:
+                        m, n, k = _matmul_dims(p, grp)
+                        rec = hw.get_optimal_params(m, n, k,
+                                                    p.schedule.compute_dtype)
+                        grp.config.group_m = max(rec.group_m, 2)
+                return p
+            yield Candidate(
+                thought="[gpu_specific] GROUP_M grid traversal keeps the A block "
+                        "VMEM-resident across n-steps (KB: tpu_grid_swizzling; "
+                        "guard: >1 M-tile).",
+                description="tpu:swizzle", transform=swizzle,
+                pattern_id="tpu_grid_swizzling")
+        if "missing_pipeline_stages" in types:
+            yield Candidate(
+                thought="[gpu_specific] double/triple-buffer HBM->VMEM copies "
+                        "(KB: tpu_pipeline_depth).",
+                description="tpu:stages",
+                transform=lambda p: self._set_all(p, "num_stages", 2),
+                pattern_id="tpu_pipeline_depth")
+        if "bf16_accumulator" in types:
+            yield Candidate(
+                thought="[gpu_specific] pin accumulation to f32 "
+                        "(KB: accumulate_f32).",
+                description="tpu:f32acc",
+                transform=lambda p: self._set_all(p, "acc_dtype", "float32"),
+                pattern_id="accumulate_f32")
+        if "missing_dimension_semantics" in types:
+            yield Candidate(
+                thought="[gpu_specific] mark parallel grid dims so Mosaic can "
+                        "partition across TensorCores (KB: tpu_megacore_partition).",
+                description="tpu:dimsem",
+                transform=lambda p: self._set_all(
+                    p, "dimension_semantics", ("parallel", "arbitrary")),
+                pattern_id="tpu_megacore_partition")
+        if "sigmoid_slow_exp" in types:
+            def fix_sigmoid(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                for n in p.graph.toposorted():
+                    if n.op == "sigmoid":
+                        n.attrs.pop("naive_exp", None)
+                return p
+            yield Candidate(
+                thought="[gpu_specific] replace 1/(1+exp(-x)) with the fused "
+                        "sigmoid primitive (no division).",
+                description="tpu:sigmoid", transform=fix_sigmoid,
+                pattern_id="sigmoid_slow_exp")
+
+    @staticmethod
+    def _set_all(p: KernelProgram, field: str, value) -> KernelProgram:
+        p = p.copy()
+        for grp in p.schedule.groups:
+            if grp.config is not None:
+                setattr(grp.config, field, value)
+        return p
+
+
+class AutotuneProposer(BaseProposer):
+    stage = "autotuning"
+
+    def candidates(self, program, issues, trajectory):
+        from repro.ir.cost import CostModel
+        cm = CostModel(self.ctx.spec)
+        hw = self.ctx.hw
+        groups = [grp for grp in _main_matmul_groups(program)
+                  if grp.impl == "pallas_blockspec"]
+        if not groups:
+            return
+        grp = groups[0]
+        m, n, k = _matmul_dims(program, grp)
+        grid = hw.autotune_grid(m, n, k, program.schedule.compute_dtype)
+
+        scored = []
+        for cfgp in grid:
+            trial = program.copy()
+            for g2 in trial.schedule.groups:
+                if g2.name == grp.name and g2.config is not None:
+                    g2.config.block_m = cfgp.block_m
+                    g2.config.block_n = cfgp.block_n
+                    g2.config.block_k = cfgp.block_k
+                    g2.config.group_m = cfgp.group_m
+                    g2.config.num_stages = cfgp.num_stages
+            scored.append((cm.program_time(trial), cfgp))
+        scored.sort(key=lambda t: t[0])
+
+        def make_apply(c):
+            def apply_cfg(p: KernelProgram) -> KernelProgram:
+                p = p.copy()
+                p.meta["autotuned"] = True
+                for g2 in _main_matmul_groups(p):
+                    if g2.impl == "pallas_blockspec" and g2.config is not None:
+                        # clamp to this program's dims (ci programs are small)
+                        mm, nn, kk = _matmul_dims(p, g2)
+                        g2.config.block_m = max(8, min(c.block_m, mm))
+                        g2.config.block_n = max(8, min(c.block_n, nn))
+                        g2.config.block_k = max(8, min(c.block_k, kk))
+                        g2.config.group_m = c.group_m
+                        g2.config.num_stages = c.num_stages
+                return p
+            return apply_cfg
+
+        for rank, (t_pred, cfgp) in enumerate(scored[:3]):
+            yield Candidate(
+                thought=f"[autotuning] curated-grid rank {rank}: "
+                        f"({cfgp.block_m},{cfgp.block_n},{cfgp.block_k}) "
+                        f"gm={cfgp.group_m} stages={cfgp.num_stages}, predicted "
+                        f"{t_pred*1e6:.2f}us (KB: tpu_autotune_grid).",
+                description=f"autotune:rank{rank}",
+                transform=make_apply(cfgp),
+                pattern_id="tpu_autotune_grid")
+
+
+def make_proposer(stage: str, kb: KnowledgeBase, ctx: ProblemContext) -> BaseProposer:
+    if stage in ("algorithmic", "discovery"):
+        return RewriteProposer(kb, ctx, stage)
+    return {
+        "dtype_fix": DtypeProposer,
+        "fusion": FusionProposer,
+        "memory_access": MemoryProposer,
+        "block_pointers": BlockPointerProposer,
+        "persistent_kernel": PersistentProposer,
+        "gpu_specific": GpuSpecificProposer,
+        "autotuning": AutotuneProposer,
+    }[stage](kb, ctx)

@@ -1,0 +1,266 @@
+"""Four-level verification cascade (paper §IV-B-c).
+
+``compile_and_verify`` is the single *tool* the CoVeR agent invokes. Each
+level gates the next; the first failure returns a structured diagnostic that
+becomes the agent's observation for the next refinement iteration:
+
+  1. Syntax      — the candidate program validates and traces abstractly.
+  2. Structure   — KB hardware constraints hold (block alignment, VMEM budget,
+                   MXU minimums, f32 accumulation, dtype bans, ...); messages
+                   carry remediation instructions, paper-style.
+  3. Correctness — executed (real Pallas kernels, interpret mode) against the
+                   seeded oracle outputs; allclose(rtol, atol) + NaN/Inf gates;
+                   mismatch diagnostics include max-abs/mean/rel-diff and
+                   exceed counts plus likely causes.
+  4. Performance — the v5e roofline cost model must beat the incumbent. On
+                   failure the agent receives both timings + TFLOPS +
+                   alternative-strategy suggestions.
+
+Returns the success sentinel only when all four pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import ProblemContext
+from repro.core.executor import ExecUnsupported, run_program
+from repro.hw.specs import dtype_itemsize
+from repro.ir.cost import CostModel
+from repro.ir.schedule import KernelProgram
+from repro.kb.loader import KnowledgeBase
+
+SUCCESS = "VERIFIED: correct and faster — all checks passed"
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    ok: bool
+    level: str                   # syntax | structure | correctness | performance | success
+    observation: str
+    candidate_time: Optional[float] = None
+    incumbent_time: Optional[float] = None
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def speedup(self) -> Optional[float]:
+        if self.candidate_time and self.incumbent_time:
+            return self.incumbent_time / self.candidate_time
+        return None
+
+
+# ----------------------------------------------------------------------
+# level 2 checks, keyed by KB constraint check.type
+# ----------------------------------------------------------------------
+
+def _check_structure(program: KernelProgram, ctx: ProblemContext,
+                     kb: KnowledgeBase) -> List[str]:
+    errors: List[str] = []
+    sched = program.schedule
+    g = program.graph
+    sub, lane = ctx.spec.min_tile(sched.compute_dtype)
+
+    # dtype bans
+    for c in kb.critical_constraints():
+        if c.check.get("type") == "dtype_ban":
+            banned = c.check.get("value", "float64")
+            offenders = [n.name for n in g.toposorted() if str(n.dtype) == banned]
+            if sched.compute_dtype == banned:
+                offenders.append(f"schedule.compute_dtype={banned}")
+            if offenders:
+                errors.append(
+                    f"INVALID dtype {banned} at {offenders[:4]}: {c.description.strip()} "
+                    f"Fix: {c.correct}")
+
+    for grp in sched.groups:
+        cfg = grp.config
+        if not grp.impl.startswith("pallas"):
+            continue
+        if cfg is None:
+            errors.append(f"INVALID group {grp.name}: pallas impl without a "
+                          f"PallasConfig. Fix: attach a config (hw query defaults).")
+            continue
+        if cfg.block_m <= 0 or cfg.block_n <= 0 or cfg.block_k <= 0:
+            errors.append(f"INVALID blocks in {grp.name}: non-positive block size.")
+            continue
+        root = g.node(grp.root)
+        if grp.impl == "pallas_blockspec":
+            if cfg.block_n % lane or cfg.block_m % sub:
+                errors.append(
+                    f"INVALID block_shape=({cfg.block_m},{cfg.block_n}) in {grp.name}: "
+                    f"must be multiples of the native ({sub},{lane}) tile at "
+                    f"{sched.compute_dtype}. Valid examples: ({sub},{lane}), "
+                    f"({sub*2},{lane}), ({sub*16},{lane*4}).")
+            if root.op == "matmul" and cfg.block_k % lane:
+                errors.append(
+                    f"INVALID block_k={cfg.block_k} in {grp.name}: contraction tile "
+                    f"must be a multiple of {lane} (MXU native).")
+        # VMEM budget. Note: the naive kernel's whole-operand refs spilling to
+        # HBM is a *performance* pathology (the cost model charges it), not a
+        # compile failure — real naive Triton/Pallas kernels run, slowly. The
+        # hard gate applies to the declared BlockSpec working set, which
+        # Mosaic would genuinely refuse to allocate.
+        isz = dtype_itemsize(sched.compute_dtype)
+        stream = (cfg.block_m * cfg.block_k + cfg.block_k * cfg.block_n) * isz
+        acc = cfg.block_m * cfg.block_n * 4
+        ws = stream * max(1, cfg.num_stages) + acc
+        if ws > ctx.spec.vmem_bytes:
+            errors.append(
+                f"INVALID VMEM working set {ws >> 20} MiB > budget "
+                f"{ctx.spec.vmem_bytes >> 20} MiB in {grp.name}: shrink BLOCK_K "
+                f"first, then BLOCK_N; or reduce num_stages.")
+        if cfg.num_stages < 1:
+            errors.append(f"INVALID num_stages={cfg.num_stages} in {grp.name}: "
+                          f"must be >= 1.")
+        if cfg.acc_dtype not in ("float32",):
+            errors.append(
+                f"INVALID acc_dtype={cfg.acc_dtype} in {grp.name}: matmul "
+                f"accumulation must be float32 (bf16 acc loses ~3 digits on "
+                f"long K). Fix: acc_dtype='float32'.")
+        if cfg.persistent and root.op == "matmul":
+            sem = tuple(cfg.dimension_semantics)
+            if sem and all(s == "parallel" for s in sem):
+                errors.append(
+                    f"INVALID dimension_semantics={sem} in {grp.name}: a "
+                    f"persistent accumulator revisits blocks; the revisiting "
+                    f"dim must be 'arbitrary'.")
+        if grp.impl == "pallas_naive" and root.op == "matmul" and len(root.shape) == 2:
+            m, n_ = root.shape
+            a_shape = g.node(root.inputs[0]).shape
+            k = a_shape[0] if root.attrs.get("transpose_a") else a_shape[-1]
+            if m % cfg.block_m or n_ % cfg.block_n or k % cfg.block_k:
+                errors.append(
+                    f"INVALID naive kernel in {grp.name}: shape ({m},{n_},{k}) not "
+                    f"divisible by blocks ({cfg.block_m},{cfg.block_n},{cfg.block_k}) "
+                    f"and the kernel has no boundary checks. Fix: modernize to "
+                    f"BlockSpec tiling (auto-masked) or choose dividing blocks.")
+    return errors
+
+
+# ----------------------------------------------------------------------
+def _diff_diagnostics(got: jnp.ndarray, want: jnp.ndarray,
+                      rtol: float, atol: float) -> str:
+    got64 = np.asarray(got, np.float64)
+    want64 = np.asarray(want, np.float64)
+    adiff = np.abs(got64 - want64)
+    denom = np.maximum(np.abs(want64), 1e-12)
+    rdiff = adiff / denom
+    exceed = adiff > (atol + rtol * np.abs(want64))
+    likely = []
+    if got64.shape != want64.shape:
+        likely.append(f"shape mismatch {got64.shape} vs {want64.shape}")
+    if np.isnan(got64).any():
+        likely.append("NaNs present (unstable exp/softmax? missing max-subtract?)")
+    if exceed.mean() > 0.9:
+        likely.append("wholesale mismatch: wrong strides / transposed loads / "
+                      "wrong operand order")
+    elif exceed.any():
+        frac_tail = exceed.reshape(-1)[-max(1, exceed.size // 16):].mean()
+        if frac_tail > 4 * exceed.mean():
+            likely.append("errors concentrated at the tail: missing boundary "
+                          "checks on ragged edges")
+        else:
+            likely.append("scattered tolerance exceedances: accumulation dtype "
+                          "or reassociation too aggressive")
+    return (f"max_abs_diff={adiff.max():.3e} mean_diff={adiff.mean():.3e} "
+            f"max_rel_diff={rdiff.max():.3e} "
+            f"exceed={int(exceed.sum())}/{exceed.size} "
+            f"({100.0 * exceed.mean():.2f}%). Likely causes: "
+            + ("; ".join(likely) if likely else "minor numeric drift"))
+
+
+# ----------------------------------------------------------------------
+def compile_and_verify(candidate_ci: KernelProgram,
+                       candidate_bench: KernelProgram,
+                       incumbent_time: float,
+                       ctx: ProblemContext,
+                       kb: KnowledgeBase,
+                       cost_model: Optional[CostModel] = None,
+                       min_speedup: float = 1.001,
+                       use_pallas: bool = True) -> VerifyReport:
+    cost_model = cost_model or CostModel(ctx.spec)
+
+    # -- level 1: syntax ------------------------------------------------
+    try:
+        candidate_ci.validate()
+        candidate_bench.validate()
+        in_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
+                      for n in candidate_ci.graph.inputs()}
+        param_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
+                         for n in candidate_ci.graph.params()}
+        jax.eval_shape(lambda i, p: run_program(candidate_ci, i, p,
+                                                use_pallas=False),
+                       in_structs, param_structs)
+    except Exception as e:  # noqa: BLE001 — any trace failure is the diagnostic
+        return VerifyReport(False, "syntax",
+                            f"SYNTAX/TRACE ERROR: {type(e).__name__}: {e}")
+
+    # -- level 2: structure ----------------------------------------------
+    errors = _check_structure(candidate_bench, ctx, kb)
+    if errors:
+        return VerifyReport(False, "structure", " | ".join(errors))
+
+    # -- level 3: correctness ---------------------------------------------
+    assert ctx.ci_inputs is not None and ctx.oracle_outputs is not None
+    try:
+        got = run_program(candidate_ci, ctx.ci_inputs, ctx.ci_params or {},
+                          use_pallas=use_pallas)
+    except ExecUnsupported as e:
+        return VerifyReport(False, "structure",
+                            f"NO KERNEL TEMPLATE: {e}. Fix: keep the group "
+                            f"as impl='xla' or restructure the fusion.")
+    except Exception as e:  # noqa: BLE001
+        return VerifyReport(False, "correctness",
+                            f"RUNTIME ERROR during execution: "
+                            f"{type(e).__name__}: {e}")
+    want_list = list(ctx.oracle_outputs.items())
+    got_list = list(got.items())
+    if len(want_list) != len(got_list):
+        return VerifyReport(False, "correctness",
+                            f"OUTPUT ARITY MISMATCH: candidate produces "
+                            f"{len(got_list)} outputs, oracle has {len(want_list)}")
+    # rewrites may rename output nodes; outputs are compared positionally
+    for (key, want), (gkey, gval) in zip(want_list, got_list):
+        gv = np.asarray(gval)
+        wv = np.asarray(want)
+        if np.isnan(gv).any():
+            return VerifyReport(False, "correctness",
+                                f"NaN in output {key}: "
+                                + _diff_diagnostics(gval, want, ctx.rtol, ctx.atol))
+        if np.isinf(gv).any() and not np.isinf(wv).any():
+            return VerifyReport(False, "correctness",
+                                f"Inf in output {key} where the original has none")
+        if gv.shape != wv.shape:
+            return VerifyReport(False, "correctness",
+                                f"SHAPE MISMATCH on {key}: {gv.shape} vs {wv.shape}")
+        if not np.allclose(gv, wv, rtol=ctx.rtol, atol=ctx.atol):
+            return VerifyReport(
+                False, "correctness",
+                f"OUTPUT MISMATCH on {key} (rtol={ctx.rtol}, atol={ctx.atol}): "
+                + _diff_diagnostics(gval, want, ctx.rtol, ctx.atol))
+
+    # -- level 4: performance ----------------------------------------------
+    cand = cost_model.program_cost(candidate_bench)
+    t = cand.total_s
+    if t * min_speedup >= incumbent_time:
+        dominant = cand.dominant
+        return VerifyReport(
+            False, "performance",
+            f"SLOWER: candidate {t*1e6:.2f}us vs incumbent "
+            f"{incumbent_time*1e6:.2f}us ({incumbent_time/t:.2f}x). "
+            f"Candidate achieves {cand.tflops_effective:.1f} effective TFLOPS; "
+            f"dominant term: {dominant}. Suggestions: "
+            f"{'reduce HBM traffic (bigger tiles, swizzle, fusion)' if 'memory' in dominant else 'raise MXU utilization (aligned >=128 tiles, bf16, pipelining)'}"
+            f"; or try a different stage ordering.",
+            candidate_time=t, incumbent_time=incumbent_time,
+            metrics={"tflops": cand.tflops_effective})
+    return VerifyReport(True, "success",
+                        SUCCESS + f" ({incumbent_time/t:.2f}x, "
+                        f"{cand.tflops_effective:.1f} eff-TFLOPS)",
+                        candidate_time=t, incumbent_time=incumbent_time,
+                        metrics={"tflops": cand.tflops_effective})

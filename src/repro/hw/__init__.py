@@ -1,0 +1,12 @@
+from repro.hw.specs import TPUSpec, TPU_V5E, TPU_V4, TPU_V5P, get_spec
+from repro.hw.query import HardwareQuery, OptimalParams
+
+__all__ = [
+    "TPUSpec",
+    "TPU_V5E",
+    "TPU_V4",
+    "TPU_V5P",
+    "get_spec",
+    "HardwareQuery",
+    "OptimalParams",
+]

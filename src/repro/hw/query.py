@@ -1,0 +1,251 @@
+"""Shape-aware hardware query system (paper §IV-E, adapted to TPU).
+
+``HardwareQuery.get_optimal_params(M, N, K, dtype)`` reproduces the paper's
+``get_optimal_params()``: tile sizes clamped to the nearest power of two not
+exceeding the dimension, asymmetric tiles for skinny matrices, BLOCK_K reduced
+until the working set fits the register-file/VMEM budget, and a GROUP_M
+(tile-swizzling) factor derived from the tile count relative to compute units.
+
+TPU translation of the Intel knobs:
+  - GRF large/small mode  -> VMEM working-set budget (the block-size/pipeline
+    depth trade Mosaic makes); exposed as ``vmem_budget_frac``.
+  - num_warps             -> nothing to set per-kernel on TPU (Mosaic schedules
+    the VPU); the occupancy lever is the grid size, reported as ``grid_hint``.
+  - GROUP_SIZE_M swizzle  -> identical concept: grid traversal reordering for
+    HBM/L2-analog locality. Same guard as the paper: only when >1 M-tile.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.hw.specs import TPUSpec, TPU_V5E, dtype_itemsize
+
+
+def _pow2_floor(x: int) -> int:
+    if x <= 0:
+        return 1
+    return 1 << (int(x).bit_length() - 1)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class OptimalParams:
+    """Shape-aware kernel parameters (the analogue of the paper's dict)."""
+
+    block_m: int
+    block_n: int
+    block_k: int
+    group_m: int                  # grid swizzle factor (GROUP_SIZE_M analogue)
+    num_stages: int               # HBM->VMEM pipeline depth hint
+    dimension_semantics: Tuple[str, ...]
+    vmem_budget_frac: float       # fraction of VMEM the working set may claim
+    acc_dtype: str = "float32"
+    grid_hint: Optional[Tuple[int, ...]] = None
+
+    def working_set_bytes(self, itemsize: int, acc_itemsize: int = 4) -> int:
+        """(Mblk x Kblk + Kblk x Nblk) inputs + (Mblk x Nblk) f32 accumulator,
+        times the pipeline depth for the streamed operands."""
+        stream = (self.block_m * self.block_k + self.block_k * self.block_n) * itemsize
+        acc = self.block_m * self.block_n * acc_itemsize
+        return stream * max(1, self.num_stages) + acc
+
+
+class HardwareQuery:
+    """Runtime 'device query' + shape-aware parameter derivation."""
+
+    def __init__(self, spec: TPUSpec = TPU_V5E):
+        self.spec = spec
+
+    # ------------------------------------------------------------------
+    def describe(self) -> dict:
+        s = self.spec
+        return {
+            "name": s.name,
+            "peak_flops_bf16": s.peak_flops_bf16,
+            "hbm_bytes": s.hbm_bytes,
+            "hbm_bw": s.hbm_bw,
+            "vmem_bytes": s.vmem_bytes,
+            "mxu_shape": s.mxu_shape,
+            "min_tile_f32": s.min_tile("float32"),
+            "min_tile_bf16": s.min_tile("bfloat16"),
+            "ici_link_bw": s.ici_link_bw,
+            "ici_links": s.ici_links,
+        }
+
+    # ------------------------------------------------------------------
+    def get_optimal_params(
+        self,
+        m: int,
+        n: int,
+        k: int,
+        dtype: str = "bfloat16",
+        *,
+        vmem_budget_frac: float = 0.5,
+        fused_epilogue_operands: int = 0,
+    ) -> OptimalParams:
+        """Derive matmul-family tile parameters for an (M, N, K) problem.
+
+        Mirrors the paper's logic 1:1, with TPU-native alignment:
+          1. start from arch defaults (512x512 bf16 tiles target the MXU),
+          2. clamp each block to pow2_floor(dim) (no padded-thread waste),
+          3. asymmetric tiles for skinny shapes,
+          4. shrink BLOCK_K (then N, then M) until the VMEM budget holds,
+          5. GROUP_M from tile count vs. compute units (guard: >1 M-tile).
+        """
+        spec = self.spec
+        itemsize = dtype_itemsize(dtype)
+        sub, lane = spec.min_tile(dtype)
+
+        # 1. architecture defaults.
+        block_m, block_n, block_k = 512, 512, 512
+
+        # 2. clamp to problem dims (power-of-two floor, but at least the
+        #    native tile so we never emit sub-(8,128) blocks).
+        block_m = max(min(block_m, _pow2_floor(m)), min(sub, _round_up(m, sub)))
+        block_n = max(min(block_n, _pow2_floor(n)), min(lane, _round_up(n, lane)))
+        block_k = max(min(block_k, _pow2_floor(k)), min(lane, _round_up(k, lane)))
+
+        # 3. skinny-matrix asymmetry (paper: bigger BLOCK_M for tall-skinny,
+        #    bigger BLOCK_N for short-wide).
+        if m >= 4 * n and block_m < 1024:
+            block_m = min(_pow2_floor(m), 1024)
+        if n >= 4 * m and block_n < 1024:
+            block_n = min(_pow2_floor(n), 1024)
+
+        # 4. VMEM budget fitting: shrink K first (it only affects pipeline
+        #    granularity), then N, then M. Epilogue operands (bias, residual)
+        #    stream alongside the output tile.
+        num_stages = 2
+        budget = int(spec.vmem_bytes * vmem_budget_frac)
+
+        def ws(bm: int, bn: int, bk: int) -> int:
+            stream = (bm * bk + bk * bn) * itemsize * num_stages
+            acc = bm * bn * 4
+            epi = fused_epilogue_operands * bm * bn * itemsize
+            return stream + acc + epi
+
+        while ws(block_m, block_n, block_k) > budget and block_k > lane:
+            block_k //= 2
+        while ws(block_m, block_n, block_k) > budget and block_n > lane:
+            block_n //= 2
+        while ws(block_m, block_n, block_k) > budget and block_m > sub:
+            block_m //= 2
+
+        # 5. grid swizzle factor.
+        m_tiles = max(1, -(-m // block_m))
+        n_tiles = max(1, -(-n // block_n))
+        total_tiles = m_tiles * n_tiles
+        if m_tiles <= 1 or total_tiles < 16:
+            group_m = 1  # paper guard: swizzling needs >1 M-tile / enough tiles
+        else:
+            # target ~4 tile-groups in flight per core-equivalent.
+            group_m = max(1, min(m_tiles, _pow2_floor(max(1, total_tiles // 4))))
+            group_m = min(group_m, 8)
+
+        # deeper pipelining pays off for long K reductions.
+        if k // max(block_k, 1) >= 8:
+            num_stages = 3
+
+        return OptimalParams(
+            block_m=int(block_m),
+            block_n=int(block_n),
+            block_k=int(block_k),
+            group_m=int(group_m),
+            num_stages=num_stages,
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            vmem_budget_frac=vmem_budget_frac,
+            grid_hint=(m_tiles, n_tiles, max(1, -(-k // block_k))),
+        )
+
+    # ------------------------------------------------------------------
+    def get_attention_params(
+        self,
+        seq_q: int,
+        seq_kv: int,
+        head_dim: int,
+        dtype: str = "bfloat16",
+        *,
+        vmem_budget_frac: float = 0.5,
+    ) -> OptimalParams:
+        """Flash-attention tile parameters: block_m = query tile, block_n = KV tile,
+        block_k = head_dim (never split)."""
+        spec = self.spec
+        itemsize = dtype_itemsize(dtype)
+        sub, lane = spec.min_tile(dtype)
+        d = _round_up(head_dim, lane)
+
+        block_q = min(_pow2_floor(seq_q), 512)
+        block_kv = min(_pow2_floor(seq_kv), 1024)
+        block_q = max(block_q, sub)
+        block_kv = max(block_kv, lane)
+
+        budget = int(spec.vmem_bytes * vmem_budget_frac)
+
+        def ws(bq: int, bkv: int) -> int:
+            qkv = (bq * d + 2 * bkv * d) * itemsize * 2  # double-buffered
+            scores = bq * bkv * 4
+            acc = bq * d * 4 + 2 * bq * 4  # o accumulator + m/l carries
+            return qkv + scores + acc
+
+        while ws(block_q, block_kv) > budget and block_kv > lane:
+            block_kv //= 2
+        while ws(block_q, block_kv) > budget and block_q > sub:
+            block_q //= 2
+
+        return OptimalParams(
+            block_m=int(block_q),
+            block_n=int(block_kv),
+            block_k=int(d),
+            group_m=1,
+            num_stages=2,
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            vmem_budget_frac=vmem_budget_frac,
+        )
+
+    # ------------------------------------------------------------------
+    def autotune_grid(
+        self, m: int, n: int, k: int, dtype: str = "bfloat16", max_configs: int = 12
+    ):
+        """Curated autotune configurations (paper stage 10): up to ``max_configs``
+        architecturally valid configs ordered by expected performance."""
+        base = self.get_optimal_params(m, n, k, dtype)
+        seen = set()
+        out = []
+
+        def push(p: OptimalParams):
+            key = (p.block_m, p.block_n, p.block_k, p.group_m, p.num_stages)
+            if key in seen:
+                return
+            itemsize = dtype_itemsize(dtype)
+            if p.working_set_bytes(itemsize) > self.spec.vmem_bytes:
+                return  # architecturally invalid: would not fit VMEM
+            sub, lane = self.spec.min_tile(dtype)
+            if p.block_m % sub or p.block_n % lane or p.block_k % lane:
+                if p.block_m < sub or p.block_n < lane or p.block_k < lane:
+                    return
+            seen.add(key)
+            out.append(p)
+
+        push(base)
+        for fm in (2, 1, 0.5):
+            for fn in (2, 1, 0.5):
+                for fk in (1, 0.5, 2):
+                    p = dataclasses.replace(
+                        base,
+                        block_m=max(8, int(base.block_m * fm)),
+                        block_n=max(128, int(base.block_n * fn)),
+                        block_k=max(128, int(base.block_k * fk)),
+                    )
+                    push(p)
+                    if len(out) >= max_configs:
+                        return out
+        for g in (1, 4, 8):
+            push(dataclasses.replace(base, group_m=g))
+            if len(out) >= max_configs:
+                break
+        return out[:max_configs]

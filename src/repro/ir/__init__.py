@@ -1,0 +1,20 @@
+from repro.ir.graph import Node, Graph, GraphBuilder
+from repro.ir.interpreter import evaluate, make_params, op_impl
+from repro.ir.cost import node_flops_bytes, CostModel, GroupCost
+from repro.ir.schedule import Schedule, FusionGroup, PallasConfig, KernelProgram
+
+__all__ = [
+    "Node",
+    "Graph",
+    "GraphBuilder",
+    "evaluate",
+    "make_params",
+    "op_impl",
+    "node_flops_bytes",
+    "CostModel",
+    "GroupCost",
+    "Schedule",
+    "FusionGroup",
+    "PallasConfig",
+    "KernelProgram",
+]

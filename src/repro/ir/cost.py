@@ -1,0 +1,327 @@
+"""Analytic TPU roofline cost model.
+
+This is the pipeline's level-4 performance signal (the paper benchmarks on a
+real Arc Pro B70; this container has no TPU, so we use a deterministic
+speed-of-light model over v5e constants — the SOL-ExecBench-style metric the
+paper recommends in §VII). The model is intentionally *structural*: every term
+is a function of decisions the optimizer actually makes (fusion grouping, tile
+sizes, layouts, dtypes, pipeline depth), so hill-climbing the model optimizes
+the same levers that matter on hardware.
+
+Per fusion group g with config c:
+  traffic(g)  = Σ external-input re-reads under the blocking + external writes
+                (+ accumulator spill round-trips when K is split non-persistently)
+  t_mem       = traffic / (HBM_bw × mem_eff(layouts, alignment))
+  t_comp      = Σ flops / (peak(unit, dtype) × util(c, dims))
+  t(g)        = max(t_comp, t_mem) + launch_overhead        (pipelined)
+              = t_comp + t_mem + launch_overhead            (num_stages == 1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.hw.specs import TPUSpec, TPU_V5E, dtype_itemsize
+from repro.ir.graph import Graph, Node
+from repro.ir.schedule import FusionGroup, KernelProgram, PallasConfig, Schedule
+
+# planning figure for vector (non-MXU) compute on v5e
+def _vpu_flops(spec: TPUSpec) -> float:
+    return spec.peak_flops_f32 / 8.0
+
+
+# op weight: how many VPU ops per element (transcendentals are expensive)
+_EW_COST = {
+    "exp": 4, "gelu": 8, "silu": 5, "swish": 5, "sigmoid": 5, "tanh": 5,
+    "mish": 10, "softplus": 5, "softmax": 6, "logsumexp": 6,
+    "layernorm": 8, "rmsnorm": 6, "instancenorm": 8, "batchnorm": 4,
+    "groupnorm": 8, "pow": 4,
+}
+
+
+def _numel(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def node_flops_bytes(graph: Graph, node: Node,
+                     dtype: Optional[str] = None) -> Tuple[float, float, float, str]:
+    """Return (flops, read_bytes, write_bytes, unit) for one node.
+
+    ``unit`` is "mxu" for contractions, "vpu" otherwise. Bytes use the node /
+    schedule dtype and assume ideal (count-once) traffic; group-level blocking
+    corrections happen in :class:`CostModel`.
+    """
+    dt = dtype or node.dtype
+    isz = dtype_itemsize(dt)
+    in_shapes = [graph.node(i).shape for i in node.inputs]
+    read = sum(_numel(s) for s in in_shapes) * isz
+    write = _numel(node.shape) * isz
+
+    if node.op in ("matmul", "bmm"):
+        a, b = in_shapes
+        ta = node.attrs.get("transpose_a", False)
+        tb = node.attrs.get("transpose_b", False)
+        k = a[-2] if ta else a[-1]
+        out = node.shape
+        flops = 2.0 * _numel(out) * k
+        return flops, read, write, "mxu"
+
+    if node.op in ("conv2d", "conv3d"):
+        w = in_shapes[1]  # OIHW / OIDHW
+        recf = _numel(w[1:])  # Cin * prod(kernel)
+        flops = 2.0 * _numel(node.shape) * recf
+        return flops, read, write, "mxu"
+
+    if node.op in ("conv_transpose2d", "conv_transpose3d"):
+        w = in_shapes[1]  # IOHW: (Cin, Cout, k...)
+        flops = 2.0 * _numel(in_shapes[0]) * (_numel(w) / max(w[0], 1))
+        return flops, read, write, "mxu"
+
+    if node.op in ("input", "param", "const"):
+        return 0.0, 0.0, 0.0, "vpu"
+
+    weight = _EW_COST.get(node.op, 1)
+    base = max(_numel(node.shape), max((_numel(s) for s in in_shapes), default=0))
+    return float(weight * base), read, write, "vpu"
+
+
+def graph_flops(graph: Graph, dtype: Optional[str] = None) -> float:
+    return sum(node_flops_bytes(graph, n, dtype)[0] for n in graph.toposorted())
+
+
+@dataclasses.dataclass
+class GroupCost:
+    name: str
+    t_compute: float
+    t_memory: float
+    t_total: float
+    flops: float
+    hbm_bytes: float
+    bound: str  # "compute" | "memory" | "overhead"
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    total_s: float
+    groups: List[GroupCost]
+    flops: float                   # flops actually executed
+    original_flops: float          # paper's "original accounting"
+    hbm_bytes: float
+
+    @property
+    def tflops_effective(self) -> float:
+        return self.original_flops / self.total_s / 1e12 if self.total_s else 0.0
+
+    @property
+    def dominant(self) -> str:
+        if not self.groups:
+            return "none"
+        g = max(self.groups, key=lambda g: g.t_total)
+        return f"{g.name}:{g.bound}"
+
+
+class CostModel:
+    def __init__(self, spec: TPUSpec = TPU_V5E):
+        self.spec = spec
+
+    # -- efficiency sub-models -----------------------------------------
+    def _mxu_util(self, cfg: Optional[PallasConfig], m: int, n: int, k: int,
+                  dtype: str, impl: str) -> float:
+        if impl == "xla":
+            base = 0.72  # XLA's stock emitters: good, not hand-tuned
+            cfg = None
+        elif impl == "pallas_naive":
+            base = 0.55  # un-pipelined manual indexing stalls the MXU
+        else:
+            base = 0.88
+        # problem-intrinsic alignment: the MXU is 128x128; tiny dims waste lanes
+        eff_m = min(1.0, m / 128.0) if m < 128 else 1.0
+        eff_n = min(1.0, n / 128.0) if n < 128 else 1.0
+        align = 1.0
+        if cfg is not None:
+            for b, native in ((cfg.block_m, 128), (cfg.block_n, 128), (cfg.block_k, 128)):
+                if b < native:
+                    align *= max(0.25, b / native)
+                elif b % native:
+                    align *= 0.7
+            if cfg.num_stages < 2 and impl == "pallas_blockspec":
+                align *= 0.8
+        if dtype in ("float32", "f32"):
+            pass  # rate handled via peak_flops(dtype)
+        return max(0.05, base * align * min(eff_m, 1.0) * min(eff_n, 1.0))
+
+    def _mem_eff(self, group: FusionGroup, graph: Graph) -> float:
+        eff = 0.85
+        for operand, layout in group.operand_layouts.items():
+            if layout in ("strided", "transposed"):
+                eff = min(eff, 0.35)  # non-lane-contiguous HBM reads
+            elif layout == "unmasked_ragged":
+                eff = min(eff, 0.6)
+        root = graph.node(group.root)
+        if (root.op == "matmul" and root.attrs.get("transpose_b")
+                and group.operand_layouts.get("b") != "packed"):
+            # B stored [N, K]: K-major reads are column-strided until repacked
+            eff = min(eff, 0.35)
+        if group.impl == "pallas_naive":
+            eff = min(eff, 0.5)      # no double-buffered copies
+        if group.prefetch:
+            eff = min(0.92, eff + 0.07)
+        return eff
+
+    # -- group-level traffic under blocking ------------------------------
+    def _contraction_traffic(self, graph: Graph, group: FusionGroup, node: Node,
+                             dtype: str) -> Tuple[float, List[str]]:
+        notes = []
+        isz = dtype_itemsize(dtype)
+        a_shape = graph.node(node.inputs[0]).shape
+        b_shape = graph.node(node.inputs[1]).shape
+        out = node.shape
+        if node.op in ("matmul", "bmm"):
+            m, n = out[-2], out[-1]
+            ta = node.attrs.get("transpose_a", False)
+            k = a_shape[-2] if ta else a_shape[-1]
+            batch = _numel(out[:-2])
+        else:  # conv: treat as implicit GEMM
+            m = _numel(out) // out[1] if len(out) > 1 else _numel(out)
+            n = out[1]
+            k = _numel(b_shape[1:])
+            batch = 1
+        cfg = group.config or PallasConfig()
+        if group.impl == "xla":
+            # XLA blocks well; assume near-ideal traffic
+            traffic = (_numel(a_shape) + _numel(b_shape) + _numel(out)) * isz
+            return traffic, notes
+        bm, bn, bk = cfg.block_m, cfg.block_n, cfg.block_k
+        mt = max(1, math.ceil(m / bm))
+        nt = max(1, math.ceil(n / bn))
+        kt = max(1, math.ceil(k / bk))
+        # A re-read per n-tile unless the swizzle keeps it resident
+        a_rereads = max(1, nt // max(1, cfg.group_m))
+        b_rereads = mt  # B streams per m-tile (swizzle targets A-locality)
+        a_traffic = _numel(a_shape) * isz * a_rereads
+        b_traffic = _numel(b_shape) * isz * b_rereads
+        c_traffic = _numel(out) * isz
+        if kt > 1 and not cfg.persistent:
+            # non-persistent K-split spills partials to HBM every k-step
+            c_traffic += _numel(out) * 4 * 2 * (kt - 1)
+            notes.append(f"k-split x{kt} spills partials (persistent=False)")
+        if a_rereads > 1:
+            notes.append(f"A re-read x{a_rereads} (group_m={cfg.group_m})")
+        return a_traffic + b_traffic + c_traffic, notes
+
+    # -- main entry -------------------------------------------------------
+    def group_cost(self, graph: Graph, sched: Schedule, group: FusionGroup) -> GroupCost:
+        spec = self.spec
+        dtype = sched.compute_dtype
+        # nodes carrying a wider dtype than the schedule (e.g. float64 graphs
+        # before the dtype stage) dominate: storage and compute pay for it.
+        # Source dtypes are checked too — with x64 disabled, JAX canonicalizes
+        # inferred dtypes to f32, so the declared f64 only survives on sources.
+        names = set(group.nodes)
+        for n in group.nodes:
+            node = graph.node(n)
+            if str(node.dtype) == "float64" or any(
+                    str(graph.node(i).dtype) == "float64" for i in node.inputs):
+                dtype = "float64"
+                break
+        isz = dtype_itemsize(dtype)
+        nodes = [graph.node(n) for n in group.nodes]
+        produced = set(group.nodes)
+        notes: List[str] = []
+
+        flops_mxu = 0.0
+        flops_vpu = 0.0
+        contraction: Optional[Node] = None
+        for n in nodes:
+            f, _, _, unit = node_flops_bytes(graph, n, dtype)
+            if unit == "mxu":
+                flops_mxu += f
+                contraction = n if contraction is None else contraction
+            else:
+                flops_vpu += f
+
+        # external traffic: inputs read once per blocking model, outputs written once
+        ext_read = 0.0
+        for n in nodes:
+            for i in n.inputs:
+                if i not in produced:
+                    src = graph.node(i)
+                    if contraction is not None and i in contraction.inputs:
+                        continue  # accounted by the blocking model below
+                    ext_read += _numel(src.shape) * dtype_itemsize(
+                        dtype if src.op != "const" else src.dtype)
+        ext_write = 0.0
+        consumers_outside = 0
+        for n in nodes:
+            is_out = n.name in graph.outputs
+            ext_consumers = [c for c in graph.consumers(n.name) if c.name not in produced]
+            if is_out or ext_consumers:
+                ext_write += _numel(n.shape) * isz
+                consumers_outside += 1
+
+        traffic = ext_read + ext_write
+        if contraction is not None:
+            ct, cn = self._contraction_traffic(graph, group, contraction, dtype)
+            traffic += ct
+            notes += cn
+            # XLA fuses elementwise epilogues into GEMM/conv, but cannot keep
+            # the product unmaterialized across a *reduction* epilogue — only a
+            # hand kernel (pallas) earns that traffic elision.
+            if group.impl == "xla" and any(
+                    graph.node(n).is_reduction() for n in group.nodes
+                    if n != contraction.name):
+                traffic += 2 * _numel(contraction.shape) * dtype_itemsize(dtype)
+                notes.append("xla: reduction epilogue re-materializes the product")
+
+        mem_eff = self._mem_eff(group, graph)
+        t_mem = traffic / (spec.hbm_bw * mem_eff)
+
+        t_comp = 0.0
+        if flops_mxu:
+            if contraction is not None and contraction.op in ("matmul", "bmm"):
+                m, n_ = contraction.shape[-2], contraction.shape[-1]
+                a_shape = graph.node(contraction.inputs[0]).shape
+                k = a_shape[-2] if contraction.attrs.get("transpose_a") else a_shape[-1]
+            else:
+                m = n_ = k = 512
+            util = self._mxu_util(group.config, m, n_, k, dtype, group.impl)
+            t_comp += flops_mxu / (spec.peak_flops(dtype) * util)
+        if flops_vpu:
+            t_comp += flops_vpu / _vpu_flops(spec)
+
+        cfg = group.config
+        pipelined = group.impl != "pallas_naive" and (cfg is None or cfg.num_stages >= 2)
+        if pipelined:
+            t = max(t_comp, t_mem)
+        else:
+            t = t_comp + t_mem
+            notes.append("no copy/compute overlap (naive or stages=1)")
+        t += spec.launch_overhead_s
+        bound = ("compute" if t_comp >= t_mem else "memory")
+        if spec.launch_overhead_s > 0.5 * t:
+            bound = "overhead"
+        return GroupCost(group.name, t_comp, t_mem, t, flops_mxu + flops_vpu,
+                         traffic, bound, notes)
+
+    def program_cost(self, program: KernelProgram) -> ProgramCost:
+        groups = [self.group_cost(program.graph, program.schedule, g)
+                  for g in program.schedule.groups]
+        total = sum(g.t_total for g in groups)
+        if program.meta.get("host_sync") and not program.meta.get("host_sync_removed"):
+            total += 50e-6  # host round-trip stall between launches
+        return ProgramCost(
+            total_s=total,
+            groups=groups,
+            flops=sum(g.flops for g in groups),
+            original_flops=program.original_flops or sum(g.flops for g in groups),
+            hbm_bytes=sum(g.hbm_bytes for g in groups),
+        )
+
+    def program_time(self, program: KernelProgram) -> float:
+        return self.program_cost(program).total_s

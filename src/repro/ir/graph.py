@@ -1,0 +1,235 @@
+"""Tiny op-graph IR.
+
+The optimization pipeline needs a structured representation of "the kernel" so
+that stage transformations are verifiable program rewrites rather than string
+edits (our deterministic stand-in for the paper's LLM-edited Triton source).
+A :class:`Graph` is a DAG of :class:`Node` ops; shapes/dtypes are inferred
+eagerly via ``jax.eval_shape`` over each op's jnp implementation so the IR can
+never hold a shape the interpreter would disagree with.
+
+Ops are deliberately KernelBench-Level-2-shaped: matmul/conv + elementwise
+chains + reductions + norms + pooling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Ops with no tensor inputs.
+SOURCE_OPS = ("input", "param", "const")
+
+ELEMENTWISE_UNARY = (
+    "relu", "gelu", "silu", "swish", "sigmoid", "tanh", "mish", "exp",
+    "abs", "square", "neg", "softplus", "hardtanh", "leakyrelu", "identity",
+    "dropout",  # inference-mode: identity (kept so the analyzer can flag it)
+)
+ELEMENTWISE_BINARY = ("add", "sub", "mul", "div", "minimum", "maximum", "pow")
+ELEMENTWISE_SCALAR = ("scale", "add_scalar", "clamp_min", "clamp_max")
+REDUCTIONS = ("reduce_sum", "reduce_max", "reduce_min", "reduce_mean", "logsumexp")
+NORMS = ("layernorm", "rmsnorm", "instancenorm", "batchnorm", "groupnorm")
+CONTRACTIONS = ("matmul", "bmm", "conv2d", "conv3d", "conv_transpose2d", "conv_transpose3d")
+SHAPE_OPS = ("transpose", "reshape", "cast", "softmax", "avgpool2d", "maxpool2d",
+             "globalavgpool", "bias_add")
+
+ALL_OPS = (SOURCE_OPS + ELEMENTWISE_UNARY + ELEMENTWISE_BINARY + ELEMENTWISE_SCALAR
+           + REDUCTIONS + NORMS + CONTRACTIONS + SHAPE_OPS)
+
+
+@dataclasses.dataclass
+class Node:
+    name: str
+    op: str
+    inputs: List[str]
+    attrs: Dict[str, Any]
+    shape: Tuple[int, ...]
+    dtype: str
+
+    def is_elementwise(self) -> bool:
+        return (self.op in ELEMENTWISE_UNARY or self.op in ELEMENTWISE_BINARY
+                or self.op in ELEMENTWISE_SCALAR or self.op in ("bias_add", "cast"))
+
+    def is_contraction(self) -> bool:
+        return self.op in CONTRACTIONS
+
+    def is_reduction(self) -> bool:
+        return self.op in REDUCTIONS or self.op in ("softmax", "globalavgpool",
+                                                    "avgpool2d", "maxpool2d") or self.op in NORMS
+
+
+class Graph:
+    """A DAG of named nodes in insertion (topological) order."""
+
+    def __init__(self, name: str = "graph"):
+        self.name = name
+        self.nodes: Dict[str, Node] = {}
+        self.outputs: List[str] = []
+        self._counter = itertools.count()
+
+    # ------------------------------------------------------------------
+    def add(self, op: str, inputs: Sequence[str] = (), name: Optional[str] = None,
+            **attrs) -> str:
+        if op not in ALL_OPS:
+            raise ValueError(f"unknown op {op!r}")
+        for i in inputs:
+            if i not in self.nodes:
+                raise KeyError(f"input {i!r} not in graph")
+        name = name or f"{op}_{next(self._counter)}"
+        if name in self.nodes:
+            raise KeyError(f"duplicate node name {name!r}")
+        shape, dtype = _infer(self, op, list(inputs), attrs)
+        self.nodes[name] = Node(name, op, list(inputs), dict(attrs), shape, dtype)
+        return name
+
+    def node(self, name: str) -> Node:
+        return self.nodes[name]
+
+    def set_outputs(self, names: Sequence[str]):
+        for n in names:
+            if n not in self.nodes:
+                raise KeyError(n)
+        self.outputs = list(names)
+
+    # ------------------------------------------------------------------
+    def inputs(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.op == "input"]
+
+    def params(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.op == "param"]
+
+    def consumers(self, name: str) -> List[Node]:
+        return [n for n in self.nodes.values() if name in n.inputs]
+
+    def toposorted(self) -> List[Node]:
+        """Kahn toposort, preferring insertion order (rewrites like
+        ``redirect`` can make insertion order non-topological)."""
+        order = list(self.nodes)
+        indeg = {k: 0 for k in order}
+        for n in self.nodes.values():
+            for i in n.inputs:
+                indeg[n.name] += 1
+        ready = [k for k in order if indeg[k] == 0]
+        out: List[Node] = []
+        while ready:
+            cur = ready.pop(0)
+            out.append(self.nodes[cur])
+            for c in order:
+                n = self.nodes[c]
+                if cur in n.inputs:
+                    indeg[c] -= n.inputs.count(cur)
+                    if indeg[c] == 0:
+                        ready.append(c)
+        if len(out) != len(self.nodes):
+            raise ValueError("graph has a cycle")
+        return out
+
+    # ------------------------------------------------------------------
+    def replace_input(self, node_name: str, old: str, new: str):
+        n = self.nodes[node_name]
+        n.inputs = [new if i == old else i for i in n.inputs]
+
+    def redirect(self, old: str, new: str):
+        """Point every consumer of ``old`` (and the output list) at ``new``."""
+        for n in self.nodes.values():
+            if old in n.inputs:
+                self.replace_input(n.name, old, new)
+        self.outputs = [new if o == old else o for o in self.outputs]
+
+    def dce(self):
+        """Remove nodes not reachable from the outputs."""
+        live = set()
+        stack = list(self.outputs)
+        while stack:
+            cur = stack.pop()
+            if cur in live:
+                continue
+            live.add(cur)
+            stack.extend(self.nodes[cur].inputs)
+        self.nodes = {k: v for k, v in self.nodes.items() if k in live}
+
+    def copy(self) -> "Graph":
+        g = Graph(self.name)
+        g.nodes = {k: Node(v.name, v.op, list(v.inputs), dict(v.attrs), v.shape, v.dtype)
+                   for k, v in self.nodes.items()}
+        g.outputs = list(self.outputs)
+        g._counter = itertools.count(
+            max((int(k.rsplit("_", 1)[1]) + 1 for k in self.nodes
+                 if "_" in k and k.rsplit("_", 1)[1].isdigit()), default=0))
+        return g
+
+    def signature(self) -> str:
+        parts = [f"{n.name}:{n.op}({','.join(n.inputs)}){n.shape}{n.dtype}"
+                 for n in self.toposorted()]
+        return ";".join(parts) + "->" + ",".join(self.outputs)
+
+    def __repr__(self):
+        return f"Graph({self.name}, {len(self.nodes)} nodes, outputs={self.outputs})"
+
+
+class GraphBuilder:
+    """Convenience builder: ``b = GraphBuilder('p'); x = b.input((M,K)); ...``"""
+
+    def __init__(self, name: str = "graph", dtype: str = "float32"):
+        self.g = Graph(name)
+        self.default_dtype = dtype
+
+    def input(self, shape, dtype=None, name=None) -> str:
+        return self.g.add("input", (), name=name, shape=tuple(shape),
+                          dtype=dtype or self.default_dtype)
+
+    def param(self, shape, dtype=None, name=None, init="lecun") -> str:
+        return self.g.add("param", (), name=name, shape=tuple(shape),
+                          dtype=dtype or self.default_dtype, init=init)
+
+    def const(self, value, name=None, dtype=None) -> str:
+        return self.g.add("const", (), name=name, value=float(value),
+                          dtype=dtype or self.default_dtype)
+
+    def __getattr__(self, op):
+        if op in ALL_OPS:
+            def method(*inputs, name=None, **attrs):
+                return self.g.add(op, inputs, name=name, **attrs)
+            return method
+        raise AttributeError(op)
+
+    def done(self, *outputs) -> Graph:
+        self.g.set_outputs(list(outputs))
+        return self.g
+
+
+def retype_graph(graph: Graph, dtype_map) -> Graph:
+    """Rebuild a graph with source dtypes remapped (e.g. float64 -> float32);
+    downstream dtypes re-infer automatically. ``dtype_map`` is a callable
+    old_dtype_str -> new_dtype_str."""
+    g2 = Graph(graph.name)
+    for n in graph.toposorted():
+        attrs = dict(n.attrs)
+        if n.op in ("input", "param", "const"):
+            attrs["dtype"] = dtype_map(str(n.dtype))
+        if n.op == "cast":
+            attrs["dtype"] = dtype_map(str(attrs["dtype"]))
+        g2.add(n.op, n.inputs, name=n.name, **attrs)
+    g2.set_outputs(graph.outputs)
+    return g2
+
+
+# ----------------------------------------------------------------------
+# Shape/dtype inference: run the op's jnp implementation abstractly.
+# ----------------------------------------------------------------------
+
+def _infer(graph: Graph, op: str, inputs: List[str], attrs: Dict[str, Any]):
+    if op in ("input", "param"):
+        return tuple(attrs["shape"]), str(attrs["dtype"])
+    if op == "const":
+        return (), str(attrs.get("dtype", "float32"))
+    from repro.ir.interpreter import op_impl  # local import to avoid a cycle
+    fn = op_impl(op, attrs)
+    in_structs = [jax.ShapeDtypeStruct(graph.nodes[i].shape,
+                                       jnp.dtype(graph.nodes[i].dtype))
+                  for i in inputs]
+    out = jax.eval_shape(fn, *in_structs)
+    return tuple(out.shape), str(out.dtype)

@@ -1,0 +1,301 @@
+"""jnp interpreter for the op-graph IR.
+
+``evaluate(graph, inputs, params)`` is the *oracle*: plain jnp, no scheduling,
+no fusion decisions — exactly the role of the PyTorch reference in the paper's
+AI Bench. The same per-op implementations back shape inference.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# per-op jnp implementations
+# ----------------------------------------------------------------------
+
+def op_impl(op: str, attrs: Dict[str, Any]) -> Callable:
+    """Return a jnp callable implementing ``op`` with the given attrs."""
+
+    a = attrs
+
+    if op == "identity" or op == "dropout":
+        return lambda x: x
+    if op == "relu":
+        return lambda x: jnp.maximum(x, 0)
+    if op == "gelu":
+        approx = a.get("approximate", True)
+        return lambda x: jax.nn.gelu(x, approximate=approx)
+    if op in ("silu", "swish"):
+        return jax.nn.silu
+    if op == "sigmoid":
+        return jax.nn.sigmoid
+    if op == "tanh":
+        return jnp.tanh
+    if op == "mish":
+        return lambda x: x * jnp.tanh(jax.nn.softplus(x))
+    if op == "softplus":
+        return jax.nn.softplus
+    if op == "exp":
+        return jnp.exp
+    if op == "abs":
+        return jnp.abs
+    if op == "square":
+        return jnp.square
+    if op == "neg":
+        return jnp.negative
+    if op == "hardtanh":
+        lo, hi = a.get("min", -1.0), a.get("max", 1.0)
+        return lambda x: jnp.clip(x, lo, hi)
+    if op == "leakyrelu":
+        slope = a.get("slope", 0.01)
+        return lambda x: jnp.where(x >= 0, x, slope * x)
+
+    if op in ("add", "sub", "mul", "div", "minimum", "maximum", "pow"):
+        fn = {"add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+              "div": jnp.divide, "minimum": jnp.minimum, "maximum": jnp.maximum,
+              "pow": jnp.power}[op]
+        return fn
+
+    if op == "scale":
+        c = a["value"]
+        return lambda x: x * jnp.asarray(c, dtype=x.dtype)
+    if op == "add_scalar":
+        c = a["value"]
+        return lambda x: x + jnp.asarray(c, dtype=x.dtype)
+    if op == "clamp_min":
+        c = a["value"]
+        return lambda x: jnp.maximum(x, jnp.asarray(c, dtype=x.dtype))
+    if op == "clamp_max":
+        c = a["value"]
+        return lambda x: jnp.minimum(x, jnp.asarray(c, dtype=x.dtype))
+
+    if op in ("reduce_sum", "reduce_max", "reduce_min", "reduce_mean", "logsumexp"):
+        axes = a.get("axes")
+        axes = tuple(axes) if axes is not None else None
+        keepdims = a.get("keepdims", False)
+        fn = {"reduce_sum": jnp.sum, "reduce_max": jnp.max, "reduce_min": jnp.min,
+              "reduce_mean": jnp.mean,
+              "logsumexp": jax.scipy.special.logsumexp}[op]
+        return lambda x: fn(x, axis=axes, keepdims=keepdims)
+
+    if op == "softmax":
+        axis = a.get("axis", -1)
+        return lambda x: jax.nn.softmax(x, axis=axis)
+
+    if op == "bias_add":
+        return lambda x, b: x + b
+
+    if op == "matmul":
+        ta, tb = a.get("transpose_a", False), a.get("transpose_b", False)
+        def mm(x, w):
+            if ta:
+                x = jnp.swapaxes(x, -1, -2)
+            if tb:
+                w = jnp.swapaxes(w, -1, -2)
+            return jnp.matmul(x, w)
+        return mm
+    if op == "bmm":
+        return jnp.matmul
+
+    if op in ("conv2d", "conv3d", "conv_transpose2d", "conv_transpose3d"):
+        nd = 2 if "2d" in op else 3
+        stride = a.get("stride", 1)
+        stride = (stride,) * nd if isinstance(stride, int) else tuple(stride)
+        padding = a.get("padding", "SAME")
+        if isinstance(padding, int):
+            padding = [(padding, padding)] * nd
+        layout = a.get("layout", "NCHW" if nd == 2 else "NCDHW")
+        # the memory-access stage may request channels-last execution while the
+        # graph contract stays NCHW: transpose in, run NHWC, transpose out.
+        internal = a.get("internal_layout")
+        transpose = "transpose" in op
+        # weight layouts follow torch: OIHW for conv, IOHW for conv_transpose
+        wspec2 = "IOHW" if transpose else "OIHW"
+        wspec3 = "IODHW" if transpose else "OIDHW"
+        if nd == 2:
+            dn = ("NCHW", wspec2, "NCHW") if layout == "NCHW" else ("NHWC", "HWIO", "NHWC")
+            dn_int = ("NHWC", wspec2, "NHWC")
+        else:
+            dn = ("NCDHW", wspec3, "NCDHW") if layout == "NCDHW" else ("NDHWC", "DHWIO", "NDHWC")
+            dn_int = ("NDHWC", wspec3, "NDHWC")
+
+        def conv(x, w):
+            use_dn = dn
+            perm_in = perm_out = None
+            if internal == "NHWC" and layout.startswith("NC"):
+                perm_in = (0,) + tuple(range(2, 2 + nd)) + (1,)
+                perm_out = (0, nd + 1) + tuple(range(1, 1 + nd))
+                x = jnp.transpose(x, perm_in)
+                use_dn = dn_int
+            dnums = jax.lax.conv_dimension_numbers(x.shape, w.shape, use_dn)
+            if transpose:
+                out = jax.lax.conv_transpose(
+                    x, w, strides=stride, padding=padding, dimension_numbers=use_dn)
+            else:
+                out = jax.lax.conv_general_dilated(
+                    x, w, window_strides=stride, padding=padding,
+                    dimension_numbers=dnums)
+            if perm_out is not None:
+                out = jnp.transpose(out, perm_out)
+            return out
+        return conv
+
+    if op in ("layernorm", "rmsnorm"):
+        eps = a.get("eps", 1e-5)
+        rms = op == "rmsnorm"
+        elementwise = a.get("elementwise_affine", True)
+
+        def norm(x, *wb):
+            ax = -1
+            if rms:
+                var = jnp.mean(jnp.square(x), axis=ax, keepdims=True)
+                y = x * jax.lax.rsqrt(var + eps)
+            else:
+                mu = jnp.mean(x, axis=ax, keepdims=True)
+                var = jnp.var(x, axis=ax, keepdims=True)
+                y = (x - mu) * jax.lax.rsqrt(var + eps)
+            if elementwise and len(wb) >= 1:
+                y = y * wb[0]
+            if elementwise and len(wb) >= 2:
+                y = y + wb[1]
+            return y
+        return norm
+
+    if op == "instancenorm":
+        eps = a.get("eps", 1e-5)
+
+        def inorm(x):  # NC... : normalize over spatial dims
+            axes = tuple(range(2, x.ndim))
+            mu = jnp.mean(x, axis=axes, keepdims=True)
+            var = jnp.var(x, axis=axes, keepdims=True)
+            return (x - mu) * jax.lax.rsqrt(var + eps)
+        return inorm
+
+    if op == "batchnorm":
+        eps = a.get("eps", 1e-5)
+
+        def bnorm(x, scale, bias, mean, var):  # inference-mode
+            shape = (1, -1) + (1,) * (x.ndim - 2)
+            return ((x - mean.reshape(shape)) * jax.lax.rsqrt(var.reshape(shape) + eps)
+                    * scale.reshape(shape) + bias.reshape(shape))
+        return bnorm
+
+    if op == "groupnorm":
+        eps = a.get("eps", 1e-5)
+        groups = a.get("groups", 8)
+
+        def gnorm(x):  # NC...
+            n, c = x.shape[0], x.shape[1]
+            rest = x.shape[2:]
+            xg = x.reshape((n, groups, c // groups) + rest)
+            axes = tuple(range(2, xg.ndim))
+            mu = jnp.mean(xg, axis=axes, keepdims=True)
+            var = jnp.var(xg, axis=axes, keepdims=True)
+            return ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(x.shape)
+        return gnorm
+
+    if op in ("avgpool2d", "maxpool2d"):
+        k = a.get("kernel", 2)
+        k = (k, k) if isinstance(k, int) else tuple(k)
+        s = a.get("stride", k)
+        s = (s, s) if isinstance(s, int) else tuple(s)
+        is_avg = op == "avgpool2d"
+
+        def pool(x):  # NCHW
+            window = (1, 1) + k
+            strides = (1, 1) + s
+            if is_avg:
+                out = jax.lax.reduce_window(x, 0.0, jax.lax.add, window, strides, "VALID")
+                return out / (k[0] * k[1])
+            return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, window, strides, "VALID")
+        return pool
+
+    if op == "globalavgpool":
+        keepdims = a.get("keepdims", True)
+        return lambda x: jnp.mean(x, axis=tuple(range(2, x.ndim)), keepdims=keepdims)
+
+    if op == "transpose":
+        perm = tuple(a["perm"])
+        return lambda x: jnp.transpose(x, perm)
+    if op == "reshape":
+        shape = tuple(a["shape"])
+        return lambda x: jnp.reshape(x, shape)
+    if op == "cast":
+        dt = a["dtype"]
+        return lambda x: x.astype(jnp.dtype(dt))
+
+    raise ValueError(f"no implementation for op {op!r}")
+
+
+# ----------------------------------------------------------------------
+# parameter materialization + graph evaluation
+# ----------------------------------------------------------------------
+
+def make_params(graph, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic parameter init (seeded — the paper's 'identical weights')."""
+    out = {}
+    key = jax.random.PRNGKey(seed)
+    for n in graph.params():
+        key, sub = jax.random.split(key)
+        init = n.attrs.get("init", "lecun")
+        shape, dtype = n.shape, jnp.dtype(n.dtype)
+        if init == "ones":
+            val = jnp.ones(shape, dtype)
+        elif init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "uniform01":
+            val = jax.random.uniform(sub, shape, jnp.float32, 0.5, 1.5).astype(dtype)
+        else:  # lecun normal on the last dim
+            fan_in = shape[-1] if len(shape) >= 1 else 1
+            val = (jax.random.normal(sub, shape, jnp.float32)
+                   / np.sqrt(max(fan_in, 1))).astype(dtype)
+        out[n.name] = val
+    return out
+
+
+def make_inputs(graph, seed: int = 1) -> Dict[str, jnp.ndarray]:
+    out = {}
+    key = jax.random.PRNGKey(seed)
+    for n in graph.inputs():
+        key, sub = jax.random.split(key)
+        out[n.name] = jax.random.normal(sub, n.shape, jnp.float32).astype(jnp.dtype(n.dtype))
+    return out
+
+
+def evaluate(graph, inputs: Dict[str, jnp.ndarray],
+             params: Optional[Dict[str, jnp.ndarray]] = None,
+             node_overrides: Optional[Dict[str, Callable]] = None):
+    """Evaluate the graph with jnp. Returns dict of output name -> array.
+
+    ``node_overrides`` lets the verifier substitute a real Pallas kernel for a
+    node (or fusion group root) while the rest runs the oracle path.
+    """
+    params = params or {}
+    env: Dict[str, jnp.ndarray] = {}
+    for n in graph.toposorted():
+        if n.op == "input":
+            env[n.name] = inputs[n.name]
+        elif n.op == "param":
+            env[n.name] = params[n.name]
+        elif n.op == "const":
+            env[n.name] = jnp.asarray(n.attrs["value"], dtype=jnp.dtype(n.dtype))
+        else:
+            args = [env[i] for i in n.inputs]
+            if node_overrides and n.name in node_overrides:
+                env[n.name] = node_overrides[n.name](*args)
+            else:
+                env[n.name] = op_impl(n.op, n.attrs)(*args)
+    return {o: env[o] for o in graph.outputs}
+
+
+def graph_fn(graph, params: Dict[str, jnp.ndarray]):
+    """Return fn(inputs_dict) -> outputs dict, suitable for jax.jit."""
+    def fn(inputs):
+        return evaluate(graph, inputs, params)
+    return fn

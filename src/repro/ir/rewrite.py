@@ -1,0 +1,404 @@
+"""Graph rewrite engine + the algebraic rule bank.
+
+Each rule is a pure function ``rule(graph) -> list[Rewrite]`` where a
+:class:`Rewrite` knows how to apply itself to a *copy* of the graph. Rules are
+the deterministic stand-in for the paper's LLM "algorithmic optimization" and
+"discovery" proposals; every rule the paper names is here:
+
+  * ``matmul_reduce_to_vecmat`` — the paper's Discovery example
+    ``sum(x @ W.T, dim=1) -> x @ W.sum(dim=0)``: eliminates an O(MNK) GEMM.
+  * ``fold_scale_into_weights`` — caching weight statistics / scalar folding.
+  * ``fold_bn_into_conv``       — inference BN folding.
+  * plus CSE, cast/transpose/identity cleanup, mean->cheap, tree reductions.
+
+Each rewrite is annotated with validity reasoning (the paper requires the
+discovery proposal to state *why* the transformation is mathematically valid);
+verification is still enforced downstream by the CoVeR cascade.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.ir.graph import Graph, Node, ELEMENTWISE_UNARY
+
+
+@dataclasses.dataclass
+class Rewrite:
+    rule: str
+    description: str
+    why_valid: str
+    estimated_speedup: str
+    apply: Callable[[Graph], Graph]
+
+    def __repr__(self):
+        return f"Rewrite({self.rule}: {self.description})"
+
+
+RULES: Dict[str, Callable[[Graph], List[Rewrite]]] = {}
+
+
+def rule(name):
+    def deco(fn):
+        RULES[name] = fn
+        return fn
+    return deco
+
+
+def find_rewrites(graph: Graph, rules: Optional[List[str]] = None) -> List[Rewrite]:
+    out = []
+    for name, fn in RULES.items():
+        if rules is not None and name not in rules:
+            continue
+        out.extend(fn(graph))
+    return out
+
+
+# ----------------------------------------------------------------------
+# helpers
+# ----------------------------------------------------------------------
+
+def _single_consumer(g: Graph, name: str) -> Optional[Node]:
+    cons = g.consumers(name)
+    if len(cons) == 1 and name not in g.outputs:
+        return cons[0]
+    return None
+
+
+# ----------------------------------------------------------------------
+# rules
+# ----------------------------------------------------------------------
+
+@rule("matmul_reduce_to_vecmat")
+def _matmul_reduce(g: Graph) -> List[Rewrite]:
+    """sum(A @ B, axis=last) == A @ sum(B, axis=last-of-B);
+    sum(A @ B, axis=first-of-out) == sum(A, axis=M) @ B.
+    Eliminates an O(MNK) GEMM in favour of O(NK)+O(MK)."""
+    out = []
+    for n in g.toposorted():
+        if n.op != "matmul" or len(n.shape) != 2:
+            continue
+        red = _single_consumer(g, n.name)
+        if red is None or red.op != "reduce_sum":
+            continue
+        axes = red.attrs.get("axes")
+        if axes is None:
+            continue
+        axes = tuple(ax % 2 for ax in axes)
+        if axes not in ((1,), (0,)):
+            continue
+        mm, rd = n.name, red.name
+        reduce_n = axes == (1,)
+        keepdims = red.attrs.get("keepdims", False)
+
+        def apply(graph: Graph, mm=mm, rd=rd, reduce_n=reduce_n, keepdims=keepdims) -> Graph:
+            g2 = graph.copy()
+            node = g2.node(mm)
+            a, b = node.inputs
+            ta = node.attrs.get("transpose_a", False)
+            tb = node.attrs.get("transpose_b", False)
+            if reduce_n:
+                # sum_n (A@B)[m,n] = Σ_k A[m,k] Σ_n B[k,n]
+                b_axis = 0 if tb else 1
+                bsum = g2.add("reduce_sum", (b,), axes=(b_axis,), keepdims=True)
+                new = g2.add("matmul", (a, bsum), transpose_a=ta,
+                             transpose_b=tb)
+                res = g2.add("reshape", (new,),
+                             shape=g2.node(rd).shape)
+            else:
+                a_axis = 1 if ta else 0
+                asum = g2.add("reduce_sum", (a,), axes=(a_axis,), keepdims=True)
+                new = g2.add("matmul", (asum, b), transpose_a=ta, transpose_b=tb)
+                res = g2.add("reshape", (new,), shape=g2.node(rd).shape)
+            g2.redirect(rd, res)
+            g2.dce()
+            return g2
+
+        which = "N" if reduce_n else "M"
+        out.append(Rewrite(
+            rule="matmul_reduce_to_vecmat",
+            description=f"eliminate GEMM {mm}: sum over {which} → pre-reduce operand",
+            why_valid="Σ_n Σ_k A[m,k]B[k,n] = Σ_k A[m,k](Σ_n B[k,n]); linearity of matmul",
+            estimated_speedup="5-100x (removes O(MNK) work)",
+            apply=apply,
+        ))
+    return out
+
+
+@rule("fold_scale_into_weights")
+def _fold_scale(g: Graph) -> List[Rewrite]:
+    """(x @ W) * c  ->  x @ (W * c): pre-scale the weight once (cached stat)."""
+    out = []
+    for n in g.toposorted():
+        if n.op not in ("matmul", "conv2d", "conv3d"):
+            continue
+        cons = _single_consumer(g, n.name)
+        if cons is None:
+            continue
+        scale_val = None
+        if cons.op == "scale":
+            scale_val = cons.attrs["value"]
+        elif cons.op == "div":
+            other = [i for i in cons.inputs if i != n.name]
+            if len(other) == 1 and g.node(other[0]).op == "const":
+                scale_val = 1.0 / g.node(other[0]).attrs["value"]
+        elif cons.op == "mul":
+            other = [i for i in cons.inputs if i != n.name]
+            if len(other) == 1 and g.node(other[0]).op == "const":
+                scale_val = g.node(other[0]).attrs["value"]
+        if scale_val is None:
+            continue
+        w = n.inputs[1]
+        if g.node(w).op != "param":
+            continue
+        mm, cn = n.name, cons.name
+
+        def apply(graph: Graph, mm=mm, cn=cn, w=w, scale_val=scale_val) -> Graph:
+            g2 = graph.copy()
+            ws = g2.add("scale", (w,), value=scale_val)
+            g2.replace_input(mm, w, ws)
+            g2.redirect(cn, mm)
+            g2.dce()
+            return g2
+
+        out.append(Rewrite(
+            rule="fold_scale_into_weights",
+            description=f"fold scalar x{scale_val} after {mm} into weights (cached)",
+            why_valid="(xW)c = x(Wc); weight pre-scaling is computed once, amortized",
+            estimated_speedup="1.1-2x (removes a full-tensor pass)",
+            apply=apply,
+        ))
+    return out
+
+
+@rule("fold_bn_into_conv")
+def _fold_bn(g: Graph) -> List[Rewrite]:
+    """conv -> batchnorm (inference) folds into the conv weights/bias."""
+    out = []
+    for n in g.toposorted():
+        if n.op not in ("conv2d", "conv3d"):
+            continue
+        bn = _single_consumer(g, n.name)
+        if bn is None or bn.op != "batchnorm":
+            continue
+        conv, bnn = n.name, bn.name
+
+        def apply(graph: Graph, conv=conv, bnn=bnn) -> Graph:
+            g2 = graph.copy()
+            cnode = g2.node(conv)
+            bnode = g2.node(bnn)
+            w = cnode.inputs[1]
+            scale, bias, mean, var = bnode.inputs[1:5]
+            eps = bnode.attrs.get("eps", 1e-5)
+            # s = scale / sqrt(var + eps); W' = W * s[:,None,...]; b' = bias - mean*s
+            veps = g2.add("add_scalar", (var,), value=eps)
+            import math  # noqa
+            rsq = g2.add("pow", (veps, g2.add("const", (), value=-0.5, dtype=g2.node(var).dtype)))
+            s = g2.add("mul", (scale, rsq))
+            wshape = g2.node(w).shape
+            srs = g2.add("reshape", (s,), shape=(wshape[0],) + (1,) * (len(wshape) - 1))
+            wf = g2.add("mul", (w, srs))
+            g2.replace_input(conv, w, wf)
+            ms = g2.add("mul", (mean, s))
+            bf = g2.add("sub", (bias, ms))
+            cshape = g2.node(conv).shape
+            brs = g2.add("reshape", (bf,), shape=(1, cshape[1]) + (1,) * (len(cshape) - 2))
+            newout = g2.add("add", (conv, brs))
+            g2.redirect(bnn, newout)
+            # redirect created a self-loop risk: newout consumes conv; fix ordering is fine
+            g2.node(newout).inputs = [conv, brs]
+            g2.dce()
+            return g2
+
+        out.append(Rewrite(
+            rule="fold_bn_into_conv",
+            description=f"fold inference batchnorm {bnn} into conv {conv}",
+            why_valid="BN(x*W) with fixed stats is an affine map; compose with conv weights",
+            estimated_speedup="1.2-1.5x (removes a normalization pass)",
+            apply=apply,
+        ))
+    return out
+
+
+@rule("eliminate_identities")
+def _elim_identity(g: Graph) -> List[Rewrite]:
+    """drop dropout(inference)/identity, x*1, x+0, double-cast."""
+    victims = []
+    for n in g.toposorted():
+        if n.op in ("identity", "dropout"):
+            victims.append((n.name, n.inputs[0]))
+        elif n.op == "scale" and float(n.attrs.get("value", 1.0)) == 1.0:
+            victims.append((n.name, n.inputs[0]))
+        elif n.op == "add_scalar" and float(n.attrs.get("value", 0.0)) == 0.0:
+            victims.append((n.name, n.inputs[0]))
+        elif n.op == "cast":
+            src = g.node(n.inputs[0])
+            if src.op == "cast" and src.dtype == n.dtype:
+                victims.append((n.name, src.inputs[0]))
+            elif src.dtype == n.dtype:
+                victims.append((n.name, n.inputs[0]))
+    if not victims:
+        return []
+
+    def apply(graph: Graph, victims=tuple(victims)) -> Graph:
+        g2 = graph.copy()
+        for name, repl in victims:
+            if name in g2.nodes:
+                g2.redirect(name, repl)
+        g2.dce()
+        return g2
+
+    return [Rewrite(
+        rule="eliminate_identities",
+        description=f"remove {len(victims)} no-op node(s): "
+                     + ",".join(v[0] for v in victims),
+        why_valid="identity/no-op elimination preserves values exactly",
+        estimated_speedup="1.05-1.3x (launch + traffic)",
+        apply=apply,
+    )]
+
+
+@rule("cse")
+def _cse(g: Graph) -> List[Rewrite]:
+    """common sub-expression elimination."""
+    seen: Dict[str, str] = {}
+    merges = []
+    for n in g.toposorted():
+        if n.op in ("input", "param", "const"):
+            continue
+        key = f"{n.op}|{tuple(n.inputs)}|{sorted(n.attrs.items())!r}"
+        if key in seen:
+            merges.append((n.name, seen[key]))
+        else:
+            seen[key] = n.name
+    if not merges:
+        return []
+
+    def apply(graph: Graph, merges=tuple(merges)) -> Graph:
+        g2 = graph.copy()
+        for dup, keep in merges:
+            if dup in g2.nodes:
+                g2.redirect(dup, keep)
+        g2.dce()
+        return g2
+
+    return [Rewrite(
+        rule="cse",
+        description=f"merge {len(merges)} duplicated subexpression(s)",
+        why_valid="pure ops with identical inputs/attrs compute identical values",
+        estimated_speedup="up to 2x on duplicated chains",
+        apply=apply,
+    )]
+
+
+@rule("mean_to_sum_scale")
+def _mean_to_sum(g: Graph) -> List[Rewrite]:
+    """reduce_mean -> reduce_sum * (1/n): exposes the sum to matmul folding."""
+    out = []
+    for n in g.toposorted():
+        if n.op != "reduce_mean":
+            continue
+        axes = n.attrs.get("axes")
+        if axes is None:
+            continue
+        src_shape = g.node(n.inputs[0]).shape
+        cnt = 1
+        for ax in axes:
+            cnt *= src_shape[ax % len(src_shape)]
+        name = n.name
+
+        def apply(graph: Graph, name=name, cnt=cnt) -> Graph:
+            g2 = graph.copy()
+            node = g2.node(name)
+            s = g2.add("reduce_sum", tuple(node.inputs), axes=tuple(node.attrs["axes"]),
+                       keepdims=node.attrs.get("keepdims", False))
+            sc = g2.add("scale", (s,), value=1.0 / cnt)
+            g2.redirect(name, sc)
+            g2.dce()
+            return g2
+
+        out.append(Rewrite(
+            rule="mean_to_sum_scale",
+            description=f"canonicalize {name}: mean → sum x (1/{cnt})",
+            why_valid="mean(x) = sum(x)/n exactly (fp reassociation within tolerance)",
+            estimated_speedup="enables matmul_reduce_to_vecmat",
+            apply=apply,
+        ))
+    return out
+
+
+@rule("tree_reduction")
+def _tree_reduction(g: Graph) -> List[Rewrite]:
+    """Mark serial-accumulation reductions for tree (pairwise) reduction.
+    jnp reductions are already tree-based; this targets graphs whose producer
+    annotated ``accumulate='serial'`` (KernelFalcon-style generated code)."""
+    out = []
+    for n in g.toposorted():
+        if n.op.startswith("reduce_") and n.attrs.get("accumulate") == "serial":
+            name = n.name
+
+            def apply(graph: Graph, name=name) -> Graph:
+                g2 = graph.copy()
+                g2.node(name).attrs["accumulate"] = "tree"
+                return g2
+
+            out.append(Rewrite(
+                rule="tree_reduction",
+                description=f"serial accumulation → tree reduction on {name}",
+                why_valid="addition reassociation (within fp tolerance)",
+                estimated_speedup="1.2-4x on long reductions",
+                apply=apply,
+            ))
+    return out
+
+
+@rule("transpose_elimination")
+def _transpose_elim(g: Graph) -> List[Rewrite]:
+    """transpose(transpose(x)) -> x; transpose feeding matmul -> transpose flag."""
+    out = []
+    for n in g.toposorted():
+        if n.op != "transpose":
+            continue
+        src = g.node(n.inputs[0])
+        if src.op == "transpose":
+            p1, p2 = src.attrs["perm"], n.attrs["perm"]
+            if [p1[i] for i in p2] == list(range(len(p1))):
+                name, repl = n.name, src.inputs[0]
+
+                def apply(graph: Graph, name=name, repl=repl) -> Graph:
+                    g2 = graph.copy()
+                    g2.redirect(name, repl)
+                    g2.dce()
+                    return g2
+
+                out.append(Rewrite(
+                    rule="transpose_elimination",
+                    description=f"cancel transpose pair at {name}",
+                    why_valid="P∘P⁻¹ = id",
+                    estimated_speedup="removes two layout passes",
+                    apply=apply,
+                ))
+        elif len(n.shape) == 2 and n.attrs.get("perm") in ([1, 0], (1, 0)):
+            for c in g.consumers(n.name):
+                if c.op == "matmul":
+                    idx = c.inputs.index(n.name)
+                    cname, tname, src0 = c.name, n.name, n.inputs[0]
+
+                    def apply(graph: Graph, cname=cname, tname=tname, src0=src0,
+                              idx=idx) -> Graph:
+                        g2 = graph.copy()
+                        key = "transpose_a" if idx == 0 else "transpose_b"
+                        g2.node(cname).attrs[key] = not g2.node(cname).attrs.get(key, False)
+                        g2.replace_input(cname, tname, src0)
+                        g2.dce()
+                        return g2
+
+                    out.append(Rewrite(
+                        rule="transpose_elimination",
+                        description=f"absorb transpose {tname} into matmul {cname} flag",
+                        why_valid="matmul supports implicit operand transposition",
+                        estimated_speedup="removes a materialized transpose",
+                        apply=apply,
+                    ))
+    return out

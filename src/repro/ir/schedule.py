@@ -1,0 +1,194 @@
+"""Execution schedule for a kernel program.
+
+A :class:`KernelProgram` = op graph + :class:`Schedule`. The schedule is what
+most pipeline stages mutate: how nodes are grouped into kernels (fusion), which
+implementation each group uses (XLA / naive Pallas / BlockSpec Pallas), and the
+per-kernel :class:`PallasConfig` (tile sizes, grid swizzle, pipeline depth).
+
+Implementation ladder (the paper's before/after axis):
+  * ``xla``             — leave the group to the XLA compiler (jnp).
+  * ``pallas_naive``    — a Pallas kernel with *manual pointer arithmetic*:
+                          flat grid, explicit ``pl.load(ref, (pl.ds(...), ...))``
+                          indexing, no BlockSpec tiling → Mosaic cannot pipeline
+                          HBM→VMEM copies. The analogue of Triton kernels
+                          written without ``tl.make_block_ptr``.
+  * ``pallas_blockspec``— BlockSpec-tiled kernel (the "block pointer
+                          modernization" target): pipelined, swizzlable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.ir.graph import Graph
+
+IMPLS = ("xla", "pallas_naive", "pallas_blockspec")
+
+
+@dataclasses.dataclass
+class PallasConfig:
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    group_m: int = 1                 # grid swizzle factor (GROUP_SIZE_M analogue)
+    num_stages: int = 2              # HBM->VMEM pipeline depth (1 = no overlap)
+    dimension_semantics: Tuple[str, ...] = ("parallel", "parallel", "arbitrary")
+    acc_dtype: str = "float32"
+    persistent: bool = False         # accumulate across grid K-steps in VMEM scratch
+    masked: bool = True              # boundary checks on ragged edges
+    vmem_budget_frac: float = 0.5
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        if "dimension_semantics" in d:
+            d["dimension_semantics"] = tuple(d["dimension_semantics"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class FusionGroup:
+    name: str
+    nodes: List[str]                 # topo-ordered node names
+    root: str                        # the contraction / dominant op
+    impl: str = "xla"
+    config: Optional[PallasConfig] = None
+    # memory-access attrs the memory stage toggles:
+    operand_layouts: Dict[str, str] = dataclasses.field(default_factory=dict)
+    prefetch: bool = False
+
+    def to_dict(self):
+        return {
+            "name": self.name, "nodes": list(self.nodes), "root": self.root,
+            "impl": self.impl,
+            "config": self.config.to_dict() if self.config else None,
+            "operand_layouts": dict(self.operand_layouts),
+            "prefetch": self.prefetch,
+        }
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        if d.get("config"):
+            d["config"] = PallasConfig.from_dict(d["config"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class Schedule:
+    groups: List[FusionGroup]
+    compute_dtype: str = "float32"   # dtype-stage output (bf16 inputs / f32 accum)
+
+    def group_of(self, node_name: str) -> FusionGroup:
+        for g in self.groups:
+            if node_name in g.nodes:
+                return g
+        raise KeyError(node_name)
+
+    def validate_against(self, graph: Graph):
+        scheduled = [n for g in self.groups for n in g.nodes]
+        if len(scheduled) != len(set(scheduled)):
+            raise ValueError("node scheduled in more than one group")
+        want = {n.name for n in graph.toposorted() if n.op not in ("input", "param", "const")}
+        have = set(scheduled)
+        if want != have:
+            raise ValueError(f"schedule/graph mismatch: missing={want - have} extra={have - want}")
+
+    def copy(self) -> "Schedule":
+        return Schedule(
+            groups=[FusionGroup.from_dict(g.to_dict()) for g in self.groups],
+            compute_dtype=self.compute_dtype,
+        )
+
+    def to_dict(self):
+        return {"groups": [g.to_dict() for g in self.groups],
+                "compute_dtype": self.compute_dtype}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(groups=[FusionGroup.from_dict(g) for g in d["groups"]],
+                   compute_dtype=d.get("compute_dtype", "float32"))
+
+
+def eager_schedule(graph: Graph) -> Schedule:
+    """One group per node, XLA impl — the 'eager dispatch' baseline."""
+    groups = []
+    for n in graph.toposorted():
+        if n.op in ("input", "param", "const"):
+            continue
+        groups.append(FusionGroup(name=f"g_{n.name}", nodes=[n.name], root=n.name))
+    return Schedule(groups=groups)
+
+
+def greedy_fused_schedule(graph: Graph) -> Schedule:
+    """Greedy elementwise fusion into producers — the 'compiler' baseline
+    (roughly what TorchInductor / XLA fusion achieves without restructuring)."""
+    sched = eager_schedule(graph)
+    # repeatedly merge single-consumer elementwise nodes into their producer group
+    merged = True
+    while merged:
+        merged = False
+        for g in list(sched.groups):
+            last = graph.node(g.nodes[-1])
+            consumers = graph.consumers(last.name)
+            if len(consumers) != 1:
+                continue
+            c = consumers[0]
+            if not (c.is_elementwise() or c.op == "softmax"):
+                continue
+            # all of c's other inputs must be sources or already-computed group outputs
+            cg = sched.group_of(c.name)
+            if cg is g or len(cg.nodes) != 1:
+                continue
+            g.nodes.append(c.name)
+            sched.groups.remove(cg)
+            merged = True
+            break
+    return sched
+
+
+@dataclasses.dataclass
+class KernelProgram:
+    """The unit the pipeline optimizes: graph + schedule (+ provenance)."""
+
+    name: str
+    graph: Graph
+    schedule: Schedule
+    original_flops: float = 0.0      # FLOPs of the *original* graph (paper's accounting)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def copy(self) -> "KernelProgram":
+        return KernelProgram(
+            name=self.name,
+            graph=self.graph.copy(),
+            schedule=self.schedule.copy(),
+            original_flops=self.original_flops,
+            meta=dict(self.meta),
+        )
+
+    def validate(self):
+        self.schedule.validate_against(self.graph)
+
+    def describe(self) -> str:
+        lines = [f"program {self.name} (compute_dtype={self.schedule.compute_dtype})"]
+        for g in self.schedule.groups:
+            cfg = ""
+            if g.config:
+                c = g.config
+                cfg = (f" cfg(bm={c.block_m},bn={c.block_n},bk={c.block_k},"
+                       f"gm={c.group_m},stages={c.num_stages},persist={c.persistent})")
+            lines.append(f"  [{g.impl}] {g.name}: {'+'.join(g.nodes)}{cfg}")
+        return "\n".join(lines)
+
+    def dumps(self) -> str:
+        return json.dumps({
+            "name": self.name,
+            "schedule": self.schedule.to_dict(),
+            "graph_signature": self.graph.signature(),
+            "original_flops": self.original_flops,
+        }, indent=2)

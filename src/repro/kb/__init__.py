@@ -1,0 +1,3 @@
+from repro.kb.loader import KnowledgeBase, Constraint, Pattern, load_default
+
+__all__ = ["KnowledgeBase", "Constraint", "Pattern", "load_default"]

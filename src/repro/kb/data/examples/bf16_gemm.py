@@ -1,0 +1,13 @@
+"""KB example (dtype): f32 GEMM -> bf16 io with f32 accumulation.
+2x MXU rate + half the HBM traffic; accumulator stays f32 (KB constraint
+accumulate_f32). Expected 2-4x."""
+
+import jax.numpy as jnp
+from repro.kernels.matmul_fused import matmul_fused
+
+
+def after(x_f32, w_f32):
+    out = matmul_fused(x_f32.astype(jnp.bfloat16), w_f32.astype(jnp.bfloat16),
+                       block_m=512, block_n=512, block_k=512,
+                       acc_dtype=jnp.float32, out_dtype=jnp.float32)
+    return out

@@ -1,0 +1,10 @@
+"""KB example (persistent + decode): single-token attention over a long KV
+cache — split-KV grid with partial-softmax merge (flash decoding).
+Ragged per-batch lengths handled with in-kernel masks. Expected 2-8x."""
+
+from repro.kernels.decode_attention import decode_attention
+
+
+def after(q_bhd, k_cache, v_cache, lengths):
+    return decode_attention(q_bhd, k_cache, v_cache, lengths=lengths,
+                            block_kv=512)

@@ -1,0 +1,16 @@
+"""KB example: attention — full-KV materializing kernel vs online-softmax
+flash kernel with VMEM-resident running stats. Expected 2-13x (long ctx)."""
+
+from repro.kernels.flash_attention import attention_unoptimized, flash_attention
+
+
+def before(q, k, v):
+    # loads the FULL K/V per q tile, materializes [bq, S] scores (spills to
+    # HBM past ~16k context), single-pass softmax, f32, no pipelining
+    return attention_unoptimized(q, k, v, causal=True)
+
+
+def after(q, k, v):
+    # online softmax: (m, l, acc) carried in VMEM scratch across KV tiles;
+    # the S x S matrix never exists; tiles from the hardware query system
+    return flash_attention(q, k, v, causal=True, block_q=512, block_kv=1024)

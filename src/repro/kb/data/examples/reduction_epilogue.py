@@ -1,0 +1,11 @@
+"""KB example (fusion): row reduction of a GEMM without materializing [M, N].
+The per-n-tile partial folds into a [bm, 1] scratch; only [M] reaches HBM.
+Expected 2-10x when M*N >> M*K (XLA cannot perform this fusion)."""
+
+from repro.kernels.epilogue import EpilogueOp
+from repro.kernels.matmul_fused import matmul_fused
+
+
+def after(x, w):
+    return matmul_fused(x, w, block_m=512, block_n=512, block_k=512,
+                        epilogue=[EpilogueOp("gelu")], reduction="max")

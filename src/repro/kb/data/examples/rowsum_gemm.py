@@ -1,0 +1,15 @@
+"""KB example (discovery): sum(x @ W.T, axis=1) == x @ W.sum(axis=0).
+The O(MNK) GEMM collapses to a cached O(NK) reduction + an O(MK) matvec.
+Expected 10-100x. Validity: linearity of matmul over the summed axis."""
+
+import jax.numpy as jnp
+
+
+def before(x, w):
+    return jnp.sum(x @ w.T, axis=1)
+
+
+def after(x, w, w_sum=None):
+    if w_sum is None:
+        w_sum = w.sum(axis=0)      # weight statistic, computed once per load
+    return x @ w_sum

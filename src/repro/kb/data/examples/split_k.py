@@ -1,0 +1,13 @@
+"""KB example (persistent): split-K with HBM partial spills vs persistent
+VMEM accumulation across the arbitrary-marked K grid dim. Expected 1.3-3x
+for K >> BLOCK_K. The grid extent derives from the shape (never hardcoded);
+the accumulator zero-inits on the first visit (KB: persistent_zero_init)."""
+
+from repro.kernels.matmul_fused import matmul_fused
+
+
+def after(a, b):
+    # kt = cdiv(K, 512) grid steps revisit the same output block; the f32
+    # scratch persists across them (dimension_semantics=(parallel, arbitrary))
+    return matmul_fused(a, b, block_m=512, block_n=512, block_k=512,
+                        num_stages=3)

@@ -1,0 +1,15 @@
+"""KB example: transposed matmul (nn.Linear layout) — manual pointers +
+strided reads vs BlockSpec + packed weights. Expected 2-4x."""
+
+# BEFORE: w stored [N, K]; kernel reads it column-strided every call, flat
+# grid with pl.load(ref, (pl.ds(...), pl.ds(...))) manual indexing (Mosaic
+# cannot pipeline the copies).
+
+# AFTER: pack once, BlockSpec-tile the kernel.
+import jax.numpy as jnp
+from repro.kernels.matmul_fused import matmul_fused
+
+
+def optimized(x, w_linear_layout):
+    w_packed = jnp.asarray(w_linear_layout).T   # one-time lane-contiguous pack
+    return matmul_fused(x, w_packed, block_m=512, block_n=512, block_k=512)

@@ -1,0 +1,227 @@
+"""Knowledge-base loader (paper §IV-D).
+
+Scans a directory of YAML files for ``constraints`` (hard rules with severity
+and wrong/correct examples) and ``patterns`` (before/after transformations
+with rationale, expected speedup, applicability tags, and a machine-readable
+``action`` executed by the deterministic proposers). ``examples/index.yaml``
+indexes full-code before/after pairs.
+
+Extensibility contract (same as the paper): drop a new YAML file following the
+schema and it is discovered on the next run — no code changes. Stage aliases
+are normalized and entries tagged to unknown stages are skipped with a
+warning, so the KB can evolve independently of the pipeline code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import pathlib
+from typing import Any, Dict, List, Optional
+
+import yaml
+
+log = logging.getLogger(__name__)
+
+STAGES = (
+    "analysis", "algorithmic", "discovery", "dtype_fix", "fusion",
+    "memory_access", "block_pointers", "persistent_kernel", "gpu_specific",
+    "autotuning",
+)
+
+_STAGE_ALIASES = {
+    "memory_patterns": "memory_access",
+    "memory": "memory_access",
+    "dtype": "dtype_fix",
+    "dtype_optimizations": "dtype_fix",
+    "gpu": "gpu_specific",
+    "tpu_specific": "gpu_specific",
+    "tpu": "gpu_specific",
+    "block_ptr": "block_pointers",
+    "blockspec": "block_pointers",
+    "persistent": "persistent_kernel",
+    "autotune": "autotuning",
+    "all": "all",
+}
+
+
+def _norm_stage(s: str) -> Optional[str]:
+    s = str(s).strip().lower()
+    s = _STAGE_ALIASES.get(s, s)
+    if s == "all" or s in STAGES:
+        return s
+    return None
+
+
+@dataclasses.dataclass
+class Constraint:
+    id: str
+    severity: str             # critical | info
+    stages: List[str]
+    description: str
+    wrong: str = ""
+    correct: str = ""
+    check: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    source_file: str = ""
+
+
+@dataclasses.dataclass
+class Pattern:
+    id: str
+    stages: List[str]
+    rationale: str
+    before: str = ""
+    after: str = ""
+    expected_speedup: str = ""
+    applicability: List[str] = dataclasses.field(default_factory=list)
+    action: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    source_file: str = ""
+
+
+@dataclasses.dataclass
+class Example:
+    id: str
+    file: str
+    stages: List[str]
+    optimizations: List[str]
+    expected_speedup: str
+    applicability: List[str]
+    code: str = ""
+
+
+class KnowledgeBase:
+    def __init__(self, constraints: List[Constraint], patterns: List[Pattern],
+                 examples: List[Example]):
+        self.constraints = constraints
+        self.patterns = patterns
+        self.examples = examples
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def load(cls, root: Optional[pathlib.Path] = None) -> "KnowledgeBase":
+        root = pathlib.Path(root or pathlib.Path(__file__).parent / "data")
+        constraints: List[Constraint] = []
+        patterns: List[Pattern] = []
+        examples: List[Example] = []
+        for f in sorted(root.glob("*.yaml")):
+            doc = yaml.safe_load(f.read_text()) or {}
+            for c in doc.get("constraints", []) or []:
+                stages = [s for s in map(_norm_stage, c.get("stages", []))
+                          if s is not None]
+                if not stages:
+                    log.warning("constraint %s in %s has no known stage; skipped",
+                                c.get("id"), f.name)
+                    continue
+                constraints.append(Constraint(
+                    id=c["id"], severity=c.get("severity", "info"),
+                    stages=stages, description=c.get("description", ""),
+                    wrong=c.get("wrong", ""), correct=c.get("correct", ""),
+                    check=c.get("check", {}) or {}, source_file=f.name))
+            for p in doc.get("patterns", []) or []:
+                stages = [s for s in map(_norm_stage, p.get("stages", []))
+                          if s is not None]
+                if not stages:
+                    log.warning("pattern %s in %s has no known stage; skipped",
+                                p.get("id"), f.name)
+                    continue
+                patterns.append(Pattern(
+                    id=p["id"], stages=stages,
+                    rationale=p.get("rationale", ""),
+                    before=p.get("before", ""), after=p.get("after", ""),
+                    expected_speedup=p.get("expected_speedup", ""),
+                    applicability=list(p.get("applicability", []) or []),
+                    action=p.get("action", {}) or {}, source_file=f.name))
+        idx = root / "examples" / "index.yaml"
+        if idx.exists():
+            doc = yaml.safe_load(idx.read_text()) or {}
+            for e in doc.get("examples", []) or []:
+                stages = [s for s in map(_norm_stage, e.get("stages", []))
+                          if s is not None]
+                code_path = idx.parent / e.get("file", "")
+                code = code_path.read_text() if code_path.exists() else ""
+                examples.append(Example(
+                    id=e["id"], file=e.get("file", ""), stages=stages,
+                    optimizations=list(e.get("optimizations", []) or []),
+                    expected_speedup=e.get("expected_speedup", ""),
+                    applicability=list(e.get("applicability", []) or []),
+                    code=code))
+        return cls(constraints, patterns, examples)
+
+    # ------------------------------------------------------------------
+    def critical_constraints(self) -> List[Constraint]:
+        return [c for c in self.constraints if c.severity == "critical"]
+
+    def constraints_for(self, stage: str) -> List[Constraint]:
+        stage = _norm_stage(stage) or stage
+        return [c for c in self.constraints
+                if "all" in c.stages or stage in c.stages]
+
+    def patterns_for(self, stage: str,
+                     applicability: Optional[List[str]] = None) -> List[Pattern]:
+        stage = _norm_stage(stage) or stage
+        out = [p for p in self.patterns if stage in p.stages]
+        if applicability is not None:
+            tags = set(applicability)
+            out = [p for p in out
+                   if not p.applicability or tags.intersection(p.applicability)
+                   or "any" in p.applicability]
+        return out
+
+    def examples_for(self, stage: str) -> List[Example]:
+        stage = _norm_stage(stage) or stage
+        return [e for e in self.examples if stage in e.stages]
+
+    # ------------------------------------------------------------------
+    def format_for_llm(self, stage: str,
+                       applicability: Optional[List[str]] = None) -> str:
+        """Assemble the stage-scoped prompt section (paper §IV-D-d): critical
+        constraints always included; stage patterns with before/after +
+        rationale; matching full-code examples appended."""
+        lines = [f"## Hardware knowledge for stage: {stage}", "",
+                 "### Critical constraints (must never be violated)"]
+        for c in self.critical_constraints():
+            lines += [f"- [{c.id}] {c.description.strip()}"]
+            if c.wrong:
+                lines += [f"    WRONG:   {c.wrong.strip()}"]
+            if c.correct:
+                lines += [f"    CORRECT: {c.correct.strip()}"]
+        stage_cs = [c for c in self.constraints_for(stage) if c.severity != "critical"]
+        if stage_cs:
+            lines += ["", "### Stage constraints"]
+            for c in stage_cs:
+                lines += [f"- [{c.id}] {c.description.strip()}"]
+        pats = self.patterns_for(stage, applicability)
+        if pats:
+            lines += ["", "### Optimization patterns"]
+            for p in pats:
+                lines += [f"- [{p.id}] ({p.expected_speedup}) {p.rationale.strip()}"]
+                if p.before:
+                    lines += ["    BEFORE:", *("      " + l for l in p.before.splitlines())]
+                if p.after:
+                    lines += ["    AFTER:", *("      " + l for l in p.after.splitlines())]
+        exs = self.examples_for(stage)
+        if exs:
+            lines += ["", "### Full-code examples"]
+            for e in exs:
+                lines += [f"- [{e.id}] {', '.join(e.optimizations)} "
+                          f"(expected {e.expected_speedup})"]
+        return "\n".join(lines)
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "constraints": len(self.constraints),
+            "patterns": len(self.patterns),
+            "examples": len(self.examples),
+            "total_entries": len(self.constraints) + len(self.patterns)
+            + len(self.examples),
+        }
+
+
+_DEFAULT: Optional[KnowledgeBase] = None
+
+
+def load_default() -> KnowledgeBase:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = KnowledgeBase.load()
+    return _DEFAULT

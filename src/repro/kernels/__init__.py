@@ -1,0 +1,11 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; TPU is the target).
+
+Layout: one <name>.py per kernel (pl.pallas_call + BlockSpec), with
+``ops.py`` as the jit'd wrapper layer and ``ref.py`` as the pure-jnp oracles.
+"""
+
+from repro.kernels.epilogue import EpilogueOp
+from repro.kernels import ref
+from repro.kernels import ops
+
+__all__ = ["EpilogueOp", "ref", "ops"]

@@ -1,0 +1,103 @@
+"""Analytic v5e roofline model for the attention kernels (the performance
+signal for the Flash-Attention experiment, paper Table 3 / Fig. 14-15).
+
+Same modeling discipline as ir/cost.py: every term derives from decisions the
+kernel actually makes (tile sizes, dtype, online vs materialized softmax,
+pipelining), evaluated against v5e constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.hw.query import HardwareQuery
+from repro.hw.specs import TPUSpec, TPU_V5E, dtype_itemsize
+
+
+@dataclasses.dataclass
+class AttentionCost:
+    t_compute: float
+    t_memory: float
+    t_total: float
+    flops: float
+    hbm_bytes: float
+    tflops: float
+    bound: str
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+
+def attention_flops(b: int, a: int, sq: int, skv: int, d: int) -> float:
+    """QK^T + PV matmuls (2x2 flops/MAC) + softmax vector work."""
+    return 4.0 * b * a * sq * skv * d + 6.0 * b * a * sq * skv
+
+
+def naive_attention_cost(b: int, a: int, s: int, d: int,
+                         spec: TPUSpec = TPU_V5E, block_q: int = 128,
+                         dtype: str = "float32") -> AttentionCost:
+    """The unoptimized kernel: per q-tile it loads the FULL K/V, materializes
+    the whole score row, single-pass softmax, no pipelining, f32."""
+    isz = dtype_itemsize(dtype)
+    flops = attention_flops(b, a, s, s, d)
+    qt = max(1, s // block_q)
+    kv_traffic = b * a * qt * 2 * s * d * isz           # full K,V per q tile
+    qo_traffic = b * a * s * d * isz * 2
+    # scores spill: bq x S f32 row; fits VMEM only for short S
+    scores_bytes = block_q * s * 4
+    # a quarter of VMEM is realistically available to the naive kernel's
+    # working set (no double-buffer discipline, f32 everywhere)
+    budget = spec.vmem_bytes // 4
+    spill = scores_bytes + 2 * s * d * isz > budget
+    score_traffic = 2.0 * b * a * s * s * 4 if spill else 0.0
+    traffic = kv_traffic + qo_traffic + score_traffic
+    util = 0.55
+    t_comp = flops / (spec.peak_flops(dtype) * util)
+    if spill:
+        # score spills serialize the pipeline: copies can't overlap compute
+        t_mem = traffic / (spec.hbm_bw * 0.5)
+        t = t_comp + t_mem
+    else:
+        # short contexts fit VMEM; even the naive kernel gets overlap
+        t_mem = traffic / (spec.hbm_bw * 0.7)
+        t = max(t_comp, t_mem)
+    return AttentionCost(t_comp, t_mem, t, flops, traffic,
+                         flops / t / 1e12,
+                         "memory" if t_mem > t_comp else "compute")
+
+
+def flash_attention_cost(b: int, a: int, s: int, d: int,
+                         spec: TPUSpec = TPU_V5E,
+                         block_q: Optional[int] = None,
+                         block_kv: Optional[int] = None,
+                         dtype: str = "bfloat16") -> AttentionCost:
+    """The optimized kernel: online softmax (no score materialization),
+    shape-aware tiles from the hardware query, bf16 io / f32 accumulation,
+    double-buffered copies overlapping the MXU."""
+    hw = HardwareQuery(spec)
+    p = hw.get_attention_params(s, s, d, dtype)
+    bq = block_q or p.block_m
+    isz = dtype_itemsize(dtype)
+    flops = attention_flops(b, a, s, s, d)
+    qt = max(1, -(-s // bq))
+    kv_traffic = b * a * qt * 2 * s * d * isz           # K,V re-read per q tile
+    qo_traffic = b * a * s * d * isz * 2
+    traffic = kv_traffic + qo_traffic
+    t_mem = traffic / (spec.hbm_bw * 0.85)
+    util = 0.85 if d >= 128 else max(0.4, 0.85 * d / 128)
+    t_comp = flops / (spec.peak_flops(dtype) * util)
+    t = max(t_comp, t_mem) + spec.launch_overhead_s
+    return AttentionCost(t_comp, t_mem, t, flops, traffic,
+                         flops / t / 1e12,
+                         "memory" if t_mem > t_comp else "compute")
+
+
+def naive_oom(b: int, a: int, s: int, d: int, spec: TPUSpec = TPU_V5E,
+              dtype: str = "float32") -> bool:
+    """Full S x S score materialization in HBM (the eager path): does one
+    head's score matrix even fit? (paper §VI-E-d: S=32k is a correctness
+    requirement, not just performance)."""
+    per_head_scores = s * s * dtype_itemsize(dtype)
+    return per_head_scores * a > spec.hbm_bytes // 2

@@ -1,0 +1,119 @@
+"""Shared epilogue-chain spec for fused kernels.
+
+An epilogue is a list of :class:`EpilogueOp` applied in order to the f32
+accumulator tile while it is still in VMEM (the fusion stage's product).
+``operand`` names an extra kernel input (bias/residual); ``value`` is a
+compile-time scalar.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+UNARY = {
+    "relu": lambda x: jnp.maximum(x, 0),
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "swish": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "mish": lambda x: x * jnp.tanh(jax.nn.softplus(x)),
+    "exp": jnp.exp,
+    "abs": jnp.abs,
+    "square": jnp.square,
+    "neg": jnp.negative,
+    "softplus": jax.nn.softplus,
+    "identity": lambda x: x,
+}
+
+BINARY = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "minimum": jnp.minimum,
+    "maximum": jnp.maximum,
+    "bias_add": jnp.add,
+}
+
+SCALAR = {
+    "scale": lambda x, v: x * v,
+    "add_scalar": lambda x, v: x + v,
+    "clamp_min": lambda x, v: jnp.maximum(x, v),
+    "clamp_max": lambda x, v: jnp.minimum(x, v),
+}
+
+# terminal reductions over the N (last) axis of the [M, N] tile
+REDUCTIONS = ("sum", "max", "min", "mean")
+
+
+@dataclasses.dataclass
+class EpilogueOp:
+    op: str
+    operand: Optional[str] = None      # extra-input name (bias/residual)
+    value: Optional[float] = None      # scalar constant
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self):
+        if self.op in UNARY:
+            return
+        if self.op in BINARY:
+            if self.operand is None and self.value is None:
+                raise ValueError(f"binary epilogue {self.op} needs operand or value")
+            return
+        if self.op in SCALAR:
+            if self.value is None:
+                raise ValueError(f"scalar epilogue {self.op} needs value")
+            return
+        raise ValueError(f"unsupported epilogue op {self.op!r}")
+
+
+def apply_epilogue(tile: jnp.ndarray, epilogue: List[EpilogueOp],
+                   operands: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Apply the chain to a tile (works on full arrays in the oracle too)."""
+    x = tile
+    for e in epilogue:
+        if e.op in UNARY:
+            x = UNARY[e.op](x)
+        elif e.op in SCALAR:
+            x = SCALAR[e.op](x, jnp.asarray(e.value, x.dtype))
+        elif e.op in BINARY:
+            if e.operand is not None:
+                other = operands[e.operand].astype(x.dtype)
+            else:
+                other = jnp.asarray(e.value, x.dtype)
+            x = BINARY[e.op](x, other)
+        else:
+            raise ValueError(e.op)
+    return x
+
+
+def reduce_tile(x: jnp.ndarray, reduction: str, axis: int = -1,
+                keepdims: bool = True) -> jnp.ndarray:
+    if reduction == "sum":
+        return jnp.sum(x, axis=axis, keepdims=keepdims)
+    if reduction == "max":
+        return jnp.max(x, axis=axis, keepdims=keepdims)
+    if reduction == "min":
+        return jnp.min(x, axis=axis, keepdims=keepdims)
+    if reduction == "mean":  # caller rescales: tiles see partial counts
+        return jnp.sum(x, axis=axis, keepdims=keepdims)
+    raise ValueError(reduction)
+
+
+def reduce_combine(acc: jnp.ndarray, update: jnp.ndarray, reduction: str) -> jnp.ndarray:
+    if reduction in ("sum", "mean"):
+        return acc + update
+    if reduction == "max":
+        return jnp.maximum(acc, update)
+    if reduction == "min":
+        return jnp.minimum(acc, update)
+    raise ValueError(reduction)
+
+
+def reduce_init(reduction: str) -> float:
+    return {"sum": 0.0, "mean": 0.0, "max": -jnp.inf, "min": jnp.inf}[reduction]

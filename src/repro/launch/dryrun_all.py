@@ -1,0 +1,87 @@
+"""Orchestrate the full dry-run sweep: every (arch x shape x mesh) cell in a
+fresh subprocess (XLA arenas are per-process), merged into one JSON.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all \
+        --out results/dryrun/all.json [--mesh single multipod] [--arch ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+from repro.configs.base import ARCH_IDS
+from repro.configs.shapes import SHAPES
+
+
+def run_cell(arch: str, shape: str, mesh: str, outdir: pathlib.Path,
+             timeout: int = 3000) -> dict:
+    out = outdir / f"{arch}.{shape}.{mesh}.json"
+    if out.exists():
+        rec = json.loads(out.read_text())
+        if rec.get("status") in ("ok", "skip"):
+            return rec  # cached
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", str(out)]
+    env = dict(**__import__("os").environ)
+    env["PYTHONPATH"] = "src"
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        if out.exists():
+            rec = json.loads(out.read_text())
+        else:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                   "status": "error",
+                   "error": (proc.stderr or proc.stdout)[-2000:]}
+    except subprocess.TimeoutExpired:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh, "status": "timeout",
+               "wall_s": round(time.time() - t0, 1)}
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun/all.json")
+    ap.add_argument("--mesh", nargs="+", default=["single", "multipod"])
+    ap.add_argument("--arch", nargs="+", default=list(ARCH_IDS))
+    ap.add_argument("--shape", nargs="+", default=list(SHAPES))
+    args = ap.parse_args()
+
+    outpath = pathlib.Path(args.out)
+    outdir = outpath.parent / "cells"
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    records = []
+    for mesh in args.mesh:
+        for arch in args.arch:
+            for shape in args.shape:
+                rec = run_cell(arch, shape, mesh, outdir)
+                records.append(rec)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f"compile={rec.get('compile_s')}s "
+                             f"fits={rec.get('fits_hbm')} "
+                             f"coll={rec.get('collectives', {}).get('total', 0)/1e6:.0f}MB")
+                elif status == "error":
+                    extra = rec.get("error", "")[:160].replace("\n", " ")
+                print(f"[{len(records):3d}] {arch:22s} {shape:12s} {mesh:9s} "
+                      f"{status:7s} {rec.get('wall_s', 0):7.1f}s {extra}",
+                      flush=True)
+                outpath.write_text(json.dumps(records, indent=1))
+    ok = sum(1 for r in records if r.get("status") == "ok")
+    skip = sum(1 for r in records if r.get("status") == "skip")
+    bad = len(records) - ok - skip
+    print(f"\ndone: {ok} ok, {skip} skip, {bad} failed -> {outpath}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Abstract input construction for the dry-run: ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, zero allocation) for every model input, the
+parameter/optimizer trees, and serving caches."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.model import RuntimeFlags, init_cache, init_params
+from repro.optim import adamw
+from repro.sharding import rules
+
+
+def _with_shardings(abstract, shardings):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    a = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+    return _with_shardings(a, rules.shard_params(a, mesh))
+
+
+def abstract_opt_state(cfg: ModelConfig, abstract_p, mesh: Mesh,
+                       ocfg: Optional[adamw.AdamWConfig] = None):
+    ocfg = ocfg or adamw.AdamWConfig()
+    a = jax.eval_shape(lambda p: adamw.init(ocfg, p), abstract_p)
+    m = _with_shardings(a.m, rules.shard_params(a.m, mesh))
+    v = _with_shardings(a.v, rules.shard_params(a.v, mesh))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=rules.replicated(mesh))
+    return adamw.OptState(m=m, v=v, step=step)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for a (config x shape) cell."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    specs = rules.batch_specs(mesh, b)
+
+    def sds(shp, dtype, key):
+        return jax.ShapeDtypeStruct(shp, dtype,
+                                    sharding=NamedSharding(mesh, specs[key]))
+
+    batch: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        tok_len = shape.seq_len
+        if cfg.num_prefix_embeds:
+            tok_len -= cfg.num_prefix_embeds
+            batch["prefix_embeds"] = sds((b, cfg.num_prefix_embeds, cfg.d_model),
+                                         jnp.bfloat16, "prefix_embeds")
+        batch["tokens"] = sds((b, tok_len), jnp.int32, "tokens")
+        if shape.kind == "train":
+            batch["labels"] = sds((b, shape.seq_len), jnp.int32, "labels")
+        if cfg.family == "encdec":
+            batch["frames"] = sds((b, cfg.encoder_frames, cfg.d_model),
+                                  jnp.bfloat16, "frames")
+    else:  # decode: one new token
+        batch["tokens"] = sds((b, 1), jnp.int32, "tokens")
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   dtype=jnp.bfloat16):
+    a = jax.eval_shape(lambda: init_cache(cfg, shape.global_batch,
+                                          shape.seq_len, dtype))
+    if cfg.family == "encdec":
+        # cross-cache filled by prefill; stand-in matches encoder frames
+        dh = cfg.resolved_head_dim
+        xshape = (cfg.num_layers, shape.global_batch, cfg.encoder_frames,
+                  cfg.kv_heads, dh)
+        a = dict(a, xk=jax.ShapeDtypeStruct(xshape, dtype),
+                 xv=jax.ShapeDtypeStruct(xshape, dtype))
+    return _with_shardings(a, rules.shard_cache(a, mesh, cfg.kv_heads))

@@ -1,0 +1,6 @@
+from repro.models.model import (RuntimeFlags, DEFAULT_FLAGS, init_params,
+                                forward, lm_loss, init_cache, prefill,
+                                decode_step)
+
+__all__ = ["RuntimeFlags", "DEFAULT_FLAGS", "init_params", "forward",
+           "lm_loss", "init_cache", "prefill", "decode_step"]

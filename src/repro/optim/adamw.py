@@ -1,0 +1,89 @@
+"""AdamW with cosine schedule, linear warmup and global-norm clipping —
+pure JAX, pytree-native, sharding-transparent (moments inherit the param
+sharding through jit output shardings)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(cfg: AdamWConfig, params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def update(cfg: AdamWConfig, grads, state: OptState, params
+           ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias excluded)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2.astype(cfg.moment_dtype), v2.astype(cfg.moment_dtype)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(new_m, new_v, step), metrics

@@ -1,0 +1,137 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, per the assignment:
+
+    compute    = HLO_FLOPs            / (chips x 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes            / (chips x 819e9  B/s HBM)
+    collective = collective_bytes     / (chips x 50e9   B/s ICI link)
+
+``compiled.cost_analysis()`` on this backend reports *per-device* flops and
+bytes, so HLO_FLOPs = cost['flops'] x chips; the formulas then reduce to
+per-chip terms. collective_bytes comes from parsing the optimized HLO
+(``compiled.as_text()``): the summed output-operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.hw.specs import TPUSpec, TPU_V5E
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# shapes like  bf16[16,1024,128]{2,1,0}  or tuples ( ..., ... )
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},0-9]+)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")[\s.(]", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int]]:
+    """Return [(op_kind, payload_bytes)] for every collective in the HLO."""
+    out = []
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-start" in hlo_text[m.start():m.end() + 8]:
+            pass  # async pairs: count the start, the -done carries no payload
+        out.append((kind, _shape_bytes(shape_str)))
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    per_kind: Dict[str, float] = {}
+    for kind, nbytes in parse_collectives(hlo_text):
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+    per_kind["total"] = sum(v for k, v in per_kind.items() if k != "total")
+    return per_kind
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # total across chips
+    hlo_bytes: float              # total across chips
+    coll_bytes: float             # per-chip payload total
+    model_flops: float            # 6ND / 2ND-style useful flops
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0     # MODEL_FLOPS / HLO_FLOPs
+    comment: str = ""
+
+    def finalize(self, spec: TPUSpec = TPU_V5E) -> "RooflineTerms":
+        self.t_compute = self.hlo_flops / (self.chips * spec.peak_flops_bf16)
+        self.t_memory = self.hlo_bytes / (self.chips * spec.hbm_bw)
+        self.t_collective = self.coll_bytes / spec.ici_link_bw
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        return self
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute achieved at the modeled step time vs. chip peak."""
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / t) / TPU_V5E.peak_flops_bf16
+
+
+def from_record(rec: Dict) -> RooflineTerms:
+    """Build terms from a dry-run JSON record."""
+    rt = RooflineTerms(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        chips=rec["n_devices"],
+        hlo_flops=rec["cost"]["flops"] * rec["n_devices"],
+        hlo_bytes=rec["cost"]["bytes"] * rec["n_devices"],
+        coll_bytes=rec["collectives"].get("total", 0.0),
+        model_flops=rec["model_flops"],
+    )
+    return rt.finalize()
+
+
+def what_moves_it(rt: RooflineTerms) -> str:
+    if rt.dominant == "compute":
+        if rt.useful_ratio < 0.5:
+            return ("compute-bound with low useful ratio: cut remat recompute "
+                    "or fuse the attention score chain")
+        return "compute-bound: bf16 everywhere + bigger per-chip batch"
+    if rt.dominant == "memory":
+        return ("HBM-bound: fuse elementwise chains, keep KV/activations bf16, "
+                "raise arithmetic intensity with larger tiles")
+    return ("collective-bound: reshard to cut all-gathers (sequence-shard "
+            "attention), overlap collectives with compute, or compress "
+            "cross-pod payloads (int8 EF)")

@@ -1,0 +1,98 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from the dry-run JSON.
+
+    PYTHONPATH=src python -m repro.roofline.experiments_md results/dryrun/all.json
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+from repro.roofline.analyze import from_record, what_moves_it
+
+
+def dryrun_section(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skip"]
+    bad = [r for r in recs if r.get("status") not in ("ok", "skip")]
+    lines = ["## §Dry-run", ""]
+    lines.append(f"**{len(ok)} cells compiled** (`.lower().compile()` on the "
+                 f"production meshes), **{len(skip)} skipped** per the "
+                 f"long-context applicability rule, **{len(bad)} failed**.")
+    lines.append("")
+    lines.append("Mesh: single pod = `(16,16)` (data, model) = 256 chips; "
+                 "multi-pod = `(2,16,16)` (pod, data, model) = 512 chips "
+                 "(512 forced host devices; ShapeDtypeStruct inputs — no "
+                 "allocation).")
+    lines.append("")
+    lines.append("| arch | shape | mesh | compile s | HLO flops/chip | "
+                 "bytes/chip | coll. bytes/chip | peak mem/chip (proj.) | fits 16 GiB |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        m = r["memory"]
+        lines.append(
+            "| {arch} | {shape} | {mesh} | {c:.0f} | {f:.2e} | {b:.2e} | "
+            "{cb:.2e} | {pk:.1f} GiB | {fits} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=r.get("compile_s", 0), f=r["cost"]["flops"],
+                b=r["cost"]["bytes"],
+                cb=r["collectives"].get("total", 0),
+                pk=m["peak_projected_tpu"] / 2**30,
+                fits="yes" if r.get("fits_hbm") else "**no**"))
+    if skip:
+        lines.append("")
+        lines.append("Skipped cells (assignment rule — `long_500k` needs "
+                     "sub-quadratic attention):")
+        for r in sorted(skip, key=lambda r: (r["mesh"], r["arch"])):
+            lines.append(f"- {r['arch']} x {r['shape']} ({r['mesh']}): "
+                         f"{r.get('reason', '')}")
+    return "\n".join(lines)
+
+
+def roofline_section(recs: List[Dict]) -> str:
+    lines = ["## §Roofline", ""]
+    lines.append("Terms per the assignment (v5e: 197 TFLOP/s bf16, 819 GB/s "
+                 "HBM, 50 GB/s ICI link): `compute = HLO_FLOPs/(chips x peak)`, "
+                 "`memory = HLO_bytes/(chips x bw)`, `collective = "
+                 "collective_bytes/link_bw` (per-chip payloads parsed from the "
+                 "optimized HLO). `useful` = MODEL_FLOPS/HLO_FLOPs (6ND train, "
+                 "2ND inference; N_active for MoE). `roofline%` = useful "
+                 "FLOPs/chip at the max-term step time vs. chip peak.")
+    lines.append("")
+    for mesh in ("single", "multipod"):
+        rows = [r for r in recs
+                if r.get("status") == "ok" and r["mesh"] == mesh]
+        if not rows:
+            continue
+        chips = rows[0]["n_devices"]
+        lines.append(f"### {mesh} ({chips} chips)")
+        lines.append("")
+        lines.append("| arch | shape | compute ms | memory ms | coll. ms | "
+                     "dominant | useful | roofline% | what moves it |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            t = from_record(r)
+            lines.append(
+                "| {a} | {s} | {c:.2f} | {m:.2f} | {co:.2f} | {d} | {u:.2f} | "
+                "{rf:.1f}% | {wm} |".format(
+                    a=t.arch, s=t.shape, c=t.t_compute * 1e3,
+                    m=t.t_memory * 1e3, co=t.t_collective * 1e3,
+                    d=t.dominant, u=t.useful_ratio,
+                    rf=100 * t.roofline_fraction, wm=what_moves_it(t)))
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main():
+    path = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                        else "results/dryrun/all.json")
+    recs = json.loads(path.read_text())
+    print(dryrun_section(recs))
+    print()
+    print(roofline_section(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` on this backend counts each while-loop body
+ONCE, so anything inside scan-over-layers / microbatch / kv-chunk loops is
+undercounted by the trip count. This walker re-derives:
+
+  * flops            — dot/convolution ops (2 x numel(out) x K), multiplied
+                        by the product of enclosing loop trip counts
+                        (``known_trip_count`` backend_config, annotated by
+                        XLA's trip-count pass),
+  * collective bytes — output payloads of all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute,
+                        trip-multiplied,
+  * a flops correction ratio, used to scale the backend's
+                        'bytes accessed' (loop-dominated programs: the same
+                        multiplier applies to first order; recorded as an
+                        approximation in EXPERIMENTS.md).
+
+Dots dominate FLOPs for every cell here; VPU elementwise work is not counted
+(consistent across cells, noted in the method).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[\w\[\]{},]+)\s+"
+    r"([\w\-]+)\(")
+_CALLED_RE = re.compile(r"(?:body|calls|to_apply)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _numel(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+_NO_BYTES = {"tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+             "after-all", "opt-barrier"}
+
+
+@dataclasses.dataclass
+class WalkResult:
+    flops: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    hbm_bytes: float = 0.0
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    current: Optional[str] = None
+    for line in hlo.splitlines():
+        # computation headers: `%name (args...) -> type {` — args may nest
+        # parens (tuple params), so match name + "(" and require "->" ... "{"
+        header = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+        if (header and "->" in line and line.rstrip().endswith("{")
+                and "=" not in line.split("->")[0].split("(")[0]):
+            current = header.group(1)
+            comps[current] = []
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[current].append(Op(m.group(1), m.group(2), m.group(3), line))
+    return comps
+
+
+def _dot_flops(op: Op, ops_by_name: Dict[str, Op]) -> float:
+    """2 x numel(out) x K; K from the lhs contracting dim."""
+    out_n = _numel(op.shape)
+    mm = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.opcode):])
+    operands = [s.strip().lstrip("%") for s in mm.group(1).split(",")] if mm else []
+    k = 1
+    dims = _DIMS_RE.search(op.line)
+    if operands and dims is not None and dims.group(1):
+        lhs = ops_by_name.get(operands[0])
+        if lhs is not None:
+            sm = _SHAPE_RE.search(lhs.shape)
+            if sm:
+                shape = [int(d) for d in sm.group(2).split(",") if d]
+                for ci in dims.group(1).split(","):
+                    ci = int(ci)
+                    if ci < len(shape):
+                        k *= shape[ci]
+    return 2.0 * out_n * k
+
+
+def _conv_flops(op: Op) -> float:
+    # approximation: 2 x numel(out) x (kernel window x in-channels) is not
+    # recoverable from the line alone in all cases; use dim_labels if present
+    return 2.0 * _numel(op.shape) * 1.0
+
+
+def walk(hlo: str, entry: Optional[str] = None) -> WalkResult:
+    comps = parse_computations(hlo)
+    if not comps:
+        return WalkResult(0.0, 0.0, {})
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+
+    cache: Dict[str, WalkResult] = {}
+
+    def comp_cost(name: str, depth: int = 0) -> WalkResult:
+        if name in cache:
+            return cache[name]
+        if name not in comps or depth > 64:
+            return WalkResult(0.0, 0.0, {})
+        cache[name] = WalkResult(0.0, 0.0, {})  # cycle guard
+        ops = comps[name]
+        ops_by_name = {o.name: o for o in ops}
+        flops = 0.0
+        coll = 0.0
+        hbm = 0.0
+        by_kind: Dict[str, float] = {}
+        for op in ops:
+            if op.opcode == "dot":
+                flops += _dot_flops(op, ops_by_name)
+            elif op.opcode == "convolution":
+                flops += _conv_flops(op)
+            elif any(op.opcode.startswith(c) for c in _COLLECTIVES):
+                if op.opcode.endswith("-done"):
+                    continue  # async pair: the -start carries the payload
+                b = _shape_bytes(op.shape)
+                coll += b
+                kind = next(c for c in _COLLECTIVES if op.opcode.startswith(c))
+                by_kind[kind] = by_kind.get(kind, 0.0) + b
+
+            # HBM traffic: output + operand bytes per materializing op.
+            # Fusions count only their boundary (their body is in-register);
+            # while bodies DO materialize per iteration (trip-multiplied).
+            if op.opcode not in _NO_BYTES:
+                b = _shape_bytes(op.shape)
+                mm = re.search(r"\(([^)]*)\)",
+                               op.line[op.line.index(op.opcode):])
+                if mm:
+                    for operand in mm.group(1).split(","):
+                        od = ops_by_name.get(operand.strip().lstrip("%"))
+                        if od is not None:
+                            b += _shape_bytes(od.shape)
+                hbm += b
+
+            trip = 1
+            if op.opcode == "while":
+                t = _TRIP_RE.search(op.line)
+                trip = int(t.group(1)) if t else 1
+            called = _CALLED_RE.findall(op.line) + _COND_RE.findall(op.line)
+            for sub in called:
+                sc = comp_cost(sub, depth + 1)
+                flops += sc.flops * trip
+                coll += sc.coll_bytes * trip
+                if op.opcode != "fusion":
+                    hbm += sc.hbm_bytes * trip
+                for k, v in sc.coll_by_kind.items():
+                    by_kind[k] = by_kind.get(k, 0.0) + v * trip
+        res = WalkResult(flops, coll, by_kind, hbm)
+        cache[name] = res
+        return res
+
+    return comp_cost(entry)

@@ -1,0 +1,72 @@
+"""Roofline report generation from the dry-run JSON (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.roofline.analyze import RooflineTerms, from_record, what_moves_it
+
+
+def load_terms(path: pathlib.Path, mesh: str = "single") -> List[RooflineTerms]:
+    recs = json.loads(pathlib.Path(path).read_text())
+    out = []
+    for r in recs:
+        if r.get("status") == "ok" and r.get("mesh") == mesh:
+            out.append(from_record(r))
+    return out
+
+
+def format_table(terms: List[RooflineTerms], md: bool = False) -> str:
+    lines = []
+    if md:
+        lines.append("| arch | shape | compute (ms) | memory (ms) | "
+                     "collective (ms) | dominant | useful ratio | "
+                     "roofline frac | next lever |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+    else:
+        lines.append(f"{'arch':22s} {'shape':12s} {'comp ms':>9s} "
+                     f"{'mem ms':>9s} {'coll ms':>9s} {'dominant':>10s} "
+                     f"{'useful':>7s} {'roofl%':>7s}")
+    for t in terms:
+        row = (t.arch, t.shape, t.t_compute * 1e3, t.t_memory * 1e3,
+               t.t_collective * 1e3, t.dominant, t.useful_ratio,
+               100 * t.roofline_fraction)
+        if md:
+            lines.append("| {} | {} | {:.2f} | {:.2f} | {:.2f} | {} | "
+                         "{:.2f} | {:.1f}% | {} |".format(
+                             *row, what_moves_it(t)))
+        else:
+            lines.append("{:22s} {:12s} {:9.2f} {:9.2f} {:9.2f} {:>10s} "
+                         "{:7.2f} {:6.1f}%".format(*row))
+    return "\n".join(lines)
+
+
+def print_report(path: pathlib.Path):
+    recs = json.loads(pathlib.Path(path).read_text())
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skip"]
+    bad = [r for r in recs if r.get("status") not in ("ok", "skip")]
+    print(f"\n== Multi-pod dry-run: {len(ok)} compiled, {len(skip)} skipped "
+          f"(documented), {len(bad)} failed ==")
+    fits = sum(1 for r in ok if r.get("fits_hbm"))
+    print(f"HBM (16 GiB/chip, projected-TPU): {fits}/{len(ok)} cells fit")
+    for mesh in ("single", "multipod"):
+        terms = load_terms(path, mesh)
+        if not terms:
+            continue
+        chips = terms[0].chips
+        print(f"\n-- {mesh} mesh ({chips} chips) roofline --")
+        print(format_table(terms))
+    if bad:
+        print("\nFAILED cells:")
+        for r in bad:
+            print(f"  {r['arch']} {r['shape']} {r['mesh']}: "
+                  f"{r.get('error', r.get('status'))[:160]}")
+
+
+if __name__ == "__main__":
+    import sys
+    print_report(pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                              else "results/dryrun/all.json"))

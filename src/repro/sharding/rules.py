@@ -1,0 +1,277 @@
+"""Parameter/activation sharding rules.
+
+Logical mapping (Megatron-style TP on the ``model`` axis, DP over
+``pod``+``data``):
+
+  * column-parallel: qkv/mlp-in/gate/router projections shard their output
+    (last) dim; row-parallel ``wo`` shards its input dim (XLA inserts the
+    reduce-scatter/all-reduce).
+  * embeddings shard the vocab dim when it divides the axis, else d_model.
+  * MoE expert weights [E, D, F] shard F (TP-within-expert — the expert count
+    of the assigned MoE archs does not divide the 16-wide model axis, see
+    DESIGN.md §4; the divisible-EP path lives in expert_parallel.py).
+  * every rule is divisibility-guarded: a dim that does not divide the axis
+    falls back to the next candidate dim or replication — this is what makes
+    all 10 archs lower on the fixed production mesh.
+
+KV caches shard batch over DP and sequence over ``model`` (split-KV decode);
+recurrent states shard heads/channels over ``model``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "wx", "wz", "wb", "wc", "wdt",
+                "wgate", "w_r", "w_i", "router", "conv_w"}
+ROW_PARALLEL = {"wo"}
+COL_BIAS = {"bq", "bk", "bv"}
+REPLICATED = {"scale", "norm_scale", "dt_bias", "a_log", "d_skip", "lam",
+              "b_r", "b_i", "conv_b", "pos_embed"}
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape.get(axis, 1)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+               tp_axis: str = "model", fsdp_axis: Optional[str] = "data"
+               ) -> P:
+    import os
+    if os.environ.get("REPRO_NO_FSDP"):  # perf-iteration variant (§Perf)
+        fsdp_axis = None
+    tp = _axis_size(mesh, tp_axis)
+    name = path[-1]
+    nd = len(shape)
+
+    def pad(spec_tail):
+        """Left-pad with None for stacked leading dims (scan-over-layers)."""
+        return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+    def fsdp(spec: P) -> P:
+        """ZeRO/FSDP: additionally shard the first free dividing dim over the
+        data axis — params/grads/moments scale with total devices, XLA
+        inserts the per-use all-gather (counted by the roofline)."""
+        if fsdp_axis is None or fsdp_axis not in mesh.shape:
+            return spec
+        fs = _axis_size(mesh, fsdp_axis)
+        entries = list(spec) + [None] * (nd - len(spec))
+        for i in range(nd):
+            if entries[i] is None and shape[i] % fs == 0 and shape[i] >= fs:
+                entries[i] = fsdp_axis
+                return P(*entries)
+        return spec
+
+    if name in REPLICATED or nd == 0:
+        return P()
+    if name == "embed":
+        v, d = shape
+        if v % tp == 0:
+            return fsdp(P(tp_axis, None))
+        if d % tp == 0:
+            return fsdp(P(None, tp_axis))
+        return fsdp(P())
+    if name == "unembed":
+        d, v = shape
+        if os.environ.get("REPRO_REPLICATE_UNEMBED"):
+            # odd-vocab archs: a replicated unembed computes logits locally
+            # per sequence shard (no D-contraction all-reduce) — §Perf
+            return fsdp(P())
+        if v % tp == 0:
+            return fsdp(P(None, tp_axis))
+        if d % tp == 0:
+            return fsdp(P(tp_axis, None))
+        return fsdp(P())
+    if name in ("wi", "wg") and nd >= 3 and shape[-3] > 1:
+        # MoE expert weights [.., E, D, F]. TP-within-expert only pays when
+        # F/tp stays MXU-aligned; tiny-FFN MoE (granite: 512/16=32) is better
+        # replicated on the model axis (§Perf iteration).
+        if os.environ.get("REPRO_NO_MOE_TP") or shape[-1] // tp < 128:
+            # measured (§Perf, granite): sub-128 sharded FFN width starves
+            # the MXU and pays dispatch-shaped all-reduces — replicate instead
+            return fsdp(P())
+        base = pad([None, None, tp_axis]) if shape[-1] % tp == 0 else P()
+        return fsdp(base)
+    if name == "wo" and nd >= 3 and shape[-3] > 1:
+        if os.environ.get("REPRO_NO_MOE_TP") or shape[-2] // tp < 128:
+            return fsdp(P())
+        base = pad([None, tp_axis, None]) if shape[-2] % tp == 0 else P()
+        return fsdp(base)
+    if name in COL_PARALLEL:
+        base = pad([None, tp_axis]) if shape[-1] % tp == 0 else P()
+        return fsdp(base)
+    if name in ROW_PARALLEL:
+        base = pad([tp_axis, None]) if shape[-2] % tp == 0 else P()
+        return fsdp(base)
+    if name in COL_BIAS:
+        base = pad([tp_axis]) if shape[-1] % tp == 0 else P()
+        return fsdp(base)
+    return fsdp(P()) if nd >= 2 else P()
+
+
+def shard_params(abstract_params, mesh: Mesh):
+    """Map an abstract params pytree to NamedShardings."""
+    def fn(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(fn, abstract_params)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ----------------------------------------------------------------------
+# batch / cache shardings
+# ----------------------------------------------------------------------
+
+def dp_prefix_for(mesh: Mesh, dim_size: int) -> Optional[Tuple[str, ...]]:
+    """Largest DP-axis prefix dividing a batch dim (None if none fits)."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if dim_size % (prod * _axis_size(mesh, a)) == 0:
+            axes.append(a)
+            prod *= _axis_size(mesh, a)
+    return tuple(axes) if axes else None
+
+
+def batch_specs(mesh: Mesh, batch_size: Optional[int] = None) -> Dict[str, P]:
+    dp = dp_axes(mesh) if batch_size is None else dp_prefix_for(mesh, batch_size)
+    return {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+        "frames": P(dp, None, None),
+        "prefix_embeds": P(dp, None, None),
+    }
+
+
+def shard_batch(abstract_batch, mesh: Mesh):
+    out = {}
+    for k, v in abstract_batch.items():
+        specs = batch_specs(mesh, v.shape[0])
+        out[k] = NamedSharding(mesh, specs.get(k, P()))
+    return out
+
+
+def cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh,
+               kv_heads: int) -> P:
+    """KV caches [L, B, S, Hkv, Dh]: shard B over DP (when it divides); shard
+    Hkv over model when divisible, else shard the sequence dim (split-KV
+    decode). Recurrent states shard their channel/head dims over model."""
+    tp = _axis_size(mesh, "model")
+    name = path[-1]
+    nd = len(shape)
+
+    def dp_for(dim_size: int):
+        """Largest DP prefix that divides the batch dim (batch=1 cells run
+        unsharded on DP — one sequence cannot split)."""
+        axes = []
+        prod = 1
+        for a in dp_axes(mesh):
+            if dim_size % (prod * _axis_size(mesh, a)) == 0:
+                axes.append(a)
+                prod *= _axis_size(mesh, a)
+        return tuple(axes) if axes else None
+
+    if name in ("k", "v", "xk", "xv"):
+        if nd == 5:  # [L, B, S, Hkv, Dh]
+            dp = dp_for(shape[1])
+            if shape[3] % tp == 0:
+                return P(None, dp, None, "model", None)
+            if shape[2] % tp == 0:
+                return P(None, dp, "model", None, None)
+            return P(None, dp, None, None, None)
+        if nd == 4:  # [B, S, Hkv, Dh] (hybrid per-layer window cache)
+            dp = dp_for(shape[0])
+            if shape[2] % tp == 0:
+                return P(dp, None, "model", None)
+            if shape[1] % tp == 0:
+                return P(dp, "model", None, None)
+            return P(dp, None, None, None)
+    if name == "ssm":  # [L, B, H, P, N] or [B, H, P, N]
+        if nd < 4:
+            return P()
+        dp = dp_for(shape[-4])
+        hs = shape[-3]
+        tail = ["model" if hs % tp == 0 else None, None, None]
+        return P(*([None] * (nd - 4) + [dp] + tail))
+    if name == "conv":  # [L?, B, K-1, C]
+        dp = dp_for(shape[-3])
+        c = shape[-1]
+        tail = [None, "model" if c % tp == 0 else None]
+        return P(*([None] * (nd - 3) + [dp] + tail))
+    if name == "h":  # [B, d_rnn]
+        dp = dp_for(shape[0])
+        return P(dp, "model" if shape[-1] % tp == 0 else None)
+    return P()
+
+
+def shard_cache(abstract_cache, mesh: Mesh, kv_heads: int):
+    def fn(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        return NamedSharding(mesh, cache_spec(keys, leaf.shape, mesh, kv_heads))
+    return jax.tree_util.tree_map_with_path(fn, abstract_cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def gather_fsdp(tree):
+    """FSDP per-use weight gather: constrain a layer's params to their
+    TP-only spec (fsdp axis dropped). XLA emits the all-gather of the weight
+    shards here and the reduce-scatter of their grads in the backward —
+    without this, SPMD prefers to replicate the *activations* along the data
+    axis instead (batch-gathered GB-scale temps). No-op outside a mesh."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env = mesh_lib.thread_resources.env.physical_mesh
+        if env.empty:
+            return tree
+    except Exception:  # noqa: BLE001
+        return tree
+
+    def fn(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        try:
+            spec = param_spec(keys, leaf.shape, env, fsdp_axis=None)
+            return jax.lax.with_sharding_constraint(leaf, spec)
+        except Exception:  # noqa: BLE001
+            return leaf
+    return jax.tree_util.tree_map_with_path(fn, tree)
+
+
+def constrain_like_params(tree):
+    """Constrain a param-shaped pytree (e.g. the grad tree) to the param
+    sharding rules under the ambient mesh. No-op without a mesh context.
+    Without this, XLA materializes full-size f32 grad/moment staging temps
+    for scan-stacked weights (tens of GB/device on the large MoE archs)."""
+    try:
+        from jax._src import mesh as mesh_lib
+        env = mesh_lib.thread_resources.env.physical_mesh
+        if env.empty:
+            return tree
+    except Exception:  # noqa: BLE001
+        return tree
+
+    def fn(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        try:
+            spec = param_spec(keys, leaf.shape, env)
+            return jax.lax.with_sharding_constraint(leaf, spec)
+        except Exception:  # noqa: BLE001 — hints must never break execution
+            return leaf
+    return jax.tree_util.tree_map_with_path(fn, tree)

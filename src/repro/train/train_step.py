@@ -1,0 +1,73 @@
+"""Training step: loss + grad + AdamW update, with microbatch gradient
+accumulation (scan) and donated buffers. Distribution comes entirely from the
+in/out shardings the launcher attaches — the step itself is mesh-agnostic."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import RuntimeFlags, lm_loss
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+
+
+def make_train_step(cfg: ModelConfig, flags: RuntimeFlags = RuntimeFlags(),
+                    tcfg: TrainConfig = TrainConfig()):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(cfg, params, batch, flags)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        n = tcfg.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + loss / n,
+                    jax.tree.map(lambda a, b_: a + b_ / n, g_acc, g)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                               zeros), micro)
+        return loss, grads
+
+    def train_step(params, opt_state: adamw.OptState, batch: Dict
+                   ) -> Tuple[Any, adamw.OptState, Dict]:
+        loss, grads = grads_of(params, batch)
+        from repro.sharding.rules import constrain_like_params
+        grads = constrain_like_params(grads)
+        params, opt_state, om = adamw.update(tcfg.optimizer, grads, opt_state,
+                                             params)
+        metrics = {"loss": loss, **om, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, flags: RuntimeFlags = RuntimeFlags()):
+    def eval_step(params, batch):
+        return lm_loss(cfg, params, batch, flags)
+    return eval_step

@@ -1,0 +1,20 @@
+import os
+import sys
+import pathlib
+
+# tests must see exactly ONE device (dry-runs get 512 in their own procs)
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running (dry-run subprocess)")

@@ -1,0 +1,80 @@
+"""AI Bench: spec loading, safe formula eval, timing, CSV logging, compare."""
+
+import os
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.aibench import (CSVLogger, build_program, compare_programs,
+                           load_specs, safe_eval, time_fn)
+from repro.aibench.spec import ProblemSpec, Variant
+
+
+def test_specs_load_and_cover_families():
+    specs = load_specs()
+    assert len(specs) >= 28
+    fams = {s.family for s in specs}
+    assert fams >= {"gemm", "matmul", "bmm", "conv2d", "conv3d", "convt2d",
+                    "convt3d"}
+    for s in specs:
+        assert "ci" in s.variants and "bench" in s.variants
+        assert s.builder  # registered
+        build_program(s.builder, s.dims("ci"))  # must construct
+
+
+def test_flop_formula_eval():
+    spec = next(s for s in load_specs() if s.name == "gemm_bias_gelu")
+    d = spec.dims("bench")
+    want = 2 * d["M"] * d["N"] * d["K"] + 10 * d["M"] * d["N"]
+    assert spec.flops("bench") == pytest.approx(want)
+
+
+def test_safe_eval_rejects_evil():
+    assert safe_eval("2*M*N", {"M": 3, "N": 4}) == 24
+    assert safe_eval("M**2 - N/2", {"M": 3, "N": 4}) == 7
+    for evil in ("__import__('os')", "M.__class__", "(lambda: 1)()",
+                 "[x for x in (1,)]", "M if N else 0"):
+        with pytest.raises(Exception):
+            safe_eval(evil, {"M": 1, "N": 1})
+    with pytest.raises(KeyError):
+        safe_eval("M*Q", {"M": 1})
+
+
+def test_time_fn_trims_and_reports():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return jnp.ones(4)
+
+    stats = time_fn(fn, warmup=2, iters=6)
+    assert stats["iters"] == 6
+    assert len(calls) == 8
+    assert stats["min_us"] <= stats["mean_us"] <= stats["max_us"]
+
+
+def test_csv_logger_env_capture(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_CARD", "v5e-sim")
+    log = CSVLogger(tmp_path / "r.csv")
+    log.log(kernel="k1", backend="triton", flops=1e9, tflops=1.0,
+            time_us=1000.0, dims={"M": 8})
+    text = (tmp_path / "r.csv").read_text()
+    assert "repro_bench_card" in text.splitlines()[0]
+    assert "v5e-sim" in text
+    assert "k1" in text
+
+
+def test_compare_programs_pass_and_diagnose():
+    spec = next(s for s in load_specs() if s.name == "gemm_bias_gelu")
+    ref = build_program(spec.builder, spec.dims("ci"), "eager")
+    same = build_program(spec.builder, spec.dims("ci"), "naive")
+    res = compare_programs(ref, same, rtol=1e-2, atol=1e-3)
+    assert res.correct, res.feedback
+
+    wrong = build_program(spec.builder, spec.dims("ci"), "naive")
+    wrong.graph.node("act").op = "tanh"
+    res = compare_programs(ref, wrong, rtol=1e-2, atol=1e-3)
+    assert not res.correct
+    assert res.exceed_count > 0 and "max_abs" in res.feedback

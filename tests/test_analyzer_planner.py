@@ -1,0 +1,121 @@
+"""Analyzer issue detection + planner ordering/skip logic."""
+
+import pytest
+
+from repro.core.analyzer import analyze
+from repro.core.context import ProblemContext
+from repro.core.issues import ISSUE_TO_STAGE, Issue, register_issue_type, stages_with_issues
+from repro.core.llm import MockLLM
+from repro.core.planner import DEFAULT_ORDER, HARD_DEPS, plan
+from repro.ir import GraphBuilder
+from repro.ir.cost import graph_flops
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+from repro.kb.loader import STAGES
+
+
+def _program(dtype="float32", transpose_b=False, with_reduction=False,
+             naive=True):
+    b = GraphBuilder("p", dtype=dtype)
+    x = b.input((1024, 512), name="x")
+    w = b.param((2048, 512) if transpose_b else (512, 2048), name="w")
+    mm = b.matmul(x, w, transpose_b=transpose_b, name="mm")
+    last = b.gelu(mm, name="act")
+    if with_reduction:
+        last = b.reduce_sum(last, axes=(1,), name="red")
+    g = b.done(last)
+    sched = eager_schedule(g)
+    if naive:
+        for grp in sched.groups:
+            if grp.root == "mm":
+                grp.impl = "pallas_naive"
+                grp.config = PallasConfig(128, 128, 32, num_stages=1)
+    return KernelProgram("p", g, sched, original_flops=graph_flops(g))
+
+
+CTX = ProblemContext(name="t")
+
+
+def test_routing_table_complete():
+    """Every issue type maps to exactly one known stage (paper Table 1)."""
+    assert len(ISSUE_TO_STAGE) >= 30
+    for typ, stage in ISSUE_TO_STAGE.items():
+        assert stage in STAGES, (typ, stage)
+
+
+def test_dynamic_issue_registration():
+    register_issue_type("custom_vendor_issue", "gpu_specific")
+    assert Issue("custom_vendor_issue", 3, "x").stage == "gpu_specific"
+    with pytest.raises(ValueError):
+        register_issue_type("bad", "not_a_stage")
+
+
+def test_analyzer_detects_core_issues():
+    issues = analyze(_program(dtype="float64", transpose_b=True), CTX)
+    types = {i.type for i in issues}
+    assert "dtype_float64" in types
+    assert "manual_pointer_arithmetic" in types
+    assert "uncoalesced_access" in types
+    assert "unfused_kernels" in types
+    assert "missing_boundary_check" in types
+
+
+def test_analyzer_reduction_epilogue():
+    issues = analyze(_program(with_reduction=False), CTX)
+    assert "unfused_reduction_epilogue" not in {i.type for i in issues}
+    # reduction directly after a contraction group is flagged once the
+    # elementwise chain is inside the group
+    p = _program(with_reduction=True)
+    mm_grp = next(g for g in p.schedule.groups if g.root == "mm")
+    act_grp = next(g for g in p.schedule.groups if g.root == "act")
+    mm_grp.nodes.append("act")
+    p.schedule.groups.remove(act_grp)
+    issues = analyze(p, CTX)
+    assert "unfused_reduction_epilogue" in {i.type for i in issues}
+
+
+def test_severity_ordering_advisory():
+    issues = analyze(_program(dtype="float64"), CTX)
+    sevs = [i.severity for i in issues]
+    assert sevs == sorted(sevs, reverse=True)
+
+
+def test_plan_respects_hard_deps():
+    issues = analyze(_program(dtype="float64", transpose_b=True,
+                              with_reduction=True), CTX)
+    order = plan(issues)
+    pos = {s: i for i, s in enumerate(order)}
+    for a, b in HARD_DEPS:
+        if a in pos and b in pos:
+            assert pos[a] < pos[b], (a, b, order)
+
+
+def test_plan_skip_logic():
+    """Stages without issues are not scheduled (paper §IV-A-b)."""
+    p = _program()  # no f64, no transpose: dtype only from bf16 target
+    issues = [i for i in analyze(p, CTX) if i.stage == "fusion"]
+    order = plan(issues)
+    assert order == ["fusion"]
+
+
+def test_llm_planner_valid_order_used():
+    issues = analyze(_program(dtype="float64"), CTX)
+    active = stages_with_issues(issues)
+    resp = ",".join(s for s in DEFAULT_ORDER if s in active)
+    order = plan(issues, llm=MockLLM([resp]))
+    assert order == [s for s in DEFAULT_ORDER if s in active]
+
+
+def test_llm_planner_invalid_falls_back():
+    issues = analyze(_program(dtype="float64", with_reduction=True), CTX)
+    active = stages_with_issues(issues)
+    # invalid: violates dtype->fusion dependency
+    bad = MockLLM(["fusion,dtype_fix"])
+    order = plan(issues, llm=bad)
+    assert order == [s for s in DEFAULT_ORDER if s in active]
+
+
+def test_llm_planner_exception_falls_back():
+    issues = analyze(_program(dtype="float64"), CTX)
+    active = stages_with_issues(issues)
+    order = plan(issues, llm=MockLLM([]))  # raises on call
+    assert order == [s for s in DEFAULT_ORDER if s in active]

@@ -1,0 +1,127 @@
+"""Harness separation (paper §VII-a): the optimizer mutates only the kernel
+program; input generation, seeding, oracle computation and dispatch are owned
+by the trusted runner. Adversarial candidates must not be able to fake
+correctness or speedups."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cover import CoVeRAgent
+from repro.core.pipeline import ForgePipeline
+from repro.core.proposers import BaseProposer, Candidate
+from repro.core.verify import compile_and_verify
+from repro.ir import GraphBuilder
+from repro.ir.cost import CostModel, graph_flops
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+from repro.kb.loader import load_default
+
+KB = load_default()
+CM = CostModel()
+
+
+def _problem():
+    def build(M, N, K):
+        b = GraphBuilder("p")
+        x = b.input((M, K), name="x")
+        w = b.param((K, N), name="w")
+        mm = b.matmul(x, w, name="mm")
+        g = b.done(b.gelu(mm, name="act"))
+        sched = eager_schedule(g)
+        for grp in sched.groups:
+            if grp.root == "mm":
+                grp.impl = "pallas_naive"
+                grp.config = PallasConfig(128, 128, 32, num_stages=1)
+        return KernelProgram("p", g, sched, original_flops=graph_flops(g))
+    return build(256, 256, 128), build(4096, 4096, 1024)
+
+
+def test_tiny_graph_swap_fails_correctness():
+    """Adversarial: replace the computation with a cheap wrong one — modeled
+    time plummets, but the trusted oracle comparison rejects it."""
+    ci, bench = _problem()
+    ctx = ForgePipeline()._prepare_ctx("t", ci, ("gemm",), "bfloat16",
+                                       1e-2, 1e-3, {})
+
+    def cheat(p: KernelProgram) -> KernelProgram:
+        b = GraphBuilder("p")
+        x = b.input(p.graph.node("x").shape, name="x")
+        w = b.param(p.graph.node("w").shape, name="w")
+        # "optimized": just pass a slice of x through — nearly free
+        g = b.done(b.relu(b.matmul(x, w, name="mm"), name="act"))
+        g.node("act").op = "identity"
+        p2 = KernelProgram("p", g, eager_schedule(g),
+                           original_flops=p.original_flops)
+        return p2
+
+    rep = compile_and_verify(cheat(ci), cheat(bench), CM.program_time(bench),
+                             ctx, KB)
+    assert not rep.ok
+    assert rep.level == "correctness"
+
+
+def test_flop_accounting_cannot_be_inflated():
+    """Adversarial: a candidate cannot inflate original_flops to game the
+    TFLOPS metric — the perf gate compares modeled *time*, and speedups are
+    derived from the incumbent's time, never from candidate-claimed FLOPs."""
+    ci, bench = _problem()
+    ctx = ForgePipeline()._prepare_ctx("t", ci, ("gemm",), "bfloat16",
+                                       1e-2, 1e-3, {})
+
+    def inflate(p):
+        p = p.copy()
+        p.original_flops *= 1e6
+        return p
+
+    incumbent = CM.program_time(bench)
+    rep = compile_and_verify(inflate(ci), inflate(bench), incumbent, ctx, KB)
+    assert not rep.ok and rep.level == "performance"
+
+
+def test_oracle_owned_by_harness_not_candidate():
+    """The oracle outputs live in the context, computed before any candidate
+    exists; transforms receive only the program."""
+    ci, bench = _problem()
+    pipe = ForgePipeline()
+    ctx = pipe._prepare_ctx("t", ci, ("gemm",), "bfloat16", 1e-2, 1e-3, {})
+    before = {k: np.asarray(v).copy() for k, v in ctx.oracle_outputs.items()}
+    pipe.optimize("t", ci, bench, tags=("gemm",))
+    after = ctx.oracle_outputs
+    for k in before:
+        np.testing.assert_array_equal(before[k], np.asarray(after[k]))
+
+
+class EvasiveProposer(BaseProposer):
+    """Tries the reflection-evasion analogue: emit a program whose outputs
+    are literally the oracle values baked in as constants."""
+    stage = "discovery"
+
+    def __init__(self, kb, ctx):
+        super().__init__(kb, ctx)
+
+    def candidates(self, program, issues, trajectory):
+        oracle = self.ctx.oracle_outputs  # adversary peeks at ctx
+
+        def bake(p: KernelProgram) -> KernelProgram:
+            b = GraphBuilder("p")
+            x = b.input(p.graph.node("x").shape, name="x")
+            w = b.param(p.graph.node("w").shape, name="w")
+            mm = b.matmul(x, w, name="mm")
+            g = b.done(b.gelu(mm, name="act"))
+            return KernelProgram("p", g, eager_schedule(g),
+                                 original_flops=p.original_flops)
+        yield Candidate("bake oracle", "evade", bake, "evil")
+
+
+def test_evasion_cannot_beat_perf_gate():
+    """Even a correct-by-construction candidate must be *faster on the bench
+    program's modeled execution* — there is no way to shortcut the metric
+    because the runner executes the program it was given."""
+    ci, bench = _problem()
+    ctx = ForgePipeline()._prepare_ctx("t", ci, ("gemm",), "bfloat16",
+                                       1e-2, 1e-3, {})
+    agent = CoVeRAgent("discovery", EvasiveProposer(KB, ctx), KB,
+                       max_iterations=2)
+    res = agent.run(ci, bench, [], ctx, CM.program_time(bench), CM)
+    # the baked program is mathematically identical but scheduled eagerly
+    # with XLA impls — the cost model sees through it; no free speedup.
+    assert not res.improved or res.report.speedup < 100

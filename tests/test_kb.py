@@ -1,0 +1,77 @@
+"""Knowledge base: loading, stage scoping, aliases, extensibility."""
+
+import pathlib
+import textwrap
+
+from repro.kb.loader import KnowledgeBase, load_default
+
+
+def test_load_counts():
+    kb = load_default()
+    s = kb.stats()
+    assert s["constraints"] >= 20
+    assert s["patterns"] >= 20
+    assert s["examples"] >= 9
+    assert s["total_entries"] >= 55
+
+
+def test_critical_constraints_always_in_prompt():
+    kb = load_default()
+    txt = kb.format_for_llm("dtype_fix")
+    for c in kb.critical_constraints():
+        assert c.id in txt
+
+
+def test_stage_scoping():
+    kb = load_default()
+    fusion = {p.id for p in kb.patterns_for("fusion")}
+    dtype = {p.id for p in kb.patterns_for("dtype_fix")}
+    assert "fuse_epilogue_into_matmul" in fusion
+    assert "mixed_precision_bf16" in dtype
+    assert not fusion & dtype
+
+
+def test_applicability_filter():
+    kb = load_default()
+    gemm = kb.patterns_for("gpu_specific", ["gemm"])
+    assert any(p.id == "tpu_grid_swizzling" for p in gemm)
+    none_match = kb.patterns_for("gpu_specific", ["nonexistent_tag"])
+    # patterns without applicability lists still pass; tagged ones filter out
+    assert all(not p.applicability or "any" in p.applicability
+               for p in none_match)
+
+
+def test_stage_alias_normalization(tmp_path):
+    (tmp_path / "custom.yaml").write_text(textwrap.dedent("""
+        patterns:
+          - id: custom_pat
+            stages: [memory_patterns]          # alias -> memory_access
+            rationale: test
+            action: {type: set_prefetch}
+          - id: unknown_stage_pat
+            stages: [not_a_stage]
+            rationale: skipped
+    """))
+    kb = KnowledgeBase.load(tmp_path)
+    assert [p.id for p in kb.patterns_for("memory_access")] == ["custom_pat"]
+    assert all(p.id != "unknown_stage_pat" for p in kb.patterns)
+
+
+def test_extensibility_no_code_changes(tmp_path):
+    """Drop a new YAML -> discovered on next load (paper §IV-D-e)."""
+    (tmp_path / "vendor.yaml").write_text(textwrap.dedent("""
+        constraints:
+          - id: vendor_rule
+            severity: critical
+            stages: [gpu_specific]
+            description: vendor-specific constraint
+        patterns:
+          - id: vendor_pattern
+            stages: [gpu_specific]
+            rationale: vendor idiom
+            expected_speedup: 2x
+            action: {type: set_config, field: group_m, source: hw_query}
+    """))
+    kb = KnowledgeBase.load(tmp_path)
+    assert any(c.id == "vendor_rule" for c in kb.critical_constraints())
+    assert any(p.id == "vendor_pattern" for p in kb.patterns_for("gpu_specific"))

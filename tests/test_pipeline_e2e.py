@@ -1,0 +1,77 @@
+"""End-to-end pipeline behavior on suite problems + ablations."""
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.core.pipeline import ForgePipeline
+from repro.ir.cost import CostModel
+
+CM = CostModel()
+
+
+def _run(name, pipeline=None, **kw):
+    spec = next(s for s in load_specs() if s.name == name)
+    pipe = pipeline or ForgePipeline(**kw)
+    return pipe.optimize(
+        spec.name,
+        build_program(spec.builder, spec.dims("ci"), "naive", meta=spec.meta),
+        build_program(spec.builder, spec.dims("bench"), "naive", meta=spec.meta),
+        tags=tuple(spec.tags), target_dtype=spec.target_dtype,
+        rtol=spec.rtol, atol=spec.atol, meta=spec.meta)
+
+
+def test_discovery_eliminates_gemm():
+    res = _run("gemm_divide_sum")
+    assert res.speedup > 5
+    stages = {r.stage: r for r in res.stage_records}
+    assert stages["algorithmic"].improved
+    # the optimized graph has no full-size GEMM left
+    mms = [n for n in res.bench_program.graph.toposorted() if n.op == "matmul"]
+    assert all(1 in n.shape for n in mms)
+
+
+def test_reduction_fusion_path():
+    res = _run("gemm_max_subtract_gelu")
+    assert res.speedup > 3
+    fused = [g for g in res.bench_program.schedule.groups
+             if len(g.nodes) > 1 and g.impl == "pallas_blockspec"]
+    assert fused, "expected a fused blockspec kernel"
+
+
+def test_dtype_pipeline_f64():
+    res = _run("gemm_f64_sigmoid")
+    assert all(n.dtype != "float64"
+               for n in res.bench_program.graph.toposorted())
+    assert res.speedup > 2
+
+
+def test_never_degrade_overall():
+    for name in ("convt3d_silu", "bmm_instnorm_sum_residual"):
+        res = _run(name)
+        assert res.optimized_time <= res.original_time * 1.0001
+
+
+def test_ablation_no_pipeline_stages():
+    """Disabling restructuring stages loses the large wins (paper's stage
+    attribution argument)."""
+    full = _run("gemm_divide_sum")
+    crippled = _run("gemm_divide_sum",
+                    pipeline=ForgePipeline(
+                        stages_enabled=["dtype_fix", "gpu_specific",
+                                        "autotuning"]))
+    assert full.speedup > crippled.speedup
+
+
+def test_best_of_k_at_least_as_good():
+    r1 = _run("gemm_bias_gelu")
+    rk = _run("gemm_bias_gelu", pipeline=ForgePipeline(best_of_k=2))
+    assert rk.optimized_time <= r1.optimized_time * 1.05
+
+
+def test_stage_log_complete():
+    res = _run("matmul_t_gelu")
+    assert res.stage_records, "stages must be recorded"
+    for r in res.stage_records:
+        assert r.stage in ("algorithmic", "discovery", "dtype_fix", "fusion",
+                           "memory_access", "block_pointers",
+                           "persistent_kernel", "gpu_specific", "autotuning")

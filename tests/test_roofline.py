@@ -1,0 +1,75 @@
+"""Roofline machinery: HLO parsing (walker + collective scan), term math."""
+
+import textwrap
+
+import pytest
+
+from repro.roofline.analyze import (RooflineTerms, collective_bytes,
+                                    from_record, parse_collectives)
+from repro.roofline.hlo_walker import walk
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body.1 (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+      %p = (s32[], f32[128,256]) parameter(0)
+      %lhs = f32[128,64]{1,0} constant(0)
+      %rhs = f32[64,256]{1,0} constant(0)
+      %dot.1 = f32[128,256]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[128,256]{1,0} all-reduce(%dot.1), replica_groups={}
+    }
+
+    %cond.1 (p: (s32[], f32[128,256])) -> pred[] {
+      %p = (s32[], f32[128,256]) parameter(0)
+      %c = pred[] constant(false)
+    }
+
+    ENTRY %main.1 (a: f32[128,256]) -> f32[128,256] {
+      %a = f32[128,256]{1,0} parameter(0)
+      %ag = f32[512,256]{1,0} all-gather(%a), dimensions={0}
+      %w = (s32[], f32[128,256]) while(%a), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"8"}}
+    }
+""")
+
+
+def test_walker_trip_multiplies():
+    res = walk(HLO)
+    # dot: 2 * 128*256 * 64 = 4.19e6, x8 trips
+    assert res.flops == pytest.approx(8 * 2 * 128 * 256 * 64)
+    # collectives: all-gather once (512*256*4) + all-reduce x8 (128*256*4)
+    assert res.coll_bytes == pytest.approx(512 * 256 * 4 + 8 * 128 * 256 * 4)
+    assert res.coll_by_kind["all-reduce"] == pytest.approx(8 * 128 * 256 * 4)
+
+
+def test_collective_scan_unrolled():
+    per = collective_bytes(HLO)
+    assert per["all-gather"] == 512 * 256 * 4
+    assert per["all-reduce"] == 128 * 256 * 4  # unrolled scan counts once
+    assert per["total"] == per["all-gather"] + per["all-reduce"]
+
+
+def test_terms_math():
+    rec = {
+        "arch": "x", "shape": "train_4k", "mesh": "single", "n_devices": 256,
+        "cost": {"flops": 1.97e12, "bytes": 8.19e11},
+        "collectives": {"total": 5e10},
+        "model_flops": 1.97e12 * 256 * 0.5,
+    }
+    t = from_record(rec)
+    assert t.t_compute == pytest.approx(1.97e12 * 256 / (256 * 197e12))
+    assert t.t_memory == pytest.approx(8.19e11 * 256 / (256 * 819e9))
+    assert t.t_collective == pytest.approx(5e10 / 50e9)
+    assert t.dominant == "memory"
+    assert t.useful_ratio == pytest.approx(0.5)
+    assert 0 < t.roofline_fraction < 1
+
+
+def test_dominant_identification():
+    base = {"arch": "x", "shape": "s", "mesh": "single", "n_devices": 4,
+            "model_flops": 1e12}
+    t = from_record({**base, "cost": {"flops": 1e15, "bytes": 1e3},
+                     "collectives": {"total": 1e3}})
+    assert t.dominant == "compute"
+    t = from_record({**base, "cost": {"flops": 1e3, "bytes": 1e3},
+                     "collectives": {"total": 1e14}})
+    assert t.dominant == "collective"

@@ -1,0 +1,180 @@
+"""Verification cascade + CoVeR agent behavior (paper §IV-B)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.analyzer import analyze
+from repro.core.context import ProblemContext
+from repro.core.cover import CoVeRAgent, Trajectory, TrajectoryOverflow
+from repro.core.pipeline import ForgePipeline
+from repro.core.proposers import Candidate, BaseProposer, make_proposer
+from repro.core.verify import SUCCESS, compile_and_verify
+from repro.ir import GraphBuilder
+from repro.ir.cost import CostModel, graph_flops
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+from repro.kb.loader import load_default
+
+KB = load_default()
+CM = CostModel()
+
+
+def _problem(m=256, n=256, k=128, bm=4096, bn=4096, bk=1024):
+    def build(M, N, K):
+        b = GraphBuilder("p")
+        x = b.input((M, K), name="x")
+        w = b.param((K, N), name="w")
+        mm = b.matmul(x, w, name="mm")
+        g = b.done(b.gelu(mm, name="act"))
+        sched = eager_schedule(g)
+        for grp in sched.groups:
+            if grp.root == "mm":
+                grp.impl = "pallas_naive"
+                grp.config = PallasConfig(128, 128, 32, num_stages=1)
+        return KernelProgram("p", g, sched, original_flops=graph_flops(g))
+    return build(m, n, k), build(bm, bn, bk)
+
+
+def _ctx(ci):
+    pipe = ForgePipeline()
+    return pipe._prepare_ctx("t", ci, ("gemm",), "bfloat16", 1e-2, 1e-3, {})
+
+
+def test_syntax_level_catches_broken_schedule():
+    ci, bench = _problem()
+    bad = bench.copy()
+    bad.schedule.groups[0].nodes.append("act")  # act now in two groups
+    rep = compile_and_verify(ci, bad, 1.0, _ctx(ci), KB)
+    assert not rep.ok and rep.level == "syntax"
+
+
+def test_structure_level_block_alignment():
+    ci, bench = _problem()
+    for p in (ci, bench):
+        g = next(g for g in p.schedule.groups if g.root == "mm")
+        g.impl = "pallas_blockspec"
+        g.config = PallasConfig(100, 100, 100)  # misaligned
+    rep = compile_and_verify(ci, bench, 1.0, _ctx(ci), KB)
+    assert not rep.ok and rep.level == "structure"
+    assert "INVALID" in rep.observation and "128" in rep.observation
+
+
+def test_structure_level_vmem_budget():
+    ci, bench = _problem()
+    g = next(g for g in bench.schedule.groups if g.root == "mm")
+    g.impl = "pallas_blockspec"
+    g.config = PallasConfig(4096, 4096, 4096, num_stages=3)
+    gci = next(g for g in ci.schedule.groups if g.root == "mm")
+    gci.impl = "pallas_blockspec"
+    gci.config = PallasConfig(128, 128, 128)
+    rep = compile_and_verify(ci, bench, 1.0, _ctx(ci), KB)
+    assert not rep.ok and rep.level == "structure"
+    assert "VMEM" in rep.observation
+
+
+def test_structure_level_bf16_acc_ban():
+    ci, bench = _problem()
+    for p in (ci, bench):
+        g = next(g for g in p.schedule.groups if g.root == "mm")
+        g.impl = "pallas_blockspec"
+        g.config = PallasConfig(128, 128, 128, acc_dtype="bfloat16")
+    rep = compile_and_verify(ci, bench, 1.0, _ctx(ci), KB)
+    assert not rep.ok and rep.level == "structure"
+    assert "acc_dtype" in rep.observation
+
+
+def test_correctness_level_catches_wrong_math():
+    ci, bench = _problem()
+    # corrupt the candidate: swap gelu for tanh (wrong values, valid program)
+    for p in (ci, bench):
+        p.graph.node("act").op = "tanh"
+    rep = compile_and_verify(ci, bench, 1.0, _ctx(_problem()[0]), KB)
+    assert not rep.ok and rep.level == "correctness"
+    assert "max_abs_diff" in rep.observation
+
+
+def test_performance_level_rejects_noops():
+    ci, bench = _problem()
+    incumbent = CM.program_time(bench)
+    rep = compile_and_verify(ci, bench, incumbent, _ctx(ci), KB)
+    assert not rep.ok and rep.level == "performance"
+    assert "SLOWER" in rep.observation or "Suggestions" in rep.observation
+
+
+def test_success_sentinel():
+    ci, bench = _problem()
+    incumbent = CM.program_time(bench)
+    for p in (ci, bench):
+        g = next(g for g in p.schedule.groups if g.root == "mm")
+        g.impl = "pallas_blockspec"
+        g.config = PallasConfig(512, 512, 512, num_stages=2)
+    rep = compile_and_verify(ci, bench, incumbent, _ctx(_problem()[0]), KB)
+    assert rep.ok and rep.level == "success"
+    assert rep.speedup > 1
+
+
+def test_trajectory_truncation():
+    t = Trajectory(max_chars=400)
+    for i in range(10):
+        t.add(f"thought {i}", "tool", "args", "obs " + "x" * 80)
+    assert len(t.entries) < 10  # oldest dropped
+    with pytest.raises(TrajectoryOverflow):
+        t2 = Trajectory(max_chars=10)
+        t2.add("a" * 50, "t", "a", "o")
+
+
+class FailingThenGoodProposer(BaseProposer):
+    """First candidate violates VMEM; second reacts to the error (refine)."""
+    stage = "gpu_specific"
+
+    def candidates(self, program, issues, trajectory):
+        last = trajectory[-1]["observation"] if trajectory else ""
+        if "VMEM" in last:
+            def fix(p):
+                p = p.copy()
+                for g in p.schedule.groups:
+                    if g.impl.startswith("pallas"):
+                        g.impl = "pallas_blockspec"
+                        g.config = PallasConfig(512, 512, 512)
+                return p
+            yield Candidate("shrink after VMEM feedback", "fix", fix, "p2")
+        else:
+            def bad(p):
+                p = p.copy()
+                for g in p.schedule.groups:
+                    if g.impl.startswith("pallas"):
+                        g.impl = "pallas_blockspec"
+                        g.config = PallasConfig(8192, 8192, 8192, num_stages=3)
+                return p
+            yield Candidate("huge blocks", "bad", bad, "p1")
+
+
+def test_cover_refines_on_feedback():
+    ci, bench = _problem()
+    ctx = _ctx(ci)
+    agent = CoVeRAgent("gpu_specific", FailingThenGoodProposer(KB, ctx), KB,
+                       max_iterations=5)
+    res = agent.run(ci, bench, [], ctx, CM.program_time(bench), CM)
+    assert res.improved
+    assert res.iterations == 2  # failed once, refined, succeeded
+    assert "VMEM" in res.trajectory.entries[0]["observation"]
+
+
+class HopelessProposer(BaseProposer):
+    stage = "gpu_specific"
+
+    def candidates(self, program, issues, trajectory):
+        def noop(p):
+            return p.copy()
+        yield Candidate("does nothing", "noop", noop, "p0")
+
+
+def test_cover_never_degrades():
+    ci, bench = _problem()
+    ctx = _ctx(ci)
+    agent = CoVeRAgent("gpu_specific", HopelessProposer(KB, ctx), KB,
+                       max_iterations=3)
+    incumbent = CM.program_time(bench)
+    res = agent.run(ci, bench, [], ctx, incumbent, CM)
+    assert not res.improved
+    assert CM.program_time(res.bench_program) == pytest.approx(incumbent)
