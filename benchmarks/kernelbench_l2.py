@@ -1,8 +1,10 @@
 """Level-2 suite benchmark — paper Fig. 2-8 + §VI-C.
 
-Runs the full pipeline over all 28 problems, reporting per-family TFLOPS
-(original accounting) for the four backends and the headline aggregates
-(geomean, %improved, >5x set, correctness)."""
+Runs the full pipeline over all 28 problems through the fleet
+``OptimizationEngine`` (bounded worker pool + fingerprint-keyed result
+cache), reporting per-family TFLOPS (original accounting) for the four
+backends and the headline aggregates (geomean, %improved, >5x set,
+correctness, cache hits)."""
 
 from __future__ import annotations
 
@@ -13,10 +15,16 @@ from repro.aibench import SuiteRunner, load_specs
 from repro.aibench.csvlog import CSVLogger
 
 
-def run(csv_path=None, families=None):
+def run(csv_path=None, families=None, workers=1, cache_path=None,
+        runs=1):
+    """``runs > 1`` re-submits the suite through the same engine so the
+    second pass exercises the result cache (replay path)."""
     print("\n== KernelBench-L2 suite (paper Fig. 2-8) ==")
-    runner = SuiteRunner(csv_path=csv_path, families=families)
+    runner = SuiteRunner(csv_path=csv_path, families=families,
+                         workers=workers, cache_path=cache_path)
     summary = runner.run()
+    for _ in range(max(0, runs - 1)):
+        summary = runner.run()
 
     by_family = collections.defaultdict(list)
     for r in summary.results:
@@ -30,6 +38,7 @@ def run(csv_path=None, families=None):
                           for r in rs) / len(rs))
         print(f"  {fam:9s} n={len(rs):2d}  vs-best {g:6.2f}x   vs-eager {ge:6.2f}x")
 
+    stats = summary.engine_stats
     print(f"\ngeomean vs eager:  {summary.geomean_vs_eager:.2f}x "
           f"(paper: 1.17x over eager)")
     print(f"geomean vs best:   {summary.geomean_vs_best:.2f}x")
@@ -38,6 +47,11 @@ def run(csv_path=None, families=None):
           f"(paper: 9, up to 82x): "
           f"{[(r.name, round(r.speedup_vs_best_baseline, 1)) for r in summary.over_5x]}")
     print(f"100% correct:      {summary.all_correct} (paper: 100%)")
+    if stats:
+        print(f"engine:            {stats.jobs} jobs, "
+              f"{stats.cache_hits} cache hits, "
+              f"{stats.cache_misses} misses, "
+              f"{stats.replay_fallbacks} replay fallbacks")
     return summary
 
 

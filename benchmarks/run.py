@@ -1,8 +1,12 @@
 """Benchmark driver — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only l2|fa|roofline|ablations|dryrun]
+                                            [--workers N] [--l2-runs N]
 
 Prints per-kernel tables and a ``name,us_per_call,derived`` CSV summary.
+``--only l2`` additionally writes the machine-readable ``BENCH_l2.json``
+artifact (per-kernel ``us_per_call``, speedups, cache hit/miss counts,
+geomeans) so the perf trajectory is trackable across PRs.
 """
 
 from __future__ import annotations
@@ -15,19 +19,61 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 
+def _l2_artifact(summary) -> dict:
+    stats = summary.engine_stats
+    return {
+        "suite": "kernelbench_l2",
+        "kernels": [
+            {
+                "name": r.name,
+                "family": r.family,
+                "us_per_call": r.optimized_us,
+                "eager_us": r.eager_us,
+                "compiled_us": r.compiled_us,
+                "naive_us": r.naive_us,
+                "speedup_vs_eager": r.speedup_vs_eager,
+                "speedup_vs_best_baseline": r.speedup_vs_best_baseline,
+                "speedup_vs_naive": r.speedup_vs_naive,
+                "tflops_optimized": r.tflops_optimized,
+                "correct": r.correct,
+                "cache_hit": r.cache_hit,
+            }
+            for r in summary.results
+        ],
+        "aggregates": {
+            "geomean_vs_eager": summary.geomean_vs_eager,
+            "geomean_vs_best": summary.geomean_vs_best,
+            "pct_improved": summary.pct_improved,
+            "over_5x": len(summary.over_5x),
+            "all_correct": summary.all_correct,
+        },
+        "engine": stats.as_dict() if stats else {},
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["l2", "fa", "roofline", "ablations", "dryrun"])
+    ap.add_argument("--workers", type=int, default=1,
+                    help="engine worker threads for the l2 suite")
+    ap.add_argument("--l2-runs", type=int, default=1,
+                    help="suite passes through the engine (2 exercises the "
+                         "result cache)")
+    ap.add_argument("--l2-json", default="BENCH_l2.json",
+                    help="path of the l2 artifact (written for --only l2)")
     args = ap.parse_args()
     csv_rows = []
 
     if args.only in (None, "l2"):
         from benchmarks.kernelbench_l2 import run as run_l2
-        summary = run_l2()
+        summary = run_l2(workers=args.workers, runs=args.l2_runs)
         for r in summary.results:
             csv_rows.append((r.name, r.optimized_us,
                              f"x{r.speedup_vs_eager:.2f}_vs_eager"))
+        out = pathlib.Path(args.l2_json)
+        out.write_text(json.dumps(_l2_artifact(summary), indent=2))
+        print(f"\nwrote {out}")
 
     if args.only in (None, "fa"):
         from benchmarks.flash_attention import run as run_fa

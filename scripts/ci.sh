@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# CI gate: byte-compile everything (catches syntax errors before pytest even
+# collects — the seed shipped one), then run the tier-1 suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src tests benchmarks examples
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -2,8 +2,10 @@
 problem spec end to end — builds the three baselines and the pipeline's
 optimized program, derives modeled TPU timings + TFLOPS for every backend,
 validates correctness, measures CPU wall-clock at ci shapes as a secondary
-signal, and logs CSV rows. SuiteRunner batches the full suite and aggregates
-the paper's headline metrics (geomean speedup, %improved, >5x set)."""
+signal, and logs CSV rows. SuiteRunner batches the full suite through the
+fleet :class:`OptimizationEngine` (bounded worker pool + fingerprint-keyed
+result cache) and aggregates the paper's headline metrics (geomean speedup,
+%improved, >5x set) plus the engine's cache statistics."""
 
 from __future__ import annotations
 
@@ -17,6 +19,8 @@ from repro.aibench.csvlog import CSVLogger
 from repro.aibench.spec import ProblemSpec, load_specs
 from repro.aibench.suite import build_program
 from repro.aibench.timing import time_fn
+from repro.core.engine import (EngineResult, EngineStats, KernelJob,
+                               OptimizationEngine)
 from repro.core.pipeline import ForgePipeline, PipelineResult
 from repro.hw.specs import TPU_V5E
 from repro.ir.cost import CostModel
@@ -35,6 +39,7 @@ class KernelResult:
     correct: bool
     stage_log: List
     tflops_optimized: float
+    cache_hit: bool = False
 
     @property
     def speedup_vs_eager(self) -> float:
@@ -50,28 +55,46 @@ class KernelResult:
 
 
 class KernelRunner:
+    """Single-spec runner; suite-level batching lives in SuiteRunner. The
+    runner is split into ``make_job`` (build the programs) and ``finish``
+    (baseline timings + correctness + logging) so the engine can own the
+    optimization step in between."""
+
     def __init__(self, pipeline: Optional[ForgePipeline] = None,
                  logger: Optional[CSVLogger] = None,
-                 measure_wallclock: bool = False):
-        self.pipeline = pipeline or ForgePipeline()
+                 measure_wallclock: bool = False,
+                 engine: Optional[OptimizationEngine] = None):
+        if engine is not None and pipeline is not None \
+                and engine.pipeline is not pipeline:
+            raise ValueError("pass either pipeline or engine, not two "
+                             "disagreeing ones — the engine's pipeline runs")
+        self.engine = engine or OptimizationEngine(pipeline)
+        self.pipeline = self.engine.pipeline
         self.cost = CostModel(self.pipeline.spec)
         self.logger = logger
         self.measure_wallclock = measure_wallclock
 
-    def run(self, spec: ProblemSpec) -> KernelResult:
+    # ------------------------------------------------------------------
+    def make_job(self, spec: ProblemSpec) -> KernelJob:
+        return KernelJob(
+            name=spec.name,
+            ci_program=build_program(spec.builder, spec.dims("ci"), "naive",
+                                     meta=spec.meta),
+            bench_program=build_program(spec.builder, spec.dims("bench"),
+                                        "naive", meta=spec.meta),
+            tags=tuple(spec.tags), target_dtype=spec.target_dtype,
+            rtol=spec.rtol, atol=spec.atol, meta=dict(spec.meta))
+
+    # ------------------------------------------------------------------
+    def finish(self, spec: ProblemSpec, eres: EngineResult) -> KernelResult:
+        res: PipelineResult = eres.result
         eager = build_program(spec.builder, spec.dims("bench"), "eager",
                               meta=spec.meta)
         compiled = build_program(spec.builder, spec.dims("bench"), "compiled",
                                  meta=spec.meta)
-        naive_ci = build_program(spec.builder, spec.dims("ci"), "naive",
-                                 meta=spec.meta)
-        naive_bench = build_program(spec.builder, spec.dims("bench"), "naive",
-                                    meta=spec.meta)
-
-        res: PipelineResult = self.pipeline.optimize(
-            spec.name, naive_ci, naive_bench, tags=tuple(spec.tags),
-            target_dtype=spec.target_dtype, rtol=spec.rtol, atol=spec.atol,
-            meta=spec.meta)
+        # the job's bench program is untouched (the pipeline/replay operate
+        # on copies), so it still is the pristine naive baseline
+        naive_bench = eres.job.bench_program
 
         cmp_res = compare_programs(
             build_program(spec.builder, spec.dims("ci"), "eager", meta=spec.meta),
@@ -88,7 +111,8 @@ class KernelRunner:
             eager_us=t_eager * 1e6, compiled_us=t_compiled * 1e6,
             naive_us=t_naive * 1e6, optimized_us=t_opt * 1e6,
             correct=cmp_res.correct, stage_log=res.stage_records,
-            tflops_optimized=opt_cost.tflops_effective)
+            tflops_optimized=opt_cost.tflops_effective,
+            cache_hit=eres.cache_hit)
 
         if self.logger:
             flops = spec.flops("bench") or res.bench_program.original_flops
@@ -99,7 +123,8 @@ class KernelRunner:
                 self.logger.log(kernel=spec.name, backend=backend,
                                 flops=flops, tflops=flops / (us * 1e6),
                                 time_us=us, dims=spec.dims("bench"),
-                                note=f"correct={cmp_res.correct}")
+                                note=f"correct={cmp_res.correct} "
+                                     f"cache_hit={eres.cache_hit}")
         if self.measure_wallclock:
             ci_in = make_inputs(res.ci_program.graph, seed=1)
             ci_par = make_params(res.ci_program.graph, seed=0)
@@ -111,10 +136,15 @@ class KernelRunner:
                                 time_us=wc["mean_us"], dims=spec.dims("ci"))
         return result
 
+    # ------------------------------------------------------------------
+    def run(self, spec: ProblemSpec) -> KernelResult:
+        return self.finish(spec, self.engine.submit(self.make_job(spec)))
+
 
 @dataclasses.dataclass
 class SuiteSummary:
     results: List[KernelResult]
+    engine_stats: Optional[EngineStats] = None
 
     def _geomean(self, vals: List[float]) -> float:
         vals = [max(v, 1e-9) for v in vals]
@@ -141,13 +171,27 @@ class SuiteSummary:
     def all_correct(self) -> bool:
         return all(r.correct for r in self.results)
 
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for r in self.results if r.cache_hit)
+
 
 class SuiteRunner:
     def __init__(self, pipeline: Optional[ForgePipeline] = None,
                  csv_path: Optional[pathlib.Path] = None,
-                 families: Optional[List[str]] = None):
+                 families: Optional[List[str]] = None,
+                 workers: int = 1,
+                 engine: Optional[OptimizationEngine] = None,
+                 cache_path: Optional[pathlib.Path] = None):
         logger = CSVLogger(csv_path) if csv_path else None
-        self.runner = KernelRunner(pipeline, logger)
+        if engine is not None and pipeline is not None \
+                and engine.pipeline is not pipeline:
+            raise ValueError("pass either pipeline or engine, not two "
+                             "disagreeing ones — the engine's pipeline runs")
+        engine = engine or OptimizationEngine(pipeline, workers=workers,
+                                              cache_path=cache_path)
+        self.engine = engine
+        self.runner = KernelRunner(logger=logger, engine=engine)
         self.families = families
 
     def run(self, specs: Optional[List[ProblemSpec]] = None,
@@ -155,15 +199,18 @@ class SuiteRunner:
         specs = specs or load_specs()
         if self.families:
             specs = [s for s in specs if s.family in self.families]
+        jobs = [self.runner.make_job(s) for s in specs]
+        eresults = self.engine.run_batch(jobs)
         results = []
-        for spec in specs:
-            r = self.runner.run(spec)
+        for spec, eres in zip(specs, eresults):
+            r = self.runner.finish(spec, eres)
             results.append(r)
             if verbose:
+                hit = " cache" if r.cache_hit else ""
                 print(f"  {r.name:28s} [{r.family:7s}] eager={r.eager_us:9.1f}us "
                       f"compile={r.compiled_us:9.1f}us naive={r.naive_us:10.1f}us "
                       f"-> opt={r.optimized_us:9.1f}us  "
                       f"x{r.speedup_vs_eager:7.2f} vs eager  "
                       f"x{r.speedup_vs_best_baseline:6.2f} vs best  "
-                      f"correct={r.correct}")
-        return SuiteSummary(results)
+                      f"correct={r.correct}{hit}")
+        return SuiteSummary(results, engine_stats=self.engine.stats)

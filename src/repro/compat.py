@@ -1,0 +1,26 @@
+"""Version-compat shims for the pinned container toolchain.
+
+``jax.shard_map`` only exists on newer jax; the image pins jax 0.4.x where the
+API lives at ``jax.experimental.shard_map.shard_map`` and the replication-check
+kwarg is ``check_rep`` instead of ``check_vma``. Call sites import from here so
+they stay written against the modern surface.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax 0.4.x names the Mosaic param struct TPUCompilerParams; newer jax renamed
+# it to CompilerParams. Kernels import the symbol from here.
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -1,17 +1,25 @@
 """Core: the paper's contribution — the multi-stage CoVeR optimization
-pipeline with knowledge-base-driven proposers and 4-level verification."""
+pipeline with knowledge-base-driven proposers and 4-level verification,
+plus the fleet-scale engine (batching, caching, concurrency) layered on
+top of it."""
 
 from repro.core.analyzer import analyze
 from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
+from repro.core.engine import (EngineResult, EngineStats, KernelJob,
+                               OptimizationEngine, ResultCache)
 from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
-from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.pipeline import ForgePipeline, PipelineResult, StageRecord
 from repro.core.planner import plan, DEFAULT_ORDER, HARD_DEPS
+from repro.core.stage_scheduler import (StageScheduler, TransformLog,
+                                        TransformStep)
 from repro.core.verify import compile_and_verify, VerifyReport, SUCCESS
 
 __all__ = [
     "analyze", "ProblemContext", "CoVeRAgent", "Trajectory", "Issue",
     "ISSUE_TO_STAGE", "register_issue_type", "ForgePipeline",
-    "PipelineResult", "plan", "DEFAULT_ORDER", "HARD_DEPS",
+    "PipelineResult", "StageRecord", "plan", "DEFAULT_ORDER", "HARD_DEPS",
     "compile_and_verify", "VerifyReport", "SUCCESS",
+    "OptimizationEngine", "KernelJob", "EngineResult", "EngineStats",
+    "ResultCache", "StageScheduler", "TransformLog", "TransformStep",
 ]

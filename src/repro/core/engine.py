@@ -1,0 +1,260 @@
+"""Fleet-scale optimization engine: concurrent multi-kernel scheduling with
+fingerprint-keyed result caching.
+
+The paper runs Xe-Forge over 97 KernelBench-L2 kernels; at that scale the
+single-kernel ``ForgePipeline.optimize`` loop wastes most of its work —
+structurally identical programs (the GEMM family differs only in node labels)
+re-run the full nine-stage CoVeR search from scratch, strictly sequentially.
+The :class:`OptimizationEngine` fixes both axes:
+
+* **Batching + concurrency** — jobs are scheduled across a bounded thread
+  pool (verification is interpreter-bound, so threads suffice; ``workers=1``
+  is the deterministic serial mode tests rely on). Results always come back
+  in submission order, and history priors are frozen once per batch so
+  serial and concurrent runs produce identical results kernel-for-kernel.
+
+* **Result caching** — a persistent :class:`ResultCache` keyed by the
+  canonical structural fingerprint of (graph, schedule, spec, tolerances)
+  (:mod:`repro.ir.fingerprint`). A hit replays the recorded
+  :class:`TransformLog` — one verification per accepted transform instead of
+  the full proposal search — and cross-checks that the replayed schedule is
+  bit-identical to the cached canonical schedule. Any divergence falls back
+  to full optimization, so the cache can never produce a wrong result, only
+  a slower path.
+
+* **Warm starts** — the shared :class:`History` records every stage outcome;
+  its success-count priors reorder proposer candidates for subsequent
+  batches (see ``StageScheduler``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.stage_scheduler import TransformLog
+from repro.ir.fingerprint import fingerprint_job, program_canonical
+from repro.ir.schedule import KernelProgram
+
+
+@dataclasses.dataclass
+class KernelJob:
+    """One named optimization unit: the ci-shaped program the verifier
+    executes and the bench-shaped program the cost model scores."""
+
+    name: str
+    ci_program: KernelProgram
+    bench_program: KernelProgram
+    tags: tuple = ()
+    target_dtype: str = "bfloat16"
+    rtol: float = 1e-2
+    atol: float = 1e-5
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def fingerprint(self, spec_name: str, policy: str = "") -> str:
+        return fingerprint_job(self.ci_program, self.bench_program,
+                               spec_name, self.target_dtype,
+                               self.rtol, self.atol, self.tags,
+                               meta=self.meta, policy=policy)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    job: KernelJob
+    result: PipelineResult
+    fingerprint: str
+    cache_hit: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    jobs: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    replay_fallbacks: int = 0   # fingerprint hit but replay diverged
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class ResultCache:
+    """Persistent fingerprint → winning-transform-sequence store.
+
+    Entries hold the serialized :class:`TransformLog` plus the canonical form
+    of the optimized bench schedule (the bit-identity witness) and the
+    modeled timings. With a ``path`` the cache loads at construction and
+    rewrites the JSON on every put — crash-safe enough for a driver loop and
+    trivially inspectable. All access is lock-guarded for the worker pool.
+    """
+
+    def __init__(self, path: Optional[pathlib.Path] = None):
+        self.path = pathlib.Path(path) if path else None
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self._lock = threading.Lock()
+        if self.path and self.path.exists():
+            data = json.loads(self.path.read_text())
+            self._entries = dict(data.get("entries", {}))
+
+    def get(self, fingerprint: str) -> Optional[Dict[str, Any]]:
+        with self._lock:
+            return self._entries.get(fingerprint)
+
+    def put(self, fingerprint: str, entry: Dict[str, Any],
+            flush: bool = True):
+        """Insert an entry. ``flush=False`` defers the disk write (the
+        engine batches inserts and flushes once per run_batch so concurrent
+        workers don't serialize on whole-file rewrites)."""
+        with self._lock:
+            self._entries[fingerprint] = entry
+            if flush:
+                self._write_locked()
+
+    def flush(self):
+        with self._lock:
+            self._write_locked()
+
+    def _write_locked(self):
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self.path.write_text(json.dumps(
+                {"entries": self._entries}, indent=2))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            if self.path and self.path.exists():
+                self.path.unlink()
+
+
+class OptimizationEngine:
+    """Suite-level orchestrator over a shared :class:`ForgePipeline`."""
+
+    def __init__(self,
+                 pipeline: Optional[ForgePipeline] = None,
+                 workers: int = 1,
+                 cache: Optional[ResultCache] = None,
+                 cache_path: Optional[pathlib.Path] = None):
+        self.pipeline = pipeline or ForgePipeline()
+        self.workers = max(1, int(workers))
+        self.cache = cache or ResultCache(cache_path)
+        self.stats = EngineStats()
+        self._stats_lock = threading.Lock()
+        # per-fingerprint in-flight locks: duplicate jobs submitted in one
+        # batch coalesce (first computes, the rest wait and replay) instead
+        # of racing N full searches
+        self._inflight: Dict[str, threading.Lock] = {}
+        self._inflight_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def submit(self, job: KernelJob) -> EngineResult:
+        """Optimize one job (cache-aware). Single-job convenience over
+        ``run_batch``."""
+        return self.run_batch([job])[0]
+
+    def run_batch(self, jobs: Sequence[KernelJob]) -> List[EngineResult]:
+        """Optimize a batch. Results come back in submission order. Priors
+        are frozen once per batch: a job's candidate ordering never depends
+        on which other jobs happened to finish first, so ``workers=1`` and
+        ``workers=N`` are result-equivalent."""
+        priors = (self.pipeline.history.snapshot_priors()
+                  if self.pipeline.warm_start else {})
+        try:
+            if self.workers <= 1 or len(jobs) <= 1:
+                return [self._run_job(job, priors) for job in jobs]
+            with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                futures = [pool.submit(self._run_job, job, priors)
+                           for job in jobs]
+                return [f.result() for f in futures]
+        finally:
+            self.cache.flush()
+
+    # ------------------------------------------------------------------
+    def _run_job(self, job: KernelJob,
+                 priors: Mapping[str, int]) -> EngineResult:
+        fp = job.fingerprint(self.pipeline.spec.name,
+                             self.pipeline.policy_signature())
+        with self._inflight_lock:
+            job_lock = self._inflight.setdefault(fp, threading.Lock())
+        with job_lock:
+            return self._run_job_locked(job, fp, priors)
+
+    def _run_job_locked(self, job: KernelJob, fp: str,
+                        priors: Mapping[str, int]) -> EngineResult:
+        entry = self.cache.get(fp)
+        if entry is not None:
+            replayed = self._replay(job, entry, priors)
+            if replayed is not None:
+                with self._stats_lock:
+                    self.stats.jobs += 1
+                    self.stats.cache_hits += 1
+                return EngineResult(job, replayed, fp, cache_hit=True)
+            with self._stats_lock:
+                self.stats.replay_fallbacks += 1
+
+        result = self.pipeline.optimize(
+            job.name, job.ci_program, job.bench_program, tags=job.tags,
+            target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
+            meta=job.meta, priors=priors)
+        self.cache.put(fp, self._entry_for(result), flush=False)
+        with self._stats_lock:
+            self.stats.jobs += 1
+            self.stats.cache_misses += 1
+        return EngineResult(job, result, fp, cache_hit=False)
+
+    # ------------------------------------------------------------------
+    def _entry_for(self, result: PipelineResult) -> Dict[str, Any]:
+        return {
+            "name": result.name,
+            "transform_log": (result.transform_log.to_list()
+                              if result.transform_log else []),
+            "canonical_schedule": program_canonical(
+                result.bench_program)["schedule"],
+            "original_time": result.original_time,
+            "optimized_time": result.optimized_time,
+            # never-degrade fired on the cold run: replay must reproduce the
+            # clamp instead of treating final_time > original as divergence
+            "clamped": result.clamped,
+        }
+
+    def _replay(self, job: KernelJob, entry: Dict[str, Any],
+                priors: Mapping[str, int]) -> Optional[PipelineResult]:
+        """Replay a cached transform log onto this job's programs. Returns
+        None (-> full optimization) on any divergence, including a replayed
+        schedule that is not bit-identical to the cached canonical form."""
+        log = TransformLog.from_list(entry.get("transform_log", []))
+        pipeline = self.pipeline
+        ctx = pipeline._prepare_ctx(job.name, job.ci_program, job.tags,
+                                    job.target_dtype, job.rtol, job.atol,
+                                    job.meta or {})
+        original_cost = pipeline.cost_model.program_cost(job.bench_program)
+        scheduler = pipeline.make_scheduler(priors)
+        out = scheduler.replay(log, job.ci_program.copy(),
+                               job.bench_program.copy(), ctx)
+        if out is None:
+            return None
+        ci_prog, bench_prog, records = out
+        got = program_canonical(bench_prog)["schedule"]
+        if got != entry.get("canonical_schedule"):
+            return None
+        final_time = pipeline.cost_model.program_time(bench_prog)
+        if final_time > original_cost.total_s:
+            if not entry.get("clamped"):
+                return None
+            # reproduce the cold run's never-degrade clamp
+            return PipelineResult(job.name, original_cost.total_s,
+                                  original_cost.total_s, ci_prog, bench_prog,
+                                  records, [], transform_log=log,
+                                  cache_hit=True, clamped=True)
+        result = PipelineResult(job.name, original_cost.total_s, final_time,
+                                ci_prog, bench_prog, records, [],
+                                transform_log=log, cache_hit=True)
+        return result

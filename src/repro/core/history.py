@@ -1,15 +1,23 @@
 """Optimization history (paper §VIII future work, implemented).
 
-Successful (stage, pattern_id) transformations are recorded per run; proposers
-can consult the success counts to prioritize historically productive patterns
-on future kernels ("learning from optimization history" as few-shot priority
-rather than free generation).
+Successful (stage, pattern_id) transformations are recorded per run. The
+history is the *warm-start provider* for the stage scheduler: success-count
+priors reorder each stage proposer's candidates so historically productive
+patterns are tried first on future kernels ("learning from optimization
+history" as few-shot priority rather than free generation).
+
+Thread-safety: the fleet engine records from concurrent workers, so all
+mutation happens under a lock. ``snapshot_priors`` returns an immutable-by-
+convention copy — the engine freezes one snapshot per batch so serial and
+concurrent runs see identical candidate orderings regardless of completion
+order.
 """
 
 from __future__ import annotations
 
 import json
 import pathlib
+import threading
 from collections import defaultdict
 from typing import Dict, List, Optional
 
@@ -19,11 +27,12 @@ class History:
         self.path = pathlib.Path(path) if path else None
         self.records: List[dict] = []
         self.success_counts: Dict[str, int] = defaultdict(int)
+        self._lock = threading.Lock()
         if self.path and self.path.exists():
             data = json.loads(self.path.read_text())
             self.records = data.get("records", [])
             for r in self.records:
-                if r.get("improved"):
+                if r.get("improved") and r.get("pattern_id"):
                     self.success_counts[r.get("pattern_id", "")] += 1
 
     def record(self, problem: str, stage: str, pattern_id: str,
@@ -31,12 +40,33 @@ class History:
         rec = {"problem": problem, "stage": stage, "pattern_id": pattern_id,
                "improved": improved, "speedup": speedup,
                "iterations": iterations}
-        self.records.append(rec)
-        if improved:
-            self.success_counts[pattern_id] += 1
-        if self.path:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            self.path.write_text(json.dumps({"records": self.records}, indent=2))
+        with self._lock:
+            self.records.append(rec)
+            if improved and pattern_id:
+                self.success_counts[pattern_id] += 1
+            if self.path:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                self.path.write_text(json.dumps({"records": self.records},
+                                                indent=2))
 
     def priority(self, pattern_id: str) -> int:
         return self.success_counts.get(pattern_id, 0)
+
+    # ------------------------------------------------------------------
+    def snapshot_priors(self) -> Dict[str, int]:
+        """Frozen copy of the success counts, safe to share across a batch."""
+        with self._lock:
+            return dict(self.success_counts)
+
+    def merge(self, other: "History"):
+        """Fold another history's records in (engine workers can record to
+        private histories that merge at batch end)."""
+        with self._lock:
+            for rec in other.records:
+                self.records.append(rec)
+                if rec.get("improved") and rec.get("pattern_id"):
+                    self.success_counts[rec["pattern_id"]] += 1
+            if self.path:
+                self.path.parent.mkdir(parents=True, exist_ok=True)
+                self.path.write_text(json.dumps({"records": self.records},
+                                                indent=2))

@@ -1,23 +1,28 @@
 """The Forge pipeline (paper §IV-A): analysis → planner → dependency-ordered
 CoVeR stages with issue-driven skip logic, re-analysis between stages,
 best-of-k selection, and never-degrade semantics.
+
+Since the fleet-engine refactor the stage loop itself lives in
+:class:`repro.core.stage_scheduler.StageScheduler`; ``ForgePipeline`` is the
+single-job entry point that owns context preparation, best-of-k, pipeline
+never-degrade, and history recording. Batch/concurrent/cached optimization
+goes through :class:`repro.core.engine.OptimizationEngine`, which drives the
+same scheduler.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional
 
 import jax.numpy as jnp
 
-from repro.core.analyzer import analyze
 from repro.core.context import ProblemContext
-from repro.core.cover import CoVeRAgent, StageResult
 from repro.core.history import History
 from repro.core.llm import LLMClient
-from repro.core.planner import plan
-from repro.core.proposers import make_proposer
+from repro.core.stage_scheduler import (ScheduleOutcome, StageRecord,
+                                        StageScheduler, TransformLog)
 from repro.core.verify import compile_and_verify
 from repro.hw.specs import TPUSpec, TPU_V5E
 from repro.ir.cost import CostModel, ProgramCost
@@ -25,15 +30,7 @@ from repro.ir.interpreter import evaluate, make_inputs, make_params
 from repro.ir.schedule import KernelProgram
 from repro.kb.loader import KnowledgeBase, load_default
 
-
-@dataclasses.dataclass
-class StageRecord:
-    stage: str
-    improved: bool
-    iterations: int
-    speedup: Optional[float]
-    description: str
-    fallback_used: bool
+__all__ = ["ForgePipeline", "PipelineResult", "StageRecord"]
 
 
 @dataclasses.dataclass
@@ -46,6 +43,9 @@ class PipelineResult:
     stage_records: List[StageRecord]
     issues_initial: List
     k_used: int = 1
+    transform_log: Optional[TransformLog] = None
+    cache_hit: bool = False
+    clamped: bool = False            # pipeline-level never-degrade triggered
 
     @property
     def speedup(self) -> float:
@@ -63,7 +63,8 @@ class ForgePipeline:
                  history: Optional[History] = None,
                  dump_dir: Optional[pathlib.Path] = None,
                  stages_enabled: Optional[List[str]] = None,
-                 use_planner: bool = True):
+                 use_planner: bool = True,
+                 warm_start: bool = True):
         self.kb = kb or load_default()
         self.spec = spec
         self.T = max_iterations
@@ -74,7 +75,36 @@ class ForgePipeline:
         self.dump_dir = dump_dir
         self.stages_enabled = stages_enabled          # ablation hook
         self.use_planner = use_planner                # ablation hook
+        self.warm_start = warm_start                  # history-driven priors
         self.cost_model = CostModel(spec)
+
+    # ------------------------------------------------------------------
+    def policy_signature(self) -> str:
+        """Stable signature of every knob that changes what the pipeline
+        would produce for a given job. The engine folds this into the cache
+        key so results computed under one configuration (e.g. a stage
+        ablation) are never replayed under another."""
+        stages = ("*" if self.stages_enabled is None
+                  else ",".join(sorted(self.stages_enabled)))
+        return (f"T={self.T};k={self.k};pallas={self.use_pallas_exec};"
+                f"planner={self.use_planner};stages={stages};"
+                f"llm={self.llm is not None}")
+
+    # ------------------------------------------------------------------
+    def make_scheduler(self, priors: Optional[Mapping[str, int]] = None
+                       ) -> StageScheduler:
+        """Build a StageScheduler with this pipeline's configuration. The
+        engine calls this too, so every policy knob lives in one place."""
+        if priors is None:
+            priors = (self.history.snapshot_priors() if self.warm_start
+                      else {})
+        return StageScheduler(self.kb, self.cost_model,
+                              max_iterations=self.T, llm=self.llm,
+                              dump_dir=self.dump_dir,
+                              use_pallas_exec=self.use_pallas_exec,
+                              stages_enabled=self.stages_enabled,
+                              use_planner=self.use_planner,
+                              priors=priors)
 
     # ------------------------------------------------------------------
     def _prepare_ctx(self, name: str, ci_program: KernelProgram,
@@ -100,14 +130,20 @@ class ForgePipeline:
                  bench_program: KernelProgram,
                  tags=(), target_dtype: str = "bfloat16",
                  rtol: float = 1e-2, atol: float = 1e-5,
-                 meta: Optional[Dict] = None) -> PipelineResult:
+                 meta: Optional[Dict] = None,
+                 priors: Optional[Mapping[str, int]] = None) -> PipelineResult:
+        """Optimize a single kernel job. This is the thin single-job wrapper;
+        fleet submission (batching, caching, concurrency) lives in
+        ``OptimizationEngine.run_batch``, which funnels back into the same
+        stage scheduler this method drives."""
         ctx = self._prepare_ctx(name, ci_program, tags, target_dtype,
                                 rtol, atol, meta or {})
         original_cost = self.cost_model.program_cost(bench_program)
+        scheduler = self.make_scheduler(priors)
 
         best: Optional[PipelineResult] = None
         for pass_idx in range(max(1, self.k)):
-            result = self._single_pass(name, ci_program.copy(),
+            result = self._single_pass(scheduler, name, ci_program.copy(),
                                        bench_program.copy(), ctx,
                                        original_cost, pass_idx)
             if best is None or result.optimized_time < best.optimized_time:
@@ -116,67 +152,30 @@ class ForgePipeline:
         return best
 
     # ------------------------------------------------------------------
-    def _single_pass(self, name: str, ci_prog: KernelProgram,
-                     bench_prog: KernelProgram, ctx: ProblemContext,
-                     original_cost: ProgramCost, pass_idx: int) -> PipelineResult:
-        records: List[StageRecord] = []
-        issues = analyze(bench_prog, ctx)
-        issues_initial = list(issues)
-        order = plan(issues, llm=self.llm) if self.use_planner else [
-            s for s in ("algorithmic", "discovery", "dtype_fix", "fusion",
-                        "memory_access", "block_pointers", "persistent_kernel",
-                        "gpu_specific", "autotuning")]
-        if self.stages_enabled is not None:
-            order = [s for s in order if s in self.stages_enabled]
+    def _single_pass(self, scheduler: StageScheduler, name: str,
+                     ci_prog: KernelProgram, bench_prog: KernelProgram,
+                     ctx: ProblemContext, original_cost: ProgramCost,
+                     pass_idx: int) -> PipelineResult:
+        out: ScheduleOutcome = scheduler.run(name, ci_prog, bench_prog, ctx,
+                                             pass_idx=pass_idx,
+                                             history=self.history)
+        return self._finalize(name, out, original_cost)
 
-        executed = set()
-        while order:
-            stage = order.pop(0)
-            if stage in executed:
-                continue
-            executed.add(stage)
-            stage_issues = [i for i in issues if i.stage == stage]
-            if not stage_issues:
-                continue  # skip logic: no issues -> no stage execution
-            proposer = make_proposer(stage, self.kb, ctx)
-            agent = CoVeRAgent(stage, proposer, self.kb,
-                               max_iterations=self.T,
-                               dump_dir=self.dump_dir,
-                               use_pallas_exec=self.use_pallas_exec)
-            incumbent = self.cost_model.program_time(bench_prog)
-            res: StageResult = agent.run(ci_prog, bench_prog, stage_issues, ctx,
-                                         incumbent, self.cost_model,
-                                         start_offset=pass_idx)
-            speedup = res.report.speedup if (res.report and res.improved) else None
-            records.append(StageRecord(stage, res.improved, res.iterations,
-                                       speedup,
-                                       res.accepted.description if res.accepted else "",
-                                       res.fallback_used))
-            self.history.record(name, stage,
-                                res.accepted.pattern_id if res.accepted else "",
-                                res.improved, speedup, res.iterations)
-            if res.improved:
-                ci_prog, bench_prog = res.ci_program, res.bench_program
-                # re-analysis (paper §IV-A-c): refresh the issue list; newly
-                # surfaced issues can activate not-yet-run stages
-                issues = analyze(bench_prog, ctx)
-                pos = {s: i for i, s in enumerate(order)}
-                for i in issues:
-                    if i.stage not in executed and i.stage not in pos:
-                        new_order = plan(issues, llm=self.llm)
-                        order = [s for s in new_order if s not in executed]
-                        if self.stages_enabled is not None:
-                            order = [s for s in order
-                                     if s in self.stages_enabled]
-                        break
-            else:
-                issues = analyze(bench_prog, ctx)
-
-        final_time = self.cost_model.program_time(bench_prog)
+    # ------------------------------------------------------------------
+    def _finalize(self, name: str, out: ScheduleOutcome,
+                  original_cost: ProgramCost,
+                  cache_hit: bool = False) -> PipelineResult:
+        final_time = self.cost_model.program_time(out.bench_program)
         # pipeline-level never-degrade (paper §IV-B-e)
         if final_time > original_cost.total_s:
             return PipelineResult(name, original_cost.total_s,
-                                  original_cost.total_s, ci_prog, bench_prog,
-                                  records, issues_initial)
+                                  original_cost.total_s, out.ci_program,
+                                  out.bench_program, out.records,
+                                  out.issues_initial,
+                                  transform_log=out.transform_log,
+                                  cache_hit=cache_hit, clamped=True)
         return PipelineResult(name, original_cost.total_s, final_time,
-                              ci_prog, bench_prog, records, issues_initial)
+                              out.ci_program, out.bench_program, out.records,
+                              out.issues_initial,
+                              transform_log=out.transform_log,
+                              cache_hit=cache_hit)

@@ -299,10 +299,11 @@ class FusionProposer(BaseProposer):
         for t in targets:
             include_red = any(i.node == t and i.type == "unfused_reduction_epilogue"
                               for i in issues)
+            red_note = (" and accumulate the row-reduction in-tile (the "
+                        "[M,N] product never hits HBM)" if include_red else "")
             yield Candidate(
                 thought=f"[fusion] merge the pointwise chain after {t} into one "
-                        f"kernel{' and accumulate the row-reduction in-tile (the '
-                        '[M,N] product never hits HBM)' if include_red else ''} "
+                        f"kernel{red_note} "
                         "(KB: fuse_epilogue_into_matmul"
                         + ("/fuse_reduction_epilogue" if include_red else "") + ").",
                 description=f"fuse:{t}{'+reduction' if include_red else ''}",

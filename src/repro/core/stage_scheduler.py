@@ -1,0 +1,281 @@
+"""Reusable stage loop (extracted from ``ForgePipeline._single_pass``).
+
+The :class:`StageScheduler` owns the analyze → plan → CoVeR-per-stage →
+re-analyze loop and, as it goes, records an explicit serializable
+:class:`TransformLog` — the sequence of accepted (stage, pattern_id,
+description) transforms. The log is what makes fleet-level result caching
+possible: a structurally identical kernel (same fingerprint) can *replay*
+the verified winning sequence — one verification per accepted transform —
+instead of re-running the full nine-stage proposal search.
+
+History-driven warm starts: when success-count priors are supplied, each
+stage's proposer is wrapped so historically productive patterns are tried
+first (stable reorder: ties keep the proposer's deterministic order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Mapping, Optional, Tuple
+
+from repro.core.analyzer import analyze
+from repro.core.context import ProblemContext
+from repro.core.cover import CoVeRAgent, StageResult
+from repro.core.llm import LLMClient
+from repro.core.planner import plan
+from repro.core.proposers import BaseProposer, Candidate, make_proposer
+from repro.core.verify import compile_and_verify
+from repro.ir.cost import CostModel
+from repro.ir.fingerprint import canonical_name_map
+from repro.ir.graph import Graph
+from repro.ir.schedule import KernelProgram
+from repro.kb.loader import KnowledgeBase
+
+
+def canonical_description(description: str, graph: Graph) -> str:
+    """Rewrite node/group names embedded in a candidate description (e.g.
+    ``fuse:mm+reduction``, ``mem:pack-b:g_mm``) to canonical topo-position
+    names, so transform logs match across structurally identical programs
+    whose only difference is labeling."""
+    nm = canonical_name_map(graph)
+    # group names follow the g_<node> convention; map them alongside nodes
+    full = dict(nm)
+    full.update({f"g_{k}": f"g_{v}" for k, v in nm.items()})
+    for name in sorted(full, key=len, reverse=True):
+        description = re.sub(
+            rf"(?<![A-Za-z0-9_]){re.escape(name)}(?![A-Za-z0-9_])",
+            full[name], description)
+    return description
+
+
+@dataclasses.dataclass
+class StageRecord:
+    stage: str
+    improved: bool
+    iterations: int
+    speedup: Optional[float]
+    description: str
+    fallback_used: bool
+
+
+@dataclasses.dataclass
+class TransformStep:
+    """One accepted transform: enough to re-locate the candidate on replay.
+    ``canonical_description`` is the description with node names rewritten to
+    topo positions — the rename-invariant match key for structural twins."""
+
+    stage: str
+    pattern_id: str
+    description: str
+    canonical_description: str = ""
+
+    def to_dict(self) -> Dict[str, str]:
+        return {"stage": self.stage, "pattern_id": self.pattern_id,
+                "description": self.description,
+                "canonical_description": self.canonical_description}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, str]) -> "TransformStep":
+        return cls(stage=d["stage"], pattern_id=d.get("pattern_id", ""),
+                   description=d.get("description", ""),
+                   canonical_description=d.get("canonical_description", ""))
+
+
+@dataclasses.dataclass
+class TransformLog:
+    steps: List[TransformStep] = dataclasses.field(default_factory=list)
+
+    def append(self, stage: str, pattern_id: str, description: str,
+               canonical_description: str = ""):
+        self.steps.append(TransformStep(stage, pattern_id, description,
+                                        canonical_description))
+
+    def to_list(self) -> List[Dict[str, str]]:
+        return [s.to_dict() for s in self.steps]
+
+    @classmethod
+    def from_list(cls, items: List[Dict[str, str]]) -> "TransformLog":
+        return cls(steps=[TransformStep.from_dict(d) for d in items])
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def __iter__(self):
+        return iter(self.steps)
+
+
+class WarmStartProposer(BaseProposer):
+    """Stable-reorders a proposer's candidates by historical success counts.
+
+    With empty priors this is a transparent pass-through, so cold runs are
+    bit-identical to the un-warmed pipeline.
+    """
+
+    def __init__(self, inner: BaseProposer, priors: Mapping[str, int]):
+        self.inner = inner
+        self.stage = inner.stage
+        self.kb = inner.kb
+        self.ctx = inner.ctx
+        self.priors = priors
+
+    def candidates(self, program, issues, trajectory):
+        cands = list(self.inner.candidates(program, issues, trajectory))
+        if self.priors:
+            cands.sort(key=lambda c: -self.priors.get(c.pattern_id, 0))
+        return iter(cands)
+
+
+@dataclasses.dataclass
+class ScheduleOutcome:
+    ci_program: KernelProgram
+    bench_program: KernelProgram
+    records: List[StageRecord]
+    issues_initial: List
+    transform_log: TransformLog
+
+
+class StageScheduler:
+    """Dependency-ordered CoVeR stage executor with replay support."""
+
+    def __init__(self, kb: KnowledgeBase, cost_model: CostModel,
+                 max_iterations: int = 5,
+                 llm: Optional[LLMClient] = None,
+                 dump_dir=None,
+                 use_pallas_exec: bool = True,
+                 stages_enabled: Optional[List[str]] = None,
+                 use_planner: bool = True,
+                 priors: Optional[Mapping[str, int]] = None):
+        self.kb = kb
+        self.cost_model = cost_model
+        self.T = max_iterations
+        self.llm = llm
+        self.dump_dir = dump_dir
+        self.use_pallas_exec = use_pallas_exec
+        self.stages_enabled = stages_enabled
+        self.use_planner = use_planner
+        self.priors = dict(priors or {})
+
+    # ------------------------------------------------------------------
+    def _make_proposer(self, stage: str, ctx: ProblemContext) -> BaseProposer:
+        proposer = make_proposer(stage, self.kb, ctx)
+        if self.priors:
+            return WarmStartProposer(proposer, self.priors)
+        return proposer
+
+    def _plan(self, issues) -> List[str]:
+        if self.use_planner:
+            order = plan(issues, llm=self.llm)
+        else:
+            order = ["algorithmic", "discovery", "dtype_fix", "fusion",
+                     "memory_access", "block_pointers", "persistent_kernel",
+                     "gpu_specific", "autotuning"]
+        if self.stages_enabled is not None:
+            order = [s for s in order if s in self.stages_enabled]
+        return order
+
+    # ------------------------------------------------------------------
+    def run(self, name: str, ci_prog: KernelProgram,
+            bench_prog: KernelProgram, ctx: ProblemContext,
+            pass_idx: int = 0, history=None) -> ScheduleOutcome:
+        """The full analyze → plan → CoVeR → re-analyze loop (one pass)."""
+        records: List[StageRecord] = []
+        log = TransformLog()
+        issues = analyze(bench_prog, ctx)
+        issues_initial = list(issues)
+        order = self._plan(issues)
+
+        executed = set()
+        while order:
+            stage = order.pop(0)
+            if stage in executed:
+                continue
+            executed.add(stage)
+            stage_issues = [i for i in issues if i.stage == stage]
+            if not stage_issues:
+                continue  # skip logic: no issues -> no stage execution
+            proposer = self._make_proposer(stage, ctx)
+            agent = CoVeRAgent(stage, proposer, self.kb,
+                               max_iterations=self.T,
+                               dump_dir=self.dump_dir,
+                               use_pallas_exec=self.use_pallas_exec)
+            incumbent = self.cost_model.program_time(bench_prog)
+            res: StageResult = agent.run(ci_prog, bench_prog, stage_issues,
+                                         ctx, incumbent, self.cost_model,
+                                         start_offset=pass_idx)
+            speedup = res.report.speedup if (res.report and res.improved) else None
+            records.append(StageRecord(stage, res.improved, res.iterations,
+                                       speedup,
+                                       res.accepted.description if res.accepted else "",
+                                       res.fallback_used))
+            if history is not None:
+                history.record(name, stage,
+                               res.accepted.pattern_id if res.accepted else "",
+                               res.improved, speedup, res.iterations)
+            if res.improved:
+                desc = res.accepted.description if res.accepted else ""
+                # canonicalize against the pre-transform graph — that's what
+                # the candidate descriptions were generated from
+                canon = canonical_description(desc, bench_prog.graph)
+                ci_prog, bench_prog = res.ci_program, res.bench_program
+                log.append(stage, res.accepted.pattern_id if res.accepted else "",
+                           desc, canon)
+                # re-analysis (paper §IV-A-c): refresh the issue list; newly
+                # surfaced issues can activate not-yet-run stages
+                issues = analyze(bench_prog, ctx)
+                pos = {s: i for i, s in enumerate(order)}
+                for i in issues:
+                    if i.stage not in executed and i.stage not in pos:
+                        new_order = self._plan(issues)
+                        order = [s for s in new_order if s not in executed]
+                        break
+            else:
+                issues = analyze(bench_prog, ctx)
+
+        return ScheduleOutcome(ci_prog, bench_prog, records, issues_initial,
+                               log)
+
+    # ------------------------------------------------------------------
+    def replay(self, log: TransformLog, ci_prog: KernelProgram,
+               bench_prog: KernelProgram, ctx: ProblemContext
+               ) -> Optional[Tuple[KernelProgram, KernelProgram,
+                                   List[StageRecord]]]:
+        """Re-apply a verified transform sequence on a (structurally
+        identical) program: one candidate lookup + one verification per step
+        instead of the full CoVeR search. Returns None on any divergence —
+        the caller falls back to full optimization, so replay is always
+        correctness-safe."""
+        records: List[StageRecord] = []
+        for step in log:
+            issues = analyze(bench_prog, ctx)
+            stage_issues = [i for i in issues if i.stage == step.stage]
+            proposer = make_proposer(step.stage, self.kb, ctx)
+            cands = list(proposer.candidates(bench_prog, stage_issues, []))
+            cand = next((c for c in cands
+                         if c.description == step.description), None)
+            if cand is None and step.canonical_description:
+                # renamed structural twin: match on canonical descriptions
+                cand = next(
+                    (c for c in cands
+                     if canonical_description(c.description, bench_prog.graph)
+                     == step.canonical_description), None)
+            if cand is None and step.pattern_id:
+                cand = next((c for c in cands
+                             if c.pattern_id == step.pattern_id), None)
+            if cand is None:
+                return None
+            incumbent = self.cost_model.program_time(bench_prog)
+            try:
+                new_ci = cand.transform(ci_prog)
+                new_bench = cand.transform(bench_prog)
+            except Exception:  # noqa: BLE001 — divergence -> fall back
+                return None
+            report = compile_and_verify(new_ci, new_bench, incumbent, ctx,
+                                        self.kb, self.cost_model,
+                                        use_pallas=self.use_pallas_exec)
+            if not report.ok:
+                return None
+            records.append(StageRecord(step.stage, True, 1, report.speedup,
+                                       cand.description, False))
+            ci_prog, bench_prog = new_ci, new_bench
+        return ci_prog, bench_prog, records

@@ -1,9 +1,15 @@
 from repro.ir.graph import Node, Graph, GraphBuilder
 from repro.ir.interpreter import evaluate, make_params, op_impl
 from repro.ir.cost import node_flops_bytes, CostModel, GroupCost
+from repro.ir.fingerprint import (canonical_name_map, fingerprint_job,
+                                  fingerprint_program, program_canonical)
 from repro.ir.schedule import Schedule, FusionGroup, PallasConfig, KernelProgram
 
 __all__ = [
+    "canonical_name_map",
+    "fingerprint_job",
+    "fingerprint_program",
+    "program_canonical",
     "Node",
     "Graph",
     "GraphBuilder",

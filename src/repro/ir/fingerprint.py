@@ -1,0 +1,135 @@
+"""Canonical structural fingerprints for kernel programs.
+
+The fleet engine (``repro.core.engine``) keys its result cache on *structure*,
+not on names: two :class:`KernelProgram` instances that describe the same
+computation under different node names (common across the GEMM family, where
+builders differ only in labels) must map to the same cache entry, while any
+change to the graph, the schedule, the hardware spec, or the verification
+tolerances must change the key.
+
+Canonicalization: nodes are renamed ``n0, n1, ...`` by toposort position (the
+toposort prefers insertion order, so renaming alone never perturbs it), ops
+and attrs are serialized with sorted keys, and fusion groups are emitted in
+schedule order with their node lists mapped through the canonical renaming.
+The fingerprint is the sha256 of that canonical form.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence
+
+from repro.ir.graph import Graph
+from repro.ir.schedule import KernelProgram, Schedule
+
+
+def canonical_name_map(graph: Graph) -> Dict[str, str]:
+    """Map node names to position-based canonical names (``n<topo-index>``)."""
+    return {n.name: f"n{i}" for i, n in enumerate(graph.toposorted())}
+
+
+def _canon_attr(value):
+    """JSON-stable attr encoding (tuples -> lists, floats kept exact)."""
+    if isinstance(value, (list, tuple)):
+        return [_canon_attr(v) for v in value]
+    if isinstance(value, dict):
+        return {str(k): _canon_attr(v) for k, v in sorted(value.items())}
+    return value
+
+
+def graph_canonical(graph: Graph,
+                    name_map: Optional[Dict[str, str]] = None) -> List:
+    """Name-invariant structural description of a graph."""
+    nm = name_map or canonical_name_map(graph)
+    nodes = []
+    for n in graph.toposorted():
+        nodes.append([
+            nm[n.name], n.op,
+            [nm[i] for i in n.inputs],
+            {str(k): _canon_attr(v) for k, v in sorted(n.attrs.items())},
+            list(n.shape), str(n.dtype),
+        ])
+    return [nodes, [nm[o] for o in graph.outputs]]
+
+
+def schedule_canonical(schedule: Schedule,
+                       name_map: Dict[str, str]) -> List:
+    """Canonical schedule: groups in schedule order, node lists renamed,
+    group names replaced by position (``g<index>``)."""
+    groups = []
+    for i, grp in enumerate(schedule.groups):
+        cfg = grp.config.to_dict() if grp.config else None
+        if cfg is not None:
+            cfg = {k: _canon_attr(v) for k, v in sorted(cfg.items())}
+        groups.append([
+            f"g{i}",
+            [name_map[n] for n in grp.nodes],
+            name_map[grp.root],
+            grp.impl,
+            cfg,
+            {str(k): str(v) for k, v in sorted(grp.operand_layouts.items())},
+            bool(grp.prefetch),
+        ])
+    return [groups, schedule.compute_dtype]
+
+
+def program_canonical(program: KernelProgram) -> Dict:
+    nm = canonical_name_map(program.graph)
+    return {
+        "graph": graph_canonical(program.graph, nm),
+        "schedule": schedule_canonical(program.schedule, nm),
+        # meta participates: the analyzer reads it (host_sync, autotuned, ...)
+        # so it changes which transforms apply
+        "meta": json.loads(json.dumps(program.meta, sort_keys=True,
+                                      default=str)),
+    }
+
+
+def fingerprint_program(program: KernelProgram,
+                        spec_name: str = "",
+                        target_dtype: str = "",
+                        rtol: float = 0.0,
+                        atol: float = 0.0,
+                        tags: Sequence[str] = (),
+                        meta: Optional[Dict] = None,
+                        policy: str = "") -> str:
+    """Fingerprint of (graph, schedule, spec, tolerances) — the cache key
+    domain of the optimization engine. ``tags`` participate because they
+    scope KB pattern applicability and therefore the proposer search space;
+    ``meta`` because the analyzer raises issues from it; ``policy`` is the
+    driver's configuration signature (stage ablations etc.)."""
+    payload = {
+        "program": program_canonical(program),
+        "spec": spec_name,
+        "target_dtype": target_dtype,
+        "rtol": repr(float(rtol)),
+        "atol": repr(float(atol)),
+        "tags": sorted(str(t) for t in tags),
+        "meta": json.loads(json.dumps(meta or {}, sort_keys=True,
+                                      default=str)),
+        "policy": policy,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def fingerprint_job(ci_program: KernelProgram,
+                    bench_program: KernelProgram,
+                    spec_name: str,
+                    target_dtype: str,
+                    rtol: float,
+                    atol: float,
+                    tags: Sequence[str] = (),
+                    meta: Optional[Dict] = None,
+                    policy: str = "") -> str:
+    """Cache key for a full optimization job: both the ci-shaped and the
+    bench-shaped programs participate (the pipeline verifies on ci shapes and
+    scores on bench shapes, so either differing must miss)."""
+    parts = [
+        fingerprint_program(ci_program, spec_name, target_dtype, rtol, atol,
+                            tags, meta, policy),
+        fingerprint_program(bench_program, spec_name, target_dtype, rtol,
+                            atol, tags, meta, policy),
+    ]
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()

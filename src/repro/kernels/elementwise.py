@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import CompilerParams
 
 from repro.kernels.epilogue import EpilogueOp, apply_epilogue
 from repro.kernels.matmul_fused import _normalize_operand, _operand_spec
@@ -54,6 +55,6 @@ def elementwise_chain(x: jnp.ndarray, epilogue: List[EpilogueOp], *,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, *[norm_ops[s] for s in op_names])

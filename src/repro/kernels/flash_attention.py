@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import CompilerParams
 
 NEG_INF = -1e30
 
@@ -108,7 +109,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         scratch_shapes=[pltpu.VMEM((block_q, 1), acc_dtype),
                         pltpu.VMEM((block_q, 1), acc_dtype),
                         pltpu.VMEM((block_q, d), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)

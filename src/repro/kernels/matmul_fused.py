@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from repro.compat import CompilerParams
 
 from repro.kernels.epilogue import (EpilogueOp, apply_epilogue, reduce_combine,
                                     reduce_init, reduce_tile)
@@ -157,7 +158,7 @@ def _matmul_epilogue_swizzled(a, b, norm_ops, op_names, epilogue, m, n, k,
         out_specs=pl.BlockSpec((bm, bn), lambda p, kk: (m_of(p, kk), n_of(p, kk))),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=tuple(dimension_semantics)[:2] or ("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, *[norm_ops[s] for s in op_names])
@@ -227,7 +228,7 @@ def _matmul_reduce(a, b, norm_ops, op_names, epilogue, reduction, m, n, k,
         out_shape=jax.ShapeDtypeStruct((m, 1), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype),
                         pltpu.VMEM((bm, 1), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(a, b, *[norm_ops[s] for s in op_names])

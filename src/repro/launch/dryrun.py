@@ -183,6 +183,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     rec["fits_hbm"] = rec["memory"]["peak_projected_tpu"] <= 16 * 2**30
     rec["fits_hbm_raw_cpu"] = peak <= 16 * 2**30
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
     rec["cost_raw"] = {"flops": float(ca.get("flops", 0.0)),
                        "bytes": float(ca.get("bytes accessed", 0.0)),
                        "transcendentals": float(ca.get("transcendentals", 0.0))}

@@ -20,6 +20,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 
 
 def pipeline_forward(mesh: Mesh, stage_fn: Callable, num_stages: int,
@@ -71,7 +72,7 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable, num_stages: int,
             "pipe")
         return outputs
 
-    return jax.shard_map(
+    return shard_map(
         per_stage, mesh=mesh,
         in_specs=(P("pipe"), P()),
         out_specs=P(),

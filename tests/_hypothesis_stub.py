@@ -1,0 +1,87 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The container image doesn't ship hypothesis and we can't add dependencies, so
+``tests/conftest.py`` registers this module under ``sys.modules['hypothesis']``
+before test collection. It covers exactly the API surface the suite uses:
+``given`` (keyword strategies only), ``settings(max_examples, deadline)``, and
+``strategies.integers / sampled_from / booleans / floats``. Examples are drawn
+from a fixed-seed RNG so runs are reproducible.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2**31 - 1):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def just(value):
+    return _Strategy(lambda r: value)
+
+
+def given(**strategy_kw):
+    if not strategy_kw:
+        raise TypeError("stub @given supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategy_kw.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _StubAssumption:
+                    continue
+
+        # hide strategy-bound params from pytest so they aren't treated as
+        # fixtures (real hypothesis rewrites the signature the same way)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategy_kw])
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _StubAssumption()
+
+
+class _StubAssumption(Exception):
+    pass

@@ -7,6 +7,17 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+# the image doesn't ship hypothesis; fall back to the deterministic stub so
+# the property tests still exercise a sampled subset of their domains
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub
+    _hypothesis_stub.strategies = _hypothesis_stub
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,250 @@
+"""Fleet engine: cache hit/replay correctness, serial-vs-concurrent
+equivalence, persistence, warm-start priors, transform-log replay."""
+
+import json
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.core import (ForgePipeline, KernelJob, OptimizationEngine,
+                        ResultCache, TransformLog)
+from repro.core.history import History
+from repro.core.stage_scheduler import WarmStartProposer
+from repro.core.proposers import BaseProposer, Candidate
+from repro.ir.fingerprint import program_canonical
+
+SPECS = {s.name: s for s in load_specs()}
+
+
+def _job(name):
+    s = SPECS[name]
+    return KernelJob(s.name,
+                     build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+                     build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+NAMES = ["gemm_bias_gelu", "gemm_swish_tanh_scale", "matmul_t_gelu"]
+
+
+def test_cache_hit_replays_bit_identical():
+    eng = OptimizationEngine(workers=1)
+    first = eng.run_batch([_job(n) for n in NAMES])
+    assert all(not r.cache_hit for r in first)
+    second = eng.run_batch([_job(n) for n in NAMES])
+    assert all(r.cache_hit for r in second)
+    assert eng.stats.cache_hits == len(NAMES)
+    assert eng.stats.cache_misses == len(NAMES)
+    for a, b in zip(first, second):
+        assert program_canonical(a.result.bench_program) \
+            == program_canonical(b.result.bench_program)
+        assert a.result.optimized_time == pytest.approx(b.result.optimized_time)
+
+
+def test_replay_is_faster_than_search():
+    """Replay verifies once per accepted transform, so the transform log is
+    never longer than the cold run's total iteration count."""
+    eng = OptimizationEngine(workers=1)
+    cold = eng.submit(_job("gemm_bias_gelu"))
+    warm = eng.submit(_job("gemm_bias_gelu"))
+    assert warm.cache_hit
+    cold_iters = sum(r.iterations for r in cold.result.stage_records)
+    warm_iters = sum(r.iterations for r in warm.result.stage_records)
+    assert warm_iters <= cold_iters
+    assert len(warm.result.stage_records) == len(cold.result.transform_log)
+
+
+def test_serial_concurrent_equivalence():
+    jobs = lambda: [_job(n) for n in NAMES]
+    serial = OptimizationEngine(workers=1).run_batch(jobs())
+    conc = OptimizationEngine(workers=3).run_batch(jobs())
+    assert [r.job.name for r in serial] == [r.job.name for r in conc]
+    for a, b in zip(serial, conc):
+        assert program_canonical(a.result.bench_program) \
+            == program_canonical(b.result.bench_program)
+        assert a.result.optimized_time == pytest.approx(b.result.optimized_time)
+
+
+def test_structural_twins_share_cache_entry():
+    """Two jobs that build the same structure under different names hit the
+    same cache entry — the second replays."""
+    eng = OptimizationEngine(workers=1)
+    a = _job("gemm_bias_gelu")
+    b = _job("gemm_bias_gelu")
+    b.name = "gemm_bias_gelu_twin"
+    ra = eng.submit(a)
+    rb = eng.submit(b)
+    assert ra.fingerprint == rb.fingerprint
+    assert not ra.cache_hit and rb.cache_hit
+
+
+def test_tolerances_split_cache_entries():
+    eng = OptimizationEngine(workers=1)
+    a = _job("gemm_bias_gelu")
+    b = _job("gemm_bias_gelu")
+    b.rtol = b.rtol * 10
+    assert eng.submit(a).fingerprint != eng.submit(b).fingerprint
+
+
+def test_meta_splits_cache_entries():
+    """meta drives the analyzer (host_sync etc.), so it must key the cache."""
+    a = _job("gemm_bias_gelu")
+    b = _job("gemm_bias_gelu")
+    b.meta = {"host_sync": True}
+    assert a.fingerprint("v5e") != b.fingerprint("v5e")
+
+
+def test_pipeline_policy_splits_cache_entries():
+    """A stage-ablated pipeline must not replay full-pipeline results."""
+    from repro.core import ForgePipeline
+    full = OptimizationEngine(ForgePipeline())
+    ablated = OptimizationEngine(ForgePipeline(stages_enabled=["fusion"]))
+    job = _job("gemm_bias_gelu")
+    fp_full = job.fingerprint(full.pipeline.spec.name,
+                              full.pipeline.policy_signature())
+    fp_abl = job.fingerprint(ablated.pipeline.spec.name,
+                             ablated.pipeline.policy_signature())
+    assert fp_full != fp_abl
+
+
+def test_renamed_twin_replays_via_canonical_descriptions():
+    """A structural twin under different node names must actually replay
+    (canonical-description matching), not fall back to a full run."""
+    from repro.ir import GraphBuilder
+    from repro.ir.cost import graph_flops
+    from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+
+    def build(m, n, k, names):
+        b = GraphBuilder("p")
+        x = b.input((m, k), name=names[0])
+        w = b.param((k, n), name=names[1])
+        mm = b.matmul(x, w, name=names[2])
+        g = b.done(b.gelu(mm, name=names[3]))
+        sched = eager_schedule(g)
+        for grp in sched.groups:
+            if grp.root == names[2]:
+                grp.impl = "pallas_naive"
+                grp.config = PallasConfig(128, 128, 32, num_stages=1)
+        return KernelProgram("p", g, sched, original_flops=graph_flops(g))
+
+    def job(names):
+        return KernelJob("twin", build(256, 256, 128, names),
+                         build(4096, 4096, 1024, names), tags=("gemm",))
+
+    eng = OptimizationEngine(workers=1)
+    a = eng.submit(job(("x", "w", "mm", "act")))
+    b = eng.submit(job(("inp", "weights", "prod", "activation")))
+    assert a.fingerprint == b.fingerprint
+    assert b.cache_hit, "renamed twin must replay, not fall back"
+    assert eng.stats.replay_fallbacks == 0
+    assert program_canonical(a.result.bench_program)["schedule"] \
+        == program_canonical(b.result.bench_program)["schedule"]
+
+
+def test_inflight_dedup_coalesces_duplicate_jobs():
+    """N identical jobs in one concurrent batch do 1 full run + N-1 replays,
+    not N full searches."""
+    eng = OptimizationEngine(workers=4)
+    results = eng.run_batch([_job("gemm_bias_gelu") for _ in range(4)])
+    assert sum(1 for r in results if not r.cache_hit) == 1
+    assert sum(1 for r in results if r.cache_hit) == 3
+    assert eng.stats.cache_misses == 1 and eng.stats.cache_hits == 3
+
+
+def test_cache_persistence_roundtrip(tmp_path):
+    path = tmp_path / "cache.json"
+    eng1 = OptimizationEngine(workers=1, cache_path=path)
+    r1 = eng1.submit(_job("gemm_bias_gelu"))
+    assert path.exists()
+    entry = json.loads(path.read_text())["entries"][r1.fingerprint]
+    assert entry["transform_log"], "winning sequence must be recorded"
+    # a fresh engine (fresh process analogue) replays from disk
+    eng2 = OptimizationEngine(workers=1, cache_path=path)
+    r2 = eng2.submit(_job("gemm_bias_gelu"))
+    assert r2.cache_hit
+    assert program_canonical(r2.result.bench_program)["schedule"] \
+        == entry["canonical_schedule"]
+
+
+def test_transform_log_serializable():
+    eng = OptimizationEngine(workers=1)
+    res = eng.submit(_job("gemm_bias_gelu")).result
+    log = res.transform_log
+    assert len(log) > 0
+    rt = TransformLog.from_list(log.to_list())
+    assert rt.to_list() == log.to_list()
+    for step in log:
+        assert step.stage and step.description
+
+
+def test_history_warm_start_reorders_candidates():
+    class TwoPatternProposer(BaseProposer):
+        stage = "gpu_specific"
+
+        def candidates(self, program, issues, trajectory):
+            yield Candidate("a", "cand_a", lambda p: p.copy(), "pat_a")
+            yield Candidate("b", "cand_b", lambda p: p.copy(), "pat_b")
+
+    hist = History()
+    for _ in range(3):
+        hist.record("p", "gpu_specific", "pat_b", True, 2.0, 1)
+    warm = WarmStartProposer(TwoPatternProposer(None, None),
+                             hist.snapshot_priors())
+    ordered = [c.pattern_id for c in warm.candidates(None, [], [])]
+    assert ordered == ["pat_b", "pat_a"]
+    # empty priors: transparent pass-through
+    cold = WarmStartProposer(TwoPatternProposer(None, None), {})
+    assert [c.pattern_id for c in cold.candidates(None, [], [])] \
+        == ["pat_a", "pat_b"]
+
+
+def test_history_thread_safe_merge():
+    h1 = History()
+    h2 = History()
+    h2.record("p", "fusion", "fuse_epilogue_into_matmul", True, 2.0, 1)
+    h1.merge(h2)
+    assert h1.priority("fuse_epilogue_into_matmul") == 1
+
+
+def test_replay_fallback_on_corrupt_entry():
+    """A cache entry whose log can't be matched falls back to a full run
+    (correctness over cache)."""
+    eng = OptimizationEngine(workers=1)
+    r1 = eng.submit(_job("gemm_bias_gelu"))
+    entry = eng.cache.get(r1.fingerprint)
+    entry["transform_log"] = [{"stage": "fusion", "pattern_id": "nonsense",
+                               "description": "does:not:exist"}]
+    eng.cache.put(r1.fingerprint, entry)
+    r2 = eng.submit(_job("gemm_bias_gelu"))
+    assert not r2.cache_hit
+    assert eng.stats.replay_fallbacks >= 1
+    # the fallback run rewrote the entry; next submission replays again
+    r3 = eng.submit(_job("gemm_bias_gelu"))
+    assert r3.cache_hit
+
+
+def test_pipeline_single_job_wrapper_unchanged():
+    """ForgePipeline.optimize stays the thin single-job path and now carries
+    the transform log."""
+    s = SPECS["gemm_bias_gelu"]
+    pipe = ForgePipeline()
+    res = pipe.optimize(
+        s.name,
+        build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+        build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+        tags=tuple(s.tags), target_dtype=s.target_dtype,
+        rtol=s.rtol, atol=s.atol, meta=s.meta)
+    assert res.speedup > 1
+    assert res.transform_log is not None and len(res.transform_log) > 0
+    improved_stages = [r.stage for r in res.stage_records if r.improved]
+    assert [t.stage for t in res.transform_log] == improved_stages
+
+
+def test_result_cache_clear(tmp_path):
+    path = tmp_path / "c.json"
+    cache = ResultCache(path)
+    cache.put("k", {"transform_log": []})
+    assert len(cache) == 1 and path.exists()
+    cache.clear()
+    assert len(cache) == 0 and not path.exists()

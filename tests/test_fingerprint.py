@@ -1,0 +1,102 @@
+"""Structural fingerprints: rename-invariance, schedule/tolerance
+sensitivity, collision behavior."""
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.ir import GraphBuilder
+from repro.ir.fingerprint import (canonical_name_map, fingerprint_job,
+                                  fingerprint_program, program_canonical)
+from repro.ir.cost import graph_flops
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+
+
+def _gemm_program(m=64, n=64, k=32, names=("x", "w", "mm", "act")):
+    b = GraphBuilder("p")
+    x = b.input((m, k), name=names[0])
+    w = b.param((k, n), name=names[1])
+    mm = b.matmul(x, w, name=names[2])
+    g = b.done(b.gelu(mm, name=names[3]))
+    return KernelProgram("p", g, eager_schedule(g),
+                         original_flops=graph_flops(g))
+
+
+def test_rename_invariance():
+    """Same graph under node renaming -> same key."""
+    a = _gemm_program()
+    b = _gemm_program(names=("inp", "weights", "prod", "activation"))
+    assert fingerprint_program(a) == fingerprint_program(b)
+
+
+def test_shape_changes_key():
+    assert fingerprint_program(_gemm_program(m=64)) \
+        != fingerprint_program(_gemm_program(m=128))
+
+
+def test_schedule_changes_key():
+    a = _gemm_program()
+    b = _gemm_program()
+    grp = next(g for g in b.schedule.groups if g.root == "mm")
+    grp.impl = "pallas_blockspec"
+    grp.config = PallasConfig(128, 128, 128)
+    assert fingerprint_program(a) != fingerprint_program(b)
+
+
+def test_config_field_changes_key():
+    a = _gemm_program()
+    b = _gemm_program()
+    for p in (a, b):
+        grp = next(g for g in p.schedule.groups if g.root == "mm")
+        grp.impl = "pallas_blockspec"
+        grp.config = PallasConfig(128, 128, 128)
+    next(g for g in b.schedule.groups if g.root == "mm").config.block_k = 256
+    assert fingerprint_program(a) != fingerprint_program(b)
+
+
+def test_tolerances_and_spec_change_key():
+    p = _gemm_program()
+    base = fingerprint_program(p, "v5e", "bfloat16", 1e-2, 1e-5, ("gemm",))
+    assert base != fingerprint_program(p, "v5e", "bfloat16", 1e-3, 1e-5, ("gemm",))
+    assert base != fingerprint_program(p, "v5e", "bfloat16", 1e-2, 1e-4, ("gemm",))
+    assert base != fingerprint_program(p, "v4", "bfloat16", 1e-2, 1e-5, ("gemm",))
+    assert base != fingerprint_program(p, "v5e", "float32", 1e-2, 1e-5, ("gemm",))
+    assert base != fingerprint_program(p, "v5e", "bfloat16", 1e-2, 1e-5, ())
+    # tag order is canonicalized
+    assert fingerprint_program(p, "v5e", "bfloat16", 1e-2, 1e-5, ("a", "b")) \
+        == fingerprint_program(p, "v5e", "bfloat16", 1e-2, 1e-5, ("b", "a"))
+
+
+def test_op_attr_changes_key():
+    a = _gemm_program()
+    b = _gemm_program()
+    b.graph.node("mm").attrs["transpose_b"] = True
+    assert fingerprint_program(a) != fingerprint_program(b)
+
+
+def test_canonical_map_is_topo_positional():
+    p = _gemm_program()
+    nm = canonical_name_map(p.graph)
+    assert sorted(nm.values()) == sorted(f"n{i}" for i in range(len(nm)))
+
+
+def test_suite_gemm_family_distinct_keys():
+    """Different problems must not collide; rebuilt identical problems must."""
+    specs = [s for s in load_specs() if s.family == "gemm"]
+    keys = {}
+    for s in specs:
+        ci = build_program(s.builder, s.dims("ci"), "naive", meta=s.meta)
+        bench = build_program(s.builder, s.dims("bench"), "naive", meta=s.meta)
+        keys[s.name] = fingerprint_job(ci, bench, "v5e", s.target_dtype,
+                                       s.rtol, s.atol, tuple(s.tags))
+    assert len(set(keys.values())) == len(keys)
+    s = specs[0]
+    again = fingerprint_job(
+        build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+        build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+        "v5e", s.target_dtype, s.rtol, s.atol, tuple(s.tags))
+    assert again == keys[s.name]
+
+
+def test_program_canonical_roundtrip_stability():
+    p = _gemm_program()
+    assert program_canonical(p) == program_canonical(p.copy())
