@@ -49,8 +49,10 @@ def run(csv_path=None, families=None, workers=1, cache_path=None,
     print(f"100% correct:      {summary.all_correct} (paper: 100%)")
     if stats:
         print(f"engine:            {stats.jobs} jobs, "
-              f"{stats.cache_hits} cache hits, "
+              f"{stats.cache_hits} exact hits, "
               f"{stats.cache_misses} misses, "
+              f"{stats.family_transfers} family transfers, "
+              f"{stats.transfer_fallbacks} transfer fallbacks, "
               f"{stats.replay_fallbacks} replay fallbacks")
     return summary
 

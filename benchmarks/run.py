@@ -2,11 +2,19 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only l2|fa|roofline|ablations|dryrun]
                                             [--workers N] [--l2-runs N]
+                                            [--baseline BENCH_l2.json]
 
 Prints per-kernel tables and a ``name,us_per_call,derived`` CSV summary.
 ``--only l2`` additionally writes the machine-readable ``BENCH_l2.json``
-artifact (per-kernel ``us_per_call``, speedups, cache hit/miss counts,
+artifact (per-kernel ``us_per_call``, speedups, cache/transfer counts,
 geomeans) so the perf trajectory is trackable across PRs.
+
+``--baseline`` is the regression gate: the previous artifact is loaded
+*before* the run (so the same path can serve as both baseline and output),
+per-kernel ``us_per_call`` is diffed against it, and the process exits
+non-zero if any kernel regressed by more than ``--regression-threshold``
+(default 5%). ``scripts/ci.sh`` wires this in whenever a baseline artifact
+exists.
 """
 
 from __future__ import annotations
@@ -17,6 +25,55 @@ import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+REGRESSION_THRESHOLD = 0.05
+
+
+def diff_against_baseline(artifact: dict, baseline: dict,
+                          threshold: float = REGRESSION_THRESHOLD) -> dict:
+    """Per-kernel ``us_per_call`` diff of a fresh l2 artifact against a
+    previous one. Returns ``{"regressions": [...], "improvements": [...],
+    "new": [...], "removed": [...]}`` where each regression/improvement row
+    is ``(name, baseline_us, new_us, ratio)``. A kernel regresses when its
+    time grows by more than ``threshold`` (relative)."""
+    base = {k["name"]: float(k["us_per_call"])
+            for k in baseline.get("kernels", [])}
+    seen = set()
+    regressions, improvements, new = [], [], []
+    for k in artifact.get("kernels", []):
+        name, us = k["name"], float(k["us_per_call"])
+        if name not in base:
+            new.append(name)
+            continue
+        seen.add(name)
+        # a degenerate 0us baseline can never be beaten fairly: any real
+        # time must count as a regression, not be masked by a ratio of 1
+        ratio = (us / base[name] if base[name] > 0
+                 else float("inf") if us > 0 else 1.0)
+        if ratio > 1.0 + threshold:
+            regressions.append((name, base[name], us, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, base[name], us, ratio))
+    removed = sorted(set(base) - seen)
+    return {"regressions": regressions, "improvements": improvements,
+            "new": new, "removed": removed}
+
+
+def print_baseline_report(diff: dict, threshold: float) -> None:
+    print(f"\n== baseline diff (>{threshold:.0%} = regression) ==")
+    for name, b, n, r in diff["improvements"]:
+        speedup = f"{1/r:.2f}x faster" if r > 0 else "now ~0us"
+        print(f"  IMPROVED  {name:28s} {b:10.2f}us -> {n:10.2f}us "
+              f"({speedup})")
+    for name in diff["new"]:
+        print(f"  NEW       {name}")
+    for name in diff["removed"]:
+        print(f"  REMOVED   {name} (lost coverage fails the gate)")
+    for name, b, n, r in diff["regressions"]:
+        print(f"  REGRESSED {name:28s} {b:10.2f}us -> {n:10.2f}us "
+              f"({r:.2f}x slower)")
+    if not diff["regressions"] and not diff["removed"]:
+        print("  no regressions")
 
 
 def _l2_artifact(summary) -> dict:
@@ -37,6 +94,7 @@ def _l2_artifact(summary) -> dict:
                 "tflops_optimized": r.tflops_optimized,
                 "correct": r.correct,
                 "cache_hit": r.cache_hit,
+                "transfer": r.transfer,
             }
             for r in summary.results
         ],
@@ -62,18 +120,63 @@ def main() -> None:
                          "result cache)")
     ap.add_argument("--l2-json", default="BENCH_l2.json",
                     help="path of the l2 artifact (written for --only l2)")
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_l2.json to diff against; exit "
+                         "non-zero on per-kernel regressions")
+    ap.add_argument("--regression-threshold", type=float,
+                    default=REGRESSION_THRESHOLD,
+                    help="relative us_per_call growth that counts as a "
+                         "regression (default 0.05)")
     args = ap.parse_args()
+    if args.baseline and args.only not in (None, "l2"):
+        ap.error(f"--baseline gates the l2 suite; it does nothing with "
+                 f"--only {args.only}")
     csv_rows = []
+    regressions = []
 
     if args.only in (None, "l2"):
+        # load the baseline before running: the artifact path may be the
+        # same file we are about to overwrite
+        baseline = None
+        baseline_path = None
+        if args.baseline:
+            bp = pathlib.Path(args.baseline)
+            if bp.exists():
+                try:
+                    baseline = json.loads(bp.read_text())
+                    baseline_path = bp.resolve()
+                except json.JSONDecodeError as e:
+                    # a torn artifact (killed run) must not wedge CI forever
+                    print(f"baseline {bp} is corrupt ({e}); "
+                          f"skipping regression gate")
+            else:
+                print(f"baseline {bp} not found; skipping regression gate")
         from benchmarks.kernelbench_l2 import run as run_l2
         summary = run_l2(workers=args.workers, runs=args.l2_runs)
         for r in summary.results:
             csv_rows.append((r.name, r.optimized_us,
                              f"x{r.speedup_vs_eager:.2f}_vs_eager"))
+        artifact = _l2_artifact(summary)
         out = pathlib.Path(args.l2_json)
-        out.write_text(json.dumps(_l2_artifact(summary), indent=2))
-        print(f"\nwrote {out}")
+        if baseline is not None:
+            diff = diff_against_baseline(artifact, baseline,
+                                         args.regression_threshold)
+            print_baseline_report(diff, args.regression_threshold)
+            # removed kernels are lost coverage, not a pass
+            regressions = diff["regressions"] + [
+                (name, None, None, None) for name in diff["removed"]]
+        if regressions and out.resolve() == baseline_path:
+            # never ratchet the baseline down: a failing run must not
+            # overwrite the artifact it failed against, or a simple re-run
+            # would accept the regression
+            print(f"\nNOT writing {out} (gate failed against it)")
+        else:
+            # atomic write: a killed run must not leave a torn artifact
+            # for the next gate to choke on
+            tmp = out.with_name(out.name + ".tmp")
+            tmp.write_text(json.dumps(artifact, indent=2))
+            tmp.replace(out)
+            print(f"\nwrote {out}")
 
     if args.only in (None, "fa"):
         from benchmarks.flash_attention import run as run_fa
@@ -96,6 +199,12 @@ def main() -> None:
         if isinstance(us, tuple):
             name, us, derived = us
         print(f"{name},{us:.2f},{derived}")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} kernel(s) regressed "
+              f">{args.regression_threshold:.0%} or went missing "
+              f"vs {args.baseline}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -6,3 +6,11 @@ cd "$(dirname "$0")/.."
 
 python -m compileall -q src tests benchmarks examples
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Perf regression gate: when a previous l2 artifact exists, re-run the suite
+# and fail on any per-kernel us_per_call regression >5% against it (the run
+# overwrites BENCH_l2.json with the fresh numbers on success).
+if [ -f BENCH_l2.json ]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only l2 --baseline BENCH_l2.json
+fi

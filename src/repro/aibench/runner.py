@@ -40,6 +40,8 @@ class KernelResult:
     stage_log: List
     tflops_optimized: float
     cache_hit: bool = False
+    transfer: bool = False          # warm-started from a family neighbor
+    seed_steps: int = 0
 
     @property
     def speedup_vs_eager(self) -> float:
@@ -112,7 +114,8 @@ class KernelRunner:
             naive_us=t_naive * 1e6, optimized_us=t_opt * 1e6,
             correct=cmp_res.correct, stage_log=res.stage_records,
             tflops_optimized=opt_cost.tflops_effective,
-            cache_hit=eres.cache_hit)
+            cache_hit=eres.cache_hit, transfer=eres.transfer,
+            seed_steps=eres.seed_steps)
 
         if self.logger:
             flops = spec.flops("bench") or res.bench_program.original_flops
@@ -124,7 +127,8 @@ class KernelRunner:
                                 flops=flops, tflops=flops / (us * 1e6),
                                 time_us=us, dims=spec.dims("bench"),
                                 note=f"correct={cmp_res.correct} "
-                                     f"cache_hit={eres.cache_hit}")
+                                     f"cache_hit={eres.cache_hit} "
+                                     f"transfer={eres.transfer}")
         if self.measure_wallclock:
             ci_in = make_inputs(res.ci_program.graph, seed=1)
             ci_par = make_params(res.ci_program.graph, seed=0)
@@ -175,6 +179,10 @@ class SuiteSummary:
     def cache_hits(self) -> int:
         return sum(1 for r in self.results if r.cache_hit)
 
+    @property
+    def transfers(self) -> int:
+        return sum(1 for r in self.results if r.transfer)
+
 
 class SuiteRunner:
     def __init__(self, pipeline: Optional[ForgePipeline] = None,
@@ -206,7 +214,8 @@ class SuiteRunner:
             r = self.runner.finish(spec, eres)
             results.append(r)
             if verbose:
-                hit = " cache" if r.cache_hit else ""
+                hit = (" cache" if r.cache_hit
+                       else f" transfer({r.seed_steps})" if r.transfer else "")
                 print(f"  {r.name:28s} [{r.family:7s}] eager={r.eager_us:9.1f}us "
                       f"compile={r.compiled_us:9.1f}us naive={r.naive_us:10.1f}us "
                       f"-> opt={r.optimized_us:9.1f}us  "

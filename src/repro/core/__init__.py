@@ -7,7 +7,8 @@ from repro.core.analyzer import analyze
 from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
-                               OptimizationEngine, ResultCache)
+                               OptimizationEngine)
+from repro.core.result_store import ResultCache, ResultStore
 from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
 from repro.core.pipeline import ForgePipeline, PipelineResult, StageRecord
 from repro.core.planner import plan, DEFAULT_ORDER, HARD_DEPS
@@ -21,5 +22,6 @@ __all__ = [
     "PipelineResult", "StageRecord", "plan", "DEFAULT_ORDER", "HARD_DEPS",
     "compile_and_verify", "VerifyReport", "SUCCESS",
     "OptimizationEngine", "KernelJob", "EngineResult", "EngineStats",
-    "ResultCache", "StageScheduler", "TransformLog", "TransformStep",
+    "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
+    "TransformStep",
 ]

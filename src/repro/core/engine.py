@@ -1,5 +1,5 @@
-"""Fleet-scale optimization engine: concurrent multi-kernel scheduling with
-fingerprint-keyed result caching.
+"""Fleet-scale optimization engine: concurrent multi-kernel scheduling over
+a transfer-aware result store.
 
 The paper runs Xe-Forge over 97 KernelBench-L2 kernels; at that scale the
 single-kernel ``ForgePipeline.optimize`` loop wastes most of its work —
@@ -13,14 +13,23 @@ The :class:`OptimizationEngine` fixes both axes:
   in submission order, and history priors are frozen once per batch so
   serial and concurrent runs produce identical results kernel-for-kernel.
 
-* **Result caching** — a persistent :class:`ResultCache` keyed by the
-  canonical structural fingerprint of (graph, schedule, spec, tolerances)
-  (:mod:`repro.ir.fingerprint`). A hit replays the recorded
-  :class:`TransformLog` — one verification per accepted transform instead of
-  the full proposal search — and cross-checks that the replayed schedule is
-  bit-identical to the cached canonical schedule. Any divergence falls back
-  to full optimization, so the cache can never produce a wrong result, only
-  a slower path.
+* **Exact replay** — the :class:`ResultStore` (``repro.core.result_store``)
+  keys entries on the canonical structural fingerprint of (graph, schedule,
+  spec, tolerances) (:mod:`repro.ir.fingerprint`) *plus the KB content hash*
+  — editing any KB YAML invalidates recorded sequences instead of replaying
+  them forever. A hit replays the recorded :class:`TransformLog` — one
+  verification per accepted transform instead of the full proposal search —
+  and cross-checks that the replayed schedule is bit-identical to the cached
+  canonical schedule. Any divergence falls back, so the cache can never
+  produce a wrong result, only a slower path.
+
+* **Family transfer** — on an exact miss, the rank-abstracted *family*
+  fingerprint (same builder, different dims) is probed; a neighbor's log is
+  handed to the stage scheduler as a speculative warm start
+  (``StageScheduler.apply_seed``): each logged step is verified on the
+  job's real shapes and the full proposal search resumes from wherever the
+  transfer diverges. This is the paper's "the underlying optimization
+  patterns remain largely consistent" premise made operational.
 
 * **Warm starts** — the shared :class:`History` records every stage outcome;
   its success-count priors reorder proposer candidates for subsequent
@@ -30,16 +39,21 @@ The :class:`OptimizationEngine` fixes both axes:
 from __future__ import annotations
 
 import dataclasses
-import json
+import hashlib
 import pathlib
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.result_store import ResultCache, ResultStore
 from repro.core.stage_scheduler import TransformLog
-from repro.ir.fingerprint import fingerprint_job, program_canonical
+from repro.ir.fingerprint import (fingerprint_family, fingerprint_job,
+                                  program_canonical)
 from repro.ir.schedule import KernelProgram
+
+__all__ = ["KernelJob", "EngineResult", "EngineStats", "OptimizationEngine",
+           "ResultCache", "ResultStore"]
 
 
 @dataclasses.dataclass
@@ -62,6 +76,12 @@ class KernelJob:
                                self.rtol, self.atol, self.tags,
                                meta=self.meta, policy=policy)
 
+    def family_fingerprint(self, spec_name: str, policy: str = "") -> str:
+        """Rank-abstracted key: same builder at different dims collides."""
+        return fingerprint_family(self.ci_program, self.bench_program,
+                                  spec_name, self.target_dtype, self.tags,
+                                  meta=self.meta, policy=policy)
+
 
 @dataclasses.dataclass
 class EngineResult:
@@ -69,70 +89,22 @@ class EngineResult:
     result: PipelineResult
     fingerprint: str
     cache_hit: bool = False
+    transfer: bool = False          # warm-started from a family neighbor
+    seed_steps: int = 0             # neighbor steps that verified and stuck
 
 
 @dataclasses.dataclass
 class EngineStats:
     jobs: int = 0
-    cache_hits: int = 0
-    cache_misses: int = 0
-    replay_fallbacks: int = 0   # fingerprint hit but replay diverged
+    cache_hits: int = 0             # exact fingerprint hit, replay succeeded
+    cache_misses: int = 0           # full runs: no exact entry OR replay
+                                    # diverged (those also count a fallback)
+    replay_fallbacks: int = 0       # exact hit but replay diverged
+    family_transfers: int = 0       # exact miss, neighbor seed (partially) applied
+    transfer_fallbacks: int = 0     # neighbor found but no seed step applied
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
-
-
-class ResultCache:
-    """Persistent fingerprint → winning-transform-sequence store.
-
-    Entries hold the serialized :class:`TransformLog` plus the canonical form
-    of the optimized bench schedule (the bit-identity witness) and the
-    modeled timings. With a ``path`` the cache loads at construction and
-    rewrites the JSON on every put — crash-safe enough for a driver loop and
-    trivially inspectable. All access is lock-guarded for the worker pool.
-    """
-
-    def __init__(self, path: Optional[pathlib.Path] = None):
-        self.path = pathlib.Path(path) if path else None
-        self._entries: Dict[str, Dict[str, Any]] = {}
-        self._lock = threading.Lock()
-        if self.path and self.path.exists():
-            data = json.loads(self.path.read_text())
-            self._entries = dict(data.get("entries", {}))
-
-    def get(self, fingerprint: str) -> Optional[Dict[str, Any]]:
-        with self._lock:
-            return self._entries.get(fingerprint)
-
-    def put(self, fingerprint: str, entry: Dict[str, Any],
-            flush: bool = True):
-        """Insert an entry. ``flush=False`` defers the disk write (the
-        engine batches inserts and flushes once per run_batch so concurrent
-        workers don't serialize on whole-file rewrites)."""
-        with self._lock:
-            self._entries[fingerprint] = entry
-            if flush:
-                self._write_locked()
-
-    def flush(self):
-        with self._lock:
-            self._write_locked()
-
-    def _write_locked(self):
-        if self.path:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            self.path.write_text(json.dumps(
-                {"entries": self._entries}, indent=2))
-
-    def __len__(self) -> int:
-        with self._lock:
-            return len(self._entries)
-
-    def clear(self):
-        with self._lock:
-            self._entries.clear()
-            if self.path and self.path.exists():
-                self.path.unlink()
 
 
 class OptimizationEngine:
@@ -141,18 +113,34 @@ class OptimizationEngine:
     def __init__(self,
                  pipeline: Optional[ForgePipeline] = None,
                  workers: int = 1,
-                 cache: Optional[ResultCache] = None,
-                 cache_path: Optional[pathlib.Path] = None):
+                 cache: Optional[ResultStore] = None,
+                 cache_path: Optional[pathlib.Path] = None,
+                 cache_max_entries: int = 512):
         self.pipeline = pipeline or ForgePipeline()
         self.workers = max(1, int(workers))
-        self.cache = cache or ResultCache(cache_path)
+        self.cache = cache or ResultStore(cache_path,
+                                          max_entries=cache_max_entries)
         self.stats = EngineStats()
         self._stats_lock = threading.Lock()
-        # per-fingerprint in-flight locks: duplicate jobs submitted in one
-        # batch coalesce (first computes, the rest wait and replay) instead
-        # of racing N full searches
+        # per-key in-flight locks: duplicate jobs submitted in one batch
+        # coalesce (first computes, the rest wait and replay) instead of
+        # racing N full searches; pruned after every run_batch so the dict
+        # doesn't grow without bound across a long-lived driver
         self._inflight: Dict[str, threading.Lock] = {}
         self._inflight_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _keys(self, job: KernelJob) -> tuple:
+        """(exact store key, family key). The exact key folds in the KB
+        content hash so a KB edit turns every previously-exact hit into a
+        miss; the family key deliberately does not (transferred seeds are
+        re-verified step-by-step, so stale ones are safe, just weaker)."""
+        spec = self.pipeline.spec.name
+        policy = self.pipeline.policy_signature()
+        fp = job.fingerprint(spec, policy)
+        kb_hash = self.pipeline.kb.content_hash()
+        exact = hashlib.sha256(f"{fp}|kb={kb_hash}".encode()).hexdigest()
+        return exact, job.family_fingerprint(spec, policy)
 
     # ------------------------------------------------------------------
     def submit(self, job: KernelJob) -> EngineResult:
@@ -161,54 +149,106 @@ class OptimizationEngine:
         return self.run_batch([job])[0]
 
     def run_batch(self, jobs: Sequence[KernelJob]) -> List[EngineResult]:
-        """Optimize a batch. Results come back in submission order. Priors
-        are frozen once per batch: a job's candidate ordering never depends
-        on which other jobs happened to finish first, so ``workers=1`` and
-        ``workers=N`` are result-equivalent."""
+        """Optimize a batch. Results come back in submission order.
+
+        Determinism: priors are frozen once per batch and transfer seeds
+        once per *phase*, so a job's candidate ordering never depends on
+        which other jobs happened to finish first — ``workers=1`` and
+        ``workers=N`` are result-equivalent. Scheduling is two-phase: the
+        first job of each family (the leader) runs in phase 1 against the
+        pre-batch store; remaining family members run in phase 2 seeded
+        from a snapshot taken at the phase boundary, so a cold leader can
+        seed its in-batch siblings without making results racy."""
         priors = (self.pipeline.history.snapshot_priors()
                   if self.pipeline.warm_start else {})
         try:
-            if self.workers <= 1 or len(jobs) <= 1:
-                return [self._run_job(job, priors) for job in jobs]
-            with ThreadPoolExecutor(max_workers=self.workers) as pool:
-                futures = [pool.submit(self._run_job, job, priors)
-                           for job in jobs]
-                return [f.result() for f in futures]
+            keys = [self._keys(job) for job in jobs]
+            leaders: List[int] = []
+            followers: List[int] = []
+            seen = set()
+            for i, (_, fam) in enumerate(keys):
+                (followers if fam in seen else leaders).append(i)
+                seen.add(fam)
+            results: List[Optional[EngineResult]] = [None] * len(jobs)
+            for phase in (leaders, followers):
+                if not phase:
+                    continue
+                seeds = {fam: self.cache.family_members(fam)
+                         for fam in {keys[i][1] for i in phase}}
+                if self.workers <= 1 or len(phase) <= 1:
+                    for i in phase:
+                        results[i] = self._run_job(jobs[i], keys[i],
+                                                   priors, seeds)
+                else:
+                    with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                        futures = [(i, pool.submit(self._run_job, jobs[i],
+                                                   keys[i], priors, seeds))
+                                   for i in phase]
+                        for i, f in futures:
+                            results[i] = f.result()
+            return results
         finally:
             self.cache.flush()
+            # prune the coalescing locks: every job of this batch has
+            # finished, so the entries are dead weight (a concurrent
+            # run_batch re-creates any lock it still needs; worst case two
+            # overlapping batches duplicate one search, never deadlock)
+            with self._inflight_lock:
+                self._inflight.clear()
 
     # ------------------------------------------------------------------
-    def _run_job(self, job: KernelJob,
-                 priors: Mapping[str, int]) -> EngineResult:
-        fp = job.fingerprint(self.pipeline.spec.name,
-                             self.pipeline.policy_signature())
+    def _run_job(self, job: KernelJob, keys: tuple,
+                 priors: Mapping[str, int],
+                 seeds: Mapping[str, list]) -> EngineResult:
+        exact_key, family_key = keys
         with self._inflight_lock:
-            job_lock = self._inflight.setdefault(fp, threading.Lock())
+            job_lock = self._inflight.setdefault(exact_key, threading.Lock())
         with job_lock:
-            return self._run_job_locked(job, fp, priors)
+            return self._run_job_locked(job, exact_key, family_key, priors,
+                                        seeds)
 
-    def _run_job_locked(self, job: KernelJob, fp: str,
-                        priors: Mapping[str, int]) -> EngineResult:
-        entry = self.cache.get(fp)
+    def _run_job_locked(self, job: KernelJob, exact_key: str,
+                        family_key: str, priors: Mapping[str, int],
+                        seeds: Mapping[str, list]) -> EngineResult:
+        entry = self.cache.get(exact_key)
         if entry is not None:
             replayed = self._replay(job, entry, priors)
             if replayed is not None:
                 with self._stats_lock:
                     self.stats.jobs += 1
                     self.stats.cache_hits += 1
-                return EngineResult(job, replayed, fp, cache_hit=True)
+                return EngineResult(job, replayed, exact_key, cache_hit=True)
             with self._stats_lock:
                 self.stats.replay_fallbacks += 1
+
+        # exact miss (or diverged replay): probe the phase's frozen family
+        # snapshot for a transfer seed. The job's own exact entry is
+        # excluded — when its replay just diverged, re-seeding from the very
+        # log that failed cannot help — but another family member still can.
+        seed_log: Optional[TransformLog] = None
+        for neighbor_key, log_list in seeds.get(family_key, []):
+            if neighbor_key != exact_key and log_list:
+                seed_log = TransformLog.from_list(log_list)
+                break
 
         result = self.pipeline.optimize(
             job.name, job.ci_program, job.bench_program, tags=job.tags,
             target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
-            meta=job.meta, priors=priors)
-        self.cache.put(fp, self._entry_for(result), flush=False)
+            meta=job.meta, priors=priors, seed_log=seed_log)
+        self.cache.put(exact_key, self._entry_for(result),
+                       family=family_key, flush=False)
+        transferred = seed_log is not None and result.seed_steps_applied > 0
         with self._stats_lock:
             self.stats.jobs += 1
             self.stats.cache_misses += 1
-        return EngineResult(job, result, fp, cache_hit=False)
+            if seed_log is not None:
+                if transferred:
+                    self.stats.family_transfers += 1
+                else:
+                    self.stats.transfer_fallbacks += 1
+        return EngineResult(job, result, exact_key, cache_hit=False,
+                            transfer=transferred,
+                            seed_steps=result.seed_steps_applied)
 
     # ------------------------------------------------------------------
     def _entry_for(self, result: PipelineResult) -> Dict[str, Any]:

@@ -18,6 +18,7 @@ from typing import Dict, List, Mapping, Optional
 
 import jax.numpy as jnp
 
+from repro.core.analyzer import analyze
 from repro.core.context import ProblemContext
 from repro.core.history import History
 from repro.core.llm import LLMClient
@@ -46,6 +47,12 @@ class PipelineResult:
     transform_log: Optional[TransformLog] = None
     cache_hit: bool = False
     clamped: bool = False            # pipeline-level never-degrade triggered
+    seed_steps_applied: int = 0      # family-transfer steps that stuck
+
+    @property
+    def proposals(self) -> int:
+        """Total stage-loop iterations spent (transfer's economy metric)."""
+        return sum(r.iterations for r in self.stage_records)
 
     @property
     def speedup(self) -> float:
@@ -131,21 +138,34 @@ class ForgePipeline:
                  tags=(), target_dtype: str = "bfloat16",
                  rtol: float = 1e-2, atol: float = 1e-5,
                  meta: Optional[Dict] = None,
-                 priors: Optional[Mapping[str, int]] = None) -> PipelineResult:
+                 priors: Optional[Mapping[str, int]] = None,
+                 seed_log: Optional[TransformLog] = None) -> PipelineResult:
         """Optimize a single kernel job. This is the thin single-job wrapper;
         fleet submission (batching, caching, concurrency) lives in
         ``OptimizationEngine.run_batch``, which funnels back into the same
-        stage scheduler this method drives."""
+        stage scheduler this method drives. ``seed_log`` is a family
+        neighbor's transform sequence (engine transfer path): the scheduler
+        warm-starts from it, verifying each step on this job's real shapes,
+        and falls back to the full search from wherever it diverges."""
         ctx = self._prepare_ctx(name, ci_program, tags, target_dtype,
                                 rtol, atol, meta or {})
         original_cost = self.cost_model.program_cost(bench_program)
         scheduler = self.make_scheduler(priors)
 
+        # apply a transfer seed once, up front: apply_seed is deterministic
+        # (same programs, same ctx), so re-locating and re-verifying the
+        # identical prefix on every best-of-k pass would be pure waste
+        prefix = None
+        if seed_log is not None and len(seed_log):
+            prefix = scheduler.apply_seed(seed_log, ci_program.copy(),
+                                          bench_program.copy(), ctx)
+
         best: Optional[PipelineResult] = None
         for pass_idx in range(max(1, self.k)):
             result = self._single_pass(scheduler, name, ci_program.copy(),
                                        bench_program.copy(), ctx,
-                                       original_cost, pass_idx)
+                                       original_cost, pass_idx,
+                                       prefix=prefix)
             if best is None or result.optimized_time < best.optimized_time:
                 best = result
         best.k_used = max(1, self.k)
@@ -155,10 +175,32 @@ class ForgePipeline:
     def _single_pass(self, scheduler: StageScheduler, name: str,
                      ci_prog: KernelProgram, bench_prog: KernelProgram,
                      ctx: ProblemContext, original_cost: ProgramCost,
-                     pass_idx: int) -> PipelineResult:
-        out: ScheduleOutcome = scheduler.run(name, ci_prog, bench_prog, ctx,
-                                             pass_idx=pass_idx,
-                                             history=self.history)
+                     pass_idx: int,
+                     prefix=None) -> PipelineResult:
+        """One stage-loop pass. ``prefix`` is a pre-applied transfer seed
+        (``StageScheduler.apply_seed`` output): the pass continues the full
+        search from the seeded programs and the seed's records/log are
+        stitched onto the outcome. A partially-applicable seed can never
+        produce a worse result than cold — remaining issues still get their
+        full proposal search, and every seeded step was verified faster."""
+        if prefix is not None:
+            seed_ci, seed_bench, seed_records, seed_applied, applied = prefix
+            out: ScheduleOutcome = scheduler.run(
+                name, seed_ci.copy(), seed_bench.copy(), ctx,
+                pass_idx=pass_idx, history=self.history)
+            # issues_initial reports the PRE-seed inventory (ci_prog /
+            # bench_prog are the unseeded copies), so warm and cold runs of
+            # the same kernel describe the same starting point
+            out = ScheduleOutcome(
+                out.ci_program, out.bench_program,
+                list(seed_records) + out.records,
+                list(analyze(bench_prog, ctx)),
+                TransformLog(list(seed_applied.steps)
+                             + out.transform_log.steps),
+                seed_steps_applied=applied)
+        else:
+            out = scheduler.run(name, ci_prog, bench_prog, ctx,
+                                pass_idx=pass_idx, history=self.history)
         return self._finalize(name, out, original_cost)
 
     # ------------------------------------------------------------------
@@ -173,9 +215,11 @@ class ForgePipeline:
                                   out.bench_program, out.records,
                                   out.issues_initial,
                                   transform_log=out.transform_log,
-                                  cache_hit=cache_hit, clamped=True)
+                                  cache_hit=cache_hit, clamped=True,
+                                  seed_steps_applied=out.seed_steps_applied)
         return PipelineResult(name, original_cost.total_s, final_time,
                               out.ci_program, out.bench_program, out.records,
                               out.issues_initial,
                               transform_log=out.transform_log,
-                              cache_hit=cache_hit)
+                              cache_hit=cache_hit,
+                              seed_steps_applied=out.seed_steps_applied)

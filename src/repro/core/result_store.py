@@ -1,0 +1,221 @@
+"""Transfer-aware result store: the two-level index behind the fleet engine.
+
+PR 1's flat ``ResultCache`` was a pure memoizer — exact structural
+fingerprint in, recorded :class:`TransformLog` out. This subsystem turns it
+into the paper's "consistent optimization patterns" transfer mechanism with
+two index levels:
+
+* **Exact index** — fingerprint of (graph, schedule, spec, tolerances,
+  policy) *plus the KB content hash* (folded in by the engine). A hit means
+  the recorded winning sequence can be replayed verbatim and cross-checked
+  for bit-identity. Because the KB hash participates, editing any KB YAML
+  invalidates replay instead of pinning a stale sequence forever.
+
+* **Family index** — rank-abstracted fingerprint
+  (:func:`repro.ir.fingerprint.fingerprint_family`): same builder, different
+  dims collide. On an exact miss with a family hit the engine *transfers*:
+  the neighbor's log seeds the stage loop as a speculative warm start, each
+  step re-verified on the real shapes. Family lookups are not KB-versioned —
+  re-verification makes stale seeds safe, merely less effective.
+
+On-disk format (version 2)::
+
+    {"version": 2,
+     "entries": {"<exact_key>": {"family": "<family_key>",
+                                 "transform_log": [...],
+                                 "canonical_schedule": [...],
+                                 "original_time": ..., "optimized_time": ...,
+                                 "clamped": false, "name": "..."}}}
+
+Entries are kept in LRU order (dict order == recency; JSON round-trips it).
+Loads are *tolerant*: corrupt JSON or an unknown ``version`` discards the
+file and starts empty rather than crashing the driver. Writes are *atomic*:
+serialized to a sibling tmp file, then ``os.replace``'d into place, so a
+crash mid-flush can never leave a torn file. Eviction drops the
+least-recently-used entry once ``max_entries`` is exceeded; the family index
+is maintained alongside.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import pathlib
+import threading
+from typing import Any, Dict, List, Optional
+
+log = logging.getLogger(__name__)
+
+STORE_VERSION = 2
+
+
+class ResultStore:
+    """Two-level (exact + family) LRU store of winning transform sequences.
+
+    All access is lock-guarded for the engine's worker pool. ``get``/``put``
+    keep the PR-1 ``ResultCache`` surface (the engine and older tests use
+    them), extended with the family index and eviction.
+    """
+
+    def __init__(self, path: Optional[pathlib.Path] = None,
+                 max_entries: int = 512):
+        self.path = pathlib.Path(path) if path else None
+        self.max_entries = max(1, int(max_entries))
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self._family: Dict[str, List[str]] = {}   # family_key -> MRU-last keys
+        self._lock = threading.Lock()
+        self.evictions = 0
+        if self.path and self.path.exists():
+            self._load()
+
+    # ------------------------------------------------------------------
+    def _load(self):
+        try:
+            data = json.loads(self.path.read_text())
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+            log.warning("result store %s is corrupt (%s); starting empty",
+                        self.path, e)
+            return
+        if not isinstance(data, dict) or data.get("version") != STORE_VERSION:
+            log.warning("result store %s has version %r (want %d); discarded",
+                        self.path, data.get("version") if isinstance(data, dict)
+                        else None, STORE_VERSION)
+            return
+        entries = data.get("entries", {})
+        if not isinstance(entries, dict):
+            return
+        for key, entry in entries.items():
+            if not isinstance(entry, dict):
+                continue
+            self._entries[key] = entry
+            self._index_family(key, entry.get("family"))
+        # honor this instance's cap even against a larger on-disk file
+        # (a replay-only run would otherwise never reach put's eviction)
+        self._evict_locked()
+
+    def _index_family(self, key: str, family: Optional[str]):
+        if family:
+            keys = self._family.setdefault(family, [])
+            if key in keys:
+                keys.remove(key)
+            keys.append(key)
+
+    # ------------------------------------------------------------------
+    def get(self, key: str) -> Optional[Dict[str, Any]]:
+        """Exact lookup. A hit refreshes the entry's LRU recency."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries[key] = self._entries.pop(key)   # move to MRU
+                self._index_family(key, entry.get("family"))
+            return entry
+
+    def _ranked_family_locked(self, family_key: str) -> List[str]:
+        """Family members ranked deterministically: best recorded speedup
+        first, exact key as tiebreak. Insertion (MRU) order is NOT used —
+        under a concurrent engine it reflects thread completion timing,
+        which must never leak into which neighbor seeds a later run."""
+        def rank(key: str):
+            e = self._entries[key]
+            orig = float(e.get("original_time") or 0.0)
+            opt = float(e.get("optimized_time") or 0.0)
+            speedup = orig / opt if orig > 0 and opt > 0 else 1.0
+            return (-speedup, key)
+        return sorted((k for k in self._family.get(family_key, [])
+                       if k in self._entries), key=rank)
+
+    def get_family(self, family_key: str,
+                   exclude: Optional[str] = None) -> Optional[Dict[str, Any]]:
+        """Best-ranked family member whose exact key is not ``exclude``
+        (the requester's own key — a diverged exact entry must not be
+        handed back as its own transfer seed)."""
+        with self._lock:
+            for key in self._ranked_family_locked(family_key):
+                if key != exclude:
+                    return self._entries[key]
+            return None
+
+    def put(self, key: str, entry: Dict[str, Any],
+            family: Optional[str] = None, flush: bool = True):
+        """Insert/refresh an entry. ``family`` threads the transfer index;
+        ``flush=False`` defers the disk write (the engine batches inserts and
+        flushes once per ``run_batch``)."""
+        with self._lock:
+            if family:
+                entry = dict(entry)
+                entry["family"] = family
+            old = self._entries.pop(key, None)
+            if old is not None:
+                # re-put under a different (or no) family: drop the stale
+                # index entry so get_family never serves a disowned key
+                old_fam = old.get("family")
+                if old_fam and old_fam != entry.get("family"):
+                    keys = self._family.get(old_fam, [])
+                    if key in keys:
+                        keys.remove(key)
+                    if not keys:
+                        self._family.pop(old_fam, None)
+            self._entries[key] = entry
+            self._index_family(key, entry.get("family"))
+            self._evict_locked()
+            if flush:
+                self._write_locked()
+
+    def _evict_locked(self):
+        while len(self._entries) > self.max_entries:
+            key = next(iter(self._entries))               # LRU = oldest
+            entry = self._entries.pop(key)
+            fam = entry.get("family")
+            if fam and fam in self._family:
+                keys = self._family[fam]
+                if key in keys:
+                    keys.remove(key)
+                if not keys:
+                    del self._family[fam]
+            self.evictions += 1
+
+    # ------------------------------------------------------------------
+    def flush(self):
+        with self._lock:
+            self._write_locked()
+
+    def _write_locked(self):
+        if not self.path:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        blob = json.dumps({"version": STORE_VERSION,
+                           "entries": self._entries}, indent=2)
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(blob)
+        os.replace(tmp, self.path)
+
+    def family_members(self, family_key: str) -> List:
+        """Ranked ``(exact_key, transform_log)`` snapshot of a family
+        (see :meth:`_ranked_family_locked`). The engine freezes these per
+        scheduling phase so transfer seeding does not depend on which
+        concurrent job finished first."""
+        with self._lock:
+            return [(k, list(self._entries[k].get("transform_log", [])))
+                    for k in self._ranked_family_locked(family_key)]
+
+    # ------------------------------------------------------------------
+    def family_sizes(self) -> Dict[str, int]:
+        with self._lock:
+            return {k: len(v) for k, v in self._family.items()}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            self._family.clear()
+            if self.path and self.path.exists():
+                self.path.unlink()
+
+
+# PR-1 name: the flat memoizer this store replaced. Kept as an alias so
+# drivers and tests written against the old surface keep working.
+ResultCache = ResultStore

@@ -133,6 +133,13 @@ class ScheduleOutcome:
     records: List[StageRecord]
     issues_initial: List
     transform_log: TransformLog
+    seed_steps_applied: int = 0      # transferred neighbor steps that stuck
+
+    @property
+    def proposals(self) -> int:
+        """Total stage-loop work: one per CoVeR iteration (seeded steps
+        count 1 verification each). The transfer acceptance metric."""
+        return sum(r.iterations for r in self.records)
 
 
 class StageScheduler:
@@ -236,6 +243,54 @@ class StageScheduler:
                                log)
 
     # ------------------------------------------------------------------
+    def _locate_step(self, step: TransformStep,
+                     bench_prog: KernelProgram,
+                     ctx: ProblemContext) -> Optional[Candidate]:
+        """Re-locate a logged transform among the current proposals: exact
+        description first, then canonical (rename-invariant) description,
+        then pattern id — the match key ladder shared by exact replay and
+        family transfer."""
+        issues = analyze(bench_prog, ctx)
+        stage_issues = [i for i in issues if i.stage == step.stage]
+        proposer = make_proposer(step.stage, self.kb, ctx)
+        cands = list(proposer.candidates(bench_prog, stage_issues, []))
+        cand = next((c for c in cands
+                     if c.description == step.description), None)
+        if cand is None and step.canonical_description:
+            # renamed structural twin: match on canonical descriptions
+            cand = next(
+                (c for c in cands
+                 if canonical_description(c.description, bench_prog.graph)
+                 == step.canonical_description), None)
+        if cand is None and step.pattern_id:
+            cand = next((c for c in cands
+                         if c.pattern_id == step.pattern_id), None)
+        return cand
+
+    def _apply_step(self, step: TransformStep, ci_prog: KernelProgram,
+                    bench_prog: KernelProgram, ctx: ProblemContext
+                    ) -> Optional[Tuple[KernelProgram, KernelProgram,
+                                        StageRecord, Candidate]]:
+        """Apply one logged step with full verification; None on divergence."""
+        cand = self._locate_step(step, bench_prog, ctx)
+        if cand is None:
+            return None
+        incumbent = self.cost_model.program_time(bench_prog)
+        try:
+            new_ci = cand.transform(ci_prog)
+            new_bench = cand.transform(bench_prog)
+        except Exception:  # noqa: BLE001 — divergence -> fall back
+            return None
+        report = compile_and_verify(new_ci, new_bench, incumbent, ctx,
+                                    self.kb, self.cost_model,
+                                    use_pallas=self.use_pallas_exec)
+        if not report.ok:
+            return None
+        record = StageRecord(step.stage, True, 1, report.speedup,
+                             cand.description, False)
+        return new_ci, new_bench, record, cand
+
+    # ------------------------------------------------------------------
     def replay(self, log: TransformLog, ci_prog: KernelProgram,
                bench_prog: KernelProgram, ctx: ProblemContext
                ) -> Optional[Tuple[KernelProgram, KernelProgram,
@@ -247,35 +302,39 @@ class StageScheduler:
         correctness-safe."""
         records: List[StageRecord] = []
         for step in log:
-            issues = analyze(bench_prog, ctx)
-            stage_issues = [i for i in issues if i.stage == step.stage]
-            proposer = make_proposer(step.stage, self.kb, ctx)
-            cands = list(proposer.candidates(bench_prog, stage_issues, []))
-            cand = next((c for c in cands
-                         if c.description == step.description), None)
-            if cand is None and step.canonical_description:
-                # renamed structural twin: match on canonical descriptions
-                cand = next(
-                    (c for c in cands
-                     if canonical_description(c.description, bench_prog.graph)
-                     == step.canonical_description), None)
-            if cand is None and step.pattern_id:
-                cand = next((c for c in cands
-                             if c.pattern_id == step.pattern_id), None)
-            if cand is None:
+            out = self._apply_step(step, ci_prog, bench_prog, ctx)
+            if out is None:
                 return None
-            incumbent = self.cost_model.program_time(bench_prog)
-            try:
-                new_ci = cand.transform(ci_prog)
-                new_bench = cand.transform(bench_prog)
-            except Exception:  # noqa: BLE001 — divergence -> fall back
-                return None
-            report = compile_and_verify(new_ci, new_bench, incumbent, ctx,
-                                        self.kb, self.cost_model,
-                                        use_pallas=self.use_pallas_exec)
-            if not report.ok:
-                return None
-            records.append(StageRecord(step.stage, True, 1, report.speedup,
-                                       cand.description, False))
-            ci_prog, bench_prog = new_ci, new_bench
+            ci_prog, bench_prog, record, _ = out
+            records.append(record)
         return ci_prog, bench_prog, records
+
+    # ------------------------------------------------------------------
+    def apply_seed(self, seed: TransformLog, ci_prog: KernelProgram,
+                   bench_prog: KernelProgram, ctx: ProblemContext
+                   ) -> Tuple[KernelProgram, KernelProgram,
+                              List[StageRecord], TransformLog, int]:
+        """Speculatively apply a *family neighbor's* transform log (same
+        builder, different dims). Unlike :meth:`replay`, divergence is not
+        failure: each step is verified on this job's real shapes and the
+        first step that no longer locates, transforms, or verifies simply
+        ends the seeded prefix — the caller continues the full search from
+        there. Verified steps are appended to a fresh log with descriptions
+        re-canonicalized against *this* job's graph."""
+        records: List[StageRecord] = []
+        log = TransformLog()
+        applied = 0
+        for step in seed:
+            out = self._apply_step(step, ci_prog, bench_prog, ctx)
+            if out is None:
+                break
+            new_ci, new_bench, record, cand = out
+            # canonicalize against the pre-transform graph — that's what the
+            # candidate description was generated from (mirrors run())
+            canon = canonical_description(cand.description, bench_prog.graph)
+            records.append(record)
+            log.append(step.stage, cand.pattern_id, cand.description, canon)
+            ci_prog, bench_prog = new_ci, new_bench
+            applied += 1
+        return ci_prog, bench_prog, records, log, applied
+

@@ -86,6 +86,90 @@ def program_canonical(program: KernelProgram) -> Dict:
     }
 
 
+# ----------------------------------------------------------------------
+# Family (near-miss) canonicalization: same builder, different dims.
+#
+# The exact fingerprint above keys replay — any dim change must miss. The
+# *family* form is the transfer key: concrete extents are abstracted to
+# symbolic ranks (a shape becomes its rank, dim-lists in attrs become their
+# length) and per-kernel tile configs collapse to a presence marker, so a
+# GEMM at (4096, 4096, 1024) and the same GEMM at (512, 512, 256) collide.
+# A family hit is only ever a *speculative* warm start — every transferred
+# step is re-verified on the real shapes — so the abstraction can afford to
+# be aggressive.
+# ----------------------------------------------------------------------
+
+def _family_attr(value):
+    """Dim-abstracted attr encoding: int sequences (target shapes, kernel
+    sizes, strides) reduce to their rank; scalars and strings pass through."""
+    if isinstance(value, (list, tuple)):
+        if value and all(isinstance(v, int) and not isinstance(v, bool)
+                         for v in value):
+            return ["rank", len(value)]
+        return [_family_attr(v) for v in value]
+    if isinstance(value, dict):
+        return {str(k): _family_attr(v) for k, v in sorted(value.items())}
+    return value
+
+
+def family_canonical(program: KernelProgram) -> Dict:
+    """Rank-abstracted structural description: node shapes reduce to their
+    rank, attrs lose concrete extents, and Pallas tile configs reduce to a
+    presence marker. Two programs from the same builder at different dims
+    produce identical family forms."""
+    nm = canonical_name_map(program.graph)
+    nodes = []
+    for n in program.graph.toposorted():
+        nodes.append([
+            nm[n.name], n.op,
+            [nm[i] for i in n.inputs],
+            {str(k): _family_attr(v) for k, v in sorted(n.attrs.items())},
+            len(n.shape), str(n.dtype),
+        ])
+    groups = []
+    for i, grp in enumerate(program.schedule.groups):
+        groups.append([
+            f"g{i}",
+            [nm[n] for n in grp.nodes],
+            nm[grp.root],
+            grp.impl,
+            grp.config is not None,
+            {str(k): str(v) for k, v in sorted(grp.operand_layouts.items())},
+            bool(grp.prefetch),
+        ])
+    return {
+        "graph": [nodes, [nm[o] for o in program.graph.outputs]],
+        "schedule": [groups, program.schedule.compute_dtype],
+        "meta": json.loads(json.dumps(program.meta, sort_keys=True,
+                                      default=str)),
+    }
+
+
+def fingerprint_family(ci_program: KernelProgram,
+                       bench_program: KernelProgram,
+                       spec_name: str,
+                       target_dtype: str,
+                       tags: Sequence[str] = (),
+                       meta: Optional[Dict] = None,
+                       policy: str = "") -> str:
+    """Transfer key for a job: rank-abstracted structure plus everything that
+    scopes the proposer search space (spec, dtype, tags, meta, policy).
+    Tolerances deliberately do NOT participate — a transferred log is
+    verified step-by-step at the receiving job's own tolerances."""
+    payload = {
+        "ci": family_canonical(ci_program),
+        "bench": family_canonical(bench_program),
+        "spec": spec_name,
+        "target_dtype": target_dtype,
+        "tags": sorted(str(t) for t in tags),
+        "meta": json.loads(json.dumps(meta or {}, sort_keys=True,
+                                      default=str)),
+        "policy": policy,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def fingerprint_program(program: KernelProgram,
                         spec_name: str = "",
                         target_dtype: str = "",

@@ -15,6 +15,7 @@ warning, so the KB can evolve independently of the pipeline code.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import logging
 import pathlib
 from typing import Any, Dict, List, Optional
@@ -91,10 +92,34 @@ class Example:
 
 class KnowledgeBase:
     def __init__(self, constraints: List[Constraint], patterns: List[Pattern],
-                 examples: List[Example]):
+                 examples: List[Example],
+                 content_hash: Optional[str] = None):
         self.constraints = constraints
         self.patterns = patterns
         self.examples = examples
+        self._content_hash = content_hash
+
+    # ------------------------------------------------------------------
+    def content_hash(self) -> str:
+        """Stable digest of the KB's *content*. ``load`` hashes the raw
+        bytes of every YAML/example file it read, so any edit — even a
+        comment — produces a new hash; programmatically built KBs fall back
+        to hashing their serialized entries. The optimization engine folds
+        this into exact cache keys: a KB edit invalidates recorded transform
+        sequences instead of replaying them forever (family-transfer seeds
+        survive, since every transferred step is re-verified).
+
+        Loaded KBs memoize the raw-bytes hash (editing the files on disk
+        requires a reload anyway); programmatically built KBs recompute on
+        every call so in-process mutation of constraints/patterns/examples
+        is reflected immediately."""
+        if self._content_hash is not None:
+            return self._content_hash
+        h = hashlib.sha256()
+        for kind in (self.constraints, self.patterns, self.examples):
+            for entry in kind:
+                h.update(repr(dataclasses.astuple(entry)).encode())
+        return h.hexdigest()
 
     # ------------------------------------------------------------------
     @classmethod
@@ -103,8 +128,12 @@ class KnowledgeBase:
         constraints: List[Constraint] = []
         patterns: List[Pattern] = []
         examples: List[Example] = []
+        hasher = hashlib.sha256()
         for f in sorted(root.glob("*.yaml")):
-            doc = yaml.safe_load(f.read_text()) or {}
+            raw = f.read_text()
+            hasher.update(f.name.encode())
+            hasher.update(raw.encode())
+            doc = yaml.safe_load(raw) or {}
             for c in doc.get("constraints", []) or []:
                 stages = [s for s in map(_norm_stage, c.get("stages", []))
                           if s is not None]
@@ -133,19 +162,25 @@ class KnowledgeBase:
                     action=p.get("action", {}) or {}, source_file=f.name))
         idx = root / "examples" / "index.yaml"
         if idx.exists():
-            doc = yaml.safe_load(idx.read_text()) or {}
+            raw = idx.read_text()
+            hasher.update(b"examples/index.yaml")
+            hasher.update(raw.encode())
+            doc = yaml.safe_load(raw) or {}
             for e in doc.get("examples", []) or []:
                 stages = [s for s in map(_norm_stage, e.get("stages", []))
                           if s is not None]
                 code_path = idx.parent / e.get("file", "")
                 code = code_path.read_text() if code_path.exists() else ""
+                hasher.update(e.get("file", "").encode())
+                hasher.update(code.encode())
                 examples.append(Example(
                     id=e["id"], file=e.get("file", ""), stages=stages,
                     optimizations=list(e.get("optimizations", []) or []),
                     expected_speedup=e.get("expected_speedup", ""),
                     applicability=list(e.get("applicability", []) or []),
                     code=code))
-        return cls(constraints, patterns, examples)
+        return cls(constraints, patterns, examples,
+                   content_hash=hasher.hexdigest())
 
     # ------------------------------------------------------------------
     def critical_constraints(self) -> List[Constraint]:

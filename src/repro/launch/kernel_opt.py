@@ -58,11 +58,15 @@ def _gemm_program(name: str, m: int, n: int, k: int) -> KernelProgram:
 def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                           batch: int = 8, max_sites: int = 5,
                           workers: int = 1,
-                          engine: OptimizationEngine = None) -> Dict:
+                          engine: OptimizationEngine = None,
+                          cache_path=None) -> Dict:
     # submit all call-sites as one batch: identically-shaped sites (e.g. MoE
     # experts sharing dims, or archs revisited across launches with a
-    # persistent cache) replay instead of re-optimizing
-    engine = engine or OptimizationEngine(ForgePipeline(), workers=workers)
+    # persistent cache) replay instead of re-optimizing; differently-shaped
+    # GEMM sites are family twins, so the first cold site seeds the rest
+    # through the store's near-miss transfer path
+    engine = engine or OptimizationEngine(ForgePipeline(), workers=workers,
+                                          cache_path=cache_path)
     sites = matmul_sites(cfg, seq_len, batch)[:max_sites]
     jobs = []
     for name, m, n, k in sites:
@@ -85,7 +89,9 @@ def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                 "block_k": c.block_k, "group_m": c.group_m,
                 "num_stages": c.num_stages})
         results[name] = {"speedup_vs_naive": round(res.speedup, 2),
-                         "dims": [m, n, k], "cache_hit": eres.cache_hit}
+                         "dims": [m, n, k], "cache_hit": eres.cache_hit,
+                         "transfer": eres.transfer,
+                         "seed_steps": eres.seed_steps}
     # attention sites straight from the hardware query (the pipeline's
     # gpu-specific stage delegates attention tiling to it)
     hw = HardwareQuery(TPU_V5E)

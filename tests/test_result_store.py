@@ -1,0 +1,346 @@
+"""Transfer-aware result store: KB-content-hash key versioning, family
+(near-miss) fingerprint transfer, LRU eviction, atomic + tolerant
+persistence, and the baseline regression gate."""
+
+import json
+import pathlib
+import shutil
+
+import pytest
+
+from repro.core import (ForgePipeline, KernelJob, OptimizationEngine,
+                        ResultStore)
+from repro.ir import GraphBuilder
+from repro.ir.cost import graph_flops
+from repro.ir.fingerprint import fingerprint_family
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+from repro.kb.loader import KnowledgeBase
+
+KB_DATA = pathlib.Path(__file__).resolve().parents[1] / "src/repro/kb/data"
+
+
+def _gemm(name, m, n, k):
+    b = GraphBuilder(name)
+    x = b.input((m, k), name="x")
+    w = b.param((k, n), name="w")
+    mm = b.matmul(x, w, name="mm")
+    g = b.done(b.gelu(mm, name="act"))
+    sched = eager_schedule(g)
+    for grp in sched.groups:
+        if grp.root == "mm":
+            grp.impl = "pallas_naive"
+            grp.config = PallasConfig(128, 128, 32, num_stages=1)
+    return KernelProgram(name, g, sched, original_flops=graph_flops(g))
+
+
+def _job(m, n, k, name="gemm"):
+    """A gemm job: ci shapes scaled down, bench shapes as given."""
+    return KernelJob(name,
+                     _gemm(name, min(m, 256), min(n, 256), min(k, 128)),
+                     _gemm(name, m, n, k), tags=("gemm",))
+
+
+# ----------------------------------------------------------------------
+# KB content hash
+# ----------------------------------------------------------------------
+
+def test_kb_content_hash_stable_across_reloads(tmp_path):
+    root = tmp_path / "kb"
+    shutil.copytree(KB_DATA, root)
+    assert KnowledgeBase.load(root).content_hash() \
+        == KnowledgeBase.load(root).content_hash()
+
+
+def test_kb_edit_changes_content_hash(tmp_path):
+    root = tmp_path / "kb"
+    shutil.copytree(KB_DATA, root)
+    before = KnowledgeBase.load(root).content_hash()
+    # even a comment-only edit counts: the hash covers raw file bytes
+    f = sorted(root.glob("*.yaml"))[0]
+    f.write_text(f.read_text() + "\n# edited\n")
+    assert KnowledgeBase.load(root).content_hash() != before
+
+
+def test_kb_constructed_fallback_hash():
+    a = KnowledgeBase([], [], [])
+    b = KnowledgeBase([], [], [])
+    assert a.content_hash() == b.content_hash()
+
+
+def test_kb_edit_turns_exact_hit_into_miss(tmp_path):
+    """Acceptance criterion: editing any KB YAML changes content_hash() and
+    invalidates a previously-exact cache hit (no stale replay)."""
+    root = tmp_path / "kb"
+    shutil.copytree(KB_DATA, root)
+    cache = tmp_path / "cache.json"
+
+    eng1 = OptimizationEngine(ForgePipeline(kb=KnowledgeBase.load(root)),
+                              cache_path=cache)
+    r1 = eng1.submit(_job(2048, 2048, 512))
+    assert not r1.cache_hit
+
+    # control: unedited KB in a fresh engine replays from disk
+    eng2 = OptimizationEngine(ForgePipeline(kb=KnowledgeBase.load(root)),
+                              cache_path=cache)
+    assert eng2.submit(_job(2048, 2048, 512)).cache_hit
+
+    # edit the KB -> same job misses the exact index
+    f = sorted(root.glob("*.yaml"))[0]
+    f.write_text(f.read_text() + "\n# kb edited\n")
+    eng3 = OptimizationEngine(ForgePipeline(kb=KnowledgeBase.load(root)),
+                              cache_path=cache)
+    r3 = eng3.submit(_job(2048, 2048, 512))
+    assert not r3.cache_hit
+    assert eng3.stats.cache_hits == 0
+    assert eng3.stats.cache_misses == 1
+
+
+# ----------------------------------------------------------------------
+# Family (near-miss) transfer
+# ----------------------------------------------------------------------
+
+def test_family_fingerprint_collides_across_dims():
+    a, b = _job(4096, 4096, 1024), _job(2048, 1024, 512)
+    assert a.fingerprint("v5e") != b.fingerprint("v5e")
+    assert a.family_fingerprint("v5e") == b.family_fingerprint("v5e")
+
+
+def test_family_fingerprint_distinguishes_structure():
+    b = GraphBuilder("p")
+    x = b.input((256, 128), name="x")
+    w = b.param((128, 256), name="w")
+    mm = b.matmul(x, w, name="mm")
+    g = b.done(b.relu(mm, name="act"))      # different activation op
+    sched = eager_schedule(g)
+    other = KernelProgram("p", g, sched, original_flops=graph_flops(g))
+    gemm = _gemm("p", 256, 256, 128)
+    assert fingerprint_family(gemm, gemm, "v5e", "bfloat16") \
+        != fingerprint_family(other, other, "v5e", "bfloat16")
+
+
+def test_family_transfer_warm_starts_and_matches_cold(tmp_path):
+    """Acceptance criterion: a same-builder/different-dims job records a
+    family transfer in EngineStats and completes with fewer stage-loop
+    proposals than a cold run — while producing the identical result."""
+    eng = OptimizationEngine(workers=1)
+    cold_a = eng.submit(_job(4096, 4096, 1024))
+    assert not cold_a.cache_hit and not cold_a.transfer
+
+    warm_b = eng.submit(_job(2048, 1024, 512))
+    assert not warm_b.cache_hit
+    assert warm_b.transfer and warm_b.seed_steps > 0
+    assert eng.stats.family_transfers == 1
+    assert eng.stats.transfer_fallbacks == 0
+
+    cold_b = OptimizationEngine(workers=1).submit(_job(2048, 1024, 512))
+    assert warm_b.result.proposals < cold_b.result.proposals
+    assert warm_b.result.optimized_time \
+        == pytest.approx(cold_b.result.optimized_time)
+    # never-degrade holds on the transfer path
+    assert warm_b.result.optimized_time <= warm_b.result.original_time
+
+
+def test_partial_transfer_never_degrades():
+    """A neighbor log that only partially applies (bogus tail) seeds the
+    prefix, then the full search continues — same final result as cold."""
+    eng = OptimizationEngine(workers=1)
+    cold = eng.submit(_job(4096, 4096, 1024))
+    entry = eng.cache.get(cold.fingerprint)
+    assert entry and entry["transform_log"]
+    entry["transform_log"] = entry["transform_log"] + [
+        {"stage": "fusion", "pattern_id": "nonsense",
+         "description": "does:not:exist"}]
+    eng.cache.put(cold.fingerprint, entry, family=entry.get("family"))
+
+    warm = eng.submit(_job(2048, 1024, 512))
+    assert warm.transfer and warm.seed_steps > 0
+    assert warm.result.optimized_time <= warm.result.original_time
+    cold_b = OptimizationEngine(workers=1).submit(_job(2048, 1024, 512))
+    assert warm.result.optimized_time \
+        == pytest.approx(cold_b.result.optimized_time)
+
+
+def test_useless_neighbor_counts_as_transfer_fallback():
+    """A family neighbor whose log applies zero steps falls back to the
+    full search and is counted as a transfer fallback, not a transfer."""
+    eng = OptimizationEngine(workers=1)
+    cold = eng.submit(_job(4096, 4096, 1024))
+    entry = eng.cache.get(cold.fingerprint)
+    entry["transform_log"] = [{"stage": "fusion", "pattern_id": "nonsense",
+                               "description": "does:not:exist"}]
+    eng.cache.put(cold.fingerprint, entry, family=entry.get("family"))
+
+    warm = eng.submit(_job(2048, 1024, 512))
+    assert not warm.transfer and warm.seed_steps == 0
+    assert eng.stats.transfer_fallbacks == 1
+    assert warm.result.optimized_time <= warm.result.original_time
+
+
+def test_diverged_exact_entry_not_used_as_own_seed():
+    """When an exact entry's replay diverges, the job must not be handed
+    that same entry back as a family seed (replay fallback -> full run)."""
+    eng = OptimizationEngine(workers=1)
+    r1 = eng.submit(_job(4096, 4096, 1024))
+    entry = eng.cache.get(r1.fingerprint)
+    entry["transform_log"] = [{"stage": "fusion", "pattern_id": "nonsense",
+                               "description": "does:not:exist"}]
+    eng.cache.put(r1.fingerprint, entry, family=entry.get("family"))
+    r2 = eng.submit(_job(4096, 4096, 1024))
+    assert not r2.cache_hit and not r2.transfer
+    assert eng.stats.replay_fallbacks == 1
+    assert eng.stats.family_transfers == 0
+
+
+# ----------------------------------------------------------------------
+# Store mechanics: LRU eviction, versioning, atomic + tolerant persistence
+# ----------------------------------------------------------------------
+
+def test_lru_eviction_respects_cap():
+    store = ResultStore(max_entries=2)
+    store.put("a", {"transform_log": []}, family="famA")
+    store.put("b", {"transform_log": []}, family="famA")
+    store.put("c", {"transform_log": []}, family="famC")
+    assert len(store) == 2
+    assert store.get("a") is None          # oldest evicted
+    assert store.get("b") is not None
+    assert store.evictions == 1
+    # family index follows eviction: famA still serves b, never a
+    assert store.get_family("famA") is not None
+    assert store.get_family("famA", exclude="b") is None
+
+
+def test_reput_without_family_drops_stale_index():
+    store = ResultStore()
+    store.put("k", {"transform_log": []}, family="fam")
+    store.put("k", {"transform_log": []})           # family dropped
+    assert store.get_family("fam") is None
+    store.put("k", {"transform_log": []}, family="fam2")  # family changed
+    assert store.get_family("fam") is None
+    assert store.get_family("fam2") is not None
+
+
+def test_lru_get_refreshes_recency():
+    store = ResultStore(max_entries=2)
+    store.put("a", {"transform_log": []})
+    store.put("b", {"transform_log": []})
+    store.get("a")                          # refresh a -> b becomes LRU
+    store.put("c", {"transform_log": []})
+    assert store.get("a") is not None
+    assert store.get("b") is None
+
+
+def test_load_enforces_cap(tmp_path):
+    path = tmp_path / "cache.json"
+    big = ResultStore(path, max_entries=8)
+    for i in range(8):
+        big.put(f"k{i}", {"transform_log": []}, flush=False)
+    big.flush()
+    small = ResultStore(path, max_entries=3)
+    assert len(small) == 3
+    assert small.get("k0") is None and small.get("k7") is not None
+
+
+def test_best_of_k_with_seed(tmp_path):
+    """best_of_k > 1 on the transfer path: seed applies once up front and
+    every pass still benefits (result matches the k=1 transfer run)."""
+    eng1 = OptimizationEngine(workers=1)
+    eng1.submit(_job(4096, 4096, 1024))
+    k1 = eng1.submit(_job(2048, 1024, 512))
+    assert k1.transfer
+
+    engk = OptimizationEngine(ForgePipeline(best_of_k=2))
+    engk.submit(_job(4096, 4096, 1024))
+    kk = engk.submit(_job(2048, 1024, 512))
+    assert kk.transfer and kk.seed_steps == k1.seed_steps
+    assert kk.result.optimized_time \
+        == pytest.approx(k1.result.optimized_time)
+
+
+def test_corrupt_cache_file_discarded(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{ this is not json")
+    store = ResultStore(path)
+    assert len(store) == 0
+    store.put("k", {"transform_log": []})   # still usable + flushable
+    assert json.loads(path.read_text())["version"] == 2
+
+
+def test_old_format_cache_discarded(tmp_path):
+    path = tmp_path / "cache.json"
+    # PR-1 v1 layout: no version field
+    path.write_text(json.dumps({"entries": {"k": {"transform_log": []}}}))
+    assert len(ResultStore(path)) == 0
+
+
+def test_atomic_write_and_family_roundtrip(tmp_path):
+    path = tmp_path / "cache.json"
+    store = ResultStore(path)
+    store.put("k1", {"transform_log": [], "x": 1}, family="fam")
+    assert not path.with_name(path.name + ".tmp").exists()
+    data = json.loads(path.read_text())
+    assert data["version"] == 2
+    assert data["entries"]["k1"]["family"] == "fam"
+    # reload rebuilds the family index from entries
+    store2 = ResultStore(path)
+    assert store2.get_family("fam")["x"] == 1
+
+
+def test_same_family_batch_serial_concurrent_equivalence():
+    """Transfer seeding must not make concurrent results racy: a batch of
+    same-builder/different-dims jobs produces identical results (and
+    identical transfer stats) under workers=1 and workers=3, thanks to
+    two-phase scheduling with per-phase seed snapshots."""
+    from repro.ir.fingerprint import program_canonical
+
+    def jobs():
+        return [_job(4096, 4096, 1024, name="a"),
+                _job(2048, 1024, 512, name="b"),
+                _job(1024, 2048, 512, name="c")]
+
+    serial_eng = OptimizationEngine(workers=1)
+    conc_eng = OptimizationEngine(workers=3)
+    serial = serial_eng.run_batch(jobs())
+    conc = conc_eng.run_batch(jobs())
+    assert serial_eng.stats.as_dict() == conc_eng.stats.as_dict()
+    assert serial_eng.stats.family_transfers == 2   # leader seeds b and c
+    for a, b in zip(serial, conc):
+        assert (a.cache_hit, a.transfer, a.seed_steps) \
+            == (b.cache_hit, b.transfer, b.seed_steps)
+        assert program_canonical(a.result.bench_program) \
+            == program_canonical(b.result.bench_program)
+        assert a.result.optimized_time == pytest.approx(b.result.optimized_time)
+
+
+def test_engine_inflight_pruned_after_batch():
+    eng = OptimizationEngine(workers=2)
+    eng.run_batch([_job(2048, 2048, 512, name=f"j{i}") for i in range(2)])
+    assert eng._inflight == {}
+
+
+# ----------------------------------------------------------------------
+# Baseline regression gate
+# ----------------------------------------------------------------------
+
+def test_diff_against_baseline():
+    from benchmarks.run import diff_against_baseline
+    base = {"kernels": [{"name": "a", "us_per_call": 100.0},
+                        {"name": "b", "us_per_call": 100.0},
+                        {"name": "c", "us_per_call": 100.0},
+                        {"name": "gone", "us_per_call": 1.0}]}
+    new = {"kernels": [{"name": "a", "us_per_call": 100.0},
+                       {"name": "b", "us_per_call": 120.0},
+                       {"name": "c", "us_per_call": 50.0},
+                       {"name": "fresh", "us_per_call": 1.0}]}
+    diff = diff_against_baseline(new, base, threshold=0.05)
+    assert [r[0] for r in diff["regressions"]] == ["b"]
+    assert [r[0] for r in diff["improvements"]] == ["c"]
+    assert diff["new"] == ["fresh"]
+    assert diff["removed"] == ["gone"]
+    # within-threshold jitter is not a regression
+    ok = {"kernels": [{"name": "a", "us_per_call": 104.0}]}
+    assert diff_against_baseline(ok, base)["regressions"] == []
+    # a 0us baseline entry cannot mask a real regression
+    zero = {"kernels": [{"name": "z", "us_per_call": 0.0}]}
+    slow = {"kernels": [{"name": "z", "us_per_call": 10.0}]}
+    assert [r[0] for r in diff_against_baseline(slow, zero)["regressions"]] \
+        == ["z"]
