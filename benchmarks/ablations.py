@@ -13,24 +13,24 @@ from __future__ import annotations
 import math
 
 from repro.aibench import build_program, load_specs
-from repro.core.pipeline import ForgePipeline
+from repro.forge import Forge, ForgeConfig
 
 PROBLEMS = ["gemm_divide_sum", "gemm_max_subtract_gelu", "matmul_t_gelu",
             "gemm_bias_gelu", "matmul_min_subtract", "gemm_f64_sigmoid"]
 
 
-def _run(names, **pipe_kw):
-    pipe = ForgePipeline(**pipe_kw)
+def _run(names, **config_kw):
+    forge = Forge(ForgeConfig(**config_kw))
     speedups = []
     for name in names:
         spec = next(s for s in load_specs() if s.name == name)
-        res = pipe.optimize(
+        report = forge.optimize_program(
             spec.name,
             build_program(spec.builder, spec.dims("ci"), "naive", meta=spec.meta),
             build_program(spec.builder, spec.dims("bench"), "naive", meta=spec.meta),
             tags=tuple(spec.tags), target_dtype=spec.target_dtype,
             rtol=spec.rtol, atol=spec.atol, meta=spec.meta)
-        speedups.append(res.speedup)
+        speedups.append(report.result.result.speedup)
     return math.exp(sum(math.log(max(s, 1e-9)) for s in speedups) / len(speedups))
 
 

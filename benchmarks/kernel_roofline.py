@@ -9,7 +9,7 @@ bandwidth slope."""
 from __future__ import annotations
 
 from repro.aibench import build_program, load_specs
-from repro.core.pipeline import ForgePipeline
+from repro.forge import Forge, ForgeConfig
 from repro.hw.specs import TPU_V5E
 from repro.ir.cost import CostModel
 
@@ -17,7 +17,7 @@ from repro.ir.cost import CostModel
 def run(max_problems=None):
     print("\n== Kernel rooflines (paper Fig. 9-13) ==")
     cm = CostModel(TPU_V5E)
-    pipe = ForgePipeline()
+    forge = Forge(ForgeConfig())
     peak = TPU_V5E.peak_flops_bf16 / 1e12
     knee = TPU_V5E.peak_flops_bf16 / TPU_V5E.hbm_bw
     print(f"v5e: {peak:.0f} TFLOPS bf16 ceiling, {TPU_V5E.hbm_bw/1e9:.0f} GB/s "
@@ -30,12 +30,12 @@ def run(max_problems=None):
                               meta=spec.meta)
         compiled = build_program(spec.builder, spec.dims("bench"), "compiled",
                                  meta=spec.meta)
-        res = pipe.optimize(
+        res = forge.optimize_program(
             spec.name,
             build_program(spec.builder, spec.dims("ci"), "naive", meta=spec.meta),
             build_program(spec.builder, spec.dims("bench"), "naive", meta=spec.meta),
             tags=tuple(spec.tags), target_dtype=spec.target_dtype,
-            rtol=spec.rtol, atol=spec.atol, meta=spec.meta)
+            rtol=spec.rtol, atol=spec.atol, meta=spec.meta).result.result
         ce = cm.program_cost(eager)
         cc = cm.program_cost(compiled)
         co = cm.program_cost(res.bench_program)

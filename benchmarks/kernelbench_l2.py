@@ -11,17 +11,22 @@ from __future__ import annotations
 import collections
 import math
 
-from repro.aibench import SuiteRunner, load_specs
-from repro.aibench.csvlog import CSVLogger
+from repro.aibench import SuiteRunner
+from repro.forge import ForgeConfig
 
 
 def run(csv_path=None, families=None, workers=1, cache_path=None,
-        runs=1):
+        runs=1, config=None):
     """``runs > 1`` re-submits the suite through the same engine so the
-    second pass exercises the result cache (replay path)."""
+    second pass exercises the result cache (replay path). ``config`` is a
+    full :class:`ForgeConfig`; the ``workers``/``cache_path`` kwargs are
+    shorthands for the common case."""
     print("\n== KernelBench-L2 suite (paper Fig. 2-8) ==")
-    runner = SuiteRunner(csv_path=csv_path, families=families,
-                         workers=workers, cache_path=cache_path)
+    if config is None:
+        config = ForgeConfig(
+            workers=workers,
+            cache_path=str(cache_path) if cache_path else None)
+    runner = SuiteRunner(config, csv_path=csv_path, families=families)
     summary = runner.run()
     for _ in range(max(0, runs - 1)):
         summary = runner.run()

@@ -152,7 +152,9 @@ def main() -> None:
             else:
                 print(f"baseline {bp} not found; skipping regression gate")
         from benchmarks.kernelbench_l2 import run as run_l2
-        summary = run_l2(workers=args.workers, runs=args.l2_runs)
+        from repro.forge import ForgeConfig
+        summary = run_l2(config=ForgeConfig(workers=args.workers),
+                         runs=args.l2_runs)
         for r in summary.results:
             csv_rows.append((r.name, r.optimized_us,
                              f"x{r.speedup_vs_eager:.2f}_vs_eager"))

@@ -14,8 +14,18 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.aibench import build_program, load_specs
-from repro.core.pipeline import ForgePipeline
+from repro.forge import Forge, ForgeConfig, ForgeObserver
 from repro.ir.cost import CostModel
+
+
+class StageLogger(ForgeObserver):
+    """Observers replace driver-side print plumbing: this one streams the
+    per-stage trajectory as the pipeline runs."""
+
+    def on_stage_complete(self, job_name, r):
+        status = (f"{r.speedup:5.2f}x via {r.description}" if r.improved
+                  else "no verified improvement (original kept)")
+        print(f"  {r.stage:18s} [{r.iterations} CoVeR iter] {status}")
 
 
 def main():
@@ -26,15 +36,10 @@ def main():
     print("== input kernel (unoptimized) ==")
     print(bench.describe())
 
-    pipe = ForgePipeline()
-    res = pipe.optimize(spec.name, ci, bench, tags=tuple(spec.tags),
-                        rtol=spec.rtol, atol=spec.atol)
-
+    forge = Forge(ForgeConfig(), observers=[StageLogger()])
     print("\n== stage log ==")
-    for r in res.stage_records:
-        status = (f"{r.speedup:5.2f}x via {r.description}" if r.improved
-                  else "no verified improvement (original kept)")
-        print(f"  {r.stage:18s} [{r.iterations} CoVeR iter] {status}")
+    res = forge.optimize_program(spec.name, ci, bench, tags=tuple(spec.tags),
+                                 rtol=spec.rtol, atol=spec.atol).result.result
 
     print("\n== optimized kernel ==")
     print(res.bench_program.describe())

@@ -5,6 +5,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m compileall -q src tests benchmarks examples
+
+# Registry consistency gate: the stage DAG must validate and every stage
+# must have a proposer factory and >=1 issue binding, or the planner /
+# proposer / issue-routing surfaces derived from it are broken by
+# construction. (-W: silence runpy's already-imported RuntimeWarning.)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -W ignore::RuntimeWarning -m repro.core.stages --check
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # Perf regression gate: when a previous l2 artifact exists, re-run the suite

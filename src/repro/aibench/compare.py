@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

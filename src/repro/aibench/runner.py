@@ -12,17 +12,17 @@ from __future__ import annotations
 import dataclasses
 import math
 import pathlib
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.aibench.compare import compare_programs
 from repro.aibench.csvlog import CSVLogger
 from repro.aibench.spec import ProblemSpec, load_specs
 from repro.aibench.suite import build_program
 from repro.aibench.timing import time_fn
-from repro.core.engine import (EngineResult, EngineStats, KernelJob,
-                               OptimizationEngine)
-from repro.core.pipeline import ForgePipeline, PipelineResult
-from repro.hw.specs import TPU_V5E
+from repro.core.config import ForgeConfig
+from repro.core.engine import EngineResult, EngineStats, KernelJob
+from repro.core.forge import Forge
+from repro.core.pipeline import PipelineResult
 from repro.ir.cost import CostModel
 from repro.ir.interpreter import make_inputs, make_params
 from repro.core.executor import run_program
@@ -60,18 +60,21 @@ class KernelRunner:
     """Single-spec runner; suite-level batching lives in SuiteRunner. The
     runner is split into ``make_job`` (build the programs) and ``finish``
     (baseline timings + correctness + logging) so the engine can own the
-    optimization step in between."""
+    optimization step in between. All engine wiring goes through the
+    :class:`Forge` facade — pass a ``config`` to set knobs, or share a
+    pre-built ``forge``."""
 
-    def __init__(self, pipeline: Optional[ForgePipeline] = None,
+    def __init__(self, config: Optional[ForgeConfig] = None,
                  logger: Optional[CSVLogger] = None,
                  measure_wallclock: bool = False,
-                 engine: Optional[OptimizationEngine] = None):
-        if engine is not None and pipeline is not None \
-                and engine.pipeline is not pipeline:
-            raise ValueError("pass either pipeline or engine, not two "
-                             "disagreeing ones — the engine's pipeline runs")
-        self.engine = engine or OptimizationEngine(pipeline)
-        self.pipeline = self.engine.pipeline
+                 forge: Optional[Forge] = None):
+        if forge is not None and config is not None \
+                and forge.config is not config:
+            raise ValueError("pass either config or forge, not two "
+                             "disagreeing ones — the forge's config runs")
+        self.forge = forge or Forge(config or ForgeConfig())
+        self.engine = self.forge.engine
+        self.pipeline = self.forge.pipeline
         self.cost = CostModel(self.pipeline.spec)
         self.logger = logger
         self.measure_wallclock = measure_wallclock
@@ -142,7 +145,7 @@ class KernelRunner:
 
     # ------------------------------------------------------------------
     def run(self, spec: ProblemSpec) -> KernelResult:
-        return self.finish(spec, self.engine.submit(self.make_job(spec)))
+        return self.finish(spec, self.forge.optimize(self.make_job(spec)).result)
 
 
 @dataclasses.dataclass
@@ -185,21 +188,18 @@ class SuiteSummary:
 
 
 class SuiteRunner:
-    def __init__(self, pipeline: Optional[ForgePipeline] = None,
+    def __init__(self, config: Optional[ForgeConfig] = None,
                  csv_path: Optional[pathlib.Path] = None,
                  families: Optional[List[str]] = None,
-                 workers: int = 1,
-                 engine: Optional[OptimizationEngine] = None,
-                 cache_path: Optional[pathlib.Path] = None):
+                 forge: Optional[Forge] = None):
         logger = CSVLogger(csv_path) if csv_path else None
-        if engine is not None and pipeline is not None \
-                and engine.pipeline is not pipeline:
-            raise ValueError("pass either pipeline or engine, not two "
-                             "disagreeing ones — the engine's pipeline runs")
-        engine = engine or OptimizationEngine(pipeline, workers=workers,
-                                              cache_path=cache_path)
-        self.engine = engine
-        self.runner = KernelRunner(logger=logger, engine=engine)
+        if forge is not None and config is not None \
+                and forge.config is not config:
+            raise ValueError("pass either config or forge, not two "
+                             "disagreeing ones — the forge's config runs")
+        self.forge = forge or Forge(config or ForgeConfig())
+        self.engine = self.forge.engine
+        self.runner = KernelRunner(logger=logger, forge=self.forge)
         self.families = families
 
     def run(self, specs: Optional[List[ProblemSpec]] = None,
@@ -208,7 +208,7 @@ class SuiteRunner:
         if self.families:
             specs = [s for s in specs if s.family in self.families]
         jobs = [self.runner.make_job(s) for s in specs]
-        eresults = self.engine.run_batch(jobs)
+        eresults = self.forge.optimize_batch(jobs).results
         results = []
         for spec, eres in zip(specs, eresults):
             r = self.runner.finish(spec, eres)

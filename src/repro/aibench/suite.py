@@ -15,7 +15,7 @@ Builders are registered by name; the YAML specs bind dims/tolerances.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 from repro.ir.cost import graph_flops
 from repro.ir.graph import Graph, GraphBuilder

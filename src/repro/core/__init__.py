@@ -4,16 +4,20 @@ plus the fleet-scale engine (batching, caching, concurrency) layered on
 top of it."""
 
 from repro.core.analyzer import analyze
+from repro.core.config import ForgeConfig
 from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
                                OptimizationEngine)
+from repro.core.forge import Forge, ForgeObserver, OptimizationReport
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
 from repro.core.pipeline import ForgePipeline, PipelineResult, StageRecord
 from repro.core.planner import plan, DEFAULT_ORDER, HARD_DEPS
 from repro.core.stage_scheduler import (StageScheduler, TransformLog,
                                         TransformStep)
+from repro.core.stages import (DEFAULT_REGISTRY, StageRegistry,
+                               StageRegistryError, StageSpec, register_stage)
 from repro.core.verify import compile_and_verify, VerifyReport, SUCCESS
 
 __all__ = [
@@ -24,4 +28,7 @@ __all__ = [
     "OptimizationEngine", "KernelJob", "EngineResult", "EngineStats",
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",
+    "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",
+    "StageSpec", "StageRegistry", "StageRegistryError", "DEFAULT_REGISTRY",
+    "register_stage",
 ]

@@ -9,12 +9,11 @@ the actual program state.
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List
 
 from repro.core.context import ProblemContext
 from repro.core.issues import Issue
 from repro.hw.specs import dtype_itemsize
-from repro.ir.cost import node_flops_bytes
 from repro.ir.graph import Graph
 from repro.ir.rewrite import find_rewrites
 from repro.ir.schedule import FusionGroup, KernelProgram

@@ -1,0 +1,159 @@
+"""Typed pipeline/engine configuration with a derived cache signature.
+
+Before this module every layer took its own long kwarg list
+(``ForgePipeline``/``StageScheduler``/``OptimizationEngine``) and the result
+-store cache key depended on a *hand-maintained* signature string in
+``pipeline.py`` — a newly added knob that someone forgot to append would
+silently poison the cache (results computed under one policy replayed under
+another). :class:`ForgeConfig` fixes both:
+
+* one frozen, picklable dataclass carries every knob — the facade, the
+  pipeline, the scheduler and the engine all read from it, and because it
+  pickles cleanly it is the job/config codec the ROADMAP's process-pool
+  follow-up needs;
+* :meth:`ForgeConfig.policy_signature` is **derived from the dataclass
+  fields**: every field participates unless it is explicitly declared
+  operational via ``metadata={"policy": False}``. Adding a knob therefore
+  invalidates stale cache entries *by default*; exclusion is a reviewed,
+  visible decision, not an omission.
+
+Operational fields (worker count, cache location/size, dump dir) are the
+only exclusions: the engine guarantees ``workers=1`` and ``workers=N`` are
+result-equivalent, and where a cache lives on disk cannot change what the
+pipeline would produce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+__all__ = ["ForgeConfig", "POLICY_SIGNATURE_VERSION"]
+
+# bumped when the signature *format* changes (field encoding, separator…);
+# participates in the signature so format changes can never alias old keys
+POLICY_SIGNATURE_VERSION = 1
+
+
+def _operational(**kw):
+    """An operational (non-policy) field: excluded from the cache signature
+    because it cannot change what the pipeline produces for a job."""
+    return dataclasses.field(metadata={"policy": False}, **kw)
+
+
+def _canon(value) -> str:
+    """Canonical, process-stable text form of a field value."""
+    if value is None:
+        return "*"
+    if isinstance(value, bool):
+        return "1" if value else "0"
+    if isinstance(value, (tuple, list)):
+        return ",".join(sorted(str(v) for v in value))
+    if isinstance(value, float):
+        return repr(value)            # round-trippable, no locale
+    return str(value)
+
+
+@dataclasses.dataclass(frozen=True)
+class ForgeConfig:
+    """Every knob of the Forge pipeline + fleet engine, in one immutable
+    value object.
+
+    Policy fields (all participate in :meth:`policy_signature`):
+
+    * ``spec_name`` — hardware generation (resolved via
+      ``repro.hw.specs.get_spec``).
+    * ``max_iterations`` — CoVeR iterations per stage (paper's T).
+    * ``best_of_k`` — independent pipeline passes, best result kept.
+    * ``use_pallas_exec`` — execute Pallas lowerings during verification.
+    * ``use_planner`` — dependency-constrained planner vs fixed default
+      order (ablation hook).
+    * ``warm_start`` — history-driven proposer priors.
+    * ``stages_enabled`` — ablation subset (``None`` = all registered
+      stages); validated against the stage registry.
+    * ``use_llm`` — an LLM client participates in planning/proposals.
+
+    Operational fields (excluded — see module docstring): ``workers``,
+    ``cache_path``, ``cache_max_entries``, ``dump_dir``.
+    """
+
+    spec_name: str = "tpu_v5e"
+    max_iterations: int = 5
+    best_of_k: int = 1
+    use_pallas_exec: bool = True
+    use_planner: bool = True
+    warm_start: bool = True
+    stages_enabled: Optional[Tuple[str, ...]] = None
+    use_llm: bool = False
+
+    workers: int = _operational(default=1)
+    cache_path: Optional[str] = _operational(default=None)
+    cache_max_entries: int = _operational(default=512)
+    dump_dir: Optional[str] = _operational(default=None)
+
+    def __post_init__(self):
+        if self.max_iterations < 1:
+            raise ValueError("max_iterations must be >= 1")
+        if self.best_of_k < 1:
+            raise ValueError("best_of_k must be >= 1")
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        if self.cache_max_entries < 1:
+            raise ValueError("cache_max_entries must be >= 1")
+        if self.stages_enabled is not None:
+            # normalize list -> tuple so the config stays hashable/picklable
+            object.__setattr__(self, "stages_enabled",
+                               tuple(self.stages_enabled))
+            from repro.core.stages import DEFAULT_REGISTRY
+            for s in self.stages_enabled:
+                if s not in DEFAULT_REGISTRY:
+                    raise ValueError(
+                        f"stages_enabled names unknown stage {s!r}; "
+                        f"registered: {list(DEFAULT_REGISTRY.names())}")
+        if self.cache_path is not None:
+            object.__setattr__(self, "cache_path", str(self.cache_path))
+        if self.dump_dir is not None:
+            object.__setattr__(self, "dump_dir", str(self.dump_dir))
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def policy_fields(cls) -> List[dataclasses.Field]:
+        """The fields that participate in the cache signature (everything
+        not explicitly marked ``metadata={"policy": False}``)."""
+        return [f for f in dataclasses.fields(cls)
+                if f.metadata.get("policy", True)]
+
+    @classmethod
+    def operational_fields(cls) -> List[dataclasses.Field]:
+        return [f for f in dataclasses.fields(cls)
+                if not f.metadata.get("policy", True)]
+
+    def policy_signature(self) -> str:
+        """Stable signature of every policy knob, derived from the dataclass
+        fields themselves. Sorted by field name so source-order refactors
+        don't shuffle cache keys; versioned so format changes can't alias."""
+        parts = [f"{f.name}={_canon(getattr(self, f.name))}"
+                 for f in sorted(self.policy_fields(), key=lambda f: f.name)]
+        return f"forge-v{POLICY_SIGNATURE_VERSION};" + ";".join(parts)
+
+    # ------------------------------------------------------------------
+    def replace(self, **changes) -> "ForgeConfig":
+        return dataclasses.replace(self, **changes)
+
+    def to_dict(self) -> dict:
+        """Plain-dict codec (JSON-safe) for process-pool job submission."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ForgeConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ForgeConfig fields: {sorted(unknown)}")
+        return cls(**d)
+
+    # ------------------------------------------------------------------
+    def spec(self):
+        """Resolve ``spec_name`` to its :class:`repro.hw.specs.TPUSpec`."""
+        from repro.hw.specs import get_spec
+        return get_spec(self.spec_name)

@@ -108,19 +108,39 @@ class EngineStats:
 
 
 class OptimizationEngine:
-    """Suite-level orchestrator over a shared :class:`ForgePipeline`."""
+    """Suite-level orchestrator over a shared :class:`ForgePipeline`.
+
+    New code should construct it through the :class:`repro.core.forge.Forge`
+    facade (``Forge(ForgeConfig(...))``); the kwarg constructor remains as
+    the compatibility shim, and ``config=`` supplies every operational knob
+    (workers, cache path/size) from one :class:`ForgeConfig`."""
 
     def __init__(self,
                  pipeline: Optional[ForgePipeline] = None,
-                 workers: int = 1,
+                 workers: Optional[int] = None,
                  cache: Optional[ResultStore] = None,
                  cache_path: Optional[pathlib.Path] = None,
-                 cache_max_entries: int = 512):
+                 cache_max_entries: Optional[int] = None,
+                 config=None,
+                 on_result=None):
+        # explicit kwargs always win; config fills what was left unset
+        if config is not None:
+            pipeline = pipeline or ForgePipeline.from_config(config)
+            workers = config.workers if workers is None else workers
+            cache_path = cache_path or config.cache_path
+            if cache_max_entries is None:
+                cache_max_entries = config.cache_max_entries
         self.pipeline = pipeline or ForgePipeline()
-        self.workers = max(1, int(workers))
-        self.cache = cache or ResultStore(cache_path,
-                                          max_entries=cache_max_entries)
+        self.workers = max(1, int(workers if workers is not None else 1))
+        self.cache = cache or ResultStore(
+            cache_path,
+            max_entries=(cache_max_entries if cache_max_entries is not None
+                         else 512))
         self.stats = EngineStats()
+        # observer hook: called with each EngineResult as it completes
+        # (serialized under a lock — observers need not be thread-safe)
+        self.on_result = on_result
+        self._notify_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         # per-key in-flight locks: duplicate jobs submitted in one batch
         # coalesce (first computes, the rest wait and replay) instead of
@@ -204,8 +224,12 @@ class OptimizationEngine:
         with self._inflight_lock:
             job_lock = self._inflight.setdefault(exact_key, threading.Lock())
         with job_lock:
-            return self._run_job_locked(job, exact_key, family_key, priors,
+            eres = self._run_job_locked(job, exact_key, family_key, priors,
                                         seeds)
+        if self.on_result is not None:
+            with self._notify_lock:
+                self.on_result(eres)
+        return eres
 
     def _run_job_locked(self, job: KernelJob, exact_key: str,
                         family_key: str, priors: Mapping[str, int],

@@ -14,9 +14,8 @@ compute dtype, math runs in f32 (MXU: bf16 in, f32 accumulate).
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.ir.graph import Graph, Node

@@ -1,0 +1,231 @@
+"""The Forge facade — the public v1 entry point for kernel optimization.
+
+Every driver used to wire the engine differently: build a ``ForgePipeline``
+with one kwarg list, wrap it in an ``OptimizationEngine`` with another, then
+thread prints and counters through by hand. The facade collapses that to::
+
+    from repro.forge import Forge, ForgeConfig, KernelJob
+
+    forge = Forge(ForgeConfig(workers=4, cache_path="results/store.json"))
+    report = forge.optimize_batch(jobs)        # -> OptimizationReport
+    print(report.summary())
+
+Observer callbacks replace the driver-specific print/stat plumbing: attach
+any object with ``on_stage_complete(job_name, record)`` /
+``on_job_complete(engine_result)`` / ``on_transfer(engine_result)`` methods
+(all optional — :class:`ForgeObserver` is a no-op base to subclass).
+Callbacks fire as the fleet engine makes progress, serialized under a lock
+so observers need not be thread-safe even with ``workers > 1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.core.config import ForgeConfig
+from repro.core.engine import (EngineResult, EngineStats, KernelJob,
+                               OptimizationEngine)
+from repro.core.history import History
+from repro.core.llm import LLMClient
+from repro.core.pipeline import ForgePipeline
+from repro.core.result_store import ResultStore
+from repro.core.stage_scheduler import StageRecord
+from repro.ir.schedule import KernelProgram
+from repro.kb.loader import KnowledgeBase
+
+__all__ = ["Forge", "ForgeObserver", "OptimizationReport"]
+
+
+class ForgeObserver:
+    """No-op observer base. Subclass and override any subset; observers may
+    also be plain objects exposing the same method names."""
+
+    def on_stage_complete(self, job_name: str, record: StageRecord):
+        """One pipeline stage finished for ``job_name`` (search, replay and
+        seeded-transfer steps all emit)."""
+
+    def on_job_complete(self, result: EngineResult):
+        """One job finished (cold run, cache replay, or transfer)."""
+
+    def on_transfer(self, result: EngineResult):
+        """A job was warm-started from a family neighbor (fires after
+        ``on_job_complete`` for the same result)."""
+
+
+@dataclasses.dataclass
+class OptimizationReport:
+    """Typed result of a :meth:`Forge.optimize` / :meth:`optimize_batch`
+    call: per-job engine results (submission order), an engine-stats
+    snapshot, and the config that produced them."""
+
+    results: List[EngineResult]
+    stats: EngineStats
+    config: ForgeConfig
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __getitem__(self, i) -> EngineResult:
+        return self.results[i]
+
+    @property
+    def result(self) -> EngineResult:
+        """The single result of a one-job ``optimize`` call."""
+        if len(self.results) != 1:
+            raise ValueError(f"report holds {len(self.results)} results; "
+                             f"use .results / iteration")
+        return self.results[0]
+
+    # -- aggregates ------------------------------------------------------
+    @property
+    def speedups(self) -> Dict[str, float]:
+        return {r.job.name: r.result.speedup for r in self.results}
+
+    @property
+    def geomean_speedup(self) -> float:
+        vals = [max(r.result.speedup, 1e-9) for r in self.results]
+        return (math.exp(sum(math.log(v) for v in vals) / len(vals))
+                if vals else 0.0)
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for r in self.results if r.cache_hit)
+
+    @property
+    def transfers(self) -> int:
+        return sum(1 for r in self.results if r.transfer)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-safe summary (telemetry / artifact codec)."""
+        return {
+            "config": self.config.to_dict(),
+            "policy_signature": self.config.policy_signature(),
+            "jobs": [
+                {"name": r.job.name,
+                 "speedup": r.result.speedup,
+                 "original_time": r.result.original_time,
+                 "optimized_time": r.result.optimized_time,
+                 "cache_hit": r.cache_hit,
+                 "transfer": r.transfer,
+                 "seed_steps": r.seed_steps,
+                 "clamped": r.result.clamped,
+                 "stages": [dataclasses.asdict(s)
+                            for s in r.result.stage_records]}
+                for r in self.results
+            ],
+            "stats": self.stats.as_dict(),
+            "geomean_speedup": self.geomean_speedup,
+        }
+
+    def summary(self) -> str:
+        s = self.stats
+        return (f"{len(self.results)} jobs: geomean {self.geomean_speedup:.2f}x, "
+                f"{self.cache_hits} cache hits, {self.transfers} transfers "
+                f"(engine: {s.cache_misses} misses, "
+                f"{s.replay_fallbacks} replay fallbacks, "
+                f"{s.transfer_fallbacks} transfer fallbacks)")
+
+
+class Forge:
+    """Unified facade over pipeline + fleet engine: ``Forge(config)`` then
+    ``optimize(job)`` / ``optimize_batch(jobs)``.
+
+    ``config`` carries every knob (:class:`ForgeConfig`); live resources —
+    knowledge base, LLM client, shared history, a pre-built result store —
+    are keyword-only constructor arguments because they are stateful objects,
+    not policy values (the KB's content hash and the LLM's presence still
+    reach the cache key)."""
+
+    def __init__(self, config: Optional[ForgeConfig] = None, *,
+                 kb: Optional[KnowledgeBase] = None,
+                 llm: Optional[LLMClient] = None,
+                 history: Optional[History] = None,
+                 cache: Optional[ResultStore] = None,
+                 observers: Iterable = ()):
+        self.config = config or ForgeConfig()
+        if llm is not None and not self.config.use_llm:
+            self.config = self.config.replace(use_llm=True)
+        self.pipeline = ForgePipeline.from_config(self.config, kb=kb,
+                                                  llm=llm, history=history)
+        self.pipeline.on_stage_complete = self._dispatch_stage
+        self.engine = OptimizationEngine(pipeline=self.pipeline,
+                                         workers=self.config.workers,
+                                         cache=cache,
+                                         cache_path=self.config.cache_path,
+                                         cache_max_entries=self.config.cache_max_entries,
+                                         on_result=self._dispatch_result)
+        self._observers: List[Any] = list(observers)
+        # one lock serializes ALL observer dispatch (stage events arrive
+        # straight from worker threads; job events via the engine's notify
+        # hook) so observers never need to be thread-safe
+        self._observer_lock = threading.Lock()
+
+    # -- observers -------------------------------------------------------
+    def add_observer(self, observer) -> "Forge":
+        self._observers.append(observer)
+        return self
+
+    def _dispatch_stage(self, job_name: str, record: StageRecord):
+        with self._observer_lock:
+            for obs in self._observers:
+                fn = getattr(obs, "on_stage_complete", None)
+                if fn is not None:
+                    fn(job_name, record)
+
+    def _dispatch_result(self, result: EngineResult):
+        with self._observer_lock:
+            for obs in self._observers:
+                fn = getattr(obs, "on_job_complete", None)
+                if fn is not None:
+                    fn(result)
+            if result.transfer:
+                for obs in self._observers:
+                    fn = getattr(obs, "on_transfer", None)
+                    if fn is not None:
+                        fn(result)
+
+    # -- optimization ----------------------------------------------------
+    def optimize(self, job: KernelJob) -> OptimizationReport:
+        """Optimize one job (cache/transfer-aware)."""
+        return self.optimize_batch([job])
+
+    def optimize_batch(self, jobs: Sequence[KernelJob]) -> OptimizationReport:
+        """Optimize a batch through the fleet engine; results come back in
+        submission order inside a typed report. The report's stats are the
+        *delta* this batch produced (a reused Forge accumulates lifetime
+        counters on ``forge.stats``), so per-batch hit counts and engine
+        counters always describe the same jobs."""
+        before = dataclasses.replace(self.engine.stats)
+        results = self.engine.run_batch(list(jobs))
+        delta = EngineStats(**{
+            f.name: getattr(self.engine.stats, f.name) - getattr(before, f.name)
+            for f in dataclasses.fields(EngineStats)})
+        return OptimizationReport(results=results, stats=delta,
+                                  config=self.config)
+
+    def optimize_program(self, name: str, ci_program: KernelProgram,
+                         bench_program: KernelProgram,
+                         **job_kwargs) -> OptimizationReport:
+        """Convenience: build the :class:`KernelJob` inline (tags, dtype,
+        tolerances, meta forwarded)."""
+        return self.optimize(KernelJob(name, ci_program, bench_program,
+                                       **job_kwargs))
+
+    # -- views -----------------------------------------------------------
+    @property
+    def stats(self) -> EngineStats:
+        return self.engine.stats
+
+    @property
+    def cache(self) -> ResultStore:
+        return self.engine.cache
+
+    @property
+    def history(self) -> History:
+        return self.pipeline.history

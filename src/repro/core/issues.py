@@ -1,5 +1,10 @@
-"""Issue taxonomy (paper §IV-C Table 1) + the deterministic issue→stage
-routing table with dynamic registration for custom types.
+"""Issue taxonomy (paper §IV-C Table 1).
+
+The issue→stage routing table lives in the stage registry
+(:mod:`repro.core.stages`): each :class:`~repro.core.stages.StageSpec`
+declares the issue types it owns, and ``ISSUE_TO_STAGE`` here is the
+registry's *live* mapping — dynamic registrations are visible everywhere
+immediately, and a third-party stage brings its issue bindings with it.
 
 Severity scores (1-5) are advisory — they inform prioritization within a
 stage but never gate stage execution (paper §IV-C-a).
@@ -10,71 +15,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional
 
-# ---------------------------------------------------------------------------
-# routing table: issue type -> exactly one pipeline stage
-# ---------------------------------------------------------------------------
+from repro.core.stages import DEFAULT_REGISTRY
 
-ISSUE_TO_STAGE: Dict[str, str] = {
-    # algorithmic
-    "redundant_computation": "algorithmic",
-    "gemm_feeding_reduction": "algorithmic",
-    "foldable_scalar_epilogue": "algorithmic",
-    "bn_after_conv": "algorithmic",
-    "duplicated_subexpression": "algorithmic",
-    "serial_accumulation": "algorithmic",
-    "materialized_transpose": "algorithmic",
-    "mean_uncanonicalized": "algorithmic",
-    # discovery
-    "open_ended": "discovery",
-    # dtype
-    "dtype_float64": "dtype_fix",
-    "dtype_precision": "dtype_fix",
-    "dtype_input_conversion": "dtype_fix",
-    # fusion
-    "unfused_kernels": "fusion",
-    "unfused_elementwise_chain": "fusion",
-    "unfused_reduction_epilogue": "fusion",
-    "fusion_noop": "fusion",
-    "fusion_register_pressure": "fusion",
-    "fusion_replaces_vendor": "fusion",
-    # memory access
-    "uncoalesced_access": "memory_access",
-    "missing_boundary_check": "memory_access",
-    "device_host_sync": "memory_access",
-    "non_contiguous_input": "memory_access",
-    "long_liveness": "memory_access",
-    "high_register_pressure": "memory_access",
-    "suboptimal_conv_layout": "memory_access",
-    # block pointers
-    "manual_pointer_arithmetic": "block_pointers",
-    "block_ptr_boundary_wrong": "block_pointers",
-    "block_ptr_multiple_of_misuse": "block_pointers",
-    # persistent kernel
-    "missing_persistent": "persistent_kernel",
-    "persistent_num_progs_hardcoded": "persistent_kernel",
-    # gpu (tpu) specific
-    "suboptimal_tile_size": "gpu_specific",
-    "misaligned_block_shape": "gpu_specific",
-    "no_swizzling": "gpu_specific",
-    "missing_pipeline_stages": "gpu_specific",
-    "missing_dimension_semantics": "gpu_specific",
-    "repack_in_forward": "gpu_specific",
-    "missing_packed_transpose": "gpu_specific",
-    "serialized_n_tiles": "gpu_specific",
-    "sigmoid_slow_exp": "gpu_specific",
-    "bf16_accumulator": "gpu_specific",
-    # autotuning
-    "missing_autotune": "autotuning",
-}
+# the registry's live routing dict: issue type -> exactly one pipeline stage
+ISSUE_TO_STAGE: Dict[str, str] = DEFAULT_REGISTRY.issue_to_stage
 
 
 def register_issue_type(issue_type: str, stage: str):
     """Dynamic registration (paper: 'with dynamic registration for custom
     issue types'). New KB files can route new issues without code changes."""
-    from repro.kb.loader import STAGES
-    if stage not in STAGES:
-        raise ValueError(f"unknown stage {stage!r}")
-    ISSUE_TO_STAGE[issue_type] = stage
+    # StageRegistryError subclasses ValueError, matching the old contract
+    DEFAULT_REGISTRY.bind_issue(issue_type, stage)
 
 
 @dataclasses.dataclass

@@ -19,12 +19,12 @@ from typing import Dict, List, Mapping, Optional
 import jax.numpy as jnp
 
 from repro.core.analyzer import analyze
+from repro.core.config import ForgeConfig
 from repro.core.context import ProblemContext
 from repro.core.history import History
 from repro.core.llm import LLMClient
 from repro.core.stage_scheduler import (ScheduleOutcome, StageRecord,
                                         StageScheduler, TransformLog)
-from repro.core.verify import compile_and_verify
 from repro.hw.specs import TPUSpec, TPU_V5E
 from repro.ir.cost import CostModel, ProgramCost
 from repro.ir.interpreter import evaluate, make_inputs, make_params
@@ -60,6 +60,15 @@ class PipelineResult:
 
 
 class ForgePipeline:
+    """Single-job optimization entry point, configured by a
+    :class:`~repro.core.config.ForgeConfig`.
+
+    The kwarg constructor is the compatibility shim for pre-facade callers:
+    it folds the old kwarg sprawl into a ``ForgeConfig`` (pass ``config=``
+    directly — or use the :class:`repro.core.forge.Forge` facade — in new
+    code). Live resources (KB, LLM client, history) stay constructor
+    arguments: they are stateful objects, not policy values."""
+
     def __init__(self,
                  kb: Optional[KnowledgeBase] = None,
                  spec: TPUSpec = TPU_V5E,
@@ -71,35 +80,89 @@ class ForgePipeline:
                  dump_dir: Optional[pathlib.Path] = None,
                  stages_enabled: Optional[List[str]] = None,
                  use_planner: bool = True,
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 config: Optional[ForgeConfig] = None):
+        if config is None:
+            config = ForgeConfig(
+                spec_name=getattr(spec, "name", str(spec)),
+                max_iterations=max_iterations,
+                best_of_k=best_of_k,
+                use_pallas_exec=use_pallas_exec,
+                use_planner=use_planner,
+                warm_start=warm_start,
+                stages_enabled=(None if stages_enabled is None
+                                else tuple(stages_enabled)),
+                use_llm=llm is not None,
+                dump_dir=(str(dump_dir) if dump_dir is not None else None))
+        elif llm is not None and not config.use_llm:
+            # the signature must reflect that an LLM participates
+            config = config.replace(use_llm=True)
+        self.config = config
         self.kb = kb or load_default()
-        self.spec = spec
-        self.T = max_iterations
-        self.k = best_of_k
-        self.use_pallas_exec = use_pallas_exec
+        try:
+            self.spec = config.spec()
+        except KeyError:
+            # a custom TPUSpec object not in the generation registry is
+            # honored (its name still reaches the cache key via spec_name);
+            # a bare unknown spec_name is a config error, not a fallback —
+            # silently optimizing for the wrong hardware poisons the cache
+            if getattr(spec, "name", None) == config.spec_name:
+                self.spec = spec
+            else:
+                raise
         self.llm = llm
         self.history = history or History()
-        self.dump_dir = dump_dir
-        self.stages_enabled = stages_enabled          # ablation hook
-        self.use_planner = use_planner                # ablation hook
-        self.warm_start = warm_start                  # history-driven priors
-        self.cost_model = CostModel(spec)
+        self.cost_model = CostModel(self.spec)
+
+    @classmethod
+    def from_config(cls, config: ForgeConfig,
+                    kb: Optional[KnowledgeBase] = None,
+                    llm: Optional[LLMClient] = None,
+                    history: Optional[History] = None) -> "ForgePipeline":
+        return cls(kb=kb, llm=llm, history=history, config=config)
+
+    # config-derived views (kept as attributes of record for older callers)
+    @property
+    def T(self) -> int:
+        return self.config.max_iterations
+
+    @property
+    def k(self) -> int:
+        return self.config.best_of_k
+
+    @property
+    def use_pallas_exec(self) -> bool:
+        return self.config.use_pallas_exec
+
+    @property
+    def use_planner(self) -> bool:
+        return self.config.use_planner
+
+    @property
+    def warm_start(self) -> bool:
+        return self.config.warm_start
+
+    @property
+    def stages_enabled(self) -> Optional[tuple]:
+        return self.config.stages_enabled
+
+    @property
+    def dump_dir(self) -> Optional[pathlib.Path]:
+        return (pathlib.Path(self.config.dump_dir)
+                if self.config.dump_dir else None)
 
     # ------------------------------------------------------------------
     def policy_signature(self) -> str:
-        """Stable signature of every knob that changes what the pipeline
-        would produce for a given job. The engine folds this into the cache
-        key so results computed under one configuration (e.g. a stage
-        ablation) are never replayed under another."""
-        stages = ("*" if self.stages_enabled is None
-                  else ",".join(sorted(self.stages_enabled)))
-        return (f"T={self.T};k={self.k};pallas={self.use_pallas_exec};"
-                f"planner={self.use_planner};stages={stages};"
-                f"llm={self.llm is not None}")
+        """Signature of every knob that changes what the pipeline would
+        produce for a given job; the engine folds it into the cache key.
+        Derived from the config's fields (see
+        :meth:`ForgeConfig.policy_signature`), so a newly added knob can
+        never be silently omitted."""
+        return self.config.policy_signature()
 
     # ------------------------------------------------------------------
-    def make_scheduler(self, priors: Optional[Mapping[str, int]] = None
-                       ) -> StageScheduler:
+    def make_scheduler(self, priors: Optional[Mapping[str, int]] = None,
+                       on_stage_complete=None) -> StageScheduler:
         """Build a StageScheduler with this pipeline's configuration. The
         engine calls this too, so every policy knob lives in one place."""
         if priors is None:
@@ -111,7 +174,13 @@ class ForgePipeline:
                               use_pallas_exec=self.use_pallas_exec,
                               stages_enabled=self.stages_enabled,
                               use_planner=self.use_planner,
-                              priors=priors)
+                              priors=priors,
+                              on_stage_complete=(on_stage_complete
+                                                 or self.on_stage_complete))
+
+    # observer hook threaded into every scheduler this pipeline builds;
+    # the Forge facade sets it, old-style callers leave it None
+    on_stage_complete = None
 
     # ------------------------------------------------------------------
     def _prepare_ctx(self, name: str, ci_program: KernelProgram,

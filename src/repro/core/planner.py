@@ -14,29 +14,18 @@ from typing import Dict, List, Optional
 
 from repro.core.issues import Issue, stages_with_issues
 from repro.core.llm import LLMClient
+from repro.core.stages import DEFAULT_REGISTRY, RegistryView
 
-DEFAULT_ORDER = [
-    "algorithmic", "discovery", "dtype_fix", "fusion", "memory_access",
-    "block_pointers", "persistent_kernel", "gpu_specific", "autotuning",
-]
-
-# hard constraints: (before, after)
-HARD_DEPS = [
-    ("algorithmic", "dtype_fix"),
-    ("algorithmic", "fusion"),
-    ("discovery", "dtype_fix"),
-    ("discovery", "fusion"),
-    ("dtype_fix", "fusion"),
-    ("memory_access", "block_pointers"),
-    ("fusion", "gpu_specific"),
-    ("block_pointers", "gpu_specific"),
-    ("gpu_specific", "autotuning"),
-]
+# live registry views: these used to be the hand-maintained source of truth
+# here; they are now *derived* from the stage registry and always current,
+# even through the ``repro.core`` re-exports
+DEFAULT_ORDER = RegistryView(DEFAULT_REGISTRY.default_order)
+HARD_DEPS = RegistryView(DEFAULT_REGISTRY.dep_pairs)
 
 
 def _respects_deps(order: List[str]) -> bool:
     pos = {s: i for i, s in enumerate(order)}
-    for a, b in HARD_DEPS:
+    for a, b in DEFAULT_REGISTRY.dep_pairs():
         if a in pos and b in pos and pos[a] > pos[b]:
             return False
     return True
@@ -49,19 +38,22 @@ def plan(issues: List[Issue], llm: Optional[LLMClient] = None) -> List[str]:
     if not active:
         return []
 
+    default_order = DEFAULT_REGISTRY.default_order()
+    deps = DEFAULT_REGISTRY.dep_pairs()
+
     if llm is not None:
         try:
             resp = llm.complete(
                 "You order kernel-optimization stages subject to hard "
                 "dependency constraints. Reply with a comma-separated list.",
-                f"stages: {active}\ndeps(before->after): {HARD_DEPS}\n"
+                f"stages: {active}\ndeps(before->after): {deps}\n"
                 f"issues: {[(i.type, i.severity) for i in issues]}")
             order = [s.strip() for s in resp.split(",") if s.strip() in active]
             if len(set(order)) == len(active) and _respects_deps(order):
                 return order
         except Exception:  # noqa: BLE001 — LLM failure -> default sequence
             pass
-        return [s for s in DEFAULT_ORDER if s in active]
+        return [s for s in default_order if s in active]
 
     # offline heuristic: severity-greedy topological sort
     sev: Dict[str, int] = {}
@@ -71,10 +63,10 @@ def plan(issues: List[Issue], llm: Optional[LLMClient] = None) -> List[str]:
     order: List[str] = []
     while remaining:
         ready = [s for s in remaining
-                 if not any(a in remaining for a, b in HARD_DEPS if b == s)]
+                 if not any(a in remaining for a, b in deps if b == s)]
         if not ready:  # should not happen (DAG), but never deadlock
-            ready = [s for s in DEFAULT_ORDER if s in remaining]
-        ready.sort(key=lambda s: (-sev.get(s, 0), DEFAULT_ORDER.index(s)))
+            ready = [s for s in default_order if s in remaining]
+        ready.sort(key=lambda s: (-sev.get(s, 0), default_order.index(s)))
         nxt = ready[0]
         order.append(nxt)
         remaining.remove(nxt)

@@ -16,8 +16,7 @@ applied by the agent to both the ci- and bench-shaped programs so correctness
 from __future__ import annotations
 
 import dataclasses
-import re
-from typing import Callable, Dict, Iterator, List, Optional
+from typing import Callable, Dict, Iterator, List
 
 from repro.core.context import ProblemContext
 from repro.core.issues import Issue
@@ -630,14 +629,8 @@ class AutotuneProposer(BaseProposer):
 
 
 def make_proposer(stage: str, kb: KnowledgeBase, ctx: ProblemContext) -> BaseProposer:
-    if stage in ("algorithmic", "discovery"):
-        return RewriteProposer(kb, ctx, stage)
-    return {
-        "dtype_fix": DtypeProposer,
-        "fusion": FusionProposer,
-        "memory_access": MemoryProposer,
-        "block_pointers": BlockPointerProposer,
-        "persistent_kernel": PersistentProposer,
-        "gpu_specific": GpuSpecificProposer,
-        "autotuning": AutotuneProposer,
-    }[stage](kb, ctx)
+    """Instantiate a stage's proposer via the stage registry — the factory is
+    part of each :class:`~repro.core.stages.StageSpec`, so third-party stages
+    plug in without touching this module."""
+    from repro.core.stages import DEFAULT_REGISTRY
+    return DEFAULT_REGISTRY.make_proposer(stage, kb, ctx)

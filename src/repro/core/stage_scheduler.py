@@ -25,6 +25,7 @@ from repro.core.cover import CoVeRAgent, StageResult
 from repro.core.llm import LLMClient
 from repro.core.planner import plan
 from repro.core.proposers import BaseProposer, Candidate, make_proposer
+from repro.core.stages import DEFAULT_REGISTRY
 from repro.core.verify import compile_and_verify
 from repro.ir.cost import CostModel
 from repro.ir.fingerprint import canonical_name_map
@@ -152,7 +153,8 @@ class StageScheduler:
                  use_pallas_exec: bool = True,
                  stages_enabled: Optional[List[str]] = None,
                  use_planner: bool = True,
-                 priors: Optional[Mapping[str, int]] = None):
+                 priors: Optional[Mapping[str, int]] = None,
+                 on_stage_complete=None):
         self.kb = kb
         self.cost_model = cost_model
         self.T = max_iterations
@@ -162,6 +164,13 @@ class StageScheduler:
         self.stages_enabled = stages_enabled
         self.use_planner = use_planner
         self.priors = dict(priors or {})
+        # observer hook: called with (job_name, StageRecord) after every
+        # stage execution (search, replay, and seeded-transfer steps alike)
+        self.on_stage_complete = on_stage_complete
+
+    def _emit(self, ctx: ProblemContext, record: StageRecord):
+        if self.on_stage_complete is not None:
+            self.on_stage_complete(ctx.name, record)
 
     # ------------------------------------------------------------------
     def _make_proposer(self, stage: str, ctx: ProblemContext) -> BaseProposer:
@@ -174,9 +183,8 @@ class StageScheduler:
         if self.use_planner:
             order = plan(issues, llm=self.llm)
         else:
-            order = ["algorithmic", "discovery", "dtype_fix", "fusion",
-                     "memory_access", "block_pointers", "persistent_kernel",
-                     "gpu_specific", "autotuning"]
+            # planner-off ablation: the registry's full deterministic order
+            order = DEFAULT_REGISTRY.default_order()
         if self.stages_enabled is not None:
             order = [s for s in order if s in self.stages_enabled]
         return order
@@ -215,6 +223,7 @@ class StageScheduler:
                                        speedup,
                                        res.accepted.description if res.accepted else "",
                                        res.fallback_used))
+            self._emit(ctx, records[-1])
             if history is not None:
                 history.record(name, stage,
                                res.accepted.pattern_id if res.accepted else "",
@@ -227,15 +236,14 @@ class StageScheduler:
                 ci_prog, bench_prog = res.ci_program, res.bench_program
                 log.append(stage, res.accepted.pattern_id if res.accepted else "",
                            desc, canon)
-                # re-analysis (paper §IV-A-c): refresh the issue list; newly
-                # surfaced issues can activate not-yet-run stages
+                # re-analysis (paper §IV-A-c): refresh the issue list; a
+                # re-plan is only worth its cost when a genuinely *new*
+                # stage surfaced (neither executed nor already scheduled)
                 issues = analyze(bench_prog, ctx)
-                pos = {s: i for i, s in enumerate(order)}
-                for i in issues:
-                    if i.stage not in executed and i.stage not in pos:
-                        new_order = self._plan(issues)
-                        order = [s for s in new_order if s not in executed]
-                        break
+                scheduled = executed | set(order)
+                if any(i.stage not in scheduled for i in issues):
+                    order = [s for s in self._plan(issues)
+                             if s not in executed]
             else:
                 issues = analyze(bench_prog, ctx)
 
@@ -307,6 +315,7 @@ class StageScheduler:
                 return None
             ci_prog, bench_prog, record, _ = out
             records.append(record)
+            self._emit(ctx, record)
         return ci_prog, bench_prog, records
 
     # ------------------------------------------------------------------
@@ -333,6 +342,7 @@ class StageScheduler:
             # candidate description was generated from (mirrors run())
             canon = canonical_description(cand.description, bench_prog.graph)
             records.append(record)
+            self._emit(ctx, record)
             log.append(step.stage, cand.pattern_id, cand.description, canon)
             ci_prog, bench_prog = new_ci, new_bench
             applied += 1

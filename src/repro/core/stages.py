@@ -1,0 +1,437 @@
+"""Stage registry — the single source of truth for the pipeline's stage DAG.
+
+The paper defines Xe-Forge by its nine named stages and their dependency
+constraints (§IV-A: decreasing semantic scope, restructuring before tuning).
+Before this module the stage identity was stringly-typed and copy-pasted
+across five modules (planner order, planner deps, the scheduler's no-planner
+fallback, the proposer factory, the issue→stage routing table). Now every one
+of those is *derived* from :data:`DEFAULT_REGISTRY`:
+
+* ``planner.DEFAULT_ORDER`` / ``planner.HARD_DEPS`` — ``default_order()`` /
+  ``dep_pairs()``;
+* ``stage_scheduler.StageScheduler._plan``'s planner-off fallback —
+  ``default_order()``;
+* ``proposers.make_proposer`` — ``make_proposer()`` via each
+  :class:`StageSpec`'s proposer factory;
+* ``issues.ISSUE_TO_STAGE`` — the registry's live ``issue_to_stage`` mapping
+  (``Issue.stage`` and dynamic issue registration go through it).
+
+Third-party stages register without touching core modules::
+
+    from repro.core.stages import DEFAULT_REGISTRY, StageSpec
+    DEFAULT_REGISTRY.register(StageSpec(
+        name="my_stage", deps=("fusion",), proposer=my_factory,
+        issue_types=("my_issue",), doc="..."))
+
+The registry is validated: duplicate names, self/unknown deps and dependency
+cycles raise :class:`StageRegistryError`; ``default_order()`` is a
+deterministic topological sort (Kahn's algorithm, ties broken by registration
+order) so the derived default sequence is stable across runs and processes.
+
+``python -m repro.core.stages --check`` is the CI consistency gate: it
+validates the DAG and that every registered stage has a proposer factory and
+at least one issue binding.
+
+This module deliberately imports nothing from the rest of ``repro`` at module
+scope — proposer factories import lazily at call time — so any core module
+(issues, planner, proposers, kb.loader) can consult the registry without
+creating an import cycle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+__all__ = ["StageSpec", "StageRegistry", "StageRegistryError",
+           "DEFAULT_REGISTRY", "register_stage"]
+
+
+class StageRegistryError(ValueError):
+    """Invalid registry state: duplicate/unknown stage, bad dep, or cycle."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Declarative description of one pipeline stage.
+
+    ``deps`` are *hard* dependencies: every named stage must be scheduled
+    before this one whenever both are active (the planner's only inviolable
+    constraint — severity and LLM preferences reorder within it).
+    ``proposer`` is a factory ``(kb, ctx) -> BaseProposer`` kept lazy so the
+    registry can be imported without pulling in the proposer machinery.
+    ``issue_types`` bind the analyzer's issue taxonomy to this stage: an
+    issue routes to exactly one stage, and a stage with no active issues is
+    skipped (paper §IV-A skip logic).
+    """
+
+    name: str
+    deps: Tuple[str, ...] = ()
+    proposer: Optional[Callable] = None
+    issue_types: Tuple[str, ...] = ()
+    doc: str = ""
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise StageRegistryError(f"stage name must be a non-empty "
+                                     f"string, got {self.name!r}")
+        if self.name in self.deps:
+            raise StageRegistryError(f"stage {self.name!r} depends on itself")
+
+
+class StageRegistry:
+    """Validated, ordered collection of :class:`StageSpec`.
+
+    Registration order is meaningful: it is the tiebreak for the
+    deterministic topological ``default_order()``, so registering the paper's
+    nine stages in their canonical sequence reproduces the paper's default
+    order exactly.
+    """
+
+    def __init__(self):
+        self._specs: Dict[str, StageSpec] = {}      # insertion-ordered
+        self._issue_to_stage: Dict[str, str] = {}
+
+    # -- registration ---------------------------------------------------
+    def register(self, spec: StageSpec, replace: bool = False) -> StageSpec:
+        if not replace and spec.name in self._specs:
+            raise StageRegistryError(f"stage {spec.name!r} already "
+                                     f"registered (pass replace=True)")
+        if replace and spec.name in self._specs:
+            # drop the old spec's issue bindings; re-added below
+            for t in self._specs[spec.name].issue_types:
+                self._issue_to_stage.pop(t, None)
+        for t in spec.issue_types:
+            owner = self._issue_to_stage.get(t)
+            if owner is not None and owner != spec.name:
+                raise StageRegistryError(
+                    f"issue type {t!r} is already bound to stage {owner!r}")
+        self._specs[spec.name] = spec
+        for t in spec.issue_types:
+            self._issue_to_stage[t] = spec.name
+        return spec
+
+    def bind_issue(self, issue_type: str, stage: str):
+        """Route an issue type to a registered stage (dynamic registration:
+        new KB files can introduce issue types without code changes)."""
+        if stage not in self._specs:
+            raise StageRegistryError(
+                f"unknown stage {stage!r}; known: {list(self._specs)}")
+        self._issue_to_stage[issue_type] = stage
+
+    # -- lookups --------------------------------------------------------
+    def get(self, name: str) -> StageSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise StageRegistryError(
+                f"unknown stage {name!r}; known: {list(self._specs)}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def __iter__(self) -> Iterator[StageSpec]:
+        return iter(self._specs.values())
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def names(self) -> Tuple[str, ...]:
+        """Stage names in registration order."""
+        return tuple(self._specs)
+
+    @property
+    def issue_to_stage(self) -> Dict[str, str]:
+        """The *live* issue→stage routing dict. ``repro.core.issues`` exposes
+        this same object as ``ISSUE_TO_STAGE``, so dynamic bindings are
+        visible everywhere immediately."""
+        return self._issue_to_stage
+
+    def stage_for_issue(self, issue_type: str) -> str:
+        try:
+            return self._issue_to_stage[issue_type]
+        except KeyError:
+            raise StageRegistryError(
+                f"issue type {issue_type!r} is not bound to any stage") from None
+
+    def dep_pairs(self) -> List[Tuple[str, str]]:
+        """Hard constraints as ``(before, after)`` pairs (planner form)."""
+        return [(dep, spec.name) for spec in self._specs.values()
+                for dep in spec.deps]
+
+    # -- validation + ordering ------------------------------------------
+    def validate(self):
+        """Raise :class:`StageRegistryError` on unknown deps or cycles."""
+        for spec in self._specs.values():
+            for dep in spec.deps:
+                if dep not in self._specs:
+                    raise StageRegistryError(
+                        f"stage {spec.name!r} depends on unknown stage "
+                        f"{dep!r}")
+        self.default_order()   # raises on cycles
+
+    def default_order(self) -> List[str]:
+        """Deterministic topological order of all registered stages: Kahn's
+        algorithm with ties broken by registration order. With the paper's
+        nine stages registered canonically this equals the paper's default
+        sequence."""
+        remaining = dict(self._specs)
+        order: List[str] = []
+        while remaining:
+            ready = [n for n, s in remaining.items()
+                     if not any(d in remaining for d in s.deps)]
+            if not ready:
+                raise StageRegistryError(
+                    f"dependency cycle among stages: {sorted(remaining)}")
+            nxt = ready[0]                 # registration-order tiebreak
+            order.append(nxt)
+            del remaining[nxt]
+        return order
+
+    # -- factories ------------------------------------------------------
+    def make_proposer(self, stage: str, kb, ctx):
+        """Instantiate the stage's proposer via its registered factory."""
+        spec = self.get(stage)
+        if spec.proposer is None:
+            raise StageRegistryError(f"stage {stage!r} has no proposer "
+                                     f"factory registered")
+        return spec.proposer(kb, ctx)
+
+    # -- CI gate --------------------------------------------------------
+    def check(self) -> List[str]:
+        """Full consistency check; returns a list of problems (empty = OK):
+        DAG validity, a proposer factory per stage, ≥1 issue binding per
+        stage, and no issue routed to an unregistered stage."""
+        problems: List[str] = []
+        try:
+            self.validate()
+        except StageRegistryError as e:
+            problems.append(str(e))
+        for spec in self._specs.values():
+            if spec.proposer is None:
+                problems.append(f"stage {spec.name!r} has no proposer factory")
+            if not any(s == spec.name for s in self._issue_to_stage.values()):
+                problems.append(f"stage {spec.name!r} has no issue binding "
+                                f"(it could never be scheduled)")
+        for issue_type, stage in self._issue_to_stage.items():
+            if stage not in self._specs:
+                problems.append(f"issue type {issue_type!r} routes to "
+                                f"unregistered stage {stage!r}")
+        return problems
+
+
+class RegistryView(list):
+    """A list-like *live view* over a registry-derived sequence.
+
+    ``planner.DEFAULT_ORDER``/``HARD_DEPS`` and ``kb.loader.STAGES`` are
+    module-level names that predate the registry; snapshot lists would go
+    stale the moment a third-party stage registers, and module ``__getattr__``
+    would not help re-exports that bound the object at import time. The view
+    recomputes from the registry on every read, while still comparing and
+    iterating like the lists/tuples existing callers expect. It is seeded at
+    construction so even unproxied ``list`` methods see registration-time
+    content rather than nothing."""
+
+    def __init__(self, compute):
+        self._compute = compute
+        super().__init__(compute())
+
+    def _refresh(self):
+        self[:] = self._compute()
+
+    def __iter__(self):
+        self._refresh()
+        return super().__iter__()
+
+    def __reversed__(self):
+        self._refresh()
+        return super().__reversed__()
+
+    def __len__(self):
+        self._refresh()
+        return super().__len__()
+
+    def __getitem__(self, i):
+        self._refresh()
+        return super().__getitem__(i)
+
+    def __contains__(self, x):
+        self._refresh()
+        return super().__contains__(x)
+
+    def __eq__(self, other):
+        self._refresh()
+        return list(self) == other
+
+    def __ne__(self, other):
+        return not self.__eq__(other)
+
+    __hash__ = None
+
+    def __add__(self, other):
+        self._refresh()
+        return list(self) + list(other)
+
+    def __radd__(self, other):
+        self._refresh()
+        return list(other) + list(self)
+
+    def index(self, *a, **kw):
+        self._refresh()
+        return super().index(*a, **kw)
+
+    def count(self, x):
+        self._refresh()
+        return super().count(x)
+
+    def copy(self):
+        self._refresh()
+        return list(self)
+
+    def __repr__(self):
+        self._refresh()
+        return super().__repr__()
+
+    def __reduce__(self):
+        # pickle as a plain snapshot list (the compute closure isn't
+        # picklable, and a worker process has its own registry anyway)
+        self._refresh()
+        return (list, (list(self),))
+
+
+# ===========================================================================
+# default registry: the paper's nine stages (§IV-A)
+# ===========================================================================
+
+def _rewrite_factory(stage: str) -> Callable:
+    def factory(kb, ctx, _stage=stage):
+        from repro.core.proposers import RewriteProposer
+        return RewriteProposer(kb, ctx, _stage)
+    return factory
+
+
+def _class_factory(class_name: str) -> Callable:
+    def factory(kb, ctx, _cls=class_name):
+        from repro.core import proposers
+        return getattr(proposers, _cls)(kb, ctx)
+    return factory
+
+
+DEFAULT_REGISTRY = StageRegistry()
+
+
+def register_stage(spec: StageSpec, replace: bool = False) -> StageSpec:
+    """Register into the process-wide default registry (module-level
+    convenience mirroring ``issues.register_issue_type``)."""
+    return DEFAULT_REGISTRY.register(spec, replace=replace)
+
+
+for _spec in (
+    StageSpec(
+        name="algorithmic", deps=(),
+        proposer=_rewrite_factory("algorithmic"),
+        issue_types=("redundant_computation", "gemm_feeding_reduction",
+                     "foldable_scalar_epilogue", "bn_after_conv",
+                     "duplicated_subexpression", "serial_accumulation",
+                     "materialized_transpose", "mean_uncanonicalized"),
+        doc="Graph-level algebraic restructuring: eliminate redundant "
+            "computation, fold epilogues, canonicalize reductions."),
+    StageSpec(
+        name="discovery", deps=(),
+        proposer=_rewrite_factory("discovery"),
+        issue_types=("open_ended",),
+        doc="Open-ended optimization discovery: KB-guided rewrites beyond "
+            "the fixed issue taxonomy (must carry a detailed proposal)."),
+    StageSpec(
+        name="dtype_fix", deps=("algorithmic", "discovery"),
+        proposer=_class_factory("DtypeProposer"),
+        issue_types=("dtype_float64", "dtype_precision",
+                     "dtype_input_conversion"),
+        doc="Precision repair: demote f64, pick mixed-precision compute "
+            "dtypes that the verifier's tolerances accept."),
+    StageSpec(
+        name="fusion", deps=("algorithmic", "discovery", "dtype_fix"),
+        proposer=_class_factory("FusionProposer"),
+        issue_types=("unfused_kernels", "unfused_elementwise_chain",
+                     "unfused_reduction_epilogue", "fusion_noop",
+                     "fusion_register_pressure", "fusion_replaces_vendor"),
+        doc="Kernel fusion: merge launch-bound elementwise chains and "
+            "reduction epilogues into their producers."),
+    StageSpec(
+        name="memory_access", deps=(),
+        proposer=_class_factory("MemoryProposer"),
+        issue_types=("uncoalesced_access", "missing_boundary_check",
+                     "device_host_sync", "non_contiguous_input",
+                     "long_liveness", "high_register_pressure",
+                     "suboptimal_conv_layout"),
+        doc="Memory-access repair: coalescing, layout, liveness, "
+            "host-sync elimination."),
+    StageSpec(
+        name="block_pointers", deps=("memory_access",),
+        proposer=_class_factory("BlockPointerProposer"),
+        issue_types=("manual_pointer_arithmetic", "block_ptr_boundary_wrong",
+                     "block_ptr_multiple_of_misuse"),
+        doc="Block-pointer (BlockSpec) form: replace manual pointer "
+            "arithmetic with bounds-checked block descriptors."),
+    StageSpec(
+        name="persistent_kernel", deps=(),
+        proposer=_class_factory("PersistentProposer"),
+        issue_types=("missing_persistent", "persistent_num_progs_hardcoded"),
+        doc="Persistent-kernel conversion: grid-resident workers instead of "
+            "one program instance per tile."),
+    StageSpec(
+        name="gpu_specific", deps=("fusion", "block_pointers"),
+        proposer=_class_factory("GpuSpecificProposer"),
+        issue_types=("suboptimal_tile_size", "misaligned_block_shape",
+                     "no_swizzling", "missing_pipeline_stages",
+                     "missing_dimension_semantics", "repack_in_forward",
+                     "missing_packed_transpose", "serialized_n_tiles",
+                     "sigmoid_slow_exp", "bf16_accumulator"),
+        doc="Target-specific tuning: tile alignment, swizzling, pipeline "
+            "stages, packed layouts (the hardware-query-driven stage)."),
+    StageSpec(
+        name="autotuning", deps=("gpu_specific",),
+        proposer=_class_factory("AutotuneProposer"),
+        issue_types=("missing_autotune",),
+        doc="Curated-grid autotuning over the surviving schedule's block "
+            "configs (always last: tunes whatever structure won)."),
+):
+    DEFAULT_REGISTRY.register(_spec)
+
+DEFAULT_REGISTRY.validate()
+
+
+# ===========================================================================
+# CLI: the CI consistency gate
+# ===========================================================================
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.stages",
+        description="Stage-registry consistency gate.")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the stage DAG and that every stage has a "
+                         "proposer factory and at least one issue binding")
+    args = ap.parse_args(argv)
+    # operate on the canonical instance even when run as __main__
+    from repro.core.stages import DEFAULT_REGISTRY as registry
+    if not args.check:
+        ap.print_help()
+        return 0
+    problems = registry.check()
+    if problems:
+        for p in problems:
+            print(f"FAIL: {p}")
+        return 1
+    order = registry.default_order()
+    print(f"OK: {len(registry)} stages, "
+          f"{len(registry.dep_pairs())} hard deps, "
+          f"{len(registry.issue_to_stage)} issue bindings")
+    print(f"topo order: {' -> '.join(order)}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

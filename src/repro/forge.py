@@ -1,0 +1,28 @@
+"""Public API v1 — ``repro.forge`` is the one import a driver needs.
+
+    from repro.forge import Forge, ForgeConfig, KernelJob
+
+    report = Forge(ForgeConfig(workers=4)).optimize_batch(jobs)
+
+Everything here is re-exported from ``repro.core``; see
+``repro.core.forge`` (facade), ``repro.core.config`` (typed config +
+derived cache signatures) and ``repro.core.stages`` (stage registry /
+third-party stage registration) for the implementations.
+"""
+
+from repro.core.config import ForgeConfig
+from repro.core.engine import (EngineResult, EngineStats, KernelJob,
+                               OptimizationEngine)
+from repro.core.forge import Forge, ForgeObserver, OptimizationReport
+from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.stages import (DEFAULT_REGISTRY, StageRegistry,
+                               StageRegistryError, StageSpec, register_stage)
+
+__all__ = [
+    "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",
+    "KernelJob", "EngineResult", "EngineStats",
+    "StageSpec", "StageRegistry", "StageRegistryError", "DEFAULT_REGISTRY",
+    "register_stage",
+    # compatibility shims
+    "ForgePipeline", "PipelineResult", "OptimizationEngine",
+]

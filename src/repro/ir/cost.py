@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.hw.specs import TPUSpec, TPU_V5E, dtype_itemsize
 from repro.ir.graph import Graph, Node

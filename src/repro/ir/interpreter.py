@@ -7,7 +7,6 @@ AI Bench. The same per-op implementations back shape inference.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-from repro.ir.graph import Graph, Node, ELEMENTWISE_UNARY
+from repro.ir.graph import Graph, Node
 
 
 @dataclasses.dataclass
@@ -193,7 +193,6 @@ def _fold_bn(g: Graph) -> List[Rewrite]:
             eps = bnode.attrs.get("eps", 1e-5)
             # s = scale / sqrt(var + eps); W' = W * s[:,None,...]; b' = bias - mean*s
             veps = g2.add("add_scalar", (var,), value=eps)
-            import math  # noqa
             rsq = g2.add("pow", (veps, g2.add("const", (), value=-0.5, dtype=g2.node(var).dtype)))
             s = g2.add("mul", (scale, rsq))
             wshape = g2.node(w).shape

@@ -24,11 +24,14 @@ import yaml
 
 log = logging.getLogger(__name__)
 
-STAGES = (
-    "analysis", "algorithmic", "discovery", "dtype_fix", "fusion",
-    "memory_access", "block_pointers", "persistent_kernel", "gpu_specific",
-    "autotuning",
-)
+# derived from the stage registry: "analysis" is the KB-only pseudo-stage
+# (constraints that inform the analyzer rather than any proposer), the rest
+# are the registered pipeline stages in canonical order. A live view, so a
+# third-party stage registered at runtime is accepted here too.
+from repro.core.stages import DEFAULT_REGISTRY as _STAGE_REGISTRY
+from repro.core.stages import RegistryView as _RegistryView
+
+STAGES = _RegistryView(lambda: ["analysis", *_STAGE_REGISTRY.names()])
 
 _STAGE_ALIASES = {
     "memory_patterns": "memory_access",
@@ -49,7 +52,8 @@ _STAGE_ALIASES = {
 def _norm_stage(s: str) -> Optional[str]:
     s = str(s).strip().lower()
     s = _STAGE_ALIASES.get(s, s)
-    if s == "all" or s in STAGES:
+    # consult the registry live: stages registered after import still load
+    if s == "all" or s == "analysis" or s in _STAGE_REGISTRY:
         return s
     return None
 

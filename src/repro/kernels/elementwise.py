@@ -12,7 +12,6 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 from repro.compat import CompilerParams
 
 from repro.kernels.epilogue import EpilogueOp, apply_epilogue

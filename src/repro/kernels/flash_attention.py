@@ -15,8 +15,7 @@ Shapes: q [B, H, Sq, D], k/v [B, Hkv, Skv, D]; Hkv divides H.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

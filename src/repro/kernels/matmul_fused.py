@@ -18,7 +18,6 @@ Config knobs map 1:1 to :class:`repro.ir.schedule.PallasConfig`.
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Tuple
 
 import jax

@@ -15,15 +15,14 @@ import os
 import pathlib
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.hw.query import HardwareQuery
 from repro.hw.specs import TPU_V5E
 from repro.kernels import ref as ref_ops
 from repro.kernels.epilogue import EpilogueOp
-from repro.kernels.matmul_fused import matmul_fused, matmul_fused_naive
-from repro.kernels.flash_attention import flash_attention, attention_unoptimized
+from repro.kernels.matmul_fused import matmul_fused
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.elementwise import elementwise_chain

@@ -21,7 +21,7 @@ import json
 import pathlib
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

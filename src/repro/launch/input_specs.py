@@ -4,15 +4,15 @@ parameter/optimizer trees, and serving caches."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
-from repro.configs.shapes import SHAPES, ShapeSpec
-from repro.models.model import RuntimeFlags, init_cache, init_params
+from repro.configs.shapes import ShapeSpec
+from repro.models.model import init_cache, init_params
 from repro.optim import adamw
 from repro.sharding import rules
 

@@ -12,12 +12,11 @@ Call-sites optimized per arch:
 
 from __future__ import annotations
 
-import json
 from typing import Dict, List, Tuple
 
 from repro.configs.base import ModelConfig
-from repro.core.engine import KernelJob, OptimizationEngine
-from repro.core.pipeline import ForgePipeline
+from repro.core.engine import KernelJob
+from repro.forge import Forge, ForgeConfig
 from repro.hw.query import HardwareQuery
 from repro.hw.specs import TPU_V5E
 from repro.ir.cost import graph_flops
@@ -58,15 +57,16 @@ def _gemm_program(name: str, m: int, n: int, k: int) -> KernelProgram:
 def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                           batch: int = 8, max_sites: int = 5,
                           workers: int = 1,
-                          engine: OptimizationEngine = None,
+                          forge: Forge = None,
                           cache_path=None) -> Dict:
     # submit all call-sites as one batch: identically-shaped sites (e.g. MoE
     # experts sharing dims, or archs revisited across launches with a
     # persistent cache) replay instead of re-optimizing; differently-shaped
     # GEMM sites are family twins, so the first cold site seeds the rest
     # through the store's near-miss transfer path
-    engine = engine or OptimizationEngine(ForgePipeline(), workers=workers,
-                                          cache_path=cache_path)
+    forge = forge or Forge(ForgeConfig(
+        workers=workers,
+        cache_path=str(cache_path) if cache_path else None))
     sites = matmul_sites(cfg, seq_len, batch)[:max_sites]
     jobs = []
     for name, m, n, k in sites:
@@ -78,7 +78,7 @@ def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                               _gemm_program(name, m, n, k),
                               tags=("gemm",)))
     results = {}
-    for (name, m, n, k), eres in zip(sites, engine.run_batch(jobs)):
+    for (name, m, n, k), eres in zip(sites, forge.optimize_batch(jobs)):
         res = eres.result
         grp = next((g for g in res.bench_program.schedule.groups
                     if g.impl == "pallas_blockspec" and g.config), None)

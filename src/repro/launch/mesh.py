@@ -5,7 +5,6 @@ device state (the dry-run must set XLA_FLAGS before first jax init)."""
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config
-from repro.models.model import RuntimeFlags, init_params
+from repro.models.model import init_params
 from repro.serve.engine import Request, ServeEngine
 
 

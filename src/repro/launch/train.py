@@ -14,7 +14,6 @@ import argparse
 import json
 import time
 
-import jax
 
 from repro.configs.base import ARCH_IDS, get_config
 from repro.models.model import RuntimeFlags

@@ -13,10 +13,9 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

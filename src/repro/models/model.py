@@ -15,8 +15,7 @@ scan per stack). ``batch`` may carry ``prefix_embeds`` (VLM patch stub) or
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ which is what makes the long_500k cells runnable for these families.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Tuple
 
 import jax

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.hw.specs import TPUSpec, TPU_V5E
 

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.roofline.analyze import RooflineTerms, from_record, what_moves_it
 

@@ -10,7 +10,7 @@ cells rather than this CPU-scale engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp

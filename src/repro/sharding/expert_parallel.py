@@ -9,7 +9,6 @@ exercised on fake-device test meshes (tests/test_distribution.py).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict
 
 import jax

@@ -20,10 +20,9 @@ recurrent states shard heads/channels over ``model``.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "wx", "wz", "wb", "wc", "wdt",

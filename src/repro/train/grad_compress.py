@@ -13,7 +13,6 @@ tested on fake devices; the trainer enables it via
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

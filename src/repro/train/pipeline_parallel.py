@@ -14,8 +14,7 @@ testable without the full model zoo.
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,7 @@ in/out shardings the launcher attaches — the step itself is mesh-agnostic."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

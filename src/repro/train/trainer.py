@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np

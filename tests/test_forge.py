@@ -1,0 +1,187 @@
+"""Forge facade: optimize/optimize_batch report shape, observer callbacks
+(stage/job/transfer), config plumbing into pipeline + engine, and driver
+parity with the old direct-engine wiring."""
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.forge import (Forge, ForgeConfig, ForgeObserver, KernelJob,
+                         OptimizationReport)
+
+SPECS = {s.name: s for s in load_specs()}
+
+
+def _job(name):
+    s = SPECS[name]
+    return KernelJob(s.name,
+                     build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+                     build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+class Recorder(ForgeObserver):
+    def __init__(self):
+        self.stages = []
+        self.jobs = []
+        self.transfers = []
+
+    def on_stage_complete(self, job_name, record):
+        self.stages.append((job_name, record.stage))
+
+    def on_job_complete(self, result):
+        self.jobs.append(result.job.name)
+
+    def on_transfer(self, result):
+        self.transfers.append(result.job.name)
+
+
+def test_optimize_returns_single_result_report():
+    forge = Forge(ForgeConfig())
+    report = forge.optimize(_job("gemm_bias_gelu"))
+    assert isinstance(report, OptimizationReport)
+    assert len(report) == 1
+    assert report.result.result.speedup > 1
+    assert report.config is forge.config
+    assert report.geomean_speedup == pytest.approx(report.result.result.speedup)
+
+
+def test_optimize_batch_submission_order_and_report():
+    names = ["gemm_bias_gelu", "matmul_t_gelu"]
+    forge = Forge(ForgeConfig())
+    report = forge.optimize_batch([_job(n) for n in names])
+    assert [r.job.name for r in report] == names
+    assert set(report.speedups) == set(names)
+    d = report.as_dict()
+    assert d["policy_signature"] == forge.config.policy_signature()
+    assert [j["name"] for j in d["jobs"]] == names
+    assert d["stats"]["jobs"] == 2
+    assert "geomean" in report.summary() or "jobs" in report.summary()
+
+
+def test_observers_fire_for_search_replay_and_transfer():
+    obs = Recorder()
+    forge = Forge(ForgeConfig(), observers=[obs])
+    forge.optimize(_job("gemm_bias_gelu"))
+    assert obs.jobs == ["gemm_bias_gelu"]
+    assert obs.stages and all(n == "gemm_bias_gelu" for n, _ in obs.stages)
+    n_search_stages = len(obs.stages)
+
+    # cache replay also emits stage events (one per accepted transform)
+    forge.optimize(_job("gemm_bias_gelu"))
+    assert obs.jobs == ["gemm_bias_gelu"] * 2
+    assert len(obs.stages) > n_search_stages
+    assert obs.transfers == []
+
+
+def test_on_transfer_fires_for_family_warm_start():
+    from repro.ir import GraphBuilder
+    from repro.ir.cost import graph_flops
+    from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+
+    def gemm(name, m, n, k):
+        b = GraphBuilder(name)
+        x = b.input((m, k), name="x")
+        w = b.param((k, n), name="w")
+        g = b.done(b.gelu(b.matmul(x, w, name="mm"), name="act"))
+        sched = eager_schedule(g)
+        for grp in sched.groups:
+            if grp.root == "mm":
+                grp.impl = "pallas_naive"
+                grp.config = PallasConfig(128, 128, 32, num_stages=1)
+        return KernelProgram(name, g, sched, original_flops=graph_flops(g))
+
+    def job(m, n, k):
+        return KernelJob("g", gemm("g", min(m, 256), min(n, 256), min(k, 128)),
+                         gemm("g", m, n, k), tags=("gemm",))
+
+    obs = Recorder()
+    forge = Forge(ForgeConfig(), observers=[obs])
+    forge.optimize(job(2048, 1024, 512))
+    assert obs.transfers == []
+    res = forge.optimize(job(4096, 2048, 1024)).result
+    assert res.transfer
+    assert obs.transfers == ["g"]
+    assert obs.jobs == ["g", "g"]
+
+
+def test_add_observer_and_plain_object_observer():
+    seen = []
+
+    class Plain:                      # duck-typed: only one hook
+        def on_job_complete(self, result):
+            seen.append(result.job.name)
+
+    forge = Forge(ForgeConfig()).add_observer(Plain())
+    forge.optimize(_job("gemm_bias_gelu"))
+    assert seen == ["gemm_bias_gelu"]
+
+
+def test_config_reaches_pipeline_and_engine():
+    cfg = ForgeConfig(max_iterations=3, best_of_k=2, workers=2,
+                      cache_max_entries=32)
+    forge = Forge(cfg)
+    assert forge.pipeline.config is cfg
+    assert forge.pipeline.T == 3 and forge.pipeline.k == 2
+    assert forge.engine.workers == 2
+    assert forge.engine.cache.max_entries == 32
+    assert forge.pipeline.policy_signature() == cfg.policy_signature()
+
+
+def test_engine_from_config_shim():
+    from repro.core import OptimizationEngine
+    cfg = ForgeConfig(workers=3, cache_max_entries=64)
+    eng = OptimizationEngine(config=cfg)
+    assert eng.workers == 3
+    assert eng.cache.max_entries == 64
+    assert eng.pipeline.config is cfg
+    # explicit kwargs always beat config values — a migrating caller must
+    # not silently lose their concurrency/cache-size setting
+    eng2 = OptimizationEngine(config=cfg, workers=8, cache_max_entries=16)
+    assert eng2.workers == 8
+    assert eng2.cache.max_entries == 16
+
+
+def test_unknown_spec_name_raises_not_falls_back():
+    with pytest.raises(KeyError, match="unknown TPU generation"):
+        Forge(ForgeConfig(spec_name="tpu_v99"))
+
+
+def test_custom_spec_object_still_honored():
+    import dataclasses as dc
+    from repro.core import ForgePipeline
+    from repro.hw.specs import TPU_V5E
+    custom = dc.replace(TPU_V5E, name="tpu_custom")
+    pipe = ForgePipeline(spec=custom)
+    assert pipe.spec is custom
+    assert "spec_name=tpu_custom" in pipe.policy_signature()
+
+
+def test_report_stats_are_per_batch_delta():
+    """A reused Forge accumulates lifetime counters on forge.stats, but each
+    report's stats describe only its own batch."""
+    forge = Forge(ForgeConfig())
+    first = forge.optimize(_job("gemm_bias_gelu"))
+    assert first.stats.cache_misses == 1 and first.stats.cache_hits == 0
+    second = forge.optimize(_job("gemm_bias_gelu"))
+    assert second.stats.cache_hits == 1 and second.stats.cache_misses == 0
+    assert second.cache_hits == 1                  # per-result view agrees
+    assert forge.stats.jobs == 2                   # lifetime counter
+
+
+def test_facade_matches_direct_pipeline_result():
+    """The facade is plumbing, not policy: same job, same outcome as the
+    single-job ForgePipeline path."""
+    from repro.core import ForgePipeline
+    from repro.ir.fingerprint import program_canonical
+    s = SPECS["gemm_swish_tanh_scale"]
+    direct = ForgePipeline().optimize(
+        s.name,
+        build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+        build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+        tags=tuple(s.tags), target_dtype=s.target_dtype,
+        rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+    via_facade = Forge(ForgeConfig()).optimize(_job(s.name)).result.result
+    assert program_canonical(via_facade.bench_program) \
+        == program_canonical(direct.bench_program)
+    assert via_facade.optimized_time == pytest.approx(direct.optimized_time)

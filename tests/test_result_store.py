@@ -272,6 +272,52 @@ def test_old_format_cache_discarded(tmp_path):
     assert len(ResultStore(path)) == 0
 
 
+def test_pre_facade_store_loads_and_transfers(tmp_path):
+    """Acceptance gate for the ForgeConfig signature change: store files
+    recorded *before* the typed-config PR (same on-disk version 2, but exact
+    keys folded the old hand-built policy string) must still load tolerantly.
+    Invalidation happens only through the exact-key miss caused by the new
+    policy signature — family entries (not policy-keyed at the store layer)
+    still serve transfer seeds, and nothing crashes or discards the file."""
+    path = tmp_path / "cache.json"
+    eng = OptimizationEngine(workers=1, cache_path=path)
+    cold = eng.submit(_job(2048, 1024, 512))
+    assert not cold.cache_hit
+    data = json.loads(path.read_text())
+    assert data["version"] == 2
+    [(key, entry)] = data["entries"].items()
+    # simulate the pre-PR file: same format, but the exact key was derived
+    # from the old "T=5;k=1;..." policy string, so it cannot collide with
+    # any key the new signature produces
+    fam = entry["family"]
+    old_key = "0" * len(key)
+    path.write_text(json.dumps(
+        {"version": 2, "entries": {old_key: entry}}))
+
+    eng2 = OptimizationEngine(workers=1, cache_path=path)
+    assert len(eng2.cache) == 1                      # loaded, not discarded
+    assert eng2.cache.get(old_key) == entry
+    res = eng2.submit(_job(2048, 1024, 512))
+    # exact miss (policy signature changed) but the old entry's family index
+    # still seeds the warm start — invalidation, not data loss
+    assert not res.cache_hit
+    assert res.transfer and res.seed_steps > 0
+    assert eng2.cache.family_members(fam)
+
+
+def test_fingerprint_keys_unchanged_by_api_redesign():
+    """ir/fingerprint.py is the stable layer: the facade/config redesign
+    must not drift the structural keys (family transfer across PRs depends
+    on it)."""
+    job = _job(2048, 1024, 512)
+    fam = job.family_fingerprint("tpu_v5e", policy="")
+    assert fam == fingerprint_family(job.ci_program, job.bench_program,
+                                     "tpu_v5e", "bfloat16", ("gemm",),
+                                     meta={}, policy="")
+    # same builder at other dims -> same family key (rank abstraction)
+    assert _job(4096, 2048, 1024).family_fingerprint("tpu_v5e") == fam
+
+
 def test_atomic_write_and_family_roundtrip(tmp_path):
     path = tmp_path / "cache.json"
     store = ResultStore(path)

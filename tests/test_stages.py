@@ -1,0 +1,217 @@
+"""Stage registry: validation (cycles, unknown deps), deterministic topo
+order, derived planner/proposer/issue surfaces, third-party registration,
+and the CI consistency gate."""
+
+import pytest
+
+from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
+from repro.core.planner import DEFAULT_ORDER, HARD_DEPS, plan
+from repro.core.stages import (DEFAULT_REGISTRY, StageRegistry,
+                               StageRegistryError, StageSpec)
+
+PAPER_ORDER = ["algorithmic", "discovery", "dtype_fix", "fusion",
+               "memory_access", "block_pointers", "persistent_kernel",
+               "gpu_specific", "autotuning"]
+
+
+# ---------------------------------------------------------------------------
+# registry construction + validation
+# ---------------------------------------------------------------------------
+
+def test_default_registry_matches_paper_order():
+    assert DEFAULT_REGISTRY.default_order() == PAPER_ORDER
+    assert list(DEFAULT_REGISTRY.names()) == PAPER_ORDER
+
+
+def test_derived_planner_constants_match_registry():
+    assert DEFAULT_ORDER == PAPER_ORDER
+    assert sorted(HARD_DEPS) == sorted(DEFAULT_REGISTRY.dep_pairs())
+
+
+def test_duplicate_registration_rejected():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="a"))
+    with pytest.raises(StageRegistryError, match="already registered"):
+        reg.register(StageSpec(name="a"))
+    reg.register(StageSpec(name="a", doc="v2"), replace=True)
+    assert reg.get("a").doc == "v2"
+
+
+def test_self_dependency_rejected():
+    with pytest.raises(StageRegistryError, match="depends on itself"):
+        StageSpec(name="a", deps=("a",))
+
+
+def test_unknown_dep_rejected():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="a", deps=("ghost",)))
+    with pytest.raises(StageRegistryError, match="unknown stage 'ghost'"):
+        reg.validate()
+
+
+def test_cycle_rejected():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="a", deps=("b",)))
+    reg.register(StageSpec(name="b", deps=("c",)))
+    reg.register(StageSpec(name="c", deps=("a",)))
+    with pytest.raises(StageRegistryError, match="cycle"):
+        reg.default_order()
+
+
+def test_topo_order_deterministic_with_registration_tiebreak():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="z"))
+    reg.register(StageSpec(name="m", deps=("z",)))
+    reg.register(StageSpec(name="a"))
+    # z and a are both ready at step 1: registration order wins, not alpha
+    assert reg.default_order() == ["z", "m", "a"]
+
+
+def test_issue_binding_conflict_rejected():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="a", issue_types=("shared",)))
+    with pytest.raises(StageRegistryError, match="already bound"):
+        reg.register(StageSpec(name="b", issue_types=("shared",)))
+
+
+def test_bind_issue_unknown_stage_rejected():
+    with pytest.raises(ValueError, match="unknown stage"):
+        register_issue_type("custom_issue_x", "no_such_stage")
+
+
+# ---------------------------------------------------------------------------
+# derived surfaces
+# ---------------------------------------------------------------------------
+
+def test_issue_routing_is_registry_view():
+    # the issues module exposes the registry's live dict
+    assert ISSUE_TO_STAGE is DEFAULT_REGISTRY.issue_to_stage
+    assert ISSUE_TO_STAGE["unfused_kernels"] == "fusion"
+    assert ISSUE_TO_STAGE["suboptimal_tile_size"] == "gpu_specific"
+    # every registered stage owns at least one issue type (skip logic can
+    # reach it) and every binding routes to a registered stage
+    stages_with_bindings = set(ISSUE_TO_STAGE.values())
+    for spec in DEFAULT_REGISTRY:
+        assert spec.name in stages_with_bindings, spec.name
+    for t, s in ISSUE_TO_STAGE.items():
+        assert s in DEFAULT_REGISTRY, (t, s)
+
+
+def test_registry_planner_order_equals_default_under_equal_severity():
+    # issues of equal severity across all nine stages -> the severity-greedy
+    # topo sort must reproduce the registry's canonical order exactly
+    issues = []
+    for spec in DEFAULT_REGISTRY:
+        issues.append(Issue(type=spec.issue_types[0], severity=3,
+                            description="x"))
+    assert plan(issues) == PAPER_ORDER
+
+
+def test_make_proposer_via_registry():
+    from repro.core.proposers import (AutotuneProposer, RewriteProposer,
+                                      make_proposer)
+    p = make_proposer("algorithmic", None, None)
+    assert isinstance(p, RewriteProposer) and p.stage == "algorithmic"
+    p = make_proposer("autotuning", None, None)
+    assert isinstance(p, AutotuneProposer)
+    with pytest.raises(StageRegistryError, match="unknown stage"):
+        make_proposer("nope", None, None)
+
+
+def test_ablation_subsets_preserved_through_registry(tmp_path):
+    """stages_enabled filters the registry-derived plan the same way it
+    filtered the old hardcoded lists (scheduler + planner paths)."""
+    from repro.core.stage_scheduler import StageScheduler
+    from repro.ir.cost import CostModel
+    from repro.hw.specs import TPU_V5E
+    subset = ["gpu_specific", "autotuning"]
+    sched = StageScheduler(None, CostModel(TPU_V5E), stages_enabled=subset,
+                           use_planner=False)
+    issues = [Issue(type="suboptimal_tile_size", severity=3, description=""),
+              Issue(type="unfused_kernels", severity=5, description=""),
+              Issue(type="missing_autotune", severity=1, description="")]
+    assert sched._plan(issues) == ["gpu_specific", "autotuning"]
+    sched_all = StageScheduler(None, CostModel(TPU_V5E), use_planner=False)
+    assert sched_all._plan(issues) == PAPER_ORDER
+
+
+# ---------------------------------------------------------------------------
+# third-party registration
+# ---------------------------------------------------------------------------
+
+def test_third_party_stage_registers_without_touching_core():
+    class NullProposer:
+        def __init__(self, kb, ctx):
+            self.kb, self.ctx = kb, ctx
+
+        def candidates(self, program, issues, trajectory):
+            return iter(())
+
+    name = "test_custom_stage"
+    try:
+        DEFAULT_REGISTRY.register(StageSpec(
+            name=name, deps=("autotuning",),
+            proposer=lambda kb, ctx: NullProposer(kb, ctx),
+            issue_types=("test_custom_issue",),
+            doc="test-only stage"))
+        # appears at the end of the derived order (depends on autotuning)
+        order = DEFAULT_REGISTRY.default_order()
+        assert order[-1] == name
+        assert order[:-1] == PAPER_ORDER
+        # live views see it immediately
+        assert DEFAULT_ORDER == PAPER_ORDER + [name]
+        assert ISSUE_TO_STAGE["test_custom_issue"] == name
+        assert Issue(type="test_custom_issue", severity=2,
+                     description="").stage == name
+        # proposer resolves through the registry path
+        from repro.core.proposers import make_proposer
+        assert isinstance(make_proposer(name, None, None), NullProposer)
+        # the KB loader's stage whitelist is live too: YAMLs tagged with the
+        # custom stage load without code changes
+        from repro.kb.loader import STAGES, _norm_stage
+        assert name in STAGES
+        assert _norm_stage(name) == name
+        # the gate passes with the custom stage in place
+        assert DEFAULT_REGISTRY.check() == []
+    finally:
+        DEFAULT_REGISTRY._specs.pop(name, None)
+        DEFAULT_REGISTRY._issue_to_stage.pop("test_custom_issue", None)
+
+
+def test_registry_views_support_plain_list_reads():
+    """DEFAULT_ORDER/HARD_DEPS/STAGES are live views; every common list read
+    must see current (never empty) content."""
+    import pickle
+    from repro.kb.loader import STAGES
+    assert DEFAULT_ORDER.copy() == PAPER_ORDER
+    assert list(reversed(DEFAULT_ORDER)) == PAPER_ORDER[::-1]
+    assert DEFAULT_ORDER.count("fusion") == 1
+    assert DEFAULT_ORDER + ["x"] == PAPER_ORDER + ["x"]
+    assert ["x"] + DEFAULT_ORDER == ["x"] + PAPER_ORDER
+    assert DEFAULT_ORDER.index("fusion") == 3
+    assert len(STAGES) == 10 and STAGES[0] == "analysis"
+    # views pickle as plain snapshot lists (process-pool friendly)
+    assert pickle.loads(pickle.dumps(DEFAULT_ORDER)) == PAPER_ORDER
+
+
+# ---------------------------------------------------------------------------
+# CI gate
+# ---------------------------------------------------------------------------
+
+def test_check_clean_on_default_registry():
+    assert DEFAULT_REGISTRY.check() == []
+
+
+def test_check_flags_missing_proposer_and_binding():
+    reg = StageRegistry()
+    reg.register(StageSpec(name="lonely"))
+    problems = reg.check()
+    assert any("no proposer factory" in p for p in problems)
+    assert any("no issue binding" in p for p in problems)
+
+
+def test_check_cli_exit_codes(capsys):
+    from repro.core.stages import main
+    assert main(["--check"]) == 0
+    out = capsys.readouterr().out
+    assert "OK" in out and "topo order" in out
