@@ -16,20 +16,27 @@ from repro.forge import ForgeConfig
 
 
 def run(csv_path=None, families=None, workers=1, cache_path=None,
-        runs=1, config=None):
+        backend="thread", runs=1, config=None):
     """``runs > 1`` re-submits the suite through the same engine so the
     second pass exercises the result cache (replay path). ``config`` is a
-    full :class:`ForgeConfig`; the ``workers``/``cache_path`` kwargs are
-    shorthands for the common case."""
+    full :class:`ForgeConfig`; the ``workers``/``cache_path``/``backend``
+    kwargs are shorthands for the common case (``backend`` selects the
+    engine's execution backend: serial / thread / process)."""
     print("\n== KernelBench-L2 suite (paper Fig. 2-8) ==")
     if config is None:
         config = ForgeConfig(
             workers=workers,
+            execution_backend=backend,
             cache_path=str(cache_path) if cache_path else None)
     runner = SuiteRunner(config, csv_path=csv_path, families=families)
-    summary = runner.run()
-    for _ in range(max(0, runs - 1)):
+    try:
         summary = runner.run()
+        for _ in range(max(0, runs - 1)):
+            summary = runner.run()
+    finally:
+        # the process backend keeps spawned workers warm between batches;
+        # release them once the suite is done
+        runner.close()
 
     by_family = collections.defaultdict(list)
     for r in summary.results:
@@ -63,4 +70,15 @@ def run(csv_path=None, families=None, workers=1, cache_path=None,
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--backend", default="thread",
+                    choices=["serial", "thread", "process"])
+    ap.add_argument("--cache", default=None,
+                    help="result-store path (warm store)")
+    ap.add_argument("--runs", type=int, default=1)
+    args = ap.parse_args()
+    run(workers=args.workers, backend=args.backend, cache_path=args.cache,
+        runs=args.runs)

@@ -1,7 +1,8 @@
 """Benchmark driver — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only l2|fa|roofline|ablations|dryrun]
-                                            [--workers N] [--l2-runs N]
+                                            [--workers N] [--backend serial|thread|process]
+                                            [--l2-runs N] [--cache store.json]
                                             [--baseline BENCH_l2.json]
 
 Prints per-kernel tables and a ``name,us_per_call,derived`` CSV summary.
@@ -114,7 +115,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["l2", "fa", "roofline", "ablations", "dryrun"])
     ap.add_argument("--workers", type=int, default=1,
-                    help="engine worker threads for the l2 suite")
+                    help="engine workers for the l2 suite")
+    ap.add_argument("--backend", default="thread",
+                    choices=["serial", "thread", "process"],
+                    help="execution backend for the l2 suite (process = "
+                         "spawned worker processes; see ForgeConfig."
+                         "execution_backend)")
+    ap.add_argument("--cache", default=None,
+                    help="result-store path for the l2 suite; point it at "
+                         "a warm store (scripts/warm_store.py) so cold CI "
+                         "runs start from replay/transfer seeds")
     ap.add_argument("--l2-runs", type=int, default=1,
                     help="suite passes through the engine (2 exercises the "
                          "result cache)")
@@ -153,7 +163,9 @@ def main() -> None:
                 print(f"baseline {bp} not found; skipping regression gate")
         from benchmarks.kernelbench_l2 import run as run_l2
         from repro.forge import ForgeConfig
-        summary = run_l2(config=ForgeConfig(workers=args.workers),
+        summary = run_l2(config=ForgeConfig(workers=args.workers,
+                                            execution_backend=args.backend,
+                                            cache_path=args.cache),
                          runs=args.l2_runs)
         for r in summary.results:
             csv_rows.append((r.name, r.optimized_us,

@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""CI gate: serial / thread / process backends must be result-equivalent.
+
+Runs a small fixed job set (one per structural family, plus a family twin so
+the in-batch transfer path is exercised) through a fresh Forge per backend
+and fails if any per-kernel TransformLog, fingerprint, optimized time, or
+canonical schedule diverges from the serial reference. This is the
+executable form of the engine's core contract: *where* a job ran can never
+change *what* it produced.
+
+    PYTHONPATH=src python scripts/backend_equivalence.py [--workers N]
+                                                         [--backends a,b,c]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+# the fixed gate set: two GEMM-family structures, one matmul-family, and a
+# conv, so equivalence is checked across pallas-templated and XLA-only paths
+GATE_SPECS = ("gemm_bias_gelu", "gemm_swish_tanh_scale", "matmul_t_gelu",
+              "conv2d_gelu_scale")
+
+
+def build_jobs():
+    from repro.aibench import build_program, load_specs
+    from repro.core import KernelJob
+
+    specs = {s.name: s for s in load_specs()}
+    jobs = []
+    for name in GATE_SPECS:
+        s = specs[name]
+        jobs.append(KernelJob(
+            s.name,
+            build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+            build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+            tags=tuple(s.tags), target_dtype=s.target_dtype,
+            rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
+    # family twin of the first job at halved dims: forces the two-phase
+    # leader/follower transfer path on every backend
+    s = specs[GATE_SPECS[0]]
+    jobs.append(KernelJob(
+        f"{s.name}_twin",
+        build_program(s.builder,
+                      {k: max(32, v // 2) for k, v in s.dims("ci").items()},
+                      "naive", meta=s.meta),
+        build_program(s.builder,
+                      {k: max(64, v // 2) for k, v in s.dims("bench").items()},
+                      "naive", meta=s.meta),
+        tags=tuple(s.tags), target_dtype=s.target_dtype,
+        rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
+    return jobs
+
+
+def run_backend(backend: str, workers: int):
+    from repro.forge import Forge, ForgeConfig
+    from repro.ir.fingerprint import program_canonical
+
+    t0 = time.monotonic()
+    with Forge(ForgeConfig(execution_backend=backend,
+                           workers=workers)) as forge:
+        report = forge.optimize_batch(build_jobs())
+    rows = {}
+    for r in report.results:
+        rows[r.job.name] = {
+            "fingerprint": r.fingerprint,
+            "transform_log": r.result.transform_log.to_list(),
+            "speedup": round(r.result.speedup, 9),
+            "optimized_time": r.result.optimized_time,
+            "canonical_schedule": program_canonical(
+                r.result.bench_program)["schedule"],
+            "cache_hit": r.cache_hit,
+            "transfer": r.transfer,
+        }
+    return rows, time.monotonic() - t0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--backends", default="serial,thread,process",
+                    help="comma-separated subset to compare (first entry "
+                         "is the reference)")
+    args = ap.parse_args()
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+    if len(backends) < 2:
+        ap.error("need at least two backends to compare")
+
+    print(f"== backend equivalence gate ({len(GATE_SPECS) + 1} jobs, "
+          f"workers={args.workers}) ==")
+    results = {}
+    for backend in backends:
+        rows, dt = run_backend(backend, args.workers)
+        results[backend] = rows
+        transfers = sum(1 for v in rows.values() if v["transfer"])
+        print(f"  {backend:8s} {dt:6.1f}s  {len(rows)} kernels, "
+              f"{transfers} transfer(s)")
+
+    ref_name, ref = backends[0], results[backends[0]]
+    failures = []
+    for backend in backends[1:]:
+        for name, row in results[backend].items():
+            for field in ("fingerprint", "transform_log", "speedup",
+                          "optimized_time", "canonical_schedule",
+                          "cache_hit", "transfer"):
+                if row[field] != ref[name][field]:
+                    failures.append((backend, name, field))
+                    print(f"  DIVERGED {backend}/{name}.{field}:\n"
+                          f"    {ref_name}: {ref[name][field]!r}\n"
+                          f"    {backend}: {row[field]!r}")
+    if failures:
+        print(f"\nFAIL: {len(failures)} divergence(s) vs {ref_name}")
+        return 1
+    print(f"\nbackend equivalence OK ({', '.join(backends)}: identical "
+          f"logs, fingerprints, speedups)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Cache warm-up tooling (ROADMAP item): build a pre-seeded ResultStore for
+the KernelBench-L2 suite so cold CI runs start from replay/transfer seeds.
+
+    PYTHONPATH=src python scripts/warm_store.py [--out results/warm_store.json]
+                                                [--workers N] [--backend B]
+                                                [--families gemm,matmul]
+
+Runs the full L2 suite once with a persistent store at ``--out`` and prints
+the store/engine summary. CI restores the artifact (actions/cache keyed on
+the KB content hash + policy signature, with prefix fallbacks) and passes it
+to ``benchmarks.run --cache`` — an exact key match replays every kernel; a
+near miss (KB or policy drifted) still transfers through the family index,
+because family lookups are deliberately not KB-versioned.
+
+The store is self-invalidating: exact keys fold in the KB content hash and
+the config policy signature, so a stale warm store can never produce a wrong
+result — only fewer hits.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/warm_store.json",
+                    help="where to write the pre-seeded ResultStore")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--backend", default="thread",
+                    choices=["serial", "thread", "process"])
+    ap.add_argument("--families", default=None,
+                    help="comma-separated family subset (default: all)")
+    args = ap.parse_args()
+
+    from repro.aibench import SuiteRunner
+    from repro.forge import ForgeConfig
+
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    families = ([f.strip() for f in args.families.split(",") if f.strip()]
+                if args.families else None)
+    config = ForgeConfig(workers=args.workers,
+                         execution_backend=args.backend,
+                         cache_path=str(out))
+    runner = SuiteRunner(config, families=families)
+    with runner:
+        summary = runner.run()
+
+    store = runner.forge.cache
+    stats = summary.engine_stats
+    print(f"\nwarm store: {out} ({len(store)} entries, "
+          f"{len(store.family_sizes())} families)")
+    print(f"policy signature: {config.policy_signature()}")
+    print(f"kb content hash:  {runner.forge.pipeline.kb.content_hash()}")
+    if stats:
+        print(f"engine: {stats.jobs} jobs, {stats.cache_hits} hits, "
+              f"{stats.family_transfers} transfers while seeding")
+    if not summary.all_correct:
+        print("FAIL: suite produced incorrect kernels; not a usable store")
+        return 1
+    print("warm store OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,11 +67,18 @@ class KernelRunner:
     def __init__(self, config: Optional[ForgeConfig] = None,
                  logger: Optional[CSVLogger] = None,
                  measure_wallclock: bool = False,
-                 forge: Optional[Forge] = None):
+                 forge: Optional[Forge] = None,
+                 backend: Optional[str] = None):
         if forge is not None and config is not None \
                 and forge.config is not config:
             raise ValueError("pass either config or forge, not two "
                              "disagreeing ones — the forge's config runs")
+        if backend is not None:
+            if forge is not None:
+                raise ValueError("backend= is a config shorthand; a "
+                                 "pre-built forge already fixed its backend")
+            config = (config or ForgeConfig()).replace(
+                execution_backend=backend)
         self.forge = forge or Forge(config or ForgeConfig())
         self.engine = self.forge.engine
         self.pipeline = self.forge.pipeline
@@ -147,6 +154,17 @@ class KernelRunner:
     def run(self, spec: ProblemSpec) -> KernelResult:
         return self.finish(spec, self.forge.optimize(self.make_job(spec)).result)
 
+    def close(self):
+        """Release the forge's executor resources (the process backend
+        keeps spawned workers warm between batches)."""
+        self.forge.close()
+
+    def __enter__(self) -> "KernelRunner":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
 
 @dataclasses.dataclass
 class SuiteSummary:
@@ -191,16 +209,34 @@ class SuiteRunner:
     def __init__(self, config: Optional[ForgeConfig] = None,
                  csv_path: Optional[pathlib.Path] = None,
                  families: Optional[List[str]] = None,
-                 forge: Optional[Forge] = None):
+                 forge: Optional[Forge] = None,
+                 backend: Optional[str] = None):
         logger = CSVLogger(csv_path) if csv_path else None
         if forge is not None and config is not None \
                 and forge.config is not config:
             raise ValueError("pass either config or forge, not two "
                              "disagreeing ones — the forge's config runs")
+        if backend is not None:
+            if forge is not None:
+                raise ValueError("backend= is a config shorthand; a "
+                                 "pre-built forge already fixed its backend")
+            config = (config or ForgeConfig()).replace(
+                execution_backend=backend)
         self.forge = forge or Forge(config or ForgeConfig())
         self.engine = self.forge.engine
         self.runner = KernelRunner(logger=logger, forge=self.forge)
         self.families = families
+
+    def close(self):
+        """Release the forge's executor resources (the process backend
+        keeps spawned workers warm between batches)."""
+        self.forge.close()
+
+    def __enter__(self) -> "SuiteRunner":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     def run(self, specs: Optional[List[ProblemSpec]] = None,
             verbose: bool = True) -> SuiteSummary:

@@ -4,7 +4,10 @@ plus the fleet-scale engine (batching, caching, concurrency) layered on
 top of it."""
 
 from repro.core.analyzer import analyze
-from repro.core.config import ForgeConfig
+from repro.core.config import EXECUTION_BACKENDS, ForgeConfig
+from repro.core.job_codec import (decode_job, decode_pipeline_result,
+                                  decode_program, encode_job,
+                                  encode_pipeline_result, encode_program)
 from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
@@ -29,6 +32,9 @@ __all__ = [
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",
     "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",
+    "EXECUTION_BACKENDS",
+    "encode_job", "decode_job", "encode_program", "decode_program",
+    "encode_pipeline_result", "decode_pipeline_result",
     "StageSpec", "StageRegistry", "StageRegistryError", "DEFAULT_REGISTRY",
     "register_stage",
 ]

@@ -28,7 +28,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-__all__ = ["ForgeConfig", "POLICY_SIGNATURE_VERSION"]
+__all__ = ["ForgeConfig", "EXECUTION_BACKENDS", "POLICY_SIGNATURE_VERSION"]
+
+# where the engine runs jobs; validated here so a typo'd backend fails at
+# config construction, not deep inside a batch
+EXECUTION_BACKENDS = ("serial", "thread", "process")
 
 # bumped when the signature *format* changes (field encoding, separator…);
 # participates in the signature so format changes can never alias old keys
@@ -74,7 +78,12 @@ class ForgeConfig:
     * ``use_llm`` — an LLM client participates in planning/proposals.
 
     Operational fields (excluded — see module docstring): ``workers``,
-    ``cache_path``, ``cache_max_entries``, ``dump_dir``.
+    ``execution_backend``, ``cache_path``, ``cache_max_entries``,
+    ``dump_dir``. ``execution_backend`` selects *where* jobs run
+    (``serial`` in-order on the calling thread, ``thread`` across a bounded
+    thread pool, ``process`` across spawned worker processes); the engine
+    guarantees all three are result-equivalent, so like ``workers`` it can
+    never change what the pipeline produces and stays out of the signature.
     """
 
     spec_name: str = "tpu_v5e"
@@ -87,6 +96,7 @@ class ForgeConfig:
     use_llm: bool = False
 
     workers: int = _operational(default=1)
+    execution_backend: str = _operational(default="thread")
     cache_path: Optional[str] = _operational(default=None)
     cache_max_entries: int = _operational(default=512)
     dump_dir: Optional[str] = _operational(default=None)
@@ -94,6 +104,10 @@ class ForgeConfig:
     def __post_init__(self):
         if self.max_iterations < 1:
             raise ValueError("max_iterations must be >= 1")
+        if self.execution_backend not in EXECUTION_BACKENDS:
+            raise ValueError(
+                f"unknown execution_backend {self.execution_backend!r}; "
+                f"choose one of {sorted(EXECUTION_BACKENDS)}")
         if self.best_of_k < 1:
             raise ValueError("best_of_k must be >= 1")
         if self.workers < 1:

@@ -7,11 +7,23 @@ structurally identical programs (the GEMM family differs only in node labels)
 re-run the full nine-stage CoVeR search from scratch, strictly sequentially.
 The :class:`OptimizationEngine` fixes both axes:
 
-* **Batching + concurrency** — jobs are scheduled across a bounded thread
-  pool (verification is interpreter-bound, so threads suffice; ``workers=1``
-  is the deterministic serial mode tests rely on). Results always come back
-  in submission order, and history priors are frozen once per batch so
-  serial and concurrent runs produce identical results kernel-for-kernel.
+* **Batching + pluggable execution backends** — jobs are scheduled across an
+  executor selected by ``ForgeConfig.execution_backend``:
+
+  - ``serial`` — in submission order on the calling thread (the
+    deterministic reference mode);
+  - ``thread`` — a bounded thread pool (the default; cheap, but the
+    interpreter-heavy verify path contends on the GIL);
+  - ``process`` — spawned worker processes, each owning a private pipeline
+    built from the picklable :class:`ForgeConfig`; jobs travel as the
+    :mod:`repro.core.job_codec` wire form and results/observer events stream
+    back through a results queue.
+
+  All three are **result-equivalent**: cache keys, transform logs, and
+  optimized schedules are identical whichever backend ran a batch (results
+  always come back in submission order, priors are frozen once per batch and
+  transfer seeds once per phase). ``scripts/backend_equivalence.py`` gates
+  this in CI.
 
 * **Exact replay** — the :class:`ResultStore` (``repro.core.result_store``)
   keys entries on the canonical structural fingerprint of (graph, schedule,
@@ -33,18 +45,26 @@ The :class:`OptimizationEngine` fixes both axes:
 
 * **Warm starts** — the shared :class:`History` records every stage outcome;
   its success-count priors reorder proposer candidates for subsequent
-  batches (see ``StageScheduler``).
+  batches (see ``StageScheduler``). Process workers record to private
+  histories whose records ride the results queue back and merge into the
+  parent's history, so multi-batch warm starts stay backend-equivalent.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import multiprocessing
 import pathlib
+import pickle
+import queue as queue_mod
 import threading
+import traceback
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
+from repro.core import job_codec
+from repro.core.config import EXECUTION_BACKENDS
 from repro.core.pipeline import ForgePipeline, PipelineResult
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.stage_scheduler import TransformLog
@@ -53,7 +73,8 @@ from repro.ir.fingerprint import (fingerprint_family, fingerprint_job,
 from repro.ir.schedule import KernelProgram
 
 __all__ = ["KernelJob", "EngineResult", "EngineStats", "OptimizationEngine",
-           "ResultCache", "ResultStore"]
+           "ResultCache", "ResultStore", "execute_job", "replay_entry",
+           "entry_for_result"]
 
 
 @dataclasses.dataclass
@@ -107,13 +128,380 @@ class EngineStats:
         return dataclasses.asdict(self)
 
 
+# ----------------------------------------------------------------------
+# Backend-independent single-job execution.
+#
+# These module-level functions are the one implementation of "optimize this
+# job against this pipeline" that every backend shares: the serial loop and
+# the thread pool call them against the engine's own pipeline; a process
+# worker calls them against its private pipeline rebuilt from the shipped
+# ForgeConfig. Keeping them free of engine state is what makes the three
+# backends result-equivalent by construction.
+# ----------------------------------------------------------------------
+
+def entry_for_result(result: PipelineResult) -> Dict[str, Any]:
+    """The result-store entry recording a cold run's winning sequence."""
+    return {
+        "name": result.name,
+        "transform_log": (result.transform_log.to_list()
+                          if result.transform_log else []),
+        "canonical_schedule": program_canonical(
+            result.bench_program)["schedule"],
+        "original_time": result.original_time,
+        "optimized_time": result.optimized_time,
+        # never-degrade fired on the cold run: replay must reproduce the
+        # clamp instead of treating final_time > original as divergence
+        "clamped": result.clamped,
+    }
+
+
+def replay_entry(pipeline: ForgePipeline, job: KernelJob,
+                 entry: Dict[str, Any],
+                 priors: Mapping[str, int]) -> Optional[PipelineResult]:
+    """Replay a cached transform log onto this job's programs. Returns
+    None (-> full optimization) on any divergence, including a replayed
+    schedule that is not bit-identical to the cached canonical form."""
+    log = TransformLog.from_list(entry.get("transform_log", []))
+    ctx = pipeline._prepare_ctx(job.name, job.ci_program, job.tags,
+                                job.target_dtype, job.rtol, job.atol,
+                                job.meta or {})
+    original_cost = pipeline.cost_model.program_cost(job.bench_program)
+    scheduler = pipeline.make_scheduler(priors)
+    out = scheduler.replay(log, job.ci_program.copy(),
+                           job.bench_program.copy(), ctx)
+    if out is None:
+        return None
+    ci_prog, bench_prog, records = out
+    got = program_canonical(bench_prog)["schedule"]
+    if got != entry.get("canonical_schedule"):
+        return None
+    final_time = pipeline.cost_model.program_time(bench_prog)
+    if final_time > original_cost.total_s:
+        if not entry.get("clamped"):
+            return None
+        # reproduce the cold run's never-degrade clamp
+        return PipelineResult(job.name, original_cost.total_s,
+                              original_cost.total_s, ci_prog, bench_prog,
+                              records, [], transform_log=log,
+                              cache_hit=True, clamped=True)
+    return PipelineResult(job.name, original_cost.total_s, final_time,
+                          ci_prog, bench_prog, records, [],
+                          transform_log=log, cache_hit=True)
+
+
+def execute_job(pipeline: ForgePipeline, job: KernelJob,
+                entry: Optional[Dict[str, Any]],
+                seed_pairs: Sequence,
+                exact_key: str,
+                priors: Mapping[str, int]):
+    """Replay-or-optimize one job. ``entry`` is the exact store entry (or
+    None); ``seed_pairs`` is the frozen ``(neighbor_key, log_list)`` family
+    snapshot for this job's phase. Returns ``(PipelineResult, outcome)``
+    where ``outcome`` carries the store/stat flags::
+
+        {"cache_hit", "replay_fallback", "had_seed", "transferred",
+         "entry"}   # entry: dict to store, or None on a replayed hit
+    """
+    outcome = {"cache_hit": False, "replay_fallback": False,
+               "had_seed": False, "transferred": False, "entry": None}
+    if entry is not None:
+        replayed = replay_entry(pipeline, job, entry, priors)
+        if replayed is not None:
+            outcome["cache_hit"] = True
+            return replayed, outcome
+        outcome["replay_fallback"] = True
+
+    # exact miss (or diverged replay): probe the phase's frozen family
+    # snapshot for a transfer seed. The job's own exact entry is
+    # excluded — when its replay just diverged, re-seeding from the very
+    # log that failed cannot help — but another family member still can.
+    seed_log: Optional[TransformLog] = None
+    for neighbor_key, log_list in seed_pairs:
+        if neighbor_key != exact_key and log_list:
+            seed_log = TransformLog.from_list(log_list)
+            break
+
+    result = pipeline.optimize(
+        job.name, job.ci_program, job.bench_program, tags=job.tags,
+        target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
+        meta=job.meta, priors=priors, seed_log=seed_log)
+    outcome["entry"] = entry_for_result(result)
+    outcome["had_seed"] = seed_log is not None
+    outcome["transferred"] = (seed_log is not None
+                              and result.seed_steps_applied > 0)
+    return result, outcome
+
+
+# ----------------------------------------------------------------------
+# Execution backends. Each runs one scheduling *phase* (the engine's
+# leader/follower split) and writes EngineResults into ``results`` at the
+# jobs' submission indices.
+# ----------------------------------------------------------------------
+
+class SerialExecutor:
+    """In-order execution on the calling thread — the reference backend."""
+
+    name = "serial"
+
+    def __init__(self, engine: "OptimizationEngine"):
+        self.engine = engine
+
+    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+        for i in phase:
+            results[i] = self.engine._run_job(jobs[i], keys[i], priors,
+                                              seeds)
+
+    def close(self):
+        pass
+
+
+class ThreadExecutor:
+    """Bounded thread pool (``workers`` threads); single-job phases and
+    ``workers=1`` degrade to the serial path."""
+
+    name = "thread"
+
+    def __init__(self, engine: "OptimizationEngine"):
+        self.engine = engine
+
+    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+        engine = self.engine
+        if engine.workers <= 1 or len(phase) <= 1:
+            for i in phase:
+                results[i] = engine._run_job(jobs[i], keys[i], priors, seeds)
+            return
+        with ThreadPoolExecutor(max_workers=engine.workers) as pool:
+            futures = [(i, pool.submit(engine._run_job, jobs[i], keys[i],
+                                       priors, seeds))
+                       for i in phase]
+            for i, f in futures:
+                results[i] = f.result()
+
+    def close(self):
+        pass
+
+
+def _process_worker_main(config_dict: Dict[str, Any],
+                         kb_blob: Optional[bytes],
+                         task_q, event_q):
+    """Worker process loop: rebuild a private pipeline from the shipped
+    ForgeConfig (+ pickled KB), then serve tasks until the ``None``
+    sentinel. Observer events are not dropped: every stage record streams
+    back through the results queue as it happens, and each finished job
+    returns its wire-encoded result, store entry, outcome flags, and the
+    private history delta for the parent to merge."""
+    from repro.core.config import ForgeConfig
+    from repro.core.history import History
+
+    config = ForgeConfig.from_dict(config_dict)
+    kb = pickle.loads(kb_blob) if kb_blob else None
+    pipeline = ForgePipeline.from_config(config, kb=kb)
+    while True:
+        task = task_q.get()
+        if task is None:
+            return
+        idx, job_wire, exact_key, family_key, priors, entry, seed_pairs = task
+        try:
+            job = job_codec.decode_job(job_wire)
+            # fresh per-task history: the records travel back with the
+            # result and merge into the parent's shared history, instead of
+            # accumulating invisibly (and divergently) per worker
+            pipeline.history = History()
+            pipeline.on_stage_complete = (
+                lambda name, rec, _idx=idx: event_q.put(
+                    ("stage", _idx, name, job_codec.encode_stage_record(rec))))
+            result, outcome = execute_job(pipeline, job, entry, seed_pairs,
+                                          exact_key, priors)
+            event_q.put(("result", idx, {
+                "result": job_codec.encode_pipeline_result(result),
+                "entry": outcome.pop("entry"),
+                "outcome": outcome,
+                "history": list(pipeline.history.records),
+            }))
+        except Exception:  # noqa: BLE001 — marshal the traceback up
+            event_q.put(("error", idx, traceback.format_exc()))
+
+
+class ProcessExecutor:
+    """Spawned worker processes, each owning a private pipeline.
+
+    The parent stays the single owner of the result store, the stats, the
+    shared history, and observer dispatch: workers only ever see one job at
+    a time plus the frozen seeds for it, and everything they produce —
+    stage events, results, store entries, history records — flows back
+    through one results queue. The ``spawn`` start method is used
+    unconditionally (fork + JAX is a deadlock lottery), which is exactly why
+    the :mod:`repro.core.job_codec` wire form exists."""
+
+    name = "process"
+
+    def __init__(self, engine: "OptimizationEngine"):
+        if engine.pipeline.llm is not None:
+            raise ValueError(
+                "execution_backend='process' cannot ship a live LLM client "
+                "to worker processes; use the 'thread' backend")
+        self.engine = engine
+        self._ctx = multiprocessing.get_context("spawn")
+        self._task_q = None
+        self._event_q = None
+        self._procs: List = []
+        # one phase at a time through the shared queues: two concurrent
+        # run_batch calls must never drain each other's events (the serial/
+        # thread paths tolerate overlap via the _inflight locks; here the
+        # queues are the shared resource, so overlapping callers queue up)
+        self._phase_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _ensure_pool(self):
+        self._procs = [p for p in self._procs if p.is_alive()]
+        if self._procs:
+            return
+        engine = self.engine
+        self._task_q = self._ctx.Queue()
+        self._event_q = self._ctx.Queue()
+        config_dict = engine.pipeline.config.to_dict()
+        kb_blob = pickle.dumps(engine.pipeline.kb)
+        n = max(1, engine.workers)
+        self._procs = [
+            self._ctx.Process(target=_process_worker_main,
+                              args=(config_dict, kb_blob, self._task_q,
+                                    self._event_q),
+                              daemon=True, name=f"forge-worker-{i}")
+            for i in range(n)
+        ]
+        for p in self._procs:
+            p.start()
+
+    def _next_event(self):
+        while True:
+            try:
+                return self._event_q.get(timeout=1.0)
+            except queue_mod.Empty:
+                if any(not p.is_alive() for p in self._procs):
+                    try:  # drain anything the dying worker still flushed
+                        return self._event_q.get_nowait()
+                    except queue_mod.Empty:
+                        raise RuntimeError(
+                            "process backend worker died mid-batch "
+                            "(see stderr for the worker traceback)")
+
+    # ------------------------------------------------------------------
+    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+        with self._phase_lock:
+            try:
+                self._ensure_pool()
+                # duplicate exact keys within a phase run as a second wave:
+                # the first occurrence computes, the wave boundary puts its
+                # entry in the store, and the duplicates replay — the same
+                # 1-full-run + N-1-replays the _inflight locks give the
+                # in-process backends, so cache_hit stays backend-equivalent
+                seen = set()
+                waves: List[List[int]] = [[], []]
+                for i in phase:
+                    waves[1 if keys[i][0] in seen else 0].append(i)
+                    seen.add(keys[i][0])
+                for wave in waves:
+                    if wave:
+                        self._run_wave(jobs, wave, keys, priors, seeds,
+                                       results)
+            except Exception:
+                # anything unexpected (a raising observer, a decode error, a
+                # dead worker) leaves undispatched tasks / undrained events
+                # behind; tear the pool down so the next batch starts clean
+                # instead of consuming this batch's leftovers
+                self.close()
+                raise
+
+    def _run_wave(self, jobs, wave, keys, priors, seeds, results):
+        engine = self.engine
+        pending: Dict[int, KernelJob] = {}
+        for i in wave:
+            exact_key, family_key = keys[i]
+            self._task_q.put((i, job_codec.encode_job(jobs[i]), exact_key,
+                              family_key, dict(priors),
+                              engine.cache.get(exact_key),
+                              list(seeds.get(family_key, ()))))
+            pending[i] = jobs[i]
+        history_records: Dict[int, List[dict]] = {}
+        while pending:
+            event = self._next_event()
+            kind = event[0]
+            if kind == "stage":
+                _, idx, job_name, record = event
+                hook = engine.pipeline.on_stage_complete
+                if hook is not None:
+                    hook(job_name, job_codec.decode_stage_record(record))
+            elif kind == "result":
+                _, idx, payload = event
+                exact_key, family_key = keys[idx]
+                outcome = payload["outcome"]
+                if payload["entry"] is not None:
+                    engine.cache.put(exact_key, payload["entry"],
+                                     family=family_key, flush=False)
+                engine._apply_outcome(outcome)
+                result = job_codec.decode_pipeline_result(payload["result"])
+                eres = EngineResult(pending.pop(idx), result, exact_key,
+                                    cache_hit=outcome["cache_hit"],
+                                    transfer=outcome["transferred"],
+                                    seed_steps=result.seed_steps_applied)
+                history_records[idx] = payload["history"]
+                results[idx] = eres
+                if engine.on_result is not None:
+                    with engine._notify_lock:
+                        engine.on_result(eres)
+            else:  # "error"
+                _, idx, tb = event
+                raise RuntimeError(
+                    f"process backend job #{idx} failed in worker:\n{tb}")
+        # merge worker history deltas in submission order: counts are
+        # additive (order-independent), the record list stays deterministic
+        for i in sorted(history_records):
+            engine.pipeline.history.merge_records(history_records[i])
+
+    # ------------------------------------------------------------------
+    def close(self):
+        procs, self._procs = self._procs, []
+        if not procs:
+            return
+        for p in procs:
+            if p.is_alive() and self._task_q is not None:
+                try:
+                    self._task_q.put(None)
+                except (ValueError, OSError):
+                    break
+        for p in procs:
+            p.join(timeout=5)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=1)
+        for q in (self._task_q, self._event_q):
+            if q is not None:
+                q.close()
+                q.cancel_join_thread()
+        self._task_q = self._event_q = None
+
+
+_EXECUTORS = {
+    "serial": SerialExecutor,
+    "thread": ThreadExecutor,
+    "process": ProcessExecutor,
+}
+
+# single source of truth: ForgeConfig validates execution_backend against
+# config.EXECUTION_BACKENDS, the engine dispatches through _EXECUTORS —
+# fail at import if the two ever drift
+assert set(_EXECUTORS) == set(EXECUTION_BACKENDS), \
+    (sorted(_EXECUTORS), sorted(EXECUTION_BACKENDS))
+
+
 class OptimizationEngine:
     """Suite-level orchestrator over a shared :class:`ForgePipeline`.
 
     New code should construct it through the :class:`repro.core.forge.Forge`
     facade (``Forge(ForgeConfig(...))``); the kwarg constructor remains as
     the compatibility shim, and ``config=`` supplies every operational knob
-    (workers, cache path/size) from one :class:`ForgeConfig`."""
+    (workers, execution backend, cache path/size) from one
+    :class:`ForgeConfig`."""
 
     def __init__(self,
                  pipeline: Optional[ForgePipeline] = None,
@@ -121,17 +509,23 @@ class OptimizationEngine:
                  cache: Optional[ResultStore] = None,
                  cache_path: Optional[pathlib.Path] = None,
                  cache_max_entries: Optional[int] = None,
+                 backend: Optional[str] = None,
                  config=None,
                  on_result=None):
         # explicit kwargs always win; config fills what was left unset
         if config is not None:
             pipeline = pipeline or ForgePipeline.from_config(config)
             workers = config.workers if workers is None else workers
+            backend = backend or config.execution_backend
             cache_path = cache_path or config.cache_path
             if cache_max_entries is None:
                 cache_max_entries = config.cache_max_entries
         self.pipeline = pipeline or ForgePipeline()
         self.workers = max(1, int(workers if workers is not None else 1))
+        self.backend = backend or "thread"
+        if self.backend not in EXECUTION_BACKENDS:
+            raise ValueError(f"unknown execution backend {self.backend!r}; "
+                             f"choose one of {sorted(EXECUTION_BACKENDS)}")
         self.cache = cache or ResultStore(
             cache_path,
             max_entries=(cache_max_entries if cache_max_entries is not None
@@ -148,6 +542,28 @@ class OptimizationEngine:
         # doesn't grow without bound across a long-lived driver
         self._inflight: Dict[str, threading.Lock] = {}
         self._inflight_lock = threading.Lock()
+        self._executors: Dict[str, Any] = {}
+
+    # ------------------------------------------------------------------
+    def _get_executor(self, name: Optional[str] = None):
+        name = name or self.backend
+        if name not in self._executors:
+            self._executors[name] = _EXECUTORS[name](self)
+        return self._executors[name]
+
+    def close(self):
+        """Shut down live executors (the process pool in particular).
+        Idempotent; the engine can be reused — the next batch lazily
+        rebuilds whatever it needs."""
+        executors, self._executors = self._executors, {}
+        for ex in executors.values():
+            ex.close()
+
+    def __enter__(self) -> "OptimizationEngine":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------------
     def _keys(self, job: KernelJob) -> tuple:
@@ -174,11 +590,11 @@ class OptimizationEngine:
         Determinism: priors are frozen once per batch and transfer seeds
         once per *phase*, so a job's candidate ordering never depends on
         which other jobs happened to finish first — ``workers=1`` and
-        ``workers=N`` are result-equivalent. Scheduling is two-phase: the
-        first job of each family (the leader) runs in phase 1 against the
-        pre-batch store; remaining family members run in phase 2 seeded
-        from a snapshot taken at the phase boundary, so a cold leader can
-        seed its in-batch siblings without making results racy."""
+        ``workers=N`` (on any backend) are result-equivalent. Scheduling is
+        two-phase: the first job of each family (the leader) runs in phase 1
+        against the pre-batch store; remaining family members run in phase 2
+        seeded from a snapshot taken at the phase boundary, so a cold leader
+        can seed its in-batch siblings without making results racy."""
         priors = (self.pipeline.history.snapshot_priors()
                   if self.pipeline.warm_start else {})
         try:
@@ -190,22 +606,13 @@ class OptimizationEngine:
                 (followers if fam in seen else leaders).append(i)
                 seen.add(fam)
             results: List[Optional[EngineResult]] = [None] * len(jobs)
+            executor = self._get_executor()
             for phase in (leaders, followers):
                 if not phase:
                     continue
                 seeds = {fam: self.cache.family_members(fam)
                          for fam in {keys[i][1] for i in phase}}
-                if self.workers <= 1 or len(phase) <= 1:
-                    for i in phase:
-                        results[i] = self._run_job(jobs[i], keys[i],
-                                                   priors, seeds)
-                else:
-                    with ThreadPoolExecutor(max_workers=self.workers) as pool:
-                        futures = [(i, pool.submit(self._run_job, jobs[i],
-                                                   keys[i], priors, seeds))
-                                   for i in phase]
-                        for i, f in futures:
-                            results[i] = f.result()
+                executor.run_phase(jobs, phase, keys, priors, seeds, results)
             return results
         finally:
             self.cache.flush()
@@ -215,6 +622,24 @@ class OptimizationEngine:
             # overlapping batches duplicate one search, never deadlock)
             with self._inflight_lock:
                 self._inflight.clear()
+
+    # ------------------------------------------------------------------
+    def _apply_outcome(self, outcome: Mapping[str, Any]):
+        """Fold one job's outcome flags into the engine stats (shared by the
+        in-process paths and the process backend's parent-side accounting)."""
+        with self._stats_lock:
+            self.stats.jobs += 1
+            if outcome["cache_hit"]:
+                self.stats.cache_hits += 1
+            else:
+                self.stats.cache_misses += 1
+                if outcome["had_seed"]:
+                    if outcome["transferred"]:
+                        self.stats.family_transfers += 1
+                    else:
+                        self.stats.transfer_fallbacks += 1
+            if outcome["replay_fallback"]:
+                self.stats.replay_fallbacks += 1
 
     # ------------------------------------------------------------------
     def _run_job(self, job: KernelJob, keys: tuple,
@@ -235,90 +660,14 @@ class OptimizationEngine:
                         family_key: str, priors: Mapping[str, int],
                         seeds: Mapping[str, list]) -> EngineResult:
         entry = self.cache.get(exact_key)
-        if entry is not None:
-            replayed = self._replay(job, entry, priors)
-            if replayed is not None:
-                with self._stats_lock:
-                    self.stats.jobs += 1
-                    self.stats.cache_hits += 1
-                return EngineResult(job, replayed, exact_key, cache_hit=True)
-            with self._stats_lock:
-                self.stats.replay_fallbacks += 1
-
-        # exact miss (or diverged replay): probe the phase's frozen family
-        # snapshot for a transfer seed. The job's own exact entry is
-        # excluded — when its replay just diverged, re-seeding from the very
-        # log that failed cannot help — but another family member still can.
-        seed_log: Optional[TransformLog] = None
-        for neighbor_key, log_list in seeds.get(family_key, []):
-            if neighbor_key != exact_key and log_list:
-                seed_log = TransformLog.from_list(log_list)
-                break
-
-        result = self.pipeline.optimize(
-            job.name, job.ci_program, job.bench_program, tags=job.tags,
-            target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
-            meta=job.meta, priors=priors, seed_log=seed_log)
-        self.cache.put(exact_key, self._entry_for(result),
-                       family=family_key, flush=False)
-        transferred = seed_log is not None and result.seed_steps_applied > 0
-        with self._stats_lock:
-            self.stats.jobs += 1
-            self.stats.cache_misses += 1
-            if seed_log is not None:
-                if transferred:
-                    self.stats.family_transfers += 1
-                else:
-                    self.stats.transfer_fallbacks += 1
-        return EngineResult(job, result, exact_key, cache_hit=False,
-                            transfer=transferred,
+        result, outcome = execute_job(self.pipeline, job, entry,
+                                      seeds.get(family_key, ()),
+                                      exact_key, priors)
+        if outcome["entry"] is not None:
+            self.cache.put(exact_key, outcome["entry"], family=family_key,
+                           flush=False)
+        self._apply_outcome(outcome)
+        return EngineResult(job, result, exact_key,
+                            cache_hit=outcome["cache_hit"],
+                            transfer=outcome["transferred"],
                             seed_steps=result.seed_steps_applied)
-
-    # ------------------------------------------------------------------
-    def _entry_for(self, result: PipelineResult) -> Dict[str, Any]:
-        return {
-            "name": result.name,
-            "transform_log": (result.transform_log.to_list()
-                              if result.transform_log else []),
-            "canonical_schedule": program_canonical(
-                result.bench_program)["schedule"],
-            "original_time": result.original_time,
-            "optimized_time": result.optimized_time,
-            # never-degrade fired on the cold run: replay must reproduce the
-            # clamp instead of treating final_time > original as divergence
-            "clamped": result.clamped,
-        }
-
-    def _replay(self, job: KernelJob, entry: Dict[str, Any],
-                priors: Mapping[str, int]) -> Optional[PipelineResult]:
-        """Replay a cached transform log onto this job's programs. Returns
-        None (-> full optimization) on any divergence, including a replayed
-        schedule that is not bit-identical to the cached canonical form."""
-        log = TransformLog.from_list(entry.get("transform_log", []))
-        pipeline = self.pipeline
-        ctx = pipeline._prepare_ctx(job.name, job.ci_program, job.tags,
-                                    job.target_dtype, job.rtol, job.atol,
-                                    job.meta or {})
-        original_cost = pipeline.cost_model.program_cost(job.bench_program)
-        scheduler = pipeline.make_scheduler(priors)
-        out = scheduler.replay(log, job.ci_program.copy(),
-                               job.bench_program.copy(), ctx)
-        if out is None:
-            return None
-        ci_prog, bench_prog, records = out
-        got = program_canonical(bench_prog)["schedule"]
-        if got != entry.get("canonical_schedule"):
-            return None
-        final_time = pipeline.cost_model.program_time(bench_prog)
-        if final_time > original_cost.total_s:
-            if not entry.get("clamped"):
-                return None
-            # reproduce the cold run's never-degrade clamp
-            return PipelineResult(job.name, original_cost.total_s,
-                                  original_cost.total_s, ci_prog, bench_prog,
-                                  records, [], transform_log=log,
-                                  cache_hit=True, clamped=True)
-        result = PipelineResult(job.name, original_cost.total_s, final_time,
-                                ci_prog, bench_prog, records, [],
-                                transform_log=log, cache_hit=True)
-        return result

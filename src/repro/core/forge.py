@@ -159,6 +159,7 @@ class Forge:
                                          cache=cache,
                                          cache_path=self.config.cache_path,
                                          cache_max_entries=self.config.cache_max_entries,
+                                         backend=self.config.execution_backend,
                                          on_result=self._dispatch_result)
         self._observers: List[Any] = list(observers)
         # one lock serializes ALL observer dispatch (stage events arrive
@@ -216,6 +217,20 @@ class Forge:
         tolerances, meta forwarded)."""
         return self.optimize(KernelJob(name, ci_program, bench_program,
                                        **job_kwargs))
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self):
+        """Release executor resources (the process pool in particular —
+        ``execution_backend='process'`` keeps spawned workers warm between
+        batches). Idempotent; a closed Forge can still optimize — the next
+        batch lazily rebuilds its executor."""
+        self.engine.close()
+
+    def __enter__(self) -> "Forge":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # -- views -----------------------------------------------------------
     @property

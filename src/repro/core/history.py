@@ -61,8 +61,15 @@ class History:
     def merge(self, other: "History"):
         """Fold another history's records in (engine workers can record to
         private histories that merge at batch end)."""
+        self.merge_records(other.records)
+
+    def merge_records(self, records: List[dict]):
+        """Fold raw record dicts in — the process-backend path: workers
+        record to private histories, their records ride the results queue
+        back, and the parent merges them here. Success counts are additive,
+        so merge order never changes ``snapshot_priors``."""
         with self._lock:
-            for rec in other.records:
+            for rec in records:
                 self.records.append(rec)
                 if rec.get("improved") and rec.get("pattern_id"):
                     self.success_counts[rec["pattern_id"]] += 1

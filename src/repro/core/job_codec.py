@@ -1,0 +1,237 @@
+"""Picklable/JSON-safe wire codec for kernel jobs and their results.
+
+The process-pool execution backend (``ForgeConfig.execution_backend =
+"process"``) has to move three kinds of values across an OS process boundary:
+
+* **down** — a :class:`~repro.core.engine.KernelJob` (two
+  :class:`~repro.ir.schedule.KernelProgram` values plus tolerances/tags/meta)
+  and the store entries that seed replay/transfer;
+* **up** — a :class:`~repro.core.pipeline.PipelineResult` (optimized
+  programs, stage records, issue inventory, transform log) plus observer
+  events streaming back through the results queue.
+
+``ForgeConfig`` already pickles (PR 3); this module is the remaining half of
+the ROADMAP's process-pool follow-up: an explicit wire form for the program
+values. Everything encodes to plain JSON types (dict/list/str/num/bool/None),
+so the wire form survives *any* transport — ``pickle`` across a ``spawn``
+boundary, a JSON file, a results queue — and decoding is **bit-exact**: the
+decoded program's structural fingerprint (:mod:`repro.ir.fingerprint`) is
+identical to the original's, which is what lets a worker process compute the
+same cache keys and replay the same logs the parent would.
+
+Tuples inside node attrs (``perm=(1, 0)``, ``axes=(1,)``) are preserved
+through JSON via a ``{"__tuple__": [...]}`` tag — fingerprints canonicalize
+tuples and lists identically, but the interpreter/analyzer see the decoded
+attrs directly, so the codec must hand back *exactly* what the builder wrote.
+Graphs are re-assembled node-for-node (no shape re-inference), so decode
+needs no jax evaluation and cannot drift from the encoded form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.core.issues import Issue
+from repro.core.pipeline import PipelineResult
+from repro.core.stage_scheduler import StageRecord, TransformLog
+from repro.ir.graph import Graph, Node
+from repro.ir.schedule import KernelProgram, Schedule
+
+__all__ = [
+    "encode_graph", "decode_graph",
+    "encode_program", "decode_program",
+    "encode_job", "decode_job",
+    "encode_pipeline_result", "decode_pipeline_result",
+    "job_fingerprint_from_wire",
+]
+
+WIRE_VERSION = 1
+
+_TUPLE_TAG = "__tuple__"
+
+
+def _enc_value(value):
+    """JSON-safe attr encoding that round-trips tuples exactly."""
+    if isinstance(value, tuple):
+        return {_TUPLE_TAG: [_enc_value(v) for v in value]}
+    if isinstance(value, list):
+        return [_enc_value(v) for v in value]
+    if isinstance(value, dict):
+        return {str(k): _enc_value(v) for k, v in value.items()}
+    return value
+
+
+def _dec_value(value):
+    if isinstance(value, dict):
+        if set(value) == {_TUPLE_TAG}:
+            return tuple(_dec_value(v) for v in value[_TUPLE_TAG])
+        return {k: _dec_value(v) for k, v in value.items()}
+    if isinstance(value, list):
+        return [_dec_value(v) for v in value]
+    return value
+
+
+# ----------------------------------------------------------------------
+# Graph / KernelProgram
+# ----------------------------------------------------------------------
+
+def encode_graph(graph: Graph) -> Dict[str, Any]:
+    """Wire form of a graph: nodes in insertion order (the toposort prefers
+    insertion order, so preserving it keeps canonical renaming — and with it
+    the fingerprint — bit-identical)."""
+    return {
+        "name": graph.name,
+        "nodes": [
+            {"name": n.name, "op": n.op, "inputs": list(n.inputs),
+             "attrs": _enc_value(n.attrs), "shape": list(n.shape),
+             "dtype": str(n.dtype)}
+            for n in graph.nodes.values()
+        ],
+        "outputs": list(graph.outputs),
+    }
+
+
+def decode_graph(wire: Dict[str, Any]) -> Graph:
+    """Re-assemble node-for-node: shapes/dtypes come off the wire verbatim
+    (no re-inference), so decoding needs no jax evaluation."""
+    g = Graph(wire.get("name", "graph"))
+    for d in wire["nodes"]:
+        g.nodes[d["name"]] = Node(
+            name=d["name"], op=d["op"], inputs=list(d["inputs"]),
+            attrs=_dec_value(d["attrs"]), shape=tuple(d["shape"]),
+            dtype=str(d["dtype"]))
+    g.outputs = list(wire.get("outputs", []))
+    g.reseed_counter()
+    return g
+
+
+def encode_program(program: KernelProgram) -> Dict[str, Any]:
+    return {
+        "version": WIRE_VERSION,
+        "name": program.name,
+        "graph": encode_graph(program.graph),
+        "schedule": program.schedule.to_dict(),
+        "original_flops": program.original_flops,
+        "meta": _enc_value(program.meta),
+    }
+
+
+def decode_program(wire: Dict[str, Any]) -> KernelProgram:
+    return KernelProgram(
+        name=wire["name"],
+        graph=decode_graph(wire["graph"]),
+        schedule=Schedule.from_dict(wire["schedule"]),
+        original_flops=float(wire.get("original_flops", 0.0)),
+        meta=_dec_value(wire.get("meta", {})))
+
+
+# ----------------------------------------------------------------------
+# KernelJob
+# ----------------------------------------------------------------------
+
+def encode_job(job) -> Dict[str, Any]:
+    """Wire form of a :class:`~repro.core.engine.KernelJob` (taken by duck
+    type to avoid an import cycle with ``core.engine``)."""
+    return {
+        "version": WIRE_VERSION,
+        "name": job.name,
+        "ci_program": encode_program(job.ci_program),
+        "bench_program": encode_program(job.bench_program),
+        "tags": [str(t) for t in job.tags],
+        "target_dtype": job.target_dtype,
+        "rtol": job.rtol,
+        "atol": job.atol,
+        "meta": _enc_value(job.meta),
+    }
+
+
+def decode_job(wire: Dict[str, Any]):
+    from repro.core.engine import KernelJob
+
+    return KernelJob(
+        name=wire["name"],
+        ci_program=decode_program(wire["ci_program"]),
+        bench_program=decode_program(wire["bench_program"]),
+        tags=tuple(wire.get("tags", ())),
+        target_dtype=wire.get("target_dtype", "bfloat16"),
+        rtol=float(wire.get("rtol", 1e-2)),
+        atol=float(wire.get("atol", 1e-5)),
+        meta=_dec_value(wire.get("meta", {})))
+
+
+def job_fingerprint_from_wire(wire: Dict[str, Any], spec_name: str,
+                              policy: str = "") -> str:
+    """Decode a job wire form and return its exact structural fingerprint.
+    Used by the pickle-across-spawn self-check: a worker process computing
+    this must agree bit-for-bit with the parent's in-memory fingerprint, or
+    cache keys would diverge across the process boundary."""
+    return decode_job(wire).fingerprint(spec_name, policy)
+
+
+# ----------------------------------------------------------------------
+# PipelineResult (worker -> parent)
+# ----------------------------------------------------------------------
+
+def encode_stage_record(record: StageRecord) -> Dict[str, Any]:
+    return dataclasses.asdict(record)
+
+
+def decode_stage_record(wire: Dict[str, Any]) -> StageRecord:
+    return StageRecord(**wire)
+
+
+def _encode_issue(issue: Issue) -> Dict[str, Any]:
+    return {"type": issue.type, "severity": issue.severity,
+            "description": issue.description,
+            "suggested_fix": issue.suggested_fix,
+            "estimated_speedup": issue.estimated_speedup,
+            "node": issue.node, "proposal": _enc_value(issue.proposal)}
+
+
+def _decode_issue(wire: Dict[str, Any]) -> Issue:
+    return Issue(type=wire["type"], severity=wire["severity"],
+                 description=wire.get("description", ""),
+                 suggested_fix=wire.get("suggested_fix", ""),
+                 estimated_speedup=wire.get("estimated_speedup", ""),
+                 node=wire.get("node"),
+                 proposal=_dec_value(wire.get("proposal", {})))
+
+
+def encode_pipeline_result(result: PipelineResult) -> Dict[str, Any]:
+    return {
+        "version": WIRE_VERSION,
+        "name": result.name,
+        "original_time": result.original_time,
+        "optimized_time": result.optimized_time,
+        "ci_program": encode_program(result.ci_program),
+        "bench_program": encode_program(result.bench_program),
+        "stage_records": [encode_stage_record(r) for r in result.stage_records],
+        "issues_initial": [_encode_issue(i) for i in result.issues_initial],
+        "k_used": result.k_used,
+        "transform_log": (result.transform_log.to_list()
+                          if result.transform_log is not None else None),
+        "cache_hit": result.cache_hit,
+        "clamped": result.clamped,
+        "seed_steps_applied": result.seed_steps_applied,
+    }
+
+
+def decode_pipeline_result(wire: Dict[str, Any]) -> PipelineResult:
+    log = wire.get("transform_log")
+    return PipelineResult(
+        name=wire["name"],
+        original_time=float(wire["original_time"]),
+        optimized_time=float(wire["optimized_time"]),
+        ci_program=decode_program(wire["ci_program"]),
+        bench_program=decode_program(wire["bench_program"]),
+        stage_records=[decode_stage_record(r)
+                       for r in wire.get("stage_records", [])],
+        issues_initial=[_decode_issue(i)
+                        for i in wire.get("issues_initial", [])],
+        k_used=int(wire.get("k_used", 1)),
+        transform_log=(TransformLog.from_list(log) if log is not None
+                       else None),
+        cache_hit=bool(wire.get("cache_hit", False)),
+        clamped=bool(wire.get("clamped", False)),
+        seed_steps_applied=int(wire.get("seed_steps_applied", 0)))

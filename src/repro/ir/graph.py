@@ -156,10 +156,17 @@ class Graph:
         g.nodes = {k: Node(v.name, v.op, list(v.inputs), dict(v.attrs), v.shape, v.dtype)
                    for k, v in self.nodes.items()}
         g.outputs = list(self.outputs)
-        g._counter = itertools.count(
+        g.reseed_counter()
+        return g
+
+    def reseed_counter(self):
+        """Advance the fresh-name counter past every numeric suffix already
+        present, so later ``add`` calls never collide with existing names.
+        Used after any node-for-node reconstruction (``copy``, the job
+        codec's ``decode_graph``)."""
+        self._counter = itertools.count(
             max((int(k.rsplit("_", 1)[1]) + 1 for k in self.nodes
                  if "_" in k and k.rsplit("_", 1)[1].isdigit()), default=0))
-        return g
 
     def signature(self) -> str:
         parts = [f"{n.name}:{n.op}({','.join(n.inputs)}){n.shape}{n.dtype}"

@@ -57,6 +57,7 @@ def _gemm_program(name: str, m: int, n: int, k: int) -> KernelProgram:
 def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                           batch: int = 8, max_sites: int = 5,
                           workers: int = 1,
+                          backend: str = "thread",
                           forge: Forge = None,
                           cache_path=None) -> Dict:
     # submit all call-sites as one batch: identically-shaped sites (e.g. MoE
@@ -64,8 +65,10 @@ def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
     # persistent cache) replay instead of re-optimizing; differently-shaped
     # GEMM sites are family twins, so the first cold site seeds the rest
     # through the store's near-miss transfer path
+    owns_forge = forge is None
     forge = forge or Forge(ForgeConfig(
         workers=workers,
+        execution_backend=backend,
         cache_path=str(cache_path) if cache_path else None))
     sites = matmul_sites(cfg, seq_len, batch)[:max_sites]
     jobs = []
@@ -78,7 +81,14 @@ def optimize_arch_kernels(cfg: ModelConfig, seq_len: int = 4096,
                               _gemm_program(name, m, n, k),
                               tags=("gemm",)))
     results = {}
-    for (name, m, n, k), eres in zip(sites, forge.optimize_batch(jobs)):
+    try:
+        batch_results = forge.optimize_batch(jobs)
+    finally:
+        if owns_forge:
+            # a process-backend forge keeps spawned workers warm; don't
+            # leak them when the forge was created for this call only
+            forge.close()
+    for (name, m, n, k), eres in zip(sites, batch_results):
         res = eres.result
         grp = next((g for g in res.bench_program.schedule.groups
                     if g.impl == "pallas_blockspec" and g.config), None)

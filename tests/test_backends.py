@@ -1,0 +1,189 @@
+"""Execution backends: config plumbing, serial/thread/process result
+equivalence, observer-event marshalling, and history merge-back."""
+
+import pickle
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.core import (EXECUTION_BACKENDS, Forge, ForgeConfig, KernelJob,
+                        OptimizationEngine)
+from repro.ir.fingerprint import program_canonical
+
+SPECS = {s.name: s for s in load_specs()}
+
+
+def _job(name, rename=None):
+    s = SPECS[name]
+    j = KernelJob(s.name,
+                  build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+                  build_program(s.builder, s.dims("bench"), "naive",
+                                meta=s.meta),
+                  tags=tuple(s.tags), target_dtype=s.target_dtype,
+                  rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+    if rename:
+        j.name = rename
+    return j
+
+
+# ----------------------------------------------------------------------
+# config surface
+# ----------------------------------------------------------------------
+
+def test_backend_field_is_operational():
+    """execution_backend must not shift cache keys: results are backend-
+    equivalent by contract, so stores written under one backend replay
+    under any other."""
+    sigs = {ForgeConfig(execution_backend=b).policy_signature()
+            for b in EXECUTION_BACKENDS}
+    assert len(sigs) == 1
+    names = {f.name for f in ForgeConfig.operational_fields()}
+    assert "execution_backend" in names
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="execution_backend"):
+        ForgeConfig(execution_backend="fork")
+    with pytest.raises(ValueError, match="backend"):
+        OptimizationEngine(backend="fork")
+
+
+def test_config_with_backend_pickles():
+    cfg = ForgeConfig(execution_backend="process", workers=2)
+    back = pickle.loads(pickle.dumps(cfg))
+    assert back == cfg
+    assert back.policy_signature() == cfg.policy_signature()
+
+
+def test_serial_backend_ignores_worker_count():
+    """serial is the deterministic reference mode whatever workers says."""
+    eng = OptimizationEngine(workers=4, backend="serial")
+    assert type(eng._get_executor()).name == "serial"
+    r = eng.run_batch([_job("gemm_bias_gelu")])
+    assert len(r) == 1 and r[0].result.speedup > 1
+
+
+def test_engine_close_idempotent():
+    eng = OptimizationEngine(backend="thread")
+    eng.close()
+    eng.close()
+    # a closed engine lazily rebuilds its executor
+    assert eng.submit(_job("gemm_bias_gelu")).result.speedup > 1
+
+
+# ----------------------------------------------------------------------
+# serial == thread (cheap, in-process)
+# ----------------------------------------------------------------------
+
+def test_serial_thread_equivalence():
+    names = ["gemm_bias_gelu", "gemm_swish_tanh_scale", "matmul_t_gelu"]
+    serial = Forge(ForgeConfig(execution_backend="serial")) \
+        .optimize_batch([_job(n) for n in names])
+    thread = Forge(ForgeConfig(execution_backend="thread", workers=3)) \
+        .optimize_batch([_job(n) for n in names])
+    for a, b in zip(serial.results, thread.results):
+        assert a.fingerprint == b.fingerprint
+        assert a.result.transform_log.to_list() \
+            == b.result.transform_log.to_list()
+        assert a.result.optimized_time == pytest.approx(
+            b.result.optimized_time)
+        assert program_canonical(a.result.bench_program) \
+            == program_canonical(b.result.bench_program)
+    assert serial.stats.as_dict() == thread.stats.as_dict()
+
+
+# ----------------------------------------------------------------------
+# process backend (one spawn session exercises everything: equivalence,
+# observer marshalling, transfer, replay, history merge-back)
+# ----------------------------------------------------------------------
+
+def test_process_backend_end_to_end():
+    # family twins at different dims: the leader must seed the follower
+    # through the transfer path *inside* the worker processes. The twin is
+    # submitted twice so one phase holds two exact-identical followers —
+    # the duplicate must coalesce (1 full run + 1 replay, cache_hit=True)
+    # exactly like the in-process backends' _inflight path
+    jobs = lambda: [_job("gemm_bias_gelu"), _job("matmul_t_gelu"),
+                    _twin_job(), _twin_job("gemm_bias_gelu_twin2")]
+    serial = Forge(ForgeConfig(execution_backend="serial"))
+    sref = serial.optimize_batch(jobs())
+
+    events = []
+
+    class Obs:
+        def on_stage_complete(self, job_name, record):
+            events.append(("stage", job_name, record.stage))
+
+        def on_job_complete(self, result):
+            events.append(("job", result.job.name))
+
+        def on_transfer(self, result):
+            events.append(("transfer", result.job.name))
+
+    with Forge(ForgeConfig(execution_backend="process", workers=2),
+               observers=[Obs()]) as forge:
+        prep = forge.optimize_batch(jobs())
+        # second batch replays from the parent-held store
+        prep2 = forge.optimize_batch(jobs())
+
+        # results identical to the serial reference, job for job
+        for a, b in zip(sref.results, prep.results):
+            assert a.fingerprint == b.fingerprint
+            assert a.result.transform_log.to_list() \
+                == b.result.transform_log.to_list()
+            assert a.result.optimized_time == pytest.approx(
+                b.result.optimized_time)
+            assert program_canonical(a.result.bench_program) \
+                == program_canonical(b.result.bench_program)
+            assert a.cache_hit == b.cache_hit
+            assert a.transfer == b.transfer
+        assert sref.stats.as_dict() == prep.stats.as_dict()
+
+        # the family follower transferred, exactly as under serial
+        assert prep.results[2].transfer == sref.results[2].transfer
+        # the duplicate follower replayed (in-phase coalescing), as serial
+        assert sref.results[3].cache_hit
+        assert prep.results[3].cache_hit
+
+        # observer events were marshalled back, not dropped
+        stage_events = [e for e in events if e[0] == "stage"]
+        job_events = [e for e in events if e[0] == "job"]
+        assert len(job_events) == 8          # 4 jobs x 2 batches
+        assert stage_events, "stage events must stream from workers"
+        if prep.transfers:
+            assert any(e[0] == "transfer" for e in events)
+
+        # replay batch: everything hits the parent-held store
+        assert all(r.cache_hit for r in prep2.results)
+
+        # worker history deltas merged back into the shared history
+        assert len(forge.history.records) == len(serial.history.records) > 0
+        assert forge.history.snapshot_priors() \
+            == serial.history.snapshot_priors()
+
+
+def _twin_job(name="gemm_bias_gelu_twin"):
+    """gemm_bias_gelu's builder at different dims — a family twin of the
+    spec-dims job, so it exercises in-batch leader->follower transfer.
+    Submitted twice (names differ, structure identical) it also exercises
+    duplicate-exact-key coalescing within a single phase."""
+    s = SPECS["gemm_bias_gelu"]
+    dims = {k: max(64, v // 2) for k, v in s.dims("bench").items()}
+    ci = {k: max(32, v // 2) for k, v in s.dims("ci").items()}
+    return KernelJob(name,
+                     build_program(s.builder, ci, "naive", meta=s.meta),
+                     build_program(s.builder, dims, "naive", meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+def test_process_backend_rejects_live_llm():
+    class FakeLLM:
+        pass
+
+    from repro.core.pipeline import ForgePipeline
+
+    pipe = ForgePipeline(llm=FakeLLM())
+    eng = OptimizationEngine(pipeline=pipe, backend="process", workers=1)
+    with pytest.raises(ValueError, match="LLM"):
+        eng.run_batch([_job("gemm_bias_gelu")])

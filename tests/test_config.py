@@ -23,6 +23,7 @@ ALT_VALUES = {
     "stages_enabled": ("fusion", "autotuning"),
     "use_llm": True,
     "workers": 4,
+    "execution_backend": "process",
     "cache_path": "/tmp/store.json",
     "cache_max_entries": 16,
     "dump_dir": "/tmp/dumps",
@@ -51,7 +52,8 @@ def test_operational_fields_do_not_change_signature():
     they must NOT invalidate cached results."""
     base = ForgeConfig()
     assert {f.name for f in ForgeConfig.operational_fields()} == {
-        "workers", "cache_path", "cache_max_entries", "dump_dir"}
+        "workers", "execution_backend", "cache_path", "cache_max_entries",
+        "dump_dir"}
     for f in ForgeConfig.operational_fields():
         changed = base.replace(**{f.name: ALT_VALUES[f.name]})
         assert changed.policy_signature() == base.policy_signature(), f.name
