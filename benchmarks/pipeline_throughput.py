@@ -1,0 +1,172 @@
+"""End-to-end pipeline throughput benchmark: verification fast path on vs off.
+
+    PYTHONPATH=src python -m benchmarks.pipeline_throughput
+        [--min-speedup 1.5] [--out BENCH_pipeline.json] [--skip-warmup]
+
+Times cold end-to-end optimization of the fixed backend-equivalence job set
+(one job per structural family plus a family twin — the same set
+``scripts/backend_equivalence.py`` gates on) twice through the serial
+backend with an empty store: once with ``verify_fastpath="off"`` (the
+uncached reference cascade) and once with ``"on"`` (memoized incremental
+verify + cost-first screening). It then
+
+* asserts **result equivalence** — per-job transform logs, optimized times,
+  canonical schedules and proposal counts must be identical across modes
+  (the fast path may only change *how fast* verification runs, never what
+  it decides), and
+* writes ``BENCH_pipeline.json`` recording both wall-clock times and the
+  speedup, exiting non-zero when the speedup is below ``--min-speedup``
+  (default 1.5x — the PR's acceptance bar) or any divergence was found.
+
+A small untimed warmup job runs first so one-time JAX tracing/compilation
+costs don't inflate whichever mode happens to run first.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+# the fixed gate set: two GEMM-family structures, one matmul-family, and a
+# conv, so both pallas-templated and XLA-only verify paths are timed; the
+# family twin exercises the two-phase leader/follower transfer path
+GATE_SPECS = ("gemm_bias_gelu", "gemm_swish_tanh_scale", "matmul_t_gelu",
+              "conv2d_gelu_scale")
+
+
+def build_jobs():
+    from repro.aibench import build_program, load_specs
+    from repro.core import KernelJob
+
+    specs = {s.name: s for s in load_specs()}
+    jobs = []
+    for name in GATE_SPECS:
+        s = specs[name]
+        jobs.append(KernelJob(
+            s.name,
+            build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+            build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
+            tags=tuple(s.tags), target_dtype=s.target_dtype,
+            rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
+    # family twin of the first job at halved dims: forces the two-phase
+    # leader/follower transfer path
+    s = specs[GATE_SPECS[0]]
+    jobs.append(KernelJob(
+        f"{s.name}_twin",
+        build_program(s.builder,
+                      {k: max(32, v // 2) for k, v in s.dims("ci").items()},
+                      "naive", meta=s.meta),
+        build_program(s.builder,
+                      {k: max(64, v // 2) for k, v in s.dims("bench").items()},
+                      "naive", meta=s.meta),
+        tags=tuple(s.tags), target_dtype=s.target_dtype,
+        rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
+    return jobs
+
+
+def run_mode(mode: str):
+    """Cold run of the whole job set (fresh Forge, no store on disk)."""
+    from repro.forge import Forge, ForgeConfig
+    from repro.ir.fingerprint import program_canonical
+
+    t0 = time.perf_counter()
+    with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                           verify_fastpath=mode)) as forge:
+        report = forge.optimize_batch(build_jobs())
+    dt = time.perf_counter() - t0
+    rows = {}
+    for r in report.results:
+        rows[r.job.name] = {
+            "fingerprint": r.fingerprint,
+            "transform_log": r.result.transform_log.to_list(),
+            "optimized_time": r.result.optimized_time,
+            "original_time": r.result.original_time,
+            "speedup": round(r.result.speedup, 9),
+            "proposals": r.result.proposals,
+            "canonical_schedule": program_canonical(
+                r.result.bench_program)["schedule"],
+            "transfer": r.transfer,
+        }
+    return rows, dt
+
+
+def diff_modes(off_rows: dict, on_rows: dict):
+    """Every field of every job must match across modes."""
+    divergences = []
+    for name in sorted(set(off_rows) | set(on_rows)):
+        a, b = off_rows.get(name), on_rows.get(name)
+        if a is None or b is None:
+            divergences.append((name, "missing"))
+            continue
+        for field in a:
+            if a[field] != b[field]:
+                divergences.append((name, field))
+    return divergences
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=1.5,
+                    help="fail below this off/on wall-clock ratio")
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    ap.add_argument("--skip-warmup", action="store_true",
+                    help="skip the untimed JAX warmup job")
+    args = ap.parse_args()
+
+    if not args.skip_warmup:
+        # untimed: absorb one-time tracing/compilation costs shared by both
+        # timed runs (JAX caches are process-global)
+        from repro.forge import Forge, ForgeConfig
+        with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                               verify_fastpath="off")) as forge:
+            forge.optimize_batch(build_jobs()[:1])
+        print("warmup done")
+
+    print(f"== pipeline throughput ({len(GATE_SPECS) + 1} jobs, serial "
+          f"backend, cold store) ==")
+    off_rows, off_s = run_mode("off")
+    print(f"  verify_fastpath=off  {off_s:7.1f}s")
+    on_rows, on_s = run_mode("on")
+    print(f"  verify_fastpath=on   {on_s:7.1f}s")
+    speedup = off_s / on_s if on_s > 0 else float("inf")
+    divergences = diff_modes(off_rows, on_rows)
+    for name, field in divergences:
+        print(f"  DIVERGED {name}.{field}:\n"
+              f"    off: {off_rows.get(name, {}).get(field)!r}\n"
+              f"    on:  {on_rows.get(name, {}).get(field)!r}")
+
+    artifact = {
+        "job_set": list(GATE_SPECS) + [f"{GATE_SPECS[0]}_twin"],
+        "off_s": off_s,
+        "on_s": on_s,
+        "speedup": speedup,
+        "min_speedup": args.min_speedup,
+        "equivalent": not divergences,
+        "jobs": {name: {"speedup": on_rows[name]["speedup"],
+                        "proposals": on_rows[name]["proposals"],
+                        "transfer": on_rows[name]["transfer"]}
+                 for name in sorted(on_rows)},
+    }
+    pathlib.Path(args.out).write_text(json.dumps(artifact, indent=2))
+    print(f"\nwrote {args.out}: fast path {speedup:.2f}x "
+          f"({off_s:.1f}s -> {on_s:.1f}s), "
+          f"{'results identical' if not divergences else 'DIVERGED'}")
+    if divergences:
+        print(f"FAIL: {len(divergences)} result divergence(s) between modes")
+        return 1
+    if speedup < args.min_speedup:
+        print(f"FAIL: speedup {speedup:.2f}x below the "
+              f"{args.min_speedup:.2f}x bar")
+        return 1
+    print(f"pipeline throughput OK (>= {args.min_speedup:.2f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,42 +19,15 @@ import pathlib
 import sys
 import time
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
 
-# the fixed gate set: two GEMM-family structures, one matmul-family, and a
-# conv, so equivalence is checked across pallas-templated and XLA-only paths
-GATE_SPECS = ("gemm_bias_gelu", "gemm_swish_tanh_scale", "matmul_t_gelu",
-              "conv2d_gelu_scale")
-
-
-def build_jobs():
-    from repro.aibench import build_program, load_specs
-    from repro.core import KernelJob
-
-    specs = {s.name: s for s in load_specs()}
-    jobs = []
-    for name in GATE_SPECS:
-        s = specs[name]
-        jobs.append(KernelJob(
-            s.name,
-            build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
-            build_program(s.builder, s.dims("bench"), "naive", meta=s.meta),
-            tags=tuple(s.tags), target_dtype=s.target_dtype,
-            rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
-    # family twin of the first job at halved dims: forces the two-phase
-    # leader/follower transfer path on every backend
-    s = specs[GATE_SPECS[0]]
-    jobs.append(KernelJob(
-        f"{s.name}_twin",
-        build_program(s.builder,
-                      {k: max(32, v // 2) for k, v in s.dims("ci").items()},
-                      "naive", meta=s.meta),
-        build_program(s.builder,
-                      {k: max(64, v // 2) for k, v in s.dims("bench").items()},
-                      "naive", meta=s.meta),
-        tags=tuple(s.tags), target_dtype=s.target_dtype,
-        rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
-    return jobs
+# the fixed gate set (one job per structural family plus a family twin that
+# forces the two-phase leader/follower transfer path) is shared with the
+# pipeline-throughput benchmark, so backend equivalence and fast-path
+# equivalence are proven over the same jobs
+from benchmarks.pipeline_throughput import GATE_SPECS, build_jobs  # noqa: E402
 
 
 def run_backend(backend: str, workers: int):

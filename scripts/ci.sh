@@ -8,20 +8,30 @@
 # Gates:
 #   compile              byte-compile everything (catches syntax errors
 #                        before pytest even collects — the seed shipped one)
+#   ruff-lint            ruff over src/tests/benchmarks/scripts (skipped when
+#                        ruff isn't installed — the dev container doesn't
+#                        ship it; hosted CI does)
 #   stage-registry       the stage DAG must validate; every stage needs a
 #                        proposer factory and >=1 issue binding
 #   tier1-tests          the full pytest suite
 #   backend-equivalence  serial / thread / process engines must produce
 #                        identical per-kernel TransformLogs and speedups
+#   pipeline-throughput  the verification fast path must keep a >=1.5x
+#                        end-to-end speedup over the uncached cascade with
+#                        bit-identical results (writes BENCH_pipeline.json)
 #   warm-store           (opt-in: CI_BUILD_WARM_STORE=1) build the pre-seeded
 #                        L2 ResultStore if the restored cache missed
 #   l2-regression        when a previous BENCH_l2.json exists, re-run the l2
 #                        suite — warm-started from results/warm_store.json
 #                        when present — and fail on >5% per-kernel regressions
+#
+# The per-gate timing summary is also written to results/ci_gate_timings.json
+# (hosted CI uploads it as an artifact to track gate-cost drift).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 WARM_STORE="${CI_WARM_STORE_PATH:-results/warm_store.json}"
+TIMINGS_JSON="${CI_GATE_TIMINGS_PATH:-results/ci_gate_timings.json}"
 
 GATE_NAMES=()
 GATE_TIMES=()
@@ -48,6 +58,24 @@ skip_gate() {
   GATE_TIMES+=(0)
 }
 
+write_timings_json() {
+  # machine-readable gate timings (CI artifact — tracks gate-cost drift)
+  mkdir -p "$(dirname "$TIMINGS_JSON")"
+  {
+    echo '{'
+    echo '  "gates": ['
+    local i last=$((${#GATE_NAMES[@]} - 1))
+    for i in "${!GATE_NAMES[@]}"; do
+      printf '    {"name": "%s", "seconds": %s}%s\n' \
+        "${GATE_NAMES[$i]}" "${GATE_TIMES[$i]}" \
+        "$([ "$i" -lt "$last" ] && echo ',')"
+    done
+    echo '  ],'
+    printf '  "failed_gate": "%s"\n' "$FAILED_GATE"
+    echo '}'
+  } > "$TIMINGS_JSON"
+}
+
 summary() {
   local rc=$?
   echo ""
@@ -56,6 +84,9 @@ summary() {
   for i in "${!GATE_NAMES[@]}"; do
     printf '  %-42s %5ss\n' "${GATE_NAMES[$i]}" "${GATE_TIMES[$i]}"
   done
+  if [ ${#GATE_NAMES[@]} -gt 0 ]; then
+    write_timings_json
+  fi
   if [ -n "$FAILED_GATE" ]; then
     echo "CI FAILED at gate: $FAILED_GATE"
     exit 1
@@ -74,6 +105,16 @@ trap summary EXIT
 run_gate compile \
   python -m compileall -q src tests benchmarks examples scripts || exit
 
+# Lint gate (ROADMAP follow-up): config lives in pyproject.toml. The dev
+# container doesn't ship ruff, so local runs skip rather than fail; hosted
+# CI installs it and the gate is real there.
+if command -v ruff > /dev/null 2>&1; then
+  run_gate ruff-lint \
+    ruff check src tests benchmarks examples scripts || exit
+else
+  skip_gate ruff-lint "ruff not installed"
+fi
+
 # (-W: silence runpy's already-imported RuntimeWarning.)
 run_gate stage-registry \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
@@ -86,6 +127,14 @@ run_gate tier1-tests \
 run_gate backend-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python scripts/backend_equivalence.py --workers 2 || exit
+
+# Verification fast-path gate: the memoized verify + cost-screened dispatch
+# must keep its >=1.5x cold-run speedup AND produce bit-identical results
+# vs the uncached cascade on the fixed job set (writes BENCH_pipeline.json,
+# uploaded as a CI artifact).
+run_gate pipeline-throughput \
+  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python -m benchmarks.pipeline_throughput --min-speedup 1.5 || exit
 
 # Cache warm-up (ROADMAP): CI restores results/warm_store.json from the
 # actions cache; when the exact cache key missed, the workflow sets

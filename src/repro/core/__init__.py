@@ -4,7 +4,8 @@ plus the fleet-scale engine (batching, caching, concurrency) layered on
 top of it."""
 
 from repro.core.analyzer import analyze
-from repro.core.config import EXECUTION_BACKENDS, ForgeConfig
+from repro.core.config import (EXECUTION_BACKENDS, VERIFY_FASTPATH_MODES,
+                               ForgeConfig)
 from repro.core.job_codec import (decode_job, decode_pipeline_result,
                                   decode_program, encode_job,
                                   encode_pipeline_result, encode_program)
@@ -21,13 +22,18 @@ from repro.core.stage_scheduler import (StageScheduler, TransformLog,
                                         TransformStep)
 from repro.core.stages import (DEFAULT_REGISTRY, StageRegistry,
                                StageRegistryError, StageSpec, register_stage)
-from repro.core.verify import compile_and_verify, VerifyReport, SUCCESS
+from repro.core.verify import (compile_and_verify, verify_candidate,
+                               VerifyReport, SUCCESS)
+from repro.core.verify_cache import (VerifyFastpathDivergence, VerifySession,
+                                     run_program_cached)
 
 __all__ = [
     "analyze", "ProblemContext", "CoVeRAgent", "Trajectory", "Issue",
     "ISSUE_TO_STAGE", "register_issue_type", "ForgePipeline",
     "PipelineResult", "StageRecord", "plan", "DEFAULT_ORDER", "HARD_DEPS",
-    "compile_and_verify", "VerifyReport", "SUCCESS",
+    "compile_and_verify", "verify_candidate", "VerifyReport", "SUCCESS",
+    "VerifySession", "VerifyFastpathDivergence", "run_program_cached",
+    "VERIFY_FASTPATH_MODES",
     "OptimizationEngine", "KernelJob", "EngineResult", "EngineStats",
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",

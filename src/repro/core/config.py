@@ -28,11 +28,18 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-__all__ = ["ForgeConfig", "EXECUTION_BACKENDS", "POLICY_SIGNATURE_VERSION"]
+__all__ = ["ForgeConfig", "EXECUTION_BACKENDS", "VERIFY_FASTPATH_MODES",
+           "POLICY_SIGNATURE_VERSION"]
 
 # where the engine runs jobs; validated here so a typo'd backend fails at
 # config construction, not deep inside a batch
 EXECUTION_BACKENDS = ("serial", "thread", "process")
+
+# how the verifier runs: "off" = the uncached reference cascade, "on" =
+# memoized incremental verify + cost-first screening, "check" = memoized and
+# cross-checked bit-identical against the uncached path on every report
+# (raises on divergence — the fast path's executable contract)
+VERIFY_FASTPATH_MODES = ("off", "on", "check")
 
 # bumped when the signature *format* changes (field encoding, separator…);
 # participates in the signature so format changes can never alias old keys
@@ -79,7 +86,12 @@ class ForgeConfig:
 
     Operational fields (excluded — see module docstring): ``workers``,
     ``execution_backend``, ``cache_path``, ``cache_max_entries``,
-    ``dump_dir``. ``execution_backend`` selects *where* jobs run
+    ``dump_dir``, ``verify_fastpath``. ``verify_fastpath`` selects the
+    memoized incremental-verification path (``repro.core.verify_cache``),
+    which is result-equivalent by contract (its ``"check"`` mode asserts
+    bit-identical reports against the uncached cascade), so like the
+    backend it stays out of the signature. ``execution_backend`` selects
+    *where* jobs run
     (``serial`` in-order on the calling thread, ``thread`` across a bounded
     thread pool, ``process`` across spawned worker processes); the engine
     guarantees all three are result-equivalent, so like ``workers`` it can
@@ -100,6 +112,11 @@ class ForgeConfig:
     cache_path: Optional[str] = _operational(default=None)
     cache_max_entries: int = _operational(default=512)
     dump_dir: Optional[str] = _operational(default=None)
+    # operational like execution_backend: the fast path is result-equivalent
+    # by contract (the "check" mode and the throughput benchmark enforce it),
+    # so it can never change what the pipeline produces and stays out of the
+    # cache signature — stores built either way replay interchangeably
+    verify_fastpath: str = _operational(default="on")
 
     def __post_init__(self):
         if self.max_iterations < 1:
@@ -108,6 +125,10 @@ class ForgeConfig:
             raise ValueError(
                 f"unknown execution_backend {self.execution_backend!r}; "
                 f"choose one of {sorted(EXECUTION_BACKENDS)}")
+        if self.verify_fastpath not in VERIFY_FASTPATH_MODES:
+            raise ValueError(
+                f"unknown verify_fastpath {self.verify_fastpath!r}; "
+                f"choose one of {list(VERIFY_FASTPATH_MODES)}")
         if self.best_of_k < 1:
             raise ValueError("best_of_k must be >= 1")
         if self.workers < 1:

@@ -24,7 +24,9 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.context import ProblemContext
 from repro.core.proposers import BaseProposer, Candidate
-from repro.core.verify import VerifyReport, compile_and_verify
+from repro.core.verify import (VerifyReport, run_correctness,
+                               verify_candidate)
+from repro.core.verify_cache import VerifySession
 from repro.ir.cost import CostModel
 from repro.ir.schedule import KernelProgram
 from repro.kb.loader import KnowledgeBase
@@ -35,16 +37,41 @@ class TrajectoryOverflow(RuntimeError):
 
 
 class Trajectory:
-    """Key-value log with context-budget truncation."""
+    """Key-value log with context-budget truncation.
+
+    The budget check tracks a running character count instead of re-joining
+    the whole log on every add (the old ``len(self.format())`` in the
+    truncation loop made ``add`` O(total chars) — quadratic over a long
+    CoVeR run). ``_formatted_len`` stays exactly equal to
+    ``len(self.format())`` and is O(1): per-entry sizes (sans index digits)
+    and the index-digit total are both maintained incrementally. Entries
+    are indexed by *position*, so dropping the oldest shifts every index
+    down by one — which is the same digit total as if the highest index had
+    been removed, hence the O(1) update in :meth:`truncate_oldest`."""
 
     def __init__(self, max_chars: int = 60_000):
         self.entries: List[Dict[str, str]] = []
         self.max_chars = max_chars
+        self._entry_chars: List[int] = []   # per-entry chars, sans index digits
+        self._chars_sum = 0                 # == sum(self._entry_chars)
+        self._digits_sum = 0                # == 3 * sum(len(str(i)) for i in range(n))
+
+    def _formatted_len(self) -> int:
+        n = len(self.entries)
+        if n == 0:
+            return 0
+        return self._chars_sum + self._digits_sum + 3 * n - 1   # newlines
 
     def add(self, thought: str, tool: str, args: str, observation: str):
+        self._digits_sum += 3 * len(str(len(self.entries)))     # new top index
         self.entries.append({"thought": thought, "tool": tool, "args": args,
                              "observation": observation})
-        while len(self.format()) > self.max_chars:
+        # the three format() lines for this entry, minus the index digits
+        chars = (len(f"[] thought: {thought}") + len(f"[] tool: {tool}({args})")
+                 + len(f"[] observation: {observation}"))
+        self._entry_chars.append(chars)
+        self._chars_sum += chars
+        while self._formatted_len() > self.max_chars:
             self.truncate_oldest()
 
     def truncate_oldest(self):
@@ -53,6 +80,8 @@ class Trajectory:
                 "cannot truncate further: a single tool call exceeds the "
                 "context budget")
         self.entries.pop(0)
+        self._chars_sum -= self._entry_chars.pop(0)
+        self._digits_sum -= 3 * len(str(len(self.entries)))     # old top index
 
     def format(self) -> str:
         lines = []
@@ -80,13 +109,20 @@ class CoVeRAgent:
     def __init__(self, stage: str, proposer: BaseProposer, kb: KnowledgeBase,
                  max_iterations: int = 5,
                  dump_dir: Optional[pathlib.Path] = None,
-                 use_pallas_exec: bool = True):
+                 use_pallas_exec: bool = True,
+                 session: Optional[VerifySession] = None,
+                 fastpath: str = "off"):
         self.stage = stage
         self.proposer = proposer
         self.kb = kb
         self.T = max_iterations
         self.dump_dir = dump_dir
         self.use_pallas_exec = use_pallas_exec
+        # verification fast path: a per-job memo session + the mode knob
+        # (``ForgeConfig.verify_fastpath``); "off" or session=None is the
+        # uncached reference behavior
+        self.session = session
+        self.fastpath = fastpath
 
     # ------------------------------------------------------------------
     def run(self, ci_program: KernelProgram, bench_program: KernelProgram,
@@ -124,9 +160,11 @@ class CoVeRAgent:
                                f"TRANSFORM ERROR: {type(e).__name__}: {e}")
                 i += 1
                 continue
-            report = compile_and_verify(new_ci, new_bench, incumbent_time, ctx,
-                                        self.kb, cost_model,
-                                        use_pallas=self.use_pallas_exec)
+            report = verify_candidate(new_ci, new_bench, incumbent_time, ctx,
+                                      self.kb, cost_model,
+                                      use_pallas=self.use_pallas_exec,
+                                      session=self.session,
+                                      fastpath=self.fastpath)
             trajectory.add(cand.thought, "compile_and_verify",
                            cand.description, report.observation)
             tried.append((cand, new_ci, new_bench, report))
@@ -136,18 +174,34 @@ class CoVeRAgent:
             i += 1
 
         # ---- fallback: ChainOfThought extraction over the trajectory ------
-        correct = [(c, ci, b, r) for c, ci, b, r in tried
-                   if r.level == "performance"]
-        if correct:
-            best = min(correct, key=lambda t: t[3].candidate_time or 1e9)
-            cand, new_ci, new_bench, _ = best
-            report = compile_and_verify(new_ci, new_bench, incumbent_time, ctx,
-                                        self.kb, cost_model,
-                                        use_pallas=self.use_pallas_exec)
+        # The unscreened cascade only reaches level "performance" after
+        # correctness passed, so "best correct candidate" is min-by-time over
+        # the performance-level reports. Under cost-first screening some of
+        # those reports deferred correctness; walking the same reports in
+        # ascending modeled time (stable sort = min()'s first-minimal
+        # tie-break) and lazily executing deferred correctness selects
+        # exactly the candidate the unscreened path would have.
+        perf = [(c, ci, b, r) for c, ci, b, r in tried
+                if r.level == "performance"]
+        perf.sort(key=lambda t: t[3].candidate_time or 1e9)
+        for cand, new_ci, new_bench, r in perf:
+            if r.correctness_deferred:
+                if self.session is not None:
+                    self.session.stats.deferred_runs += 1
+                if run_correctness(new_ci, ctx,
+                                   use_pallas=self.use_pallas_exec,
+                                   session=self.session) is not None:
+                    continue       # would have failed level 3 before level 4
+            report = verify_candidate(new_ci, new_bench, incumbent_time, ctx,
+                                      self.kb, cost_model,
+                                      use_pallas=self.use_pallas_exec,
+                                      session=self.session,
+                                      fastpath=self.fastpath)
             if report.ok:  # e.g. modeled time noise — accept if it now passes
                 return StageResult(self.stage, True, new_ci, new_bench, report,
                                    self.T, trajectory, accepted=cand,
                                    fallback_used=True)
+            break
         self._dump_failure(ci_program, trajectory)
         return StageResult(self.stage, False, ci_program, bench_program, None,
                            min(i, self.T), trajectory, fallback_used=bool(tried))

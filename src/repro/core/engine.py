@@ -74,7 +74,7 @@ from repro.ir.schedule import KernelProgram
 
 __all__ = ["KernelJob", "EngineResult", "EngineStats", "OptimizationEngine",
            "ResultCache", "ResultStore", "execute_job", "replay_entry",
-           "entry_for_result"]
+           "entry_for_result", "compute_job_keys"]
 
 
 @dataclasses.dataclass
@@ -139,6 +139,25 @@ class EngineStats:
 # backends result-equivalent by construction.
 # ----------------------------------------------------------------------
 
+def compute_job_keys(pipeline: ForgePipeline, job: KernelJob) -> tuple:
+    """(exact store key, family key) for a job against a pipeline. The exact
+    key folds in the KB content hash so a KB edit turns every previously-
+    exact hit into a miss; the family key deliberately does not (transferred
+    seeds are re-verified step-by-step, so stale ones are safe, just
+    weaker).
+
+    Module-level on purpose: the parent engine and spawned workers must
+    derive bit-identical keys from the same inputs (the job codec's wire
+    form round-trips fingerprints exactly), so the executors can push this
+    — the serial chunk of dispatch — down into their workers."""
+    spec = pipeline.spec.name
+    policy = pipeline.policy_signature()
+    fp = job.fingerprint(spec, policy)
+    kb_hash = pipeline.kb.content_hash()
+    exact = hashlib.sha256(f"{fp}|kb={kb_hash}".encode()).hexdigest()
+    return exact, job.family_fingerprint(spec, policy)
+
+
 def entry_for_result(result: PipelineResult) -> Dict[str, Any]:
     """The result-store entry recording a cold run's winning sequence."""
     return {
@@ -157,16 +176,20 @@ def entry_for_result(result: PipelineResult) -> Dict[str, Any]:
 
 def replay_entry(pipeline: ForgePipeline, job: KernelJob,
                  entry: Dict[str, Any],
-                 priors: Mapping[str, int]) -> Optional[PipelineResult]:
+                 priors: Mapping[str, int],
+                 session=None) -> Optional[PipelineResult]:
     """Replay a cached transform log onto this job's programs. Returns
     None (-> full optimization) on any divergence, including a replayed
-    schedule that is not bit-identical to the cached canonical form."""
+    schedule that is not bit-identical to the cached canonical form.
+    ``session`` is the job's verification memo: shared with the
+    full-optimization fallback so a diverged replay's oracle prep and
+    verified prefix are not paid for twice."""
     log = TransformLog.from_list(entry.get("transform_log", []))
     ctx = pipeline._prepare_ctx(job.name, job.ci_program, job.tags,
                                 job.target_dtype, job.rtol, job.atol,
-                                job.meta or {})
+                                job.meta or {}, session=session)
     original_cost = pipeline.cost_model.program_cost(job.bench_program)
-    scheduler = pipeline.make_scheduler(priors)
+    scheduler = pipeline.make_scheduler(priors, session=session)
     out = scheduler.replay(log, job.ci_program.copy(),
                            job.bench_program.copy(), ctx)
     if out is None:
@@ -204,8 +227,12 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     """
     outcome = {"cache_hit": False, "replay_fallback": False,
                "had_seed": False, "transferred": False, "entry": None}
+    # one verification memo for the job's whole lifecycle: replay attempt,
+    # transfer seeding, and the full search all share it
+    session = pipeline.make_verify_session()
     if entry is not None:
-        replayed = replay_entry(pipeline, job, entry, priors)
+        replayed = replay_entry(pipeline, job, entry, priors,
+                                session=session)
         if replayed is not None:
             outcome["cache_hit"] = True
             return replayed, outcome
@@ -224,7 +251,7 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     result = pipeline.optimize(
         job.name, job.ci_program, job.bench_program, tags=job.tags,
         target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
-        meta=job.meta, priors=priors, seed_log=seed_log)
+        meta=job.meta, priors=priors, seed_log=seed_log, session=session)
     outcome["entry"] = entry_for_result(result)
     outcome["had_seed"] = seed_log is not None
     outcome["transferred"] = (seed_log is not None
@@ -246,10 +273,16 @@ class SerialExecutor:
     def __init__(self, engine: "OptimizationEngine"):
         self.engine = engine
 
+    def compute_keys(self, jobs) -> List[tuple]:
+        return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
+
     def run_phase(self, jobs, phase, keys, priors, seeds, results):
         for i in phase:
             results[i] = self.engine._run_job(jobs[i], keys[i], priors,
                                               seeds)
+
+    def end_batch(self):
+        pass
 
     def close(self):
         pass
@@ -264,6 +297,13 @@ class ThreadExecutor:
     def __init__(self, engine: "OptimizationEngine"):
         self.engine = engine
 
+    def compute_keys(self, jobs) -> List[tuple]:
+        # deliberately serial: key computation is GIL-bound pure-Python
+        # (toposort + canonical JSON), so a thread fan-out only pays pool
+        # overhead — the worker-side win is real on the process backend,
+        # where workers hash in parallel interpreters
+        return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
+
     def run_phase(self, jobs, phase, keys, priors, seeds, results):
         engine = self.engine
         if engine.workers <= 1 or len(phase) <= 1:
@@ -277,6 +317,9 @@ class ThreadExecutor:
             for i, f in futures:
                 results[i] = f.result()
 
+    def end_batch(self):
+        pass
+
     def close(self):
         pass
 
@@ -286,10 +329,14 @@ def _process_worker_main(config_dict: Dict[str, Any],
                          task_q, event_q):
     """Worker process loop: rebuild a private pipeline from the shipped
     ForgeConfig (+ pickled KB), then serve tasks until the ``None``
-    sentinel. Observer events are not dropped: every stage record streams
-    back through the results queue as it happens, and each finished job
-    returns its wire-encoded result, store entry, outcome flags, and the
-    private history delta for the parent to merge."""
+    sentinel. Tasks are tagged tuples: ``("keys", idx, job_wire)`` computes
+    the job's exact/family cache keys worker-side (the wire codec makes the
+    fingerprints bit-exact across the spawn boundary, so parent and worker
+    derive identical keys); ``("job", idx, ...)`` optimizes. Observer events
+    are not dropped: every stage record streams back through the results
+    queue as it happens, and each finished job returns its wire-encoded
+    result, store entry, outcome flags, and the private history delta for
+    the parent to merge."""
     from repro.core.config import ForgeConfig
     from repro.core.history import History
 
@@ -300,8 +347,14 @@ def _process_worker_main(config_dict: Dict[str, Any],
         task = task_q.get()
         if task is None:
             return
-        idx, job_wire, exact_key, family_key, priors, entry, seed_pairs = task
+        kind, idx = task[0], task[1]
         try:
+            if kind == "keys":
+                job = job_codec.decode_job(task[2])
+                event_q.put(("keys", idx, compute_job_keys(pipeline, job)))
+                continue
+            _, _, job_wire, exact_key, family_key, priors, entry, \
+                seed_pairs = task
             job = job_codec.decode_job(job_wire)
             # fresh per-task history: the records travel back with the
             # result and merge into the parent's shared history, instead of
@@ -345,6 +398,12 @@ class ProcessExecutor:
         self._task_q = None
         self._event_q = None
         self._procs: List = []
+        # wire forms encoded once per batch by compute_keys and reused by
+        # the job waves (keyed on the jobs-list identity so an interleaved
+        # batch safely falls back to encoding); cleared by end_batch so a
+        # finished batch neither pins its encodings nor can alias a future
+        # jobs list that lands on a recycled id
+        self._wires: Optional[tuple] = None     # (id(jobs), [wire, ...])
         # one phase at a time through the shared queues: two concurrent
         # run_batch calls must never drain each other's events (the serial/
         # thread paths tolerate overlap via the _inflight locks; here the
@@ -386,6 +445,37 @@ class ProcessExecutor:
                             "(see stderr for the worker traceback)")
 
     # ------------------------------------------------------------------
+    def compute_keys(self, jobs) -> List[tuple]:
+        """Fan the per-job fingerprint/key computation out to the worker
+        pool — the ROADMAP's 'parent computes cache keys serially before
+        dispatch' bottleneck. The phase lock keeps a concurrent run_batch
+        from draining this wave's events."""
+        with self._phase_lock:
+            try:
+                self._ensure_pool()
+                wires = [job_codec.encode_job(job) for job in jobs]
+                self._wires = (id(jobs), wires)
+                keys: List[Optional[tuple]] = [None] * len(jobs)
+                for i in range(len(jobs)):
+                    self._task_q.put(("keys", i, wires[i]))
+                pending = set(range(len(jobs)))
+                while pending:
+                    event = self._next_event()
+                    if event[0] == "keys":
+                        _, idx, pair = event
+                        keys[idx] = tuple(pair)
+                        pending.discard(idx)
+                    else:  # "error" (stage/result events can't occur here)
+                        _, idx, tb = event
+                        raise RuntimeError(
+                            f"process backend key computation for job "
+                            f"#{idx} failed in worker:\n{tb}")
+                return keys
+            except Exception:
+                self.close()
+                raise
+
+    # ------------------------------------------------------------------
     def run_phase(self, jobs, phase, keys, priors, seeds, results):
         with self._phase_lock:
             try:
@@ -414,11 +504,14 @@ class ProcessExecutor:
 
     def _run_wave(self, jobs, wave, keys, priors, seeds, results):
         engine = self.engine
+        wires = (self._wires[1] if self._wires
+                 and self._wires[0] == id(jobs) else None)
         pending: Dict[int, KernelJob] = {}
         for i in wave:
             exact_key, family_key = keys[i]
-            self._task_q.put((i, job_codec.encode_job(jobs[i]), exact_key,
-                              family_key, dict(priors),
+            wire = wires[i] if wires else job_codec.encode_job(jobs[i])
+            self._task_q.put(("job", i, wire,
+                              exact_key, family_key, dict(priors),
                               engine.cache.get(exact_key),
                               list(seeds.get(family_key, ()))))
             pending[i] = jobs[i]
@@ -459,7 +552,11 @@ class ProcessExecutor:
             engine.pipeline.history.merge_records(history_records[i])
 
     # ------------------------------------------------------------------
+    def end_batch(self):
+        self._wires = None
+
     def close(self):
+        self._wires = None
         procs, self._procs = self._procs, []
         if not procs:
             return
@@ -567,16 +664,10 @@ class OptimizationEngine:
 
     # ------------------------------------------------------------------
     def _keys(self, job: KernelJob) -> tuple:
-        """(exact store key, family key). The exact key folds in the KB
-        content hash so a KB edit turns every previously-exact hit into a
-        miss; the family key deliberately does not (transferred seeds are
-        re-verified step-by-step, so stale ones are safe, just weaker)."""
-        spec = self.pipeline.spec.name
-        policy = self.pipeline.policy_signature()
-        fp = job.fingerprint(spec, policy)
-        kb_hash = self.pipeline.kb.content_hash()
-        exact = hashlib.sha256(f"{fp}|kb={kb_hash}".encode()).hexdigest()
-        return exact, job.family_fingerprint(spec, policy)
+        """(exact store key, family key) — see :func:`compute_job_keys`.
+        Kept as the single-job convenience; batch dispatch goes through the
+        executor's ``compute_keys`` so the work can run worker-side."""
+        return compute_job_keys(self.pipeline, job)
 
     # ------------------------------------------------------------------
     def submit(self, job: KernelJob) -> EngineResult:
@@ -597,8 +688,12 @@ class OptimizationEngine:
         can seed its in-batch siblings without making results racy."""
         priors = (self.pipeline.history.snapshot_priors()
                   if self.pipeline.warm_start else {})
+        executor = self._get_executor()
         try:
-            keys = [self._keys(job) for job in jobs]
+            # key computation is dispatched through the executor so it runs
+            # worker-side (threads / spawned processes) instead of
+            # serializing on the parent before the first job can start
+            keys = executor.compute_keys(jobs)
             leaders: List[int] = []
             followers: List[int] = []
             seen = set()
@@ -606,7 +701,6 @@ class OptimizationEngine:
                 (followers if fam in seen else leaders).append(i)
                 seen.add(fam)
             results: List[Optional[EngineResult]] = [None] * len(jobs)
-            executor = self._get_executor()
             for phase in (leaders, followers):
                 if not phase:
                     continue
@@ -615,6 +709,7 @@ class OptimizationEngine:
                 executor.run_phase(jobs, phase, keys, priors, seeds, results)
             return results
         finally:
+            executor.end_batch()
             self.cache.flush()
             # prune the coalescing locks: every job of this batch has
             # finished, so the entries are dead weight (a concurrent

@@ -215,6 +215,66 @@ def _run_xla_group(graph: Graph, group: FusionGroup, env: Dict[str, jnp.ndarray]
 
 
 # ----------------------------------------------------------------------
+def run_group(graph: Graph, group: FusionGroup, env: Dict[str, jnp.ndarray],
+              compute_dtype, use_pallas: bool = True,
+              interpret: bool = True) -> Dict[str, jnp.ndarray]:
+    """Execute one fusion group against ``env`` — the single dispatch point
+    shared by :func:`run_program` and the memoizing fast path
+    (``repro.core.verify_cache``). Returns the name->array bindings the
+    group contributes (pallas templates emit only their final node)."""
+    if group.impl.startswith("pallas") and use_pallas:
+        return _run_pallas_group(graph, group, env, compute_dtype, interpret)
+    return _run_xla_group(graph, group, env, compute_dtype)
+
+
+def group_exec_signature(graph: Graph, group: FusionGroup,
+                         use_pallas: bool = True) -> tuple:
+    """The *effective* dispatch parameters :func:`run_group` would hand the
+    kernel templates — everything config-derived that can change the
+    computed values, and nothing more. This is the config half of the fast
+    path's group cache key (node ops/attrs/shapes are keyed separately), and
+    it deliberately collapses distinct configs with identical effect: the
+    templates clamp blocks to the operand dims, so on small ci shapes a
+    (512,512,512) and a (1024,1024,1024) candidate execute identically and
+    may share one cached run.
+
+    MUST stay in lockstep with the template dispatch above: a template that
+    starts reading a new config field has to fold it in here, which is why
+    this lives in the executor and not next to the cache."""
+    nodes = [graph.node(n) for n in group.nodes]
+    if not (group.impl.startswith("pallas") and use_pallas):
+        # the XLA runner reads only ops/attrs (already in the node payload)
+        return ("xla",)
+    cfg = group.config
+    if len(nodes) == 1 and nodes[0].op == "rmsnorm":
+        return ("rmsnorm",)                      # template 1 ignores cfg
+    if nodes[0].op == "matmul" and len(nodes[0].shape) == 2:
+        mm = nodes[0]
+        a_shape = graph.node(mm.inputs[0]).shape
+        b_shape = graph.node(mm.inputs[1]).shape
+        m, k = ((a_shape[1], a_shape[0]) if mm.attrs.get("transpose_a")
+                else (a_shape[0], a_shape[1]))
+        n_ = b_shape[0] if mm.attrs.get("transpose_b") else b_shape[1]
+        if group.impl == "pallas_naive":
+            return ("matmul_naive",
+                    min(cfg.block_m if cfg else 128, m),
+                    min(cfg.block_n if cfg else 128, n_),
+                    min(cfg.block_k if cfg else 128, k))
+        return ("matmul",
+                min(getattr(cfg, "block_m", 128) if cfg else 128, m),
+                min(getattr(cfg, "block_n", 128) if cfg else 128, n_),
+                min(getattr(cfg, "block_k", 128) if cfg else 128, k),
+                getattr(cfg, "group_m", 1) if cfg else 1,
+                getattr(cfg, "num_stages", 2) if cfg else 2)
+    if all(n.is_elementwise() for n in nodes):
+        return ("elementwise",)                  # template 3 ignores cfg
+    # unknown shape (run_group would raise ExecUnsupported): key on the full
+    # raw group description so nothing can alias
+    return ("raw", group.impl,
+            tuple(sorted(cfg.to_dict().items())) if cfg else None,
+            tuple(sorted(group.operand_layouts.items())), group.prefetch)
+
+
 def run_program(program: KernelProgram,
                 inputs: Dict[str, jnp.ndarray],
                 params: Dict[str, jnp.ndarray],
@@ -232,10 +292,8 @@ def run_program(program: KernelProgram,
         elif n.op == "const":
             env[n.name] = jnp.asarray(n.attrs["value"], jnp.dtype(n.dtype))
     for g in group_order(graph, sched.groups):
-        if g.impl.startswith("pallas") and use_pallas:
-            env.update(_run_pallas_group(graph, g, env, compute_dtype, interpret))
-        else:
-            env.update(_run_xla_group(graph, g, env, compute_dtype))
+        env.update(run_group(graph, g, env, compute_dtype,
+                             use_pallas=use_pallas, interpret=interpret))
     return {o: env[o].astype(jnp.float32) for o in graph.outputs}
 
 

@@ -25,6 +25,7 @@ from repro.core.history import History
 from repro.core.llm import LLMClient
 from repro.core.stage_scheduler import (ScheduleOutcome, StageRecord,
                                         StageScheduler, TransformLog)
+from repro.core.verify_cache import VerifySession
 from repro.hw.specs import TPUSpec, TPU_V5E
 from repro.ir.cost import CostModel, ProgramCost
 from repro.ir.interpreter import evaluate, make_inputs, make_params
@@ -161,8 +162,17 @@ class ForgePipeline:
         return self.config.policy_signature()
 
     # ------------------------------------------------------------------
+    def make_verify_session(self) -> Optional[VerifySession]:
+        """A fresh per-job verification memo, or ``None`` when the fast
+        path is off. The engine creates one per job and shares it between
+        the replay attempt and the full-optimization fallback."""
+        return (VerifySession() if self.config.verify_fastpath != "off"
+                else None)
+
     def make_scheduler(self, priors: Optional[Mapping[str, int]] = None,
-                       on_stage_complete=None) -> StageScheduler:
+                       on_stage_complete=None,
+                       session: Optional[VerifySession] = None
+                       ) -> StageScheduler:
         """Build a StageScheduler with this pipeline's configuration. The
         engine calls this too, so every policy knob lives in one place."""
         if priors is None:
@@ -176,7 +186,9 @@ class ForgePipeline:
                               use_planner=self.use_planner,
                               priors=priors,
                               on_stage_complete=(on_stage_complete
-                                                 or self.on_stage_complete))
+                                                 or self.on_stage_complete),
+                              verify_fastpath=self.config.verify_fastpath,
+                              session=session)
 
     # observer hook threaded into every scheduler this pipeline builds;
     # the Forge facade sets it, old-style callers leave it None
@@ -185,15 +197,27 @@ class ForgePipeline:
     # ------------------------------------------------------------------
     def _prepare_ctx(self, name: str, ci_program: KernelProgram,
                      tags, target_dtype: str, rtol: float, atol: float,
-                     meta: Dict) -> ProblemContext:
+                     meta: Dict,
+                     session: Optional[VerifySession] = None
+                     ) -> ProblemContext:
         """Build the trusted harness context: seeded inputs/weights and the
         oracle outputs computed from the ORIGINAL graph in f32 (the candidate
-        can never influence this path)."""
+        can never influence this path). With a ``session`` the prep is
+        memoized per exact graph — a replay fallback re-prepares the same
+        context the replay attempt already computed."""
         g = ci_program.graph
-        inputs = make_inputs(g, seed=1)
-        params = make_params(g, seed=0)
-        oracle = evaluate(g, inputs, params)
-        oracle = {k: v.astype(jnp.float32) for k, v in oracle.items()}
+
+        def prep(graph):
+            inputs = make_inputs(graph, seed=1)
+            params = make_params(graph, seed=0)
+            oracle = evaluate(graph, inputs, params)
+            oracle = {k: v.astype(jnp.float32) for k, v in oracle.items()}
+            return inputs, params, oracle
+
+        if session is not None:
+            inputs, params, oracle = session.oracle_prep(g, prep)
+        else:
+            inputs, params, oracle = prep(g)
         return ProblemContext(name=name, target_dtype=target_dtype,
                               rtol=rtol, atol=atol, spec=self.spec,
                               tags=tuple(tags), ci_inputs=inputs,
@@ -208,18 +232,24 @@ class ForgePipeline:
                  rtol: float = 1e-2, atol: float = 1e-5,
                  meta: Optional[Dict] = None,
                  priors: Optional[Mapping[str, int]] = None,
-                 seed_log: Optional[TransformLog] = None) -> PipelineResult:
+                 seed_log: Optional[TransformLog] = None,
+                 session: Optional[VerifySession] = None) -> PipelineResult:
         """Optimize a single kernel job. This is the thin single-job wrapper;
         fleet submission (batching, caching, concurrency) lives in
         ``OptimizationEngine.run_batch``, which funnels back into the same
         stage scheduler this method drives. ``seed_log`` is a family
         neighbor's transform sequence (engine transfer path): the scheduler
         warm-starts from it, verifying each step on this job's real shapes,
-        and falls back to the full search from wherever it diverges."""
+        and falls back to the full search from wherever it diverges.
+        ``session`` is the job's verification memo (the engine shares one
+        between replay and this fallback); a fresh one is created when the
+        fast path is on and none was supplied."""
+        if session is None:
+            session = self.make_verify_session()
         ctx = self._prepare_ctx(name, ci_program, tags, target_dtype,
-                                rtol, atol, meta or {})
+                                rtol, atol, meta or {}, session=session)
         original_cost = self.cost_model.program_cost(bench_program)
-        scheduler = self.make_scheduler(priors)
+        scheduler = self.make_scheduler(priors, session=session)
 
         # apply a transfer seed once, up front: apply_seed is deterministic
         # (same programs, same ctx), so re-locating and re-verifying the

@@ -18,6 +18,15 @@ two index levels:
   step re-verified on the real shapes. Family lookups are not KB-versioned —
   re-verification makes stale seeds safe, merely less effective.
 
+Concurrency: entries are **sharded** — each shard owns its own lock and
+dict, keys route by CRC32 — so concurrent exact-key lookups from engine
+workers no longer serialize on one store-wide mutex (the parent's dispatch
+hot path). LRU stays *globally* exact despite the sharding: every access
+stamps a store-wide monotonic sequence number, eviction removes the
+globally smallest stamp, and flush serializes shards merged in stamp order
+— so the single-threaded behavior (and the on-disk layout) is bit-identical
+to the unsharded store. The family index is small and keeps its own lock.
+
 On-disk format (version 2)::
 
     {"version": 2,
@@ -27,7 +36,7 @@ On-disk format (version 2)::
                                  "original_time": ..., "optimized_time": ...,
                                  "clamped": false, "name": "..."}}}
 
-Entries are kept in LRU order (dict order == recency; JSON round-trips it).
+Entries are kept in LRU order (recency-stamp order; JSON round-trips it).
 Loads are *tolerant*: corrupt JSON or an unknown ``version`` discards the
 file and starts empty rather than crashing the driver. Writes are *atomic*:
 serialized to a sibling tmp file, then ``os.replace``'d into place, so a
@@ -38,36 +47,74 @@ is maintained alongside.
 
 from __future__ import annotations
 
+import heapq
 import json
 import logging
 import os
 import pathlib
 import threading
+import zlib
 from typing import Any, Dict, List, Optional
 
 log = logging.getLogger(__name__)
 
 STORE_VERSION = 2
 
+# Lock ordering (outer -> inner): evict lock > shard lock > family lock >
+# seq lock. No path ever holds two shard locks at once — except clear(),
+# which (under the evict lock) takes every shard lock in index order so a
+# concurrent put can't leave the entry count and the shards disagreeing.
+
+
+class _Shard:
+    __slots__ = ("lock", "entries")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        # key -> [recency_seq, entry_dict]
+        self.entries: Dict[str, list] = {}
+
 
 class ResultStore:
     """Two-level (exact + family) LRU store of winning transform sequences.
 
-    All access is lock-guarded for the engine's worker pool. ``get``/``put``
-    keep the PR-1 ``ResultCache`` surface (the engine and older tests use
-    them), extended with the family index and eviction.
+    Entry access is shard-locked (see module docstring) for the engine's
+    worker pool. ``get``/``put`` keep the PR-1 ``ResultCache`` surface (the
+    engine and older tests use them), extended with the family index and
+    eviction.
     """
 
     def __init__(self, path: Optional[pathlib.Path] = None,
-                 max_entries: int = 512):
+                 max_entries: int = 512, shards: int = 8):
         self.path = pathlib.Path(path) if path else None
         self.max_entries = max(1, int(max_entries))
-        self._entries: Dict[str, Dict[str, Any]] = {}
-        self._family: Dict[str, List[str]] = {}   # family_key -> MRU-last keys
-        self._lock = threading.Lock()
+        self._shards = [_Shard() for _ in range(max(1, int(shards)))]
+        self._family: Dict[str, List[str]] = {}   # family_key -> member keys
+        self._family_lock = threading.Lock()
+        self._seq_lock = threading.Lock()
+        self._seq = 0
+        self._count = 0                           # guarded by _seq_lock
+        # lazy min-heap of (seq, key) recency stamps (guarded by _seq_lock):
+        # every get/put pushes, eviction pops — stale stamps (the entry was
+        # re-stamped or removed since) are skipped by comparing against the
+        # entry's current seq, so eviction is O(log n) amortized instead of
+        # a full scan per victim
+        self._recency: List[tuple] = []
+        self._evict_lock = threading.Lock()
+        self._io_lock = threading.Lock()
         self.evictions = 0
         if self.path and self.path.exists():
             self._load()
+
+    # ------------------------------------------------------------------
+    def _shard(self, key: str) -> _Shard:
+        return self._shards[zlib.crc32(key.encode()) % len(self._shards)]
+
+    def _stamp(self, key: str) -> int:
+        with self._seq_lock:
+            self._seq += 1
+            heapq.heappush(self._recency, (self._seq, key))
+            return self._seq
 
     # ------------------------------------------------------------------
     def _load(self):
@@ -88,130 +135,218 @@ class ResultStore:
         for key, entry in entries.items():
             if not isinstance(entry, dict):
                 continue
-            self._entries[key] = entry
+            # file order is LRU->MRU; sequential stamps reproduce it
+            self._shard(key).entries[key] = [self._stamp(key), entry]
+            self._count += 1
             self._index_family(key, entry.get("family"))
         # honor this instance's cap even against a larger on-disk file
         # (a replay-only run would otherwise never reach put's eviction)
-        self._evict_locked()
+        self._evict()
 
     def _index_family(self, key: str, family: Optional[str]):
         if family:
-            keys = self._family.setdefault(family, [])
-            if key in keys:
-                keys.remove(key)
-            keys.append(key)
+            with self._family_lock:
+                keys = self._family.setdefault(family, [])
+                if key not in keys:
+                    keys.append(key)
+
+    def _unindex_family(self, key: str, family: Optional[str]):
+        if family:
+            with self._family_lock:
+                keys = self._family.get(family, [])
+                if key in keys:
+                    keys.remove(key)
+                if not keys:
+                    self._family.pop(family, None)
 
     # ------------------------------------------------------------------
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         """Exact lookup. A hit refreshes the entry's LRU recency."""
-        with self._lock:
-            entry = self._entries.get(key)
-            if entry is not None:
-                self._entries[key] = self._entries.pop(key)   # move to MRU
-                self._index_family(key, entry.get("family"))
-            return entry
-
-    def _ranked_family_locked(self, family_key: str) -> List[str]:
-        """Family members ranked deterministically: best recorded speedup
-        first, exact key as tiebreak. Insertion (MRU) order is NOT used —
-        under a concurrent engine it reflects thread completion timing,
-        which must never leak into which neighbor seeds a later run."""
-        def rank(key: str):
-            e = self._entries[key]
-            orig = float(e.get("original_time") or 0.0)
-            opt = float(e.get("optimized_time") or 0.0)
-            speedup = orig / opt if orig > 0 and opt > 0 else 1.0
-            return (-speedup, key)
-        return sorted((k for k in self._family.get(family_key, [])
-                       if k in self._entries), key=rank)
-
-    def get_family(self, family_key: str,
-                   exclude: Optional[str] = None) -> Optional[Dict[str, Any]]:
-        """Best-ranked family member whose exact key is not ``exclude``
-        (the requester's own key — a diverged exact entry must not be
-        handed back as its own transfer seed)."""
-        with self._lock:
-            for key in self._ranked_family_locked(family_key):
-                if key != exclude:
-                    return self._entries[key]
-            return None
+        sh = self._shard(key)
+        with sh.lock:
+            rec = sh.entries.get(key)
+            if rec is None:
+                return None
+            rec[0] = self._stamp(key)             # move to MRU
+            return rec[1]
 
     def put(self, key: str, entry: Dict[str, Any],
             family: Optional[str] = None, flush: bool = True):
         """Insert/refresh an entry. ``family`` threads the transfer index;
         ``flush=False`` defers the disk write (the engine batches inserts and
         flushes once per ``run_batch``)."""
-        with self._lock:
-            if family:
-                entry = dict(entry)
-                entry["family"] = family
-            old = self._entries.pop(key, None)
-            if old is not None:
-                # re-put under a different (or no) family: drop the stale
-                # index entry so get_family never serves a disowned key
-                old_fam = old.get("family")
-                if old_fam and old_fam != entry.get("family"):
-                    keys = self._family.get(old_fam, [])
-                    if key in keys:
-                        keys.remove(key)
-                    if not keys:
-                        self._family.pop(old_fam, None)
-            self._entries[key] = entry
-            self._index_family(key, entry.get("family"))
-            self._evict_locked()
-            if flush:
-                self._write_locked()
-
-    def _evict_locked(self):
-        while len(self._entries) > self.max_entries:
-            key = next(iter(self._entries))               # LRU = oldest
-            entry = self._entries.pop(key)
-            fam = entry.get("family")
-            if fam and fam in self._family:
-                keys = self._family[fam]
-                if key in keys:
-                    keys.remove(key)
-                if not keys:
-                    del self._family[fam]
-            self.evictions += 1
+        if family:
+            entry = dict(entry)
+            entry["family"] = family
+        sh = self._shard(key)
+        with sh.lock:
+            old = sh.entries.pop(key, None)
+            sh.entries[key] = [self._stamp(key), entry]
+            if old is None:
+                # counted inside the shard lock so clear() (which holds
+                # every shard lock) can never interleave between the insert
+                # and the count update
+                with self._seq_lock:
+                    self._count += 1
+        if old is not None:
+            # re-put under a different (or no) family: drop the stale
+            # index entry so get_family never serves a disowned key
+            old_fam = old[1].get("family")
+            if old_fam and old_fam != entry.get("family"):
+                self._unindex_family(key, old_fam)
+        self._index_family(key, entry.get("family"))
+        self._evict()
+        if flush:
+            self.flush()
 
     # ------------------------------------------------------------------
-    def flush(self):
-        with self._lock:
-            self._write_locked()
+    def _rebuild_recency(self):
+        """Rebuild the stamp heap from live entries (rare: only when lazy
+        deletion left it empty while over cap, e.g. after clear() raced)."""
+        rows = []
+        for sh in self._shards:
+            with sh.lock:
+                rows.extend((rec[0], k) for k, rec in sh.entries.items())
+        heapq.heapify(rows)
+        with self._seq_lock:
+            self._recency = rows
 
-    def _write_locked(self):
+    def _evict(self):
+        """Remove globally-LRU entries until the cap holds. Serialized under
+        the evict lock; the stamp re-check when popping makes a concurrent
+        recency refresh win over an in-flight eviction (its fresher stamp is
+        still in the heap)."""
+        with self._evict_lock:
+            # compact the lazy heap when stale stamps dominate (a store that
+            # never evicts would otherwise accumulate one stamp per access)
+            with self._seq_lock:
+                oversized = len(self._recency) > max(64, 8 * self._count)
+            if oversized:
+                self._rebuild_recency()
+            rebuilt = False
+            while True:
+                with self._seq_lock:
+                    if self._count <= self.max_entries:
+                        return
+                    stamp = (heapq.heappop(self._recency)
+                             if self._recency else None)
+                if stamp is None:
+                    if rebuilt:
+                        return                    # defensive: can't progress
+                    self._rebuild_recency()
+                    rebuilt = True
+                    continue
+                seq, key = stamp
+                sh = self._shard(key)
+                with sh.lock:
+                    rec = sh.entries.get(key)
+                    if rec is None or rec[0] != seq:
+                        continue                  # stale stamp; pop the next
+                    entry = sh.entries.pop(key)[1]
+                    with self._seq_lock:
+                        self._count -= 1
+                self._unindex_family(key, entry.get("family"))
+                self.evictions += 1
+                rebuilt = False                   # progress: allow re-repair
+
+    # ------------------------------------------------------------------
+    def _snapshot(self) -> List[tuple]:
+        """(seq, key, entry) across all shards, LRU->MRU."""
+        rows: List[tuple] = []
+        for sh in self._shards:
+            with sh.lock:
+                rows.extend((rec[0], k, rec[1])
+                            for k, rec in sh.entries.items())
+        rows.sort(key=lambda r: r[0])
+        return rows
+
+    def flush(self):
         if not self.path:
             return
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        blob = json.dumps({"version": STORE_VERSION,
-                           "entries": self._entries}, indent=2)
-        tmp = self.path.with_name(self.path.name + ".tmp")
-        tmp.write_text(blob)
-        os.replace(tmp, self.path)
+        with self._io_lock:
+            entries = {k: e for _, k, e in self._snapshot()}
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            blob = json.dumps({"version": STORE_VERSION,
+                               "entries": entries}, indent=2)
+            tmp = self.path.with_name(self.path.name + ".tmp")
+            tmp.write_text(blob)
+            os.replace(tmp, self.path)
+
+    # ------------------------------------------------------------------
+    def _get_entry(self, key: str) -> Optional[Dict[str, Any]]:
+        """Entry fetch *without* an LRU refresh (family ranking reads)."""
+        sh = self._shard(key)
+        with sh.lock:
+            rec = sh.entries.get(key)
+            return rec[1] if rec is not None else None
+
+    def _ranked_family(self, family_key: str) -> List[tuple]:
+        """``(exact_key, entry)`` members ranked deterministically: best
+        recorded speedup first, exact key as tiebreak. Recency is NOT used —
+        under a concurrent engine it reflects thread completion timing,
+        which must never leak into which neighbor seeds a later run."""
+        with self._family_lock:
+            keys = list(self._family.get(family_key, []))
+        members = []
+        for key in keys:
+            entry = self._get_entry(key)
+            if entry is not None:
+                members.append((key, entry))
+
+        def rank(item):
+            key, e = item
+            orig = float(e.get("original_time") or 0.0)
+            opt = float(e.get("optimized_time") or 0.0)
+            speedup = orig / opt if orig > 0 and opt > 0 else 1.0
+            return (-speedup, key)
+        return sorted(members, key=rank)
+
+    def get_family(self, family_key: str,
+                   exclude: Optional[str] = None) -> Optional[Dict[str, Any]]:
+        """Best-ranked family member whose exact key is not ``exclude``
+        (the requester's own key — a diverged exact entry must not be
+        handed back as its own transfer seed)."""
+        for key, entry in self._ranked_family(family_key):
+            if key != exclude:
+                return entry
+        return None
 
     def family_members(self, family_key: str) -> List:
         """Ranked ``(exact_key, transform_log)`` snapshot of a family
-        (see :meth:`_ranked_family_locked`). The engine freezes these per
+        (see :meth:`_ranked_family`). The engine freezes these per
         scheduling phase so transfer seeding does not depend on which
         concurrent job finished first."""
-        with self._lock:
-            return [(k, list(self._entries[k].get("transform_log", [])))
-                    for k in self._ranked_family_locked(family_key)]
+        return [(k, list(e.get("transform_log", [])))
+                for k, e in self._ranked_family(family_key)]
 
     # ------------------------------------------------------------------
     def family_sizes(self) -> Dict[str, int]:
-        with self._lock:
+        with self._family_lock:
             return {k: len(v) for k, v in self._family.items()}
 
     def __len__(self) -> int:
-        with self._lock:
-            return len(self._entries)
+        with self._seq_lock:
+            return self._count
 
     def clear(self):
-        with self._lock:
-            self._entries.clear()
-            self._family.clear()
+        # atomic vs concurrent put/get: hold EVERY shard lock (acquired in
+        # index order — the one sanctioned multi-shard acquisition, see the
+        # lock-ordering note up top) while zeroing entries and the count, so
+        # an interleaved put can never leave them disagreeing
+        with self._evict_lock:
+            for sh in self._shards:
+                sh.lock.acquire()
+            try:
+                for sh in self._shards:
+                    sh.entries.clear()
+                with self._family_lock:
+                    self._family.clear()
+                with self._seq_lock:
+                    self._count = 0
+                    self._recency.clear()
+            finally:
+                for sh in reversed(self._shards):
+                    sh.lock.release()
             if self.path and self.path.exists():
                 self.path.unlink()
 

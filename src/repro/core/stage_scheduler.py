@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import weakref
 from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core.analyzer import analyze
@@ -26,12 +27,36 @@ from repro.core.llm import LLMClient
 from repro.core.planner import plan
 from repro.core.proposers import BaseProposer, Candidate, make_proposer
 from repro.core.stages import DEFAULT_REGISTRY
-from repro.core.verify import compile_and_verify
+from repro.core.verify import verify_candidate
+from repro.core.verify_cache import VerifySession
 from repro.ir.cost import CostModel
-from repro.ir.fingerprint import canonical_name_map
+from repro.ir.fingerprint import cached_canonical_name_map
 from repro.ir.graph import Graph
 from repro.ir.schedule import KernelProgram
 from repro.kb.loader import KnowledgeBase
+
+# per-graph memo of the compiled description translator: replay re-
+# canonicalizes every proposed candidate's description against the same
+# graph, so rebuilding the name map + regex list per call was the hot spot.
+# Graphs are copy-on-write throughout the pipeline (transforms never mutate
+# in place), so keying on the object is sound; WeakKey keeps discarded
+# candidates from pinning their translators.
+_TRANSLATOR_CACHE: "weakref.WeakKeyDictionary[Graph, List[tuple]]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _description_translator(graph: Graph) -> List[tuple]:
+    pats = _TRANSLATOR_CACHE.get(graph)
+    if pats is None:
+        nm = cached_canonical_name_map(graph)
+        # group names follow the g_<node> convention; map them alongside nodes
+        full = dict(nm)
+        full.update({f"g_{k}": f"g_{v}" for k, v in nm.items()})
+        pats = [(re.compile(rf"(?<![A-Za-z0-9_]){re.escape(name)}"
+                            rf"(?![A-Za-z0-9_])"), full[name])
+                for name in sorted(full, key=len, reverse=True)]
+        _TRANSLATOR_CACHE[graph] = pats
+    return pats
 
 
 def canonical_description(description: str, graph: Graph) -> str:
@@ -39,14 +64,8 @@ def canonical_description(description: str, graph: Graph) -> str:
     ``fuse:mm+reduction``, ``mem:pack-b:g_mm``) to canonical topo-position
     names, so transform logs match across structurally identical programs
     whose only difference is labeling."""
-    nm = canonical_name_map(graph)
-    # group names follow the g_<node> convention; map them alongside nodes
-    full = dict(nm)
-    full.update({f"g_{k}": f"g_{v}" for k, v in nm.items()})
-    for name in sorted(full, key=len, reverse=True):
-        description = re.sub(
-            rf"(?<![A-Za-z0-9_]){re.escape(name)}(?![A-Za-z0-9_])",
-            full[name], description)
+    for pattern, repl in _description_translator(graph):
+        description = pattern.sub(repl, description)
     return description
 
 
@@ -154,7 +173,9 @@ class StageScheduler:
                  stages_enabled: Optional[List[str]] = None,
                  use_planner: bool = True,
                  priors: Optional[Mapping[str, int]] = None,
-                 on_stage_complete=None):
+                 on_stage_complete=None,
+                 verify_fastpath: str = "off",
+                 session: Optional[VerifySession] = None):
         self.kb = kb
         self.cost_model = cost_model
         self.T = max_iterations
@@ -167,10 +188,22 @@ class StageScheduler:
         # observer hook: called with (job_name, StageRecord) after every
         # stage execution (search, replay, and seeded-transfer steps alike)
         self.on_stage_complete = on_stage_complete
+        # verification fast path: schedulers are built per job, so a fresh
+        # session here is correctly job-scoped when the caller supplies none
+        self.verify_fastpath = verify_fastpath
+        self.session = session or (VerifySession()
+                                   if verify_fastpath != "off" else None)
 
     def _emit(self, ctx: ProblemContext, record: StageRecord):
         if self.on_stage_complete is not None:
             self.on_stage_complete(ctx.name, record)
+
+    def _program_time(self, program: KernelProgram) -> float:
+        """Incumbent time, memoized through the verify session (the same
+        bench program is re-costed once per stage and once per verify)."""
+        if self.session is not None:
+            return self.session.program_time(self.cost_model, program)
+        return self.cost_model.program_time(program)
 
     # ------------------------------------------------------------------
     def _make_proposer(self, stage: str, ctx: ProblemContext) -> BaseProposer:
@@ -213,8 +246,10 @@ class StageScheduler:
             agent = CoVeRAgent(stage, proposer, self.kb,
                                max_iterations=self.T,
                                dump_dir=self.dump_dir,
-                               use_pallas_exec=self.use_pallas_exec)
-            incumbent = self.cost_model.program_time(bench_prog)
+                               use_pallas_exec=self.use_pallas_exec,
+                               session=self.session,
+                               fastpath=self.verify_fastpath)
+            incumbent = self._program_time(bench_prog)
             res: StageResult = agent.run(ci_prog, bench_prog, stage_issues,
                                          ctx, incumbent, self.cost_model,
                                          start_offset=pass_idx)
@@ -283,15 +318,17 @@ class StageScheduler:
         cand = self._locate_step(step, bench_prog, ctx)
         if cand is None:
             return None
-        incumbent = self.cost_model.program_time(bench_prog)
+        incumbent = self._program_time(bench_prog)
         try:
             new_ci = cand.transform(ci_prog)
             new_bench = cand.transform(bench_prog)
         except Exception:  # noqa: BLE001 — divergence -> fall back
             return None
-        report = compile_and_verify(new_ci, new_bench, incumbent, ctx,
-                                    self.kb, self.cost_model,
-                                    use_pallas=self.use_pallas_exec)
+        report = verify_candidate(new_ci, new_bench, incumbent, ctx,
+                                  self.kb, self.cost_model,
+                                  use_pallas=self.use_pallas_exec,
+                                  session=self.session,
+                                  fastpath=self.verify_fastpath)
         if not report.ok:
             return None
         record = StageRecord(step.stage, True, 1, report.speedup,

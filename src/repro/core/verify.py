@@ -30,6 +30,8 @@ import numpy as np
 
 from repro.core.context import ProblemContext
 from repro.core.executor import ExecUnsupported, run_program
+from repro.core.verify_cache import (VerifyFastpathDivergence, VerifySession,
+                                     run_program_cached)
 from repro.hw.specs import dtype_itemsize
 from repro.ir.cost import CostModel
 from repro.ir.schedule import KernelProgram
@@ -46,6 +48,10 @@ class VerifyReport:
     candidate_time: Optional[float] = None
     incumbent_time: Optional[float] = None
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # cost-first screening skipped the correctness execution: the candidate
+    # cannot beat the incumbent, so the expensive oracle comparison is
+    # deferred until (and unless) the fallback extractor needs it
+    correctness_deferred: bool = False
 
     @property
     def speedup(self) -> Optional[float]:
@@ -175,41 +181,25 @@ def _diff_diagnostics(got: jnp.ndarray, want: jnp.ndarray,
 
 
 # ----------------------------------------------------------------------
-def compile_and_verify(candidate_ci: KernelProgram,
-                       candidate_bench: KernelProgram,
-                       incumbent_time: float,
-                       ctx: ProblemContext,
-                       kb: KnowledgeBase,
-                       cost_model: Optional[CostModel] = None,
-                       min_speedup: float = 1.001,
-                       use_pallas: bool = True) -> VerifyReport:
-    cost_model = cost_model or CostModel(ctx.spec)
-
-    # -- level 1: syntax ------------------------------------------------
-    try:
-        candidate_ci.validate()
-        candidate_bench.validate()
-        in_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
-                      for n in candidate_ci.graph.inputs()}
-        param_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
-                         for n in candidate_ci.graph.params()}
-        jax.eval_shape(lambda i, p: run_program(candidate_ci, i, p,
-                                                use_pallas=False),
-                       in_structs, param_structs)
-    except Exception as e:  # noqa: BLE001 — any trace failure is the diagnostic
-        return VerifyReport(False, "syntax",
-                            f"SYNTAX/TRACE ERROR: {type(e).__name__}: {e}")
-
-    # -- level 2: structure ----------------------------------------------
-    errors = _check_structure(candidate_bench, ctx, kb)
-    if errors:
-        return VerifyReport(False, "structure", " | ".join(errors))
-
-    # -- level 3: correctness ---------------------------------------------
+def run_correctness(candidate_ci: KernelProgram,
+                    ctx: ProblemContext,
+                    use_pallas: bool = True,
+                    session: Optional[VerifySession] = None
+                    ) -> Optional[VerifyReport]:
+    """Level 3 of the cascade: execute the candidate against the seeded
+    oracle. Returns ``None`` when every output matches, else the failure
+    report. Split out of :func:`compile_and_verify` so the cost-first
+    screening path can defer it and the fallback extractor can run it
+    lazily."""
     assert ctx.ci_inputs is not None and ctx.oracle_outputs is not None
     try:
-        got = run_program(candidate_ci, ctx.ci_inputs, ctx.ci_params or {},
-                          use_pallas=use_pallas)
+        if session is not None:
+            got = run_program_cached(candidate_ci, ctx.ci_inputs,
+                                     ctx.ci_params or {}, session,
+                                     use_pallas=use_pallas)
+        else:
+            got = run_program(candidate_ci, ctx.ci_inputs,
+                              ctx.ci_params or {}, use_pallas=use_pallas)
     except ExecUnsupported as e:
         return VerifyReport(False, "structure",
                             f"NO KERNEL TEMPLATE: {e}. Fix: keep the group "
@@ -243,24 +233,171 @@ def compile_and_verify(candidate_ci: KernelProgram,
                 False, "correctness",
                 f"OUTPUT MISMATCH on {key} (rtol={ctx.rtol}, atol={ctx.atol}): "
                 + _diff_diagnostics(gval, want, ctx.rtol, ctx.atol))
+    return None
 
-    # -- level 4: performance ----------------------------------------------
-    cand = cost_model.program_cost(candidate_bench)
+
+def _performance_report(cand, incumbent_time: float,
+                        deferred: bool = False) -> VerifyReport:
     t = cand.total_s
-    if t * min_speedup >= incumbent_time:
-        dominant = cand.dominant
-        return VerifyReport(
-            False, "performance",
-            f"SLOWER: candidate {t*1e6:.2f}us vs incumbent "
-            f"{incumbent_time*1e6:.2f}us ({incumbent_time/t:.2f}x). "
-            f"Candidate achieves {cand.tflops_effective:.1f} effective TFLOPS; "
-            f"dominant term: {dominant}. Suggestions: "
-            f"{'reduce HBM traffic (bigger tiles, swizzle, fusion)' if 'memory' in dominant else 'raise MXU utilization (aligned >=128 tiles, bf16, pipelining)'}"
-            f"; or try a different stage ordering.",
-            candidate_time=t, incumbent_time=incumbent_time,
-            metrics={"tflops": cand.tflops_effective})
+    dominant = cand.dominant
+    return VerifyReport(
+        False, "performance",
+        f"SLOWER: candidate {t*1e6:.2f}us vs incumbent "
+        f"{incumbent_time*1e6:.2f}us ({incumbent_time/t:.2f}x). "
+        f"Candidate achieves {cand.tflops_effective:.1f} effective TFLOPS; "
+        f"dominant term: {dominant}. Suggestions: "
+        f"{'reduce HBM traffic (bigger tiles, swizzle, fusion)' if 'memory' in dominant else 'raise MXU utilization (aligned >=128 tiles, bf16, pipelining)'}"
+        f"; or try a different stage ordering.",
+        candidate_time=t, incumbent_time=incumbent_time,
+        metrics={"tflops": cand.tflops_effective},
+        correctness_deferred=deferred)
+
+
+def compile_and_verify(candidate_ci: KernelProgram,
+                       candidate_bench: KernelProgram,
+                       incumbent_time: float,
+                       ctx: ProblemContext,
+                       kb: KnowledgeBase,
+                       cost_model: Optional[CostModel] = None,
+                       min_speedup: float = 1.001,
+                       use_pallas: bool = True,
+                       session: Optional[VerifySession] = None,
+                       cost_first: bool = False) -> VerifyReport:
+    """The verification cascade. ``session`` (optional) memoizes traces,
+    group executions, structure checks and cost-model results across
+    candidates; ``cost_first`` runs the cheap roofline check *before* the
+    expensive correctness execution and defers correctness for candidates
+    that cannot beat the incumbent (the report carries
+    ``correctness_deferred=True``; the CoVeR fallback extractor runs it
+    lazily). With both off this is the uncached reference path."""
+    cost_model = cost_model or CostModel(ctx.spec)
+
+    # -- level 1: syntax ------------------------------------------------
+    try:
+        candidate_ci.validate()
+        candidate_bench.validate()
+        if session is None or not session.trace_known_good(candidate_ci):
+            in_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
+                          for n in candidate_ci.graph.inputs()}
+            param_structs = {n.name: jax.ShapeDtypeStruct(n.shape, jnp.dtype(n.dtype))
+                             for n in candidate_ci.graph.params()}
+            jax.eval_shape(lambda i, p: run_program(candidate_ci, i, p,
+                                                    use_pallas=False),
+                           in_structs, param_structs)
+            if session is not None:
+                session.record_trace_ok(candidate_ci)
+    except Exception as e:  # noqa: BLE001 — any trace failure is the diagnostic
+        return VerifyReport(False, "syntax",
+                            f"SYNTAX/TRACE ERROR: {type(e).__name__}: {e}")
+
+    # -- level 2: structure ----------------------------------------------
+    if session is not None:
+        errors = session.structure_errors(candidate_bench, ctx, kb,
+                                          _check_structure)
+    else:
+        errors = _check_structure(candidate_bench, ctx, kb)
+    if errors:
+        return VerifyReport(False, "structure", " | ".join(errors))
+
+    # -- levels 3+4: correctness and performance --------------------------
+    # The roofline result is needed either way; with ``cost_first`` it runs
+    # ahead of correctness so a candidate that cannot beat the incumbent
+    # skips the oracle execution entirely.
+    if session is not None:
+        cand = session.program_cost(cost_model, candidate_bench)
+    else:
+        cand = cost_model.program_cost(candidate_bench)
+    slower = cand.total_s * min_speedup >= incumbent_time
+
+    if cost_first and slower:
+        if session is not None:
+            session.stats.screened += 1
+        return _performance_report(cand, incumbent_time, deferred=True)
+
+    failure = run_correctness(candidate_ci, ctx, use_pallas=use_pallas,
+                              session=session)
+    if failure is not None:
+        return failure
+
+    if slower:
+        return _performance_report(cand, incumbent_time)
+    t = cand.total_s
     return VerifyReport(True, "success",
                         SUCCESS + f" ({incumbent_time/t:.2f}x, "
                         f"{cand.tflops_effective:.1f} eff-TFLOPS)",
                         candidate_time=t, incumbent_time=incumbent_time,
                         metrics={"tflops": cand.tflops_effective})
+
+
+# ----------------------------------------------------------------------
+def verify_candidate(candidate_ci: KernelProgram,
+                     candidate_bench: KernelProgram,
+                     incumbent_time: float,
+                     ctx: ProblemContext,
+                     kb: KnowledgeBase,
+                     cost_model: Optional[CostModel] = None,
+                     min_speedup: float = 1.001,
+                     use_pallas: bool = True,
+                     session: Optional[VerifySession] = None,
+                     fastpath: str = "off") -> VerifyReport:
+    """Mode dispatcher over :func:`compile_and_verify`:
+
+    * ``"off"`` (or no session) — the uncached reference cascade.
+    * ``"on"`` — memoized fast path + cost-first screening. Known caveat:
+      for a candidate that is *both* slower than the incumbent and
+      incorrect, the trajectory observation is the performance message
+      instead of the correctness one (the screen fires first). Accepted
+      transforms, ``StageResult``/``TransformLog`` outcomes and fallback
+      selection are unaffected (the in-tree proposers only branch on
+      structure-level text, which screening never touches), but a custom
+      proposer keying on correctness-failure text would see the
+      performance message under screening.
+    * ``"check"`` — memoized fast path with every level run, cross-checked
+      bit-identical against the uncached cascade, **and** the cost-first
+      screening decision the ``"on"`` mode would take is validated: a
+      deferred report must hide nothing (its lazily-executed correctness
+      must agree with the reference level), an undeferred one must equal
+      the reference outright. Raises :class:`VerifyFastpathDivergence` on
+      any mismatch.
+    """
+    if fastpath == "off" or session is None:
+        return compile_and_verify(candidate_ci, candidate_bench,
+                                  incumbent_time, ctx, kb, cost_model,
+                                  min_speedup, use_pallas)
+    if fastpath == "check":
+        fast = compile_and_verify(candidate_ci, candidate_bench,
+                                  incumbent_time, ctx, kb, cost_model,
+                                  min_speedup, use_pallas, session=session)
+        ref = compile_and_verify(candidate_ci, candidate_bench,
+                                 incumbent_time, ctx, kb, cost_model,
+                                 min_speedup, use_pallas)
+        if fast != ref:
+            raise VerifyFastpathDivergence(
+                f"verify fast path diverged from the uncached cascade for "
+                f"{ctx.name}:\n  fast: {fast}\n  ref:  {ref}")
+        # cross-check the screening path too (cheap: the session is hot),
+        # so "check" exercises everything "on" would actually run
+        screened = compile_and_verify(candidate_ci, candidate_bench,
+                                      incumbent_time, ctx, kb, cost_model,
+                                      min_speedup, use_pallas,
+                                      session=session, cost_first=True)
+        if screened.correctness_deferred:
+            failure = run_correctness(candidate_ci, ctx,
+                                      use_pallas=use_pallas, session=session)
+            consistent = (
+                failure == ref if failure is not None
+                else (ref.level == "performance" and dataclasses.replace(
+                    screened, correctness_deferred=False) == ref))
+            if not consistent:
+                raise VerifyFastpathDivergence(
+                    f"cost-first screening hid a divergent outcome for "
+                    f"{ctx.name}:\n  screened: {screened}\n"
+                    f"  deferred correctness: {failure}\n  ref: {ref}")
+        elif screened != ref:
+            raise VerifyFastpathDivergence(
+                f"cost-first path diverged from the uncached cascade for "
+                f"{ctx.name}:\n  screened: {screened}\n  ref:  {ref}")
+        return ref
+    return compile_and_verify(candidate_ci, candidate_bench, incumbent_time,
+                              ctx, kb, cost_model, min_speedup, use_pallas,
+                              session=session, cost_first=True)

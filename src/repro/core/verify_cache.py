@@ -1,0 +1,237 @@
+"""Memoized incremental verification: the per-job fast path.
+
+``compile_and_verify`` is the hot loop of the whole system — every candidate
+at every stage re-traces the program (``jax.eval_shape``), re-executes it
+end-to-end against the oracle, and re-runs the roofline cost model, even
+when the candidate only touched one group's tile config. A
+:class:`VerifySession` memoizes each of those sub-results keyed by
+rename-invariant structural fingerprints (:mod:`repro.ir.fingerprint`):
+
+* **group executions** — oracle-side per-group outputs, keyed Merkle-style
+  on the group's local structure, the executor's *effective* dispatch
+  signature, and the value fingerprints of every external operand. A
+  candidate that mutates one group re-executes only that group and its
+  downstream slice; everything upstream replays from the cache.
+  Invalidation is purely fingerprint-driven: mutate a group and its key
+  (and every downstream key) changes, so stale entries can never be served
+  — they just age out.
+* **abstract traces** — the syntax gate's ``eval_shape`` is skipped when a
+  structurally identical (graph + partition + compute dtype) program
+  already traced cleanly. Only successes are cached: failure messages embed
+  node names, so failures always re-run.
+* **structure checks** — KB constraint sweeps keyed on the exact
+  (name-sensitive) program form *plus the KB content hash*, so editing any
+  KB YAML invalidates memoized verdicts immediately.
+* **cost-model results** — ``ProgramCost`` per exact bench form, shared by
+  the per-stage incumbent computation and the performance gate.
+* **oracle prep** — seeded inputs/params and the f32 oracle outputs per
+  exact graph form, so a replay fallback does not redo the full oracle
+  evaluation the replay attempt already paid for.
+
+Sessions are strictly **per job**: leaf value fingerprints bind by name to
+the job's seeded input/param arrays, which are only fixed within one
+``ProblemContext``. The session auto-clears its value caches if it ever
+sees a different binding (defense in depth; the engine wires one session
+per job).
+
+``ForgeConfig.verify_fastpath`` selects the mode: ``"off"`` (uncached
+reference path), ``"on"`` (memoized + cost-first screening), or ``"check"``
+(memoized, and every report is cross-checked bit-identical against the
+uncached path — :class:`VerifyFastpathDivergence` on any mismatch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.config import VERIFY_FASTPATH_MODES
+from repro.core.executor import group_exec_signature, group_order, run_group
+from repro.ir.fingerprint import (graph_exact_fingerprint, group_fingerprint,
+                                  group_value_fingerprint, leaf_fingerprint,
+                                  program_exact_fingerprint,
+                                  trace_fingerprint)
+from repro.ir.schedule import KernelProgram
+
+__all__ = ["VerifySession", "VerifySessionStats", "VerifyFastpathDivergence",
+           "VERIFY_FASTPATH_MODES", "run_program_cached"]
+
+
+class VerifyFastpathDivergence(AssertionError):
+    """check-mode caught a fast-path report differing from the reference."""
+
+
+@dataclasses.dataclass
+class VerifySessionStats:
+    group_hits: int = 0
+    group_misses: int = 0
+    trace_hits: int = 0
+    trace_misses: int = 0
+    structure_hits: int = 0
+    structure_misses: int = 0
+    cost_hits: int = 0
+    cost_misses: int = 0
+    oracle_hits: int = 0
+    oracle_misses: int = 0
+    screened: int = 0           # correctness deferred by the cost screen
+    deferred_runs: int = 0      # deferred correctness lazily executed
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class VerifySession:
+    """Per-job memo for the verification fast path (see module docstring).
+
+    Not thread-safe by design: the engine runs one job on one worker
+    (thread or process), and sessions never cross jobs.
+    """
+
+    def __init__(self, max_group_entries: int = 1024):
+        self.max_group_entries = max(1, int(max_group_entries))
+        self.stats = VerifySessionStats()
+        # fp -> [(position-in-group.nodes, array), ...]
+        self._groups: Dict[str, List[Tuple[int, Any]]] = {}
+        self._traces: set = set()
+        self._structure: Dict[Tuple[str, str], List[str]] = {}
+        self._costs: Dict[str, Any] = {}
+        self._oracle: Dict[str, tuple] = {}
+        self._binding_token: Optional[tuple] = None
+
+    # -- binding safety -------------------------------------------------
+    def _check_binding(self, inputs, params):
+        """Value fingerprints assume one fixed inputs/params binding per
+        session. If a different binding ever shows up (misuse: a session
+        shared across jobs), drop every value-derived cache."""
+        token = (id(inputs), id(params) if params else None)
+        if self._binding_token is None:
+            self._binding_token = token
+        elif self._binding_token != token:
+            self._groups.clear()
+            self._binding_token = token
+
+    # -- group execution memo -------------------------------------------
+    def _get_group(self, fp: str) -> Optional[List[Tuple[int, Any]]]:
+        got = self._groups.get(fp)
+        if got is not None:
+            self.stats.group_hits += 1
+        else:
+            self.stats.group_misses += 1
+        return got
+
+    def _put_group(self, fp: str, outputs: List[Tuple[int, Any]]):
+        if len(self._groups) >= self.max_group_entries:
+            # FIFO trim: drop the oldest entry (dict order = insertion)
+            self._groups.pop(next(iter(self._groups)))
+        self._groups[fp] = outputs
+
+    # -- abstract-trace memo --------------------------------------------
+    def trace_known_good(self, program: KernelProgram) -> bool:
+        fp = trace_fingerprint(program)
+        if fp in self._traces:
+            self.stats.trace_hits += 1
+            return True
+        self.stats.trace_misses += 1
+        return False
+
+    def record_trace_ok(self, program: KernelProgram):
+        self._traces.add(trace_fingerprint(program))
+
+    # -- structure-check memo -------------------------------------------
+    def structure_errors(self, program: KernelProgram, ctx, kb,
+                         compute) -> List[str]:
+        """Memoized KB structure sweep. The key folds in the KB content
+        hash (computed per call, not per session), so swapping/editing the
+        KB invalidates immediately; the spec is fixed per session via the
+        job's ``ProblemContext``."""
+        key = (program_exact_fingerprint(program), kb.content_hash())
+        got = self._structure.get(key)
+        if got is not None:
+            self.stats.structure_hits += 1
+            return list(got)
+        self.stats.structure_misses += 1
+        errors = compute(program, ctx, kb)
+        self._structure[key] = list(errors)
+        return errors
+
+    # -- cost-model memo ------------------------------------------------
+    def program_cost(self, cost_model, program: KernelProgram):
+        key = program_exact_fingerprint(program)
+        got = self._costs.get(key)
+        if got is not None:
+            self.stats.cost_hits += 1
+            return got
+        self.stats.cost_misses += 1
+        cost = cost_model.program_cost(program)
+        self._costs[key] = cost
+        return cost
+
+    def program_time(self, cost_model, program: KernelProgram) -> float:
+        return self.program_cost(cost_model, program).total_s
+
+    # -- oracle-prep memo -----------------------------------------------
+    def oracle_prep(self, graph, compute) -> tuple:
+        """Memoized (inputs, params, oracle_outputs) for the trusted
+        harness: a replay fallback re-prepares the identical context, so
+        the second full oracle evaluation is pure waste."""
+        key = graph_exact_fingerprint(graph)
+        got = self._oracle.get(key)
+        if got is not None:
+            self.stats.oracle_hits += 1
+            return got
+        self.stats.oracle_misses += 1
+        prep = compute(graph)
+        self._oracle[key] = prep
+        return prep
+
+
+# ----------------------------------------------------------------------
+def run_program_cached(program: KernelProgram,
+                       inputs: Dict[str, jnp.ndarray],
+                       params: Dict[str, jnp.ndarray],
+                       session: VerifySession,
+                       use_pallas: bool = True,
+                       interpret: bool = True) -> Dict[str, jnp.ndarray]:
+    """Drop-in for :func:`repro.core.executor.run_program` that replays
+    memoized group executions. Produces bit-identical results by
+    construction: a group either re-executes through the exact same
+    ``run_group`` dispatch, or replays arrays a previous identical dispatch
+    produced (JAX CPU execution is deterministic). Cached outputs are
+    stored positionally and rebound to the consuming program's node names,
+    so renamed structural twins share entries."""
+    session._check_binding(inputs, params)
+    graph = program.graph
+    sched = program.schedule
+    compute_dtype = jnp.dtype(sched.compute_dtype)
+    env: Dict[str, jnp.ndarray] = {}
+    value_fps: Dict[str, str] = {}
+    for n in graph.toposorted():
+        if n.op == "input":
+            env[n.name] = inputs[n.name]
+        elif n.op == "param":
+            env[n.name] = params[n.name]
+        elif n.op == "const":
+            env[n.name] = jnp.asarray(n.attrs["value"], jnp.dtype(n.dtype))
+        else:
+            continue
+        value_fps[n.name] = leaf_fingerprint(n)
+    for g in group_order(graph, sched.groups):
+        sig = group_exec_signature(graph, g, use_pallas=use_pallas)
+        gfp = group_fingerprint(graph, g, value_fps,
+                                extra=[sig, sched.compute_dtype,
+                                       bool(interpret)])
+        positions = {name: i for i, name in enumerate(g.nodes)}
+        cached = session._get_group(gfp)
+        if cached is None:
+            out = run_group(graph, g, env, compute_dtype,
+                            use_pallas=use_pallas, interpret=interpret)
+            session._put_group(gfp, [(positions[k], v)
+                                     for k, v in out.items()])
+        else:
+            out = {g.nodes[i]: v for i, v in cached}
+        env.update(out)
+        for name in out:
+            value_fps[name] = group_value_fingerprint(gfp, positions[name])
+    return {o: env[o].astype(jnp.float32) for o in graph.outputs}

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import hashlib
 import json
-from typing import Dict, List, Optional, Sequence
+import weakref
+from typing import Dict, List, Mapping, Optional, Sequence
 
 from repro.ir.graph import Graph
 from repro.ir.schedule import KernelProgram, Schedule
@@ -27,6 +28,24 @@ from repro.ir.schedule import KernelProgram, Schedule
 def canonical_name_map(graph: Graph) -> Dict[str, str]:
     """Map node names to position-based canonical names (``n<topo-index>``)."""
     return {n.name: f"n{i}" for i, n in enumerate(graph.toposorted())}
+
+
+# Graphs are treated as immutable once built: every pipeline transform copies
+# before mutating (see proposers), so a per-object memo is safe. WeakKey so
+# discarded candidate graphs don't pin their maps.
+_NAME_MAP_CACHE: "weakref.WeakKeyDictionary[Graph, Dict[str, str]]" = \
+    weakref.WeakKeyDictionary()
+
+
+def cached_canonical_name_map(graph: Graph) -> Dict[str, str]:
+    """Memoized :func:`canonical_name_map` (one toposort per graph object
+    instead of one per call — replay re-canonicalizes every candidate
+    description against the same graph)."""
+    nm = _NAME_MAP_CACHE.get(graph)
+    if nm is None:
+        nm = canonical_name_map(graph)
+        _NAME_MAP_CACHE[graph] = nm
+    return nm
 
 
 def _canon_attr(value):
@@ -196,6 +215,104 @@ def fingerprint_program(program: KernelProgram,
     }
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ----------------------------------------------------------------------
+# Per-node / per-group fingerprints: the verification fast path's keys.
+#
+# The exact/family forms above key whole *jobs*; the incremental verifier
+# (``repro.core.verify_cache``) needs finer grain — "has this exact subgraph
+# slice, fed these exact values, been executed before?". Values are chained
+# Merkle-style: a leaf's fingerprint is its binding (inputs/params bind by
+# name to the session's seeded arrays; consts by value), a computed node's
+# value fingerprint is derived from the fingerprint of the group execution
+# that produced it, and a group's fingerprint folds in its local structure
+# plus the value fingerprints of every external operand. Mutating one group
+# therefore changes its own fingerprint and every downstream one — exactly
+# the slice that must re-execute — while untouched upstream groups keep
+# their keys and replay from the session cache.
+# ----------------------------------------------------------------------
+
+def _hash_payload(payload) -> str:
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def leaf_fingerprint(node) -> str:
+    """Value fingerprint of a graph leaf. Inputs/params bind by *name* to the
+    session's fixed seeded arrays (``ProblemContext.ci_inputs``/``ci_params``),
+    so the name IS the value identity within a session; consts carry their
+    value. Shape/dtype participate so a re-shaped leaf can never alias."""
+    if node.op == "const":
+        return _hash_payload(["const", repr(node.attrs.get("value")),
+                              list(node.shape), str(node.dtype)])
+    return _hash_payload([node.op, node.name, list(node.shape),
+                          str(node.dtype)])
+
+
+def group_value_fingerprint(group_fp: str, position: int) -> str:
+    """Value fingerprint of the ``position``-th node a group execution
+    produced (the chaining link for downstream group keys)."""
+    return hashlib.sha256(f"{group_fp}#{position}".encode()).hexdigest()
+
+
+def group_fingerprint(graph: Graph, group, value_fps: Mapping[str, str],
+                      extra=()) -> str:
+    """Rename-invariant execution key for one fusion group: the group's
+    local structure (ops/attrs/shapes/dtypes, in-group wiring by position)
+    plus the value fingerprints of every external operand, plus ``extra``
+    (the executor's effective dispatch signature, compute dtype, ...).
+    Node *names* never participate — cached outputs are stored positionally
+    and rebound to the consuming program's names on reuse."""
+    local = {name: i for i, name in enumerate(group.nodes)}
+    nodes = []
+    for name in group.nodes:
+        n = graph.node(name)
+        ins = [["loc", local[i]] if i in local else ["ext", value_fps[i]]
+               for i in n.inputs]
+        nodes.append([n.op, ins,
+                      {str(k): _canon_attr(v) for k, v in sorted(n.attrs.items())},
+                      list(n.shape), str(n.dtype)])
+    return _hash_payload([nodes, list(extra)])
+
+
+def graph_exact_fingerprint(graph: Graph) -> str:
+    """Name-*sensitive* structural digest (names, ops, attrs, shapes,
+    dtypes, outputs). Unlike :func:`graph_canonical` this keeps real names —
+    it keys caches whose stored values embed names (oracle outputs, verifier
+    diagnostics), where a renamed twin must miss."""
+    nodes = [[n.name, n.op, list(n.inputs),
+              {str(k): _canon_attr(v) for k, v in sorted(n.attrs.items())},
+              list(n.shape), str(n.dtype)]
+             for n in graph.toposorted()]
+    return _hash_payload([nodes, list(graph.outputs)])
+
+
+def program_exact_fingerprint(program: KernelProgram) -> str:
+    """Name-sensitive digest of a whole program (graph + schedule + meta) —
+    the session key for memoized cost-model results and structure checks,
+    whose messages embed group names."""
+    return _hash_payload([
+        graph_exact_fingerprint(program.graph),
+        program.schedule.to_dict(),
+        json.loads(json.dumps(program.meta, sort_keys=True, default=str)),
+    ])
+
+
+def trace_fingerprint(program: KernelProgram) -> str:
+    """Key for memoized abstract-trace (``jax.eval_shape``) successes. The
+    syntax gate traces with ``use_pallas=False``, so only the graph, the
+    group partition (dtype casts happen at group boundaries) and the compute
+    dtype can change the outcome — per-group impls/configs are ignored,
+    which is what lets config-only candidates skip re-tracing. Rename-
+    invariant: only successes are cached and tracing never reads names
+    across programs."""
+    nm = canonical_name_map(program.graph)
+    partition = [[nm[n] for n in grp.nodes]
+                 for grp in program.schedule.groups]
+    return _hash_payload([graph_canonical(program.graph, nm), partition,
+                          program.schedule.compute_dtype])
 
 
 def fingerprint_job(ci_program: KernelProgram,

@@ -27,6 +27,7 @@ ALT_VALUES = {
     "cache_path": "/tmp/store.json",
     "cache_max_entries": 16,
     "dump_dir": "/tmp/dumps",
+    "verify_fastpath": "check",
 }
 
 
@@ -53,7 +54,7 @@ def test_operational_fields_do_not_change_signature():
     base = ForgeConfig()
     assert {f.name for f in ForgeConfig.operational_fields()} == {
         "workers", "execution_backend", "cache_path", "cache_max_entries",
-        "dump_dir"}
+        "dump_dir", "verify_fastpath"}
     for f in ForgeConfig.operational_fields():
         changed = base.replace(**{f.name: ALT_VALUES[f.name]})
         assert changed.policy_signature() == base.policy_signature(), f.name

@@ -1,0 +1,388 @@
+"""Verification fast path (``ForgeConfig.verify_fastpath``): check-mode
+equivalence over the rewrite corpus, fingerprint-driven invalidation (group
+mutation + KB content-hash change), cost-first screening, trajectory budget
+accounting, and worker-side key computation."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.config import ForgeConfig
+from repro.core.cover import CoVeRAgent, Trajectory
+from repro.core.engine import OptimizationEngine, compute_job_keys
+from repro.core.pipeline import ForgePipeline
+from repro.core.proposers import BaseProposer, Candidate
+from repro.core.result_store import ResultStore
+from repro.core.verify import compile_and_verify, verify_candidate
+from repro.core.verify_cache import VerifySession, run_program_cached
+from repro.ir import GraphBuilder
+from repro.ir.cost import CostModel, graph_flops
+from repro.ir.fingerprint import program_canonical
+from repro.ir.schedule import KernelProgram, PallasConfig, eager_schedule
+from repro.kb.loader import KnowledgeBase, load_default
+
+KB = load_default()
+CM = CostModel()
+
+
+def _gemm(name, m, n, k, dtype="float32"):
+    b = GraphBuilder(name, dtype=dtype)
+    x = b.input((m, k), name="x")
+    w = b.param((k, n), name="w")
+    mm = b.matmul(x, w, name="mm")
+    g = b.done(b.gelu(mm, name="act"))
+    sched = eager_schedule(g)
+    for grp in sched.groups:
+        if grp.root == "mm":
+            grp.impl = "pallas_naive"
+            grp.config = PallasConfig(128, 128, 32, num_stages=1)
+    return KernelProgram(name, g, sched, original_flops=graph_flops(g))
+
+
+def _problem(m=256, n=256, k=128, bm=4096, bn=4096, bk=1024):
+    return _gemm("p", m, n, k), _gemm("p", bm, bn, bk)
+
+
+def _ctx(pipe, ci, session=None):
+    return pipe._prepare_ctx("t", ci, ("gemm",), "bfloat16", 1e-2, 1e-3, {},
+                             session=session)
+
+
+def _result_view(r):
+    return {
+        "log": r.transform_log.to_list(),
+        "records": [dataclasses.asdict(s) for s in r.stage_records],
+        "original_time": r.original_time,
+        "optimized_time": r.optimized_time,
+        "proposals": r.proposals,
+        "clamped": r.clamped,
+        "schedule": program_canonical(r.bench_program)["schedule"],
+    }
+
+
+# ----------------------------------------------------------------------
+# check mode: the fast path's executable contract
+# ----------------------------------------------------------------------
+
+def test_check_mode_holds_over_pipeline_corpus():
+    """Acceptance criterion: verify_fastpath='check' cross-checks every
+    report of a full optimization against the uncached cascade and reports
+    zero divergences (it would raise VerifyFastpathDivergence)."""
+    pipe = ForgePipeline(config=ForgeConfig(verify_fastpath="check"))
+    r = pipe.optimize("chk", _gemm("chk", 256, 256, 128),
+                      _gemm("chk", 2048, 2048, 512), tags=("gemm",))
+    assert r.transform_log is not None and len(r.transform_log) > 0
+
+
+def test_on_off_pipeline_equivalence():
+    """The fast path (memoization + cost-first screening) must be
+    result-equivalent end to end: identical transform logs, stage records,
+    modeled times and proposal counts."""
+    views = {}
+    for mode in ("off", "on"):
+        pipe = ForgePipeline(config=ForgeConfig(verify_fastpath=mode))
+        r = pipe.optimize("eq", _gemm("eq", 256, 256, 128),
+                          _gemm("eq", 4096, 4096, 1024), tags=("gemm",))
+        views[mode] = _result_view(r)
+    assert views["on"] == views["off"]
+
+
+def test_check_mode_single_reports_match_reference():
+    """Point check: a fresh session's verify_candidate('check') returns the
+    same report object content as the plain cascade, hot and cold."""
+    ci, bench = _problem()
+    pipe = ForgePipeline()
+    session = VerifySession()
+    ctx = _ctx(pipe, ci)
+    ref = compile_and_verify(ci, bench, 1.0, ctx, KB, CM)
+    for _ in range(2):   # cold then memo-hot
+        got = verify_candidate(ci, bench, 1.0, ctx, KB, CM,
+                               session=session, fastpath="check")
+        assert got == ref
+
+
+# ----------------------------------------------------------------------
+# fingerprint-driven invalidation
+# ----------------------------------------------------------------------
+
+def test_group_cache_invalidates_downstream_slice_only():
+    ci, _ = _problem()
+    pipe = ForgePipeline()
+    session = VerifySession()
+    ctx = _ctx(pipe, ci)
+    n_groups = len(ci.schedule.groups)
+    assert n_groups == 2                       # g_mm, g_act
+
+    run_program_cached(ci, ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_misses == n_groups
+    assert session.stats.group_hits == 0
+
+    # identical structure (fresh copy): full replay, zero executions
+    run_program_cached(ci.copy(), ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_hits == n_groups
+
+    # mutate the LAST group (act): upstream mm replays, act re-executes
+    tail = ci.copy()
+    tail.graph.node("act").op = "tanh"
+    run_program_cached(tail, ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_hits == n_groups + 1          # mm hit
+    assert session.stats.group_misses == n_groups + 1        # act missed
+
+    # mutate the FIRST group (mm tiles, different effective blocks): the
+    # whole downstream slice re-executes
+    head = ci.copy()
+    for grp in head.schedule.groups:
+        if grp.root == "mm":
+            grp.config = PallasConfig(64, 64, 32, num_stages=1)
+    run_program_cached(head, ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_misses == n_groups + 3        # mm + act missed
+
+
+def test_group_cache_reuses_renamed_structural_twin():
+    """Cached group outputs are stored positionally: a mutating rewrite that
+    only relabels the tail node replays the upstream slice."""
+    ci, _ = _problem()
+    pipe = ForgePipeline()
+    session = VerifySession()
+    ctx = _ctx(pipe, ci)
+    run_program_cached(ci, ctx.ci_inputs, ctx.ci_params, session)
+    misses = session.stats.group_misses
+
+    twin = ci.copy()
+    g = twin.graph
+    node = g.nodes.pop("act")
+    node.name = "act_renamed"
+    g.nodes["act_renamed"] = node
+    g.outputs = ["act_renamed"]
+    for grp in twin.schedule.groups:
+        grp.nodes = [n if n != "act" else "act_renamed" for n in grp.nodes]
+        if grp.root == "act":
+            grp.root = "act_renamed"
+            grp.name = "g_act_renamed"
+    out = run_program_cached(twin, ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_misses == misses          # full replay
+    assert "act_renamed" in out
+
+
+def test_effective_config_collapses_identical_dispatch():
+    """Two configs that clamp to the same effective template blocks on ci
+    shapes share one cached execution (the group_exec_signature contract)."""
+    ci, _ = _problem(m=256, n=256, k=128)
+    pipe = ForgePipeline()
+    session = VerifySession()
+    ctx = _ctx(pipe, ci)
+    big = ci.copy()
+    for grp in big.schedule.groups:
+        if grp.root == "mm":
+            grp.config = PallasConfig(512, 512, 512, num_stages=1)
+    bigger = ci.copy()
+    for grp in bigger.schedule.groups:
+        if grp.root == "mm":
+            grp.config = PallasConfig(1024, 1024, 1024, num_stages=1)
+    run_program_cached(big, ctx.ci_inputs, ctx.ci_params, session)
+    misses = session.stats.group_misses
+    run_program_cached(bigger, ctx.ci_inputs, ctx.ci_params, session)
+    assert session.stats.group_misses == misses          # both clamp to 256
+
+
+def test_structure_memo_invalidates_on_kb_content_change():
+    """Acceptance criterion: the fast path's memoized structure verdicts key
+    on KnowledgeBase.content_hash(), so a KB swap/edit is reflected
+    immediately even within one session."""
+    ci, bench = _problem()
+    f64 = _gemm("p", 256, 256, 128, dtype="float64")
+    f64b = _gemm("p", 4096, 4096, 1024, dtype="float64")
+    pipe = ForgePipeline()
+    session = VerifySession()
+    ctx = _ctx(pipe, f64)
+
+    kb_empty = KnowledgeBase([], [], [])
+    assert kb_empty.content_hash() != KB.content_hash()
+
+    with_kb = compile_and_verify(f64, f64b, 1.0, ctx, KB, CM,
+                                 session=session)
+    assert with_kb.level == "structure" and "float64" in with_kb.observation
+    # memo hot for the same KB
+    again = compile_and_verify(f64, f64b, 1.0, ctx, KB, CM, session=session)
+    assert again == with_kb and session.stats.structure_hits >= 1
+
+    # same session, different KB content hash -> the dtype ban is gone
+    without = compile_and_verify(f64, f64b, 1.0, ctx, kb_empty, CM,
+                                 session=session)
+    assert without.level != "structure" or "float64" not in without.observation
+    # and the original KB's memo entry is still intact
+    assert compile_and_verify(f64, f64b, 1.0, ctx, KB, CM,
+                              session=session) == with_kb
+
+
+# ----------------------------------------------------------------------
+# cost-first screening
+# ----------------------------------------------------------------------
+
+class NoopProposer(BaseProposer):
+    stage = "gpu_specific"
+
+    def candidates(self, program, issues, trajectory):
+        yield Candidate("does nothing", "noop", lambda p: p.copy(), "p0")
+
+
+def test_screening_defers_correctness_and_matches_unscreened():
+    ci, bench = _problem()
+    pipe = ForgePipeline()
+    incumbent = CM.program_time(bench)
+    results = {}
+    for mode in ("off", "on"):
+        session = VerifySession() if mode != "off" else None
+        ctx = _ctx(pipe, ci)
+        agent = CoVeRAgent("gpu_specific", NoopProposer(KB, ctx), KB,
+                           max_iterations=3, session=session, fastpath=mode)
+        res = agent.run(ci, bench, [], ctx, incumbent, CM)
+        results[mode] = res
+        if mode == "on":
+            # the noop can't beat the incumbent -> correctness was deferred,
+            # then lazily executed once by the fallback extractor
+            assert session.stats.screened >= 1
+            assert session.stats.deferred_runs == 1
+    off, on = results["off"], results["on"]
+    assert (off.improved, off.iterations, off.fallback_used) \
+        == (on.improved, on.iterations, on.fallback_used)
+    assert CM.program_time(off.bench_program) \
+        == pytest.approx(CM.program_time(on.bench_program))
+
+
+def test_check_mode_validates_screening_for_incorrect_slow_candidate():
+    """check mode also cross-checks the screening decision: a candidate that
+    is both slower and incorrect (the one class where screening changes the
+    failure level) must validate cleanly — its lazily-run correctness
+    agrees with the reference."""
+    ci, bench = _problem()
+    for p in (ci, bench):
+        p.graph.node("act").op = "tanh"        # wrong math, valid program
+    good_ci, _ = _problem()
+    pipe = ForgePipeline()
+    ctx = _ctx(pipe, good_ci)
+    incumbent = CM.program_time(bench) / 100   # candidate is also "slower"
+    session = VerifySession()
+    got = verify_candidate(ci, bench, incumbent, ctx, KB, CM,
+                           session=session, fastpath="check")
+    assert got.level == "correctness"          # reference outcome returned
+    assert session.stats.screened >= 1         # the screen actually fired
+
+
+def test_screened_report_matches_unscreened_for_correct_candidate():
+    """For a correct-but-slow candidate the screened report must be
+    byte-identical to the unscreened performance failure (modulo the
+    deferred flag)."""
+    ci, bench = _problem()
+    pipe = ForgePipeline()
+    ctx = _ctx(pipe, ci)
+    incumbent = CM.program_time(bench)
+    ref = compile_and_verify(ci, bench, incumbent, ctx, KB, CM)
+    assert ref.level == "performance"
+    screened = compile_and_verify(ci, bench, incumbent, ctx, KB, CM,
+                                  session=VerifySession(), cost_first=True)
+    assert screened.correctness_deferred
+    assert dataclasses.replace(screened, correctness_deferred=False) == ref
+
+
+# ----------------------------------------------------------------------
+# trajectory budget accounting (satellite: O(n^2) add fix)
+# ----------------------------------------------------------------------
+
+def test_trajectory_running_length_matches_format():
+    t = Trajectory(max_chars=2000)
+    for i in range(40):   # indices reach two digits; truncation kicks in
+        t.add(f"thought {i}", "compile_and_verify", f"args-{i}",
+              "observation " + "x" * (17 * (i % 7)))
+        assert t._formatted_len() == len(t.format())
+        assert len(t.format()) <= t.max_chars
+    assert len(t.entries) < 40
+
+
+def test_trajectory_truncation_behavior_unchanged():
+    t = Trajectory(max_chars=400)
+    for i in range(10):
+        t.add(f"thought {i}", "tool", "args", "obs " + "x" * 80)
+    assert len(t.entries) < 10
+    assert t._formatted_len() == len(t.format())
+
+
+# ----------------------------------------------------------------------
+# parallel dispatch: worker-side keys and the sharded store
+# ----------------------------------------------------------------------
+
+def _job(m, n, k, name="gemm"):
+    from repro.core import KernelJob
+    return KernelJob(name, _gemm(name, min(m, 256), min(n, 256), min(k, 128)),
+                     _gemm(name, m, n, k), tags=("gemm",))
+
+
+def test_thread_backend_computes_identical_keys():
+    jobs = [_job(2048, 2048, 512, name=f"j{i}") for i in range(3)]
+    serial = OptimizationEngine(workers=1, backend="serial")
+    threaded = OptimizationEngine(workers=3, backend="thread")
+    ref = serial._get_executor().compute_keys(jobs)
+    assert threaded._get_executor().compute_keys(jobs) == ref
+    assert ref == [compute_job_keys(serial.pipeline, j) for j in jobs]
+
+
+def test_sharded_store_concurrent_access():
+    import threading
+
+    store = ResultStore(max_entries=256, shards=4)
+    errors = []
+
+    def hammer(tid):
+        try:
+            for i in range(50):
+                key = f"k{tid}-{i % 10}"
+                store.put(key, {"transform_log": [], "x": i},
+                          family=f"fam{tid}", flush=False)
+                assert store.get(key) is not None
+                store.family_members(f"fam{tid}")
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors
+    assert len(store) == 8 * 10
+    for t in range(8):
+        assert len(store.family_members(f"fam{t}")) == 10
+
+
+def test_store_heap_eviction_exact_under_churn():
+    """The lazy recency heap must keep eviction exactly LRU through heavy
+    stamp churn (refreshes create stale stamps that eviction must skip)."""
+    store = ResultStore(max_entries=4, shards=3)
+    for i in range(4):
+        store.put(f"k{i}", {"transform_log": []}, flush=False)
+    for _ in range(30):                       # pile up stale stamps
+        store.get("k0"), store.get("k1")
+    store.put("k4", {"transform_log": []}, flush=False)   # evicts k2 (LRU)
+    assert store.get("k2") is None
+    store.put("k5", {"transform_log": []}, flush=False)   # evicts k3
+    assert store.get("k3") is None
+    for key in ("k0", "k1", "k4", "k5"):
+        assert store.get(key) is not None
+    assert len(store) == 4 and store.evictions == 2
+
+
+def test_sharded_store_single_thread_semantics_match_unsharded():
+    """Global LRU must stay exact across shards: the shard count can never
+    change eviction order or disk layout."""
+    a = ResultStore(max_entries=3, shards=1)
+    b = ResultStore(max_entries=3, shards=7)
+    for store in (a, b):
+        for i in range(5):
+            store.put(f"k{i}", {"transform_log": [], "i": i}, flush=False)
+        store.get("k2")                       # refresh
+        store.put("k5", {"transform_log": []}, flush=False)
+    for key in ("k0", "k1", "k3"):
+        assert a.get(key) is None and b.get(key) is None
+    for key in ("k2", "k4", "k5"):
+        assert a.get(key) is not None and b.get(key) is not None
+    assert a.evictions == b.evictions
