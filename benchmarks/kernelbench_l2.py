@@ -66,6 +66,20 @@ def run(csv_path=None, families=None, workers=1, cache_path=None,
               f"{stats.family_transfers} family transfers, "
               f"{stats.transfer_fallbacks} transfer fallbacks, "
               f"{stats.replay_fallbacks} replay fallbacks")
+    vstats = summary.verify_stats
+    if vstats:
+        print(f"verify:            {vstats.group_hits} group hits / "
+              f"{vstats.group_misses} misses, "
+              f"{vstats.oracle_hits} oracle hits / "
+              f"{vstats.oracle_misses} misses, "
+              f"{vstats.shared_group_hits} shared group hits, "
+              f"{vstats.shared_oracle_hits} shared oracle hits, "
+              f"{vstats.screened} screened")
+        print(f"planner:           {vstats.planner_signatures} duplicated "
+              f"signatures pre-executed, "
+              f"{vstats.planner_deduped_jobs} jobs warm-started, "
+              f"{vstats.planner_group_execs} group execs / "
+              f"{vstats.planner_oracle_preps} oracle preps hoisted")
     return summary
 
 

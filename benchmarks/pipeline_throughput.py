@@ -1,22 +1,38 @@
 """End-to-end pipeline throughput benchmark: verification fast path on vs off.
 
     PYTHONPATH=src python -m benchmarks.pipeline_throughput
-        [--min-speedup 1.5] [--out BENCH_pipeline.json] [--skip-warmup]
+        [--min-speedup 1.5] [--min-batch-improvement 1.4]
+        [--out BENCH_pipeline.json] [--skip-warmup]
 
-Times cold end-to-end optimization of the fixed backend-equivalence job set
-(one job per structural family plus a family twin — the same set
-``scripts/backend_equivalence.py`` gates on) twice through the serial
-backend with an empty store: once with ``verify_fastpath="off"`` (the
-uncached reference cascade) and once with ``"on"`` (memoized incremental
-verify + cost-first screening). It then
+Two scenarios, both gated:
 
-* asserts **result equivalence** — per-job transform logs, optimized times,
-  canonical schedules and proposal counts must be identical across modes
-  (the fast path may only change *how fast* verification runs, never what
-  it decides), and
-* writes ``BENCH_pipeline.json`` recording both wall-clock times and the
-  speedup, exiting non-zero when the speedup is below ``--min-speedup``
-  (default 1.5x — the PR's acceptance bar) or any divergence was found.
+**Cold** — times cold end-to-end optimization of the fixed
+backend-equivalence job set (one job per structural family plus a family
+twin — the same set ``scripts/backend_equivalence.py`` gates on) twice
+through the serial backend with an empty store: once with
+``verify_fastpath="off"`` (the uncached reference cascade) and once with
+``"on"`` (memoized incremental verify + cost-first screening). It asserts
+**result equivalence** — per-job transform logs, optimized times, canonical
+schedules and proposal counts must be identical across modes (the fast path
+may only change *how fast* verification runs, never what it decides) — and
+fails below ``--min-speedup`` (default 1.5x, the PR 5 acceptance bar).
+
+**Batch** — a shared-family batch (one leader + N node-renamed twins, all
+structurally identical) run under two configurations: PR 5 semantics
+(per-job sessions only: ``shared_verify_cache_bytes=0``,
+``batch_exec_planning=False``) and the cross-job configuration (shared
+verify cache + batch execution planner, the defaults). Each configuration
+times a fresh-Forge single-job run and a fresh-Forge full-batch run; the
+figure of merit is the **marginal cost of a twin**,
+``(T_batch - T_single) / N`` — under PR 5 every twin re-executes the oracle
+prep and every candidate group; with cross-job sharing twins hit the shared
+cache. Fails below ``--min-batch-improvement`` (default 1.4x marginal
+improvement), on any cross-configuration result divergence, or if a
+``verify_fastpath="check"`` pass over the same batch (every shared hit
+byte-compared against a fresh execution) raises.
+
+``BENCH_pipeline.json`` records both scenarios (the batch one under a
+``"batch"`` key, including the shared run's verify/planner counters).
 
 A small untimed warmup job runs first so one-time JAX tracing/compilation
 costs don't inflate whichever mode happens to run first.
@@ -70,6 +86,140 @@ def build_jobs():
     return jobs
 
 
+def build_batch_jobs(twins: int = 3):
+    """One leader plus ``twins`` node-renamed copies — structurally and
+    numerically identical jobs whose node names all differ. Name-invariant
+    fingerprints collide (exact replay kicks in for the twins) while any
+    name-*bound* key would miss; the marginal cost of a twin is therefore
+    pure verification work — exactly what cross-job sharing removes."""
+    from repro.aibench import build_program, load_specs
+    from repro.core import KernelJob
+    from repro.ir.schedule import rename_program
+
+    s = {sp.name: sp for sp in load_specs()}[GATE_SPECS[0]]
+    ci = build_program(s.builder, s.dims("ci"), "naive", meta=s.meta)
+    bench = build_program(s.builder, s.dims("bench"), "naive", meta=s.meta)
+    jobs = [KernelJob(s.name, ci, bench, tags=tuple(s.tags),
+                      target_dtype=s.target_dtype, rtol=s.rtol, atol=s.atol,
+                      meta=dict(s.meta))]
+    for i in range(twins):
+        jobs.append(KernelJob(
+            f"{s.name}_shared{i}",
+            rename_program(ci, f"t{i}_"), rename_program(bench, f"t{i}_"),
+            tags=tuple(s.tags), target_dtype=s.target_dtype,
+            rtol=s.rtol, atol=s.atol, meta=dict(s.meta)))
+    return jobs
+
+
+def _rows_for(report):
+    from repro.ir.fingerprint import program_canonical
+
+    rows = {}
+    for r in report.results:
+        rows[r.job.name] = {
+            "fingerprint": r.fingerprint,
+            "transform_log": r.result.transform_log.to_list(),
+            "optimized_time": r.result.optimized_time,
+            "original_time": r.result.original_time,
+            "speedup": round(r.result.speedup, 9),
+            "proposals": r.result.proposals,
+            "canonical_schedule": program_canonical(
+                r.result.bench_program)["schedule"],
+        }
+    return rows
+
+
+def run_batch_config(jobs, **overrides):
+    """Fresh-Forge single-leader run, then fresh-Forge full-batch run (both
+    cold stores) under one configuration. Returns (rows, single_s, batch_s,
+    verify_stats_dict)."""
+    from repro.forge import Forge, ForgeConfig
+
+    t0 = time.perf_counter()
+    with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                           verify_fastpath="on", **overrides)) as forge:
+        forge.optimize_batch(jobs[:1])
+    single_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                           verify_fastpath="on", **overrides)) as forge:
+        report = forge.optimize_batch(jobs)
+    batch_s = time.perf_counter() - t0
+    verify = report.verify.as_dict() if report.verify is not None else {}
+    return _rows_for(report), single_s, batch_s, verify
+
+
+def run_batch_scenario(min_improvement: float, twins: int = 3):
+    """The shared-family batch scenario; returns (artifact_section, failed)."""
+    jobs = build_batch_jobs(twins)
+    print(f"\n== shared-family batch (1 leader + {twins} renamed twins, "
+          f"serial backend, cold store) ==")
+    pr5_rows, pr5_single, pr5_batch, _ = run_batch_config(
+        jobs, shared_verify_cache_bytes=0, batch_exec_planning=False)
+    pr5_marginal = max(pr5_batch - pr5_single, 0.0) / twins
+    print(f"  per-job sessions (PR 5)   single {pr5_single:6.1f}s  "
+          f"batch {pr5_batch:6.1f}s  marginal {pr5_marginal:6.2f}s/twin")
+    sh_rows, sh_single, sh_batch, sh_verify = run_batch_config(jobs)
+    sh_marginal = max(sh_batch - sh_single, 0.0) / twins
+    print(f"  shared cache + planner    single {sh_single:6.1f}s  "
+          f"batch {sh_batch:6.1f}s  marginal {sh_marginal:6.2f}s/twin")
+    improvement = (pr5_marginal / sh_marginal if sh_marginal > 0
+                   else float("inf"))
+    print(f"  marginal improvement {improvement:.2f}x  "
+          f"(shared: {sh_verify.get('shared_group_hits', 0)} shared group "
+          f"hits, {sh_verify.get('shared_oracle_hits', 0)} shared oracle "
+          f"hits; planner: {sh_verify.get('planner_signatures', 0)} "
+          f"signatures, {sh_verify.get('planner_deduped_jobs', 0)} jobs "
+          f"warm-started)")
+
+    # bit-identical results: per job across configurations, and every twin
+    # against the leader within each configuration (twins are exact-
+    # fingerprint replays of the leader, sharing may not perturb them)
+    divergences = diff_modes(pr5_rows, sh_rows)
+    leader = jobs[0].name
+    for rows, tag in ((pr5_rows, "pr5"), (sh_rows, "shared")):
+        for name, row in rows.items():
+            if name == leader:
+                continue
+            for field in ("transform_log", "speedup", "optimized_time",
+                          "canonical_schedule"):
+                if row[field] != rows[leader][field]:
+                    divergences.append((f"{tag}:{name}", field))
+    for name, field in divergences:
+        print(f"  DIVERGED {name}.{field}")
+
+    # check mode: every shared-cache hit byte-compared against a fresh
+    # execution; a single divergent byte raises VerifyFastpathDivergence
+    check_ok, check_err = True, None
+    try:
+        from repro.forge import Forge, ForgeConfig
+        with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                               verify_fastpath="check")) as forge:
+            forge.optimize_batch(jobs)
+        print("  check mode: all shared hits byte-identical")
+    except Exception as e:  # VerifyFastpathDivergence or anything else
+        check_ok, check_err = False, f"{type(e).__name__}: {e}"
+        print(f"  check mode FAILED: {check_err}")
+
+    section = {
+        "leader": leader,
+        "twins": twins,
+        "pr5": {"single_s": pr5_single, "batch_s": pr5_batch,
+                "marginal_s": pr5_marginal},
+        "shared": {"single_s": sh_single, "batch_s": sh_batch,
+                   "marginal_s": sh_marginal, "verify_stats": sh_verify},
+        "marginal_improvement": improvement,
+        "min_improvement": min_improvement,
+        "equivalent": not divergences,
+        "check_ok": check_ok,
+        "check_error": check_err,
+    }
+    failed = (bool(divergences) or not check_ok
+              or improvement < min_improvement)
+    return section, failed
+
+
 def run_mode(mode: str):
     """Cold run of the whole job set (fresh Forge, no store on disk)."""
     from repro.forge import Forge, ForgeConfig
@@ -114,6 +264,11 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--min-speedup", type=float, default=1.5,
                     help="fail below this off/on wall-clock ratio")
+    ap.add_argument("--min-batch-improvement", type=float, default=1.4,
+                    help="fail below this PR5/shared marginal-cost ratio "
+                         "in the shared-family batch scenario")
+    ap.add_argument("--twins", type=int, default=3,
+                    help="renamed twins in the batch scenario")
     ap.add_argument("--out", default="BENCH_pipeline.json")
     ap.add_argument("--skip-warmup", action="store_true",
                     help="skip the untimed JAX warmup job")
@@ -141,6 +296,9 @@ def main() -> int:
               f"    off: {off_rows.get(name, {}).get(field)!r}\n"
               f"    on:  {on_rows.get(name, {}).get(field)!r}")
 
+    batch_section, batch_failed = run_batch_scenario(
+        args.min_batch_improvement, twins=args.twins)
+
     artifact = {
         "job_set": list(GATE_SPECS) + [f"{GATE_SPECS[0]}_twin"],
         "off_s": off_s,
@@ -152,19 +310,32 @@ def main() -> int:
                         "proposals": on_rows[name]["proposals"],
                         "transfer": on_rows[name]["transfer"]}
                  for name in sorted(on_rows)},
+        "batch": batch_section,
     }
     pathlib.Path(args.out).write_text(json.dumps(artifact, indent=2))
     print(f"\nwrote {args.out}: fast path {speedup:.2f}x "
           f"({off_s:.1f}s -> {on_s:.1f}s), "
-          f"{'results identical' if not divergences else 'DIVERGED'}")
+          f"{'results identical' if not divergences else 'DIVERGED'}; "
+          f"batch marginal {batch_section['marginal_improvement']:.2f}x")
+    failed = False
     if divergences:
         print(f"FAIL: {len(divergences)} result divergence(s) between modes")
-        return 1
+        failed = True
     if speedup < args.min_speedup:
         print(f"FAIL: speedup {speedup:.2f}x below the "
               f"{args.min_speedup:.2f}x bar")
+        failed = True
+    if batch_failed:
+        print(f"FAIL: batch scenario "
+              f"(improvement {batch_section['marginal_improvement']:.2f}x "
+              f"vs {args.min_batch_improvement:.2f}x bar, "
+              f"equivalent={batch_section['equivalent']}, "
+              f"check_ok={batch_section['check_ok']})")
+        failed = True
+    if failed:
         return 1
-    print(f"pipeline throughput OK (>= {args.min_speedup:.2f}x)")
+    print(f"pipeline throughput OK (cold >= {args.min_speedup:.2f}x, "
+          f"batch marginal >= {args.min_batch_improvement:.2f}x)")
     return 0
 
 

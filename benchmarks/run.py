@@ -107,6 +107,10 @@ def _l2_artifact(summary) -> dict:
             "all_correct": summary.all_correct,
         },
         "engine": stats.as_dict() if stats else {},
+        # verify-layer counters ride alongside engine stats (separate
+        # because shared-cache hit counts are backend-dependent)
+        "verify": (summary.verify_stats.as_dict()
+                   if getattr(summary, "verify_stats", None) else {}),
     }
 
 

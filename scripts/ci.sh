@@ -13,12 +13,16 @@
 #                        ship it; hosted CI does)
 #   stage-registry       the stage DAG must validate; every stage needs a
 #                        proposer factory and >=1 issue binding
-#   tier1-tests          the full pytest suite
+#   tier1-tests          the full pytest suite; with pytest-cov installed
+#                        (hosted CI) it also enforces >=60% line coverage
+#                        over repro.core
 #   backend-equivalence  serial / thread / process engines must produce
 #                        identical per-kernel TransformLogs and speedups
 #   pipeline-throughput  the verification fast path must keep a >=1.5x
 #                        end-to-end speedup over the uncached cascade with
-#                        bit-identical results (writes BENCH_pipeline.json)
+#                        bit-identical results, and cross-job sharing must
+#                        keep a >=1.4x marginal improvement on a shared-
+#                        family batch (writes BENCH_pipeline.json)
 #   warm-store           (opt-in: CI_BUILD_WARM_STORE=1) build the pre-seeded
 #                        L2 ResultStore if the restored cache missed
 #   l2-regression        when a previous BENCH_l2.json exists, re-run the l2
@@ -120,21 +124,35 @@ run_gate stage-registry \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -W ignore::RuntimeWarning -m repro.core.stages --check || exit
 
+# Coverage gate rides the tier-1 run: hosted CI installs pytest-cov and the
+# suite must keep >=60% line coverage over repro.core (the engine/verify
+# hot core — a floor to ratchet, not a target); the dev container doesn't
+# ship the plugin, so local runs measure nothing rather than fail.
+COV_ARGS=()
+if python -c "import pytest_cov" > /dev/null 2>&1; then
+  COV_ARGS=(--cov=repro.core --cov-report=term --cov-fail-under=60)
+else
+  echo "pytest-cov not installed; tier1 runs without the coverage gate"
+fi
 run_gate tier1-tests \
-  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@" \
+  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+  ${COV_ARGS[@]+"${COV_ARGS[@]}"} "$@" \
   || exit
 
 run_gate backend-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python scripts/backend_equivalence.py --workers 2 || exit
 
-# Verification fast-path gate: the memoized verify + cost-screened dispatch
-# must keep its >=1.5x cold-run speedup AND produce bit-identical results
-# vs the uncached cascade on the fixed job set (writes BENCH_pipeline.json,
-# uploaded as a CI artifact).
+# Verification fast-path gate, two scenarios (writes BENCH_pipeline.json,
+# uploaded as a CI artifact): the memoized verify + cost-screened dispatch
+# must keep its >=1.5x cold-run speedup with bit-identical results vs the
+# uncached cascade, and the cross-job shared cache + batch planner must cut
+# the marginal cost of a structurally identical twin by >=1.4x vs per-job
+# sessions (also bit-identical, plus a check-mode pass over the batch).
 run_gate pipeline-throughput \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-  python -m benchmarks.pipeline_throughput --min-speedup 1.5 || exit
+  python -m benchmarks.pipeline_throughput --min-speedup 1.5 \
+    --min-batch-improvement 1.4 || exit
 
 # Cache warm-up (ROADMAP): CI restores results/warm_store.json from the
 # actions cache; when the exact cache key missed, the workflow sets

@@ -20,7 +20,8 @@ from repro.aibench.spec import ProblemSpec, load_specs
 from repro.aibench.suite import build_program
 from repro.aibench.timing import time_fn
 from repro.core.config import ForgeConfig
-from repro.core.engine import EngineResult, EngineStats, KernelJob
+from repro.core.engine import (EngineResult, EngineStats, KernelJob,
+                               VerifyStats)
 from repro.core.forge import Forge
 from repro.core.pipeline import PipelineResult
 from repro.ir.cost import CostModel
@@ -170,6 +171,10 @@ class KernelRunner:
 class SuiteSummary:
     results: List[KernelResult]
     engine_stats: Optional[EngineStats] = None
+    # verify-layer counters (oracle/group memo hits, shared-cache hits,
+    # planner dedup) — kept apart from engine_stats because shared-hit
+    # counts vary by backend (see repro.core.engine.VerifyStats)
+    verify_stats: Optional[VerifyStats] = None
 
     def _geomean(self, vals: List[float]) -> float:
         vals = [max(v, 1e-9) for v in vals]
@@ -258,4 +263,5 @@ class SuiteRunner:
                       f"x{r.speedup_vs_eager:7.2f} vs eager  "
                       f"x{r.speedup_vs_best_baseline:6.2f} vs best  "
                       f"correct={r.correct}{hit}")
-        return SuiteSummary(results, engine_stats=self.engine.stats)
+        return SuiteSummary(results, engine_stats=self.engine.stats,
+                            verify_stats=self.engine.verify_stats)

@@ -12,7 +12,7 @@ from repro.core.job_codec import (decode_job, decode_pipeline_result,
 from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
-                               OptimizationEngine)
+                               OptimizationEngine, VerifyStats)
 from repro.core.forge import Forge, ForgeObserver, OptimizationReport
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
@@ -24,7 +24,8 @@ from repro.core.stages import (DEFAULT_REGISTRY, StageRegistry,
                                StageRegistryError, StageSpec, register_stage)
 from repro.core.verify import (compile_and_verify, verify_candidate,
                                VerifyReport, SUCCESS)
-from repro.core.verify_cache import (VerifyFastpathDivergence, VerifySession,
+from repro.core.verify_cache import (SharedVerifyCache,
+                                     VerifyFastpathDivergence, VerifySession,
                                      run_program_cached)
 
 __all__ = [
@@ -32,9 +33,10 @@ __all__ = [
     "ISSUE_TO_STAGE", "register_issue_type", "ForgePipeline",
     "PipelineResult", "StageRecord", "plan", "DEFAULT_ORDER", "HARD_DEPS",
     "compile_and_verify", "verify_candidate", "VerifyReport", "SUCCESS",
-    "VerifySession", "VerifyFastpathDivergence", "run_program_cached",
-    "VERIFY_FASTPATH_MODES",
+    "VerifySession", "SharedVerifyCache", "VerifyFastpathDivergence",
+    "run_program_cached", "VERIFY_FASTPATH_MODES",
     "OptimizationEngine", "KernelJob", "EngineResult", "EngineStats",
+    "VerifyStats",
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",
     "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",

@@ -86,7 +86,8 @@ class ForgeConfig:
 
     Operational fields (excluded — see module docstring): ``workers``,
     ``execution_backend``, ``cache_path``, ``cache_max_entries``,
-    ``dump_dir``, ``verify_fastpath``. ``verify_fastpath`` selects the
+    ``dump_dir``, ``verify_fastpath``, ``shared_verify_cache_bytes``,
+    ``batch_exec_planning``. ``verify_fastpath`` selects the
     memoized incremental-verification path (``repro.core.verify_cache``),
     which is result-equivalent by contract (its ``"check"`` mode asserts
     bit-identical reports against the uncached cascade), so like the
@@ -117,6 +118,15 @@ class ForgeConfig:
     # so it can never change what the pipeline produces and stays out of the
     # cache signature — stores built either way replay interchangeably
     verify_fastpath: str = _operational(default="on")
+    # byte budget of the engine-owned cross-job SharedVerifyCache (group
+    # executions + oracle preps, LRU by bytes); 0 disables sharing. Shared
+    # entries are content-addressed, so serving one can never change what a
+    # job produces — operational, like verify_fastpath
+    shared_verify_cache_bytes: int = _operational(default=64 * 1024 * 1024)
+    # pre-execute each duplicated oracle slice once per batch, warming the
+    # shared cache before dispatch ("oracle-slice leaders"); planning only
+    # reorders *where* an execution happens, never its result
+    batch_exec_planning: bool = _operational(default=True)
 
     def __post_init__(self):
         if self.max_iterations < 1:
@@ -135,6 +145,9 @@ class ForgeConfig:
             raise ValueError("workers must be >= 1")
         if self.cache_max_entries < 1:
             raise ValueError("cache_max_entries must be >= 1")
+        if self.shared_verify_cache_bytes < 0:
+            raise ValueError("shared_verify_cache_bytes must be >= 0 "
+                             "(0 disables cross-job sharing)")
         if self.stages_enabled is not None:
             # normalize list -> tuple so the config stays hashable/picklable
             object.__setattr__(self, "stages_enabled",

@@ -65,16 +65,19 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core import job_codec
 from repro.core.config import EXECUTION_BACKENDS
-from repro.core.pipeline import ForgePipeline, PipelineResult
+from repro.core.pipeline import ForgePipeline, PipelineResult, prepare_oracle
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.stage_scheduler import TransformLog
+from repro.core.verify_cache import (SharedVerifyCache, VerifySession,
+                                     run_program_cached)
 from repro.ir.fingerprint import (fingerprint_family, fingerprint_job,
-                                  program_canonical)
+                                  program_canonical,
+                                  program_exec_fingerprint)
 from repro.ir.schedule import KernelProgram
 
-__all__ = ["KernelJob", "EngineResult", "EngineStats", "OptimizationEngine",
-           "ResultCache", "ResultStore", "execute_job", "replay_entry",
-           "entry_for_result", "compute_job_keys"]
+__all__ = ["KernelJob", "EngineResult", "EngineStats", "VerifyStats",
+           "OptimizationEngine", "ResultCache", "ResultStore", "execute_job",
+           "replay_entry", "entry_for_result", "compute_job_keys"]
 
 
 @dataclasses.dataclass
@@ -123,6 +126,48 @@ class EngineStats:
     replay_fallbacks: int = 0       # exact hit but replay diverged
     family_transfers: int = 0       # exact miss, neighbor seed (partially) applied
     transfer_fallbacks: int = 0     # neighbor found but no seed step applied
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class VerifyStats:
+    """Engine-lifetime aggregate of the per-job ``VerifySessionStats`` plus
+    the batch planner's counters (all flat ints, so facade-level batch
+    deltas subtract field-wise like :class:`EngineStats`).
+
+    Deliberately a separate object from :class:`EngineStats`: the backend-
+    equivalence contract asserts EngineStats bit-identical across backends,
+    but shared-cache hit counts legitimately differ — serial/thread sessions
+    read one live engine-owned cache, while process workers see private
+    per-worker caches warmed only by the planner's shipped slice. The
+    *results* stay identical either way (a shared miss just re-executes);
+    only the accounting of where an execution was saved moves."""
+
+    group_hits: int = 0
+    group_misses: int = 0
+    trace_hits: int = 0
+    trace_misses: int = 0
+    structure_hits: int = 0
+    structure_misses: int = 0
+    cost_hits: int = 0
+    cost_misses: int = 0
+    oracle_hits: int = 0
+    oracle_misses: int = 0
+    screened: int = 0
+    deferred_runs: int = 0
+    shared_group_hits: int = 0      # group execs served by the shared layer
+    shared_oracle_hits: int = 0     # oracle preps rebound from it
+    planner_signatures: int = 0     # duplicated slices the planner executed
+    planner_deduped_jobs: int = 0   # follower jobs that started warm
+    planner_group_execs: int = 0    # group execs the planner paid up front
+    planner_oracle_preps: int = 0   # oracle preps the planner paid up front
+
+    def add_session(self, session_stats: Mapping[str, int]):
+        for k, v in session_stats.items():
+            if hasattr(self, k):
+                setattr(self, k, getattr(self, k) + int(v))
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -216,25 +261,33 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
                 entry: Optional[Dict[str, Any]],
                 seed_pairs: Sequence,
                 exact_key: str,
-                priors: Mapping[str, int]):
+                priors: Mapping[str, int],
+                shared: Optional[SharedVerifyCache] = None):
     """Replay-or-optimize one job. ``entry`` is the exact store entry (or
     None); ``seed_pairs`` is the frozen ``(neighbor_key, log_list)`` family
-    snapshot for this job's phase. Returns ``(PipelineResult, outcome)``
-    where ``outcome`` carries the store/stat flags::
+    snapshot for this job's phase; ``shared`` is the cross-job verification
+    cache the job's session reads through / writes back (engine-owned on
+    the in-process backends, per-worker on the process backend). Returns
+    ``(PipelineResult, outcome)`` where ``outcome`` carries the store/stat
+    flags::
 
         {"cache_hit", "replay_fallback", "had_seed", "transferred",
-         "entry"}   # entry: dict to store, or None on a replayed hit
+         "entry",    # entry: dict to store, or None on a replayed hit
+         "verify"}   # the session's VerifySessionStats dict, or None
     """
     outcome = {"cache_hit": False, "replay_fallback": False,
-               "had_seed": False, "transferred": False, "entry": None}
+               "had_seed": False, "transferred": False, "entry": None,
+               "verify": None}
     # one verification memo for the job's whole lifecycle: replay attempt,
     # transfer seeding, and the full search all share it
-    session = pipeline.make_verify_session()
+    session = pipeline.make_verify_session(shared=shared)
     if entry is not None:
         replayed = replay_entry(pipeline, job, entry, priors,
                                 session=session)
         if replayed is not None:
             outcome["cache_hit"] = True
+            if session is not None:
+                outcome["verify"] = session.stats.as_dict()
             return replayed, outcome
         outcome["replay_fallback"] = True
 
@@ -256,6 +309,8 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     outcome["had_seed"] = seed_log is not None
     outcome["transferred"] = (seed_log is not None
                               and result.seed_steps_applied > 0)
+    if session is not None:
+        outcome["verify"] = session.stats.as_dict()
     return result, outcome
 
 
@@ -276,7 +331,10 @@ class SerialExecutor:
     def compute_keys(self, jobs) -> List[tuple]:
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
-    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+    def run_phase(self, jobs, phase, keys, priors, seeds, results,
+                  plan=None):
+        # plan is unused in-process: jobs read the engine-owned shared
+        # cache directly, which the planner already pre-populated
         for i in phase:
             results[i] = self.engine._run_job(jobs[i], keys[i], priors,
                                               seeds)
@@ -304,7 +362,9 @@ class ThreadExecutor:
         # where workers hash in parallel interpreters
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
-    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+    def run_phase(self, jobs, phase, keys, priors, seeds, results,
+                  plan=None):
+        # plan unused here too — threads share the live engine-owned cache
         engine = self.engine
         if engine.workers <= 1 or len(phase) <= 1:
             for i in phase:
@@ -336,13 +396,24 @@ def _process_worker_main(config_dict: Dict[str, Any],
     are not dropped: every stage record streams back through the results
     queue as it happens, and each finished job returns its wire-encoded
     result, store entry, outcome flags, and the private history delta for
-    the parent to merge."""
+    the parent to merge.
+
+    The worker owns a private :class:`SharedVerifyCache` that persists
+    across its tasks (cross-job sharing *within* the worker); each job task
+    may additionally carry a parent-side warm slice — the planner-recorded
+    shared-cache entries for the job's oracle slice, wire-encoded by
+    :mod:`repro.core.job_codec` — which is installed before the job runs so
+    planner dedup survives the process boundary."""
     from repro.core.config import ForgeConfig
     from repro.core.history import History
 
     config = ForgeConfig.from_dict(config_dict)
     kb = pickle.loads(kb_blob) if kb_blob else None
     pipeline = ForgePipeline.from_config(config, kb=kb)
+    shared = None
+    if (config.shared_verify_cache_bytes > 0
+            and config.verify_fastpath != "off"):
+        shared = SharedVerifyCache(config.shared_verify_cache_bytes)
     while True:
         task = task_q.get()
         if task is None:
@@ -354,8 +425,11 @@ def _process_worker_main(config_dict: Dict[str, Any],
                 event_q.put(("keys", idx, compute_job_keys(pipeline, job)))
                 continue
             _, _, job_wire, exact_key, family_key, priors, entry, \
-                seed_pairs = task
+                seed_pairs, warm_wire = task
             job = job_codec.decode_job(job_wire)
+            if warm_wire is not None and shared is not None:
+                for key, value in job_codec.decode_verify_slice(warm_wire):
+                    shared.put(key, value)
             # fresh per-task history: the records travel back with the
             # result and merge into the parent's shared history, instead of
             # accumulating invisibly (and divergently) per worker
@@ -364,7 +438,7 @@ def _process_worker_main(config_dict: Dict[str, Any],
                 lambda name, rec, _idx=idx: event_q.put(
                     ("stage", _idx, name, job_codec.encode_stage_record(rec))))
             result, outcome = execute_job(pipeline, job, entry, seed_pairs,
-                                          exact_key, priors)
+                                          exact_key, priors, shared=shared)
             event_q.put(("result", idx, {
                 "result": job_codec.encode_pipeline_result(result),
                 "entry": outcome.pop("entry"),
@@ -476,7 +550,8 @@ class ProcessExecutor:
                 raise
 
     # ------------------------------------------------------------------
-    def run_phase(self, jobs, phase, keys, priors, seeds, results):
+    def run_phase(self, jobs, phase, keys, priors, seeds, results,
+                  plan=None):
         with self._phase_lock:
             try:
                 self._ensure_pool()
@@ -493,7 +568,7 @@ class ProcessExecutor:
                 for wave in waves:
                     if wave:
                         self._run_wave(jobs, wave, keys, priors, seeds,
-                                       results)
+                                       results, plan)
             except Exception:
                 # anything unexpected (a raising observer, a decode error, a
                 # dead worker) leaves undispatched tasks / undrained events
@@ -502,7 +577,7 @@ class ProcessExecutor:
                 self.close()
                 raise
 
-    def _run_wave(self, jobs, wave, keys, priors, seeds, results):
+    def _run_wave(self, jobs, wave, keys, priors, seeds, results, plan=None):
         engine = self.engine
         wires = (self._wires[1] if self._wires
                  and self._wires[0] == id(jobs) else None)
@@ -510,10 +585,20 @@ class ProcessExecutor:
         for i in wave:
             exact_key, family_key = keys[i]
             wire = wires[i] if wires else job_codec.encode_job(jobs[i])
+            # warm slice: the planner-recorded shared-cache entries for this
+            # job's oracle slice, snapshotted parent-side at dispatch — the
+            # worker's private cache cannot see the parent's, so the slice
+            # rides the task (entries already evicted are simply skipped)
+            warm_wire = None
+            if plan and plan.get(i) and engine.verify_shared is not None:
+                items = [(key, val) for key in plan[i]
+                         if (val := engine.verify_shared.get(key)) is not None]
+                if items:
+                    warm_wire = job_codec.encode_verify_slice(items)
             self._task_q.put(("job", i, wire,
                               exact_key, family_key, dict(priors),
                               engine.cache.get(exact_key),
-                              list(seeds.get(family_key, ()))))
+                              list(seeds.get(family_key, ())), warm_wire))
             pending[i] = jobs[i]
         history_records: Dict[int, List[dict]] = {}
         while pending:
@@ -578,6 +663,35 @@ class ProcessExecutor:
         self._task_q = self._event_q = None
 
 
+class _RecordingSharedCache:
+    """Planner-side wrapper over a :class:`SharedVerifyCache` that records
+    every key its session touched (reads that hit + successful writes), in
+    first-touch order — exactly the warm slice the process backend must
+    ship to the planned jobs."""
+
+    def __init__(self, inner: SharedVerifyCache):
+        self._inner = inner
+        self.keys: List[tuple] = []
+        self._seen: set = set()
+
+    def _note(self, key: tuple):
+        if key not in self._seen:
+            self._seen.add(key)
+            self.keys.append(key)
+
+    def get(self, key: tuple):
+        got = self._inner.get(key)
+        if got is not None:
+            self._note(key)
+        return got
+
+    def put(self, key: tuple, value) -> bool:
+        ok = self._inner.put(key, value)
+        if ok:
+            self._note(key)
+        return ok
+
+
 _EXECUTORS = {
     "serial": SerialExecutor,
     "thread": ThreadExecutor,
@@ -628,6 +742,16 @@ class OptimizationEngine:
             max_entries=(cache_max_entries if cache_max_entries is not None
                          else 512))
         self.stats = EngineStats()
+        self.verify_stats = VerifyStats()
+        # engine-owned cross-job verification cache: sessions of every job
+        # this engine runs (serial/thread) read through and write back; the
+        # process backend gives workers private caches plus planner warm
+        # slices (see _process_worker_main). None when sharing is disabled.
+        cfg = self.pipeline.config
+        self.verify_shared: Optional[SharedVerifyCache] = (
+            SharedVerifyCache(cfg.shared_verify_cache_bytes)
+            if (cfg.shared_verify_cache_bytes > 0
+                and cfg.verify_fastpath != "off") else None)
         # observer hook: called with each EngineResult as it completes
         # (serialized under a lock — observers need not be thread-safe)
         self.on_result = on_result
@@ -694,6 +818,11 @@ class OptimizationEngine:
             # worker-side (threads / spawned processes) instead of
             # serializing on the parent before the first job can start
             keys = executor.compute_keys(jobs)
+            # batch execution planning: execute each *duplicated* oracle
+            # slice once, parent-side, pre-populating the shared cache so
+            # every member of the duplicate set starts warm ("oracle-slice
+            # leaders" — the family leader/follower idea at verify grain)
+            plan = self._plan_batch(jobs)
             leaders: List[int] = []
             followers: List[int] = []
             seen = set()
@@ -706,7 +835,8 @@ class OptimizationEngine:
                     continue
                 seeds = {fam: self.cache.family_members(fam)
                          for fam in {keys[i][1] for i in phase}}
-                executor.run_phase(jobs, phase, keys, priors, seeds, results)
+                executor.run_phase(jobs, phase, keys, priors, seeds, results,
+                                   plan=plan)
             return results
         finally:
             executor.end_batch()
@@ -717,6 +847,60 @@ class OptimizationEngine:
             # overlapping batches duplicate one search, never deadlock)
             with self._inflight_lock:
                 self._inflight.clear()
+
+    # ------------------------------------------------------------------
+    def _plan_batch(self, jobs: Sequence[KernelJob]) -> Dict[int, list]:
+        """Batch-level execution planner. Jobs are grouped by the rename-
+        invariant :func:`program_exec_fingerprint` of their ci program; for
+        each signature held by two or more jobs the first member's oracle
+        prep + initial program execution run once, parent-side, through a
+        session wired to the shared cache — every duplicate then replays
+        those entries instead of re-executing them. Returns ``{job index:
+        [shared-cache keys]}``, the warm slice the process backend ships at
+        dispatch (in-process backends read the live cache and ignore it).
+
+        Planning is a pure optimization: it only moves *where* the first
+        execution of a slice happens, never its result, and any planner
+        failure just leaves the affected jobs starting cold."""
+        cfg = self.pipeline.config
+        shared = self.verify_shared
+        plan: Dict[int, list] = {}
+        if shared is None or not cfg.batch_exec_planning:
+            return plan
+        sigs: Dict[str, List[int]] = {}
+        for i, job in enumerate(jobs):
+            try:
+                sig = program_exec_fingerprint(job.ci_program)
+            except Exception:  # noqa: BLE001 — planning must never raise
+                continue
+            sigs.setdefault(sig, []).append(i)
+        for sig, idxs in sigs.items():
+            if len(idxs) < 2:
+                continue  # a unique slice warms nobody; the job runs it
+            rep = jobs[idxs[0]]
+            recorder = _RecordingSharedCache(shared)
+            session = VerifySession(
+                shared=recorder,
+                check_shared=(cfg.verify_fastpath == "check"))
+            try:
+                inputs, params, _ = session.oracle_prep(
+                    rep.ci_program.graph, prepare_oracle)
+                run_program_cached(rep.ci_program, inputs, params, session,
+                                   use_pallas=cfg.use_pallas_exec)
+            except Exception:  # noqa: BLE001 — cold start, not a failure
+                continue
+            with self._stats_lock:
+                vs = self.verify_stats
+                vs.planner_signatures += 1
+                vs.planner_deduped_jobs += len(idxs) - 1
+                vs.planner_group_execs += (session.stats.group_misses
+                                           - session.stats.shared_group_hits)
+                vs.planner_oracle_preps += (
+                    session.stats.oracle_misses
+                    - session.stats.shared_oracle_hits)
+            for i in idxs:
+                plan[i] = list(recorder.keys)
+        return plan
 
     # ------------------------------------------------------------------
     def _apply_outcome(self, outcome: Mapping[str, Any]):
@@ -735,6 +919,9 @@ class OptimizationEngine:
                         self.stats.transfer_fallbacks += 1
             if outcome["replay_fallback"]:
                 self.stats.replay_fallbacks += 1
+            verify = outcome.get("verify")
+            if verify:
+                self.verify_stats.add_session(verify)
 
     # ------------------------------------------------------------------
     def _run_job(self, job: KernelJob, keys: tuple,
@@ -757,7 +944,8 @@ class OptimizationEngine:
         entry = self.cache.get(exact_key)
         result, outcome = execute_job(self.pipeline, job, entry,
                                       seeds.get(family_key, ()),
-                                      exact_key, priors)
+                                      exact_key, priors,
+                                      shared=self.verify_shared)
         if outcome["entry"] is not None:
             self.cache.put(exact_key, outcome["entry"], family=family_key,
                            flush=False)

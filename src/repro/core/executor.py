@@ -10,6 +10,14 @@ Pallas-impl groups are executed through the real kernels in interpret mode;
 XLA-impl groups evaluate node-by-node with jnp. Mixed precision follows the
 TPU pattern: external group inputs are stored/loaded in the schedule's
 compute dtype, math runs in f32 (MXU: bf16 in, f32 accumulate).
+
+``group_exec_signature`` must stay in lockstep with ``run_group``'s actual
+dispatch: it is the *effective*-dispatch key of the verification fast path's
+group memo and of the cross-job shared cache, so any new input that changes
+what ``run_group`` computes (a template choice, a clamped block, a dtype
+rule) must fold into the signature — and the batch planner's pre-executions
+(:meth:`OptimizationEngine._plan_batch`) dispatch through these same
+functions precisely so parent and worker derive bit-identical keys.
 """
 
 from __future__ import annotations

@@ -27,7 +27,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 from repro.core.config import ForgeConfig
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
-                               OptimizationEngine)
+                               OptimizationEngine, VerifyStats)
 from repro.core.history import History
 from repro.core.llm import LLMClient
 from repro.core.pipeline import ForgePipeline
@@ -64,6 +64,11 @@ class OptimizationReport:
     results: List[EngineResult]
     stats: EngineStats
     config: ForgeConfig
+    # verify-layer counters for the same jobs (session memo hits/misses,
+    # shared-cache hits, planner dedup); separate from ``stats`` because
+    # shared-hit counts are backend-dependent while EngineStats is asserted
+    # backend-identical (see engine.VerifyStats). None when fastpath is off.
+    verify: Optional[VerifyStats] = None
 
     def __len__(self) -> int:
         return len(self.results)
@@ -120,16 +125,29 @@ class OptimizationReport:
                 for r in self.results
             ],
             "stats": self.stats.as_dict(),
+            "verify_stats": (self.verify.as_dict()
+                             if self.verify is not None else {}),
             "geomean_speedup": self.geomean_speedup,
         }
 
     def summary(self) -> str:
         s = self.stats
-        return (f"{len(self.results)} jobs: geomean {self.geomean_speedup:.2f}x, "
+        base = (f"{len(self.results)} jobs: geomean {self.geomean_speedup:.2f}x, "
                 f"{self.cache_hits} cache hits, {self.transfers} transfers "
                 f"(engine: {s.cache_misses} misses, "
                 f"{s.replay_fallbacks} replay fallbacks, "
                 f"{s.transfer_fallbacks} transfer fallbacks)")
+        v = self.verify
+        if v is None:
+            return base
+        return base + (
+            f"\nverify: {v.group_hits} group hits / {v.group_misses} misses, "
+            f"{v.oracle_hits} oracle hits / {v.oracle_misses} misses, "
+            f"{v.shared_group_hits} shared group hits, "
+            f"{v.shared_oracle_hits} shared oracle hits, "
+            f"{v.screened} screened; "
+            f"planner: {v.planner_signatures} slices pre-executed, "
+            f"{v.planner_deduped_jobs} jobs deduped")
 
 
 class Forge:
@@ -203,12 +221,19 @@ class Forge:
         counters on ``forge.stats``), so per-batch hit counts and engine
         counters always describe the same jobs."""
         before = dataclasses.replace(self.engine.stats)
+        vbefore = dataclasses.replace(self.engine.verify_stats)
         results = self.engine.run_batch(list(jobs))
         delta = EngineStats(**{
             f.name: getattr(self.engine.stats, f.name) - getattr(before, f.name)
             for f in dataclasses.fields(EngineStats)})
-        return OptimizationReport(results=results, stats=delta,
-                                  config=self.config)
+        vdelta = VerifyStats(**{
+            f.name: (getattr(self.engine.verify_stats, f.name)
+                     - getattr(vbefore, f.name))
+            for f in dataclasses.fields(VerifyStats)})
+        return OptimizationReport(
+            results=results, stats=delta, config=self.config,
+            verify=(vdelta if self.config.verify_fastpath != "off"
+                    else None))
 
     def optimize_program(self, name: str, ci_program: KernelProgram,
                          bench_program: KernelProgram,
@@ -236,6 +261,11 @@ class Forge:
     @property
     def stats(self) -> EngineStats:
         return self.engine.stats
+
+    @property
+    def verify_stats(self) -> VerifyStats:
+        """Lifetime verify-layer counters (see ``engine.VerifyStats``)."""
+        return self.engine.verify_stats
 
     @property
     def cache(self) -> ResultStore:

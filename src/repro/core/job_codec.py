@@ -29,8 +29,11 @@ needs no jax evaluation and cannot drift from the encoded form.
 
 from __future__ import annotations
 
+import base64
 import dataclasses
 from typing import Any, Dict, List, Optional
+
+import numpy as np
 
 from repro.core.issues import Issue
 from repro.core.pipeline import PipelineResult
@@ -43,6 +46,8 @@ __all__ = [
     "encode_program", "decode_program",
     "encode_job", "decode_job",
     "encode_pipeline_result", "decode_pipeline_result",
+    "encode_array", "decode_array",
+    "encode_verify_slice", "decode_verify_slice",
     "job_fingerprint_from_wire",
 ]
 
@@ -158,6 +163,64 @@ def decode_job(wire: Dict[str, Any]):
         rtol=float(wire.get("rtol", 1e-2)),
         atol=float(wire.get("atol", 1e-5)),
         meta=_dec_value(wire.get("meta", {})))
+
+
+# ----------------------------------------------------------------------
+# Arrays + shared-verify warm slices (parent -> worker)
+# ----------------------------------------------------------------------
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype string, including jax-only names (``bfloat16``)
+    that plain numpy rejects without the ml_dtypes registration jax ships."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import jax.numpy as jnp
+        return np.dtype(getattr(jnp, name))
+
+
+def encode_array(arr) -> Dict[str, Any]:
+    """Bit-exact JSON-safe wire form of an array: dtype + shape + base64 of
+    the contiguous raw bytes. Bit-exactness matters — warm-slice entries
+    are content-addressed, and in check mode they are byte-compared against
+    a fresh local execution."""
+    a = np.ascontiguousarray(np.asarray(arr))
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def decode_array(wire: Dict[str, Any]):
+    import jax.numpy as jnp
+    a = np.frombuffer(base64.b64decode(wire["data"]),
+                      dtype=_np_dtype(wire["dtype"]))
+    return jnp.asarray(a.reshape(tuple(wire["shape"])))
+
+
+def encode_verify_slice(items: List[tuple]) -> Dict[str, Any]:
+    """Wire form of a list of ``SharedVerifyCache`` entries — ``("group",
+    fp) -> [(position, array), ...]`` and ``("oracle", fp) -> (inputs_list,
+    params_list, oracle_list)`` — the planner's warm slice shipped with a
+    process-backend job dispatch."""
+    entries = []
+    for (kind, fp), value in items:
+        if kind == "group":
+            payload = [[int(p), encode_array(a)] for p, a in value]
+        else:  # "oracle": three positional array lists
+            payload = [[encode_array(a) for a in part] for part in value]
+        entries.append({"kind": kind, "fp": fp, "value": payload})
+    return {"version": WIRE_VERSION, "entries": entries}
+
+
+def decode_verify_slice(wire: Dict[str, Any]) -> List[tuple]:
+    items = []
+    for e in wire.get("entries", []):
+        if e["kind"] == "group":
+            value = [(int(p), decode_array(a)) for p, a in e["value"]]
+        else:
+            value = tuple([decode_array(a) for a in part]
+                          for part in e["value"])
+        items.append(((e["kind"], e["fp"]), value))
+    return items
 
 
 def job_fingerprint_from_wire(wire: Dict[str, Any], spec_name: str,

@@ -32,7 +32,21 @@ from repro.ir.interpreter import evaluate, make_inputs, make_params
 from repro.ir.schedule import KernelProgram
 from repro.kb.loader import KnowledgeBase, load_default
 
-__all__ = ["ForgePipeline", "PipelineResult", "StageRecord"]
+__all__ = ["ForgePipeline", "PipelineResult", "StageRecord",
+           "prepare_oracle"]
+
+
+def prepare_oracle(graph):
+    """The trusted-harness prep for one graph: seeded inputs/weights and the
+    f32 oracle outputs from the ORIGINAL graph (the candidate can never
+    influence this path). Module-level so the engine's batch planner and
+    ``ForgePipeline._prepare_ctx`` provably seed from the same fixed seeds —
+    the invariant behind cross-job oracle-slice sharing."""
+    inputs = make_inputs(graph, seed=1)
+    params = make_params(graph, seed=0)
+    oracle = evaluate(graph, inputs, params)
+    oracle = {k: v.astype(jnp.float32) for k, v in oracle.items()}
+    return inputs, params, oracle
 
 
 @dataclasses.dataclass
@@ -162,12 +176,19 @@ class ForgePipeline:
         return self.config.policy_signature()
 
     # ------------------------------------------------------------------
-    def make_verify_session(self) -> Optional[VerifySession]:
+    def make_verify_session(self, shared=None) -> Optional[VerifySession]:
         """A fresh per-job verification memo, or ``None`` when the fast
         path is off. The engine creates one per job and shares it between
-        the replay attempt and the full-optimization fallback."""
-        return (VerifySession() if self.config.verify_fastpath != "off"
-                else None)
+        the replay attempt and the full-optimization fallback. ``shared``
+        is the engine-owned cross-job :class:`SharedVerifyCache` the
+        session reads through / writes back; under ``verify_fastpath=
+        "check"`` every shared hit is additionally byte-validated against
+        a fresh local execution before it is adopted."""
+        if self.config.verify_fastpath == "off":
+            return None
+        return VerifySession(
+            shared=shared,
+            check_shared=(self.config.verify_fastpath == "check"))
 
     def make_scheduler(self, priors: Optional[Mapping[str, int]] = None,
                        on_stage_complete=None,
@@ -206,18 +227,10 @@ class ForgePipeline:
         memoized per exact graph — a replay fallback re-prepares the same
         context the replay attempt already computed."""
         g = ci_program.graph
-
-        def prep(graph):
-            inputs = make_inputs(graph, seed=1)
-            params = make_params(graph, seed=0)
-            oracle = evaluate(graph, inputs, params)
-            oracle = {k: v.astype(jnp.float32) for k, v in oracle.items()}
-            return inputs, params, oracle
-
         if session is not None:
-            inputs, params, oracle = session.oracle_prep(g, prep)
+            inputs, params, oracle = session.oracle_prep(g, prepare_oracle)
         else:
-            inputs, params, oracle = prep(g)
+            inputs, params, oracle = prepare_oracle(g)
         return ProblemContext(name=name, target_dtype=target_dtype,
                               rtol=rtol, atol=atol, spec=self.spec,
                               tags=tuple(tags), ci_inputs=inputs,

@@ -17,6 +17,18 @@ becomes the agent's observation for the next refinement iteration:
                    alternative-strategy suggestions.
 
 Returns the success sentinel only when all four pass.
+
+With ``verify_fastpath`` enabled, levels 1-4 run against a
+:class:`~repro.core.verify_cache.VerifySession` (memoized traces, structure
+verdicts, group executions, costs) that may itself read through an
+engine-owned cross-job :class:`~repro.core.verify_cache.SharedVerifyCache`.
+``"check"`` mode extends its bit-identical contract down that shared layer:
+besides cross-checking every report against the uncached cascade, each
+shared-cache hit (a group execution or a positionally rebound oracle prep
+seeded by *another job*) is byte-compared against a fresh local execution
+before adoption, so a corrupt or colliding shared entry raises
+:class:`VerifyFastpathDivergence` at the exact artifact that diverged
+rather than surfacing as a numeric drift in some later verdict.
 """
 
 from __future__ import annotations

@@ -1,4 +1,5 @@
-"""Memoized incremental verification: the per-job fast path.
+"""Memoized incremental verification: the per-job fast path, plus the
+engine-owned cross-job shared layer.
 
 ``compile_and_verify`` is the hot loop of the whole system — every candidate
 at every stage re-traces the program (``jax.eval_shape``), re-executes it
@@ -28,39 +29,270 @@ rename-invariant structural fingerprints (:mod:`repro.ir.fingerprint`):
   exact graph form, so a replay fallback does not redo the full oracle
   evaluation the replay attempt already paid for.
 
-Sessions are strictly **per job**: leaf value fingerprints bind by name to
-the job's seeded input/param arrays, which are only fixed within one
-``ProblemContext``. The session auto-clears its value caches if it ever
-sees a different binding (defense in depth; the engine wires one session
-per job).
+Cross-job sharing
+-----------------
+Leaf value fingerprints are **content-addressed**
+(:func:`repro.ir.fingerprint.content_leaf_fingerprint`): an input/param leaf
+hashes the bytes of the array actually bound to it, not its name, so two
+jobs whose groups consume bit-identical values produce identical group keys
+regardless of which job seeded them. That makes group executions and oracle
+preps safely shareable across jobs through a :class:`SharedVerifyCache` —
+an engine-owned, byte-capped LRU (sharded locks like ``ResultStore``) that
+each per-job session treats as a read-through/write-back layer. Oracle
+preps are stored as *positional* array lists keyed on the rename-invariant
+canonical graph form and rebound to the consuming graph's names on reuse
+(see :func:`repro.ir.fingerprint.graph_oracle_fingerprint` for why the
+positions line up).
+
+Per-session memos carry the same byte-cap discipline (FIFO trim over
+``max_group_bytes``/``max_oracle_bytes``) so a pathological batch cannot
+OOM a worker by accumulating unbounded oracle prep or group outputs.
 
 ``ForgeConfig.verify_fastpath`` selects the mode: ``"off"`` (uncached
 reference path), ``"on"`` (memoized + cost-first screening), or ``"check"``
 (memoized, and every report is cross-checked bit-identical against the
-uncached path — :class:`VerifyFastpathDivergence` on any mismatch).
+uncached path — :class:`VerifyFastpathDivergence` on any mismatch). In
+check mode a session also validates every *shared-cache* hit byte-exact
+against a fresh local execution before adopting it — corrupt or stale
+shared entries surface as :class:`VerifyFastpathDivergence` at the exact
+group/prep that diverged, not as a downstream numeric drift.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import threading
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.config import VERIFY_FASTPATH_MODES
 from repro.core.executor import group_exec_signature, group_order, run_group
-from repro.ir.fingerprint import (graph_exact_fingerprint, group_fingerprint,
+from repro.ir.fingerprint import (content_leaf_fingerprint,
+                                  graph_exact_fingerprint,
+                                  graph_oracle_fingerprint, group_fingerprint,
                                   group_value_fingerprint, leaf_fingerprint,
                                   program_exact_fingerprint,
                                   trace_fingerprint)
 from repro.ir.schedule import KernelProgram
 
 __all__ = ["VerifySession", "VerifySessionStats", "VerifyFastpathDivergence",
-           "VERIFY_FASTPATH_MODES", "run_program_cached"]
+           "SharedVerifyCache", "VERIFY_FASTPATH_MODES", "run_program_cached"]
+
+#: Per-session memo byte caps (groups / oracle preps each). Generous — a
+#: typical job stays in the low tens of MB — but bounded, so a worker can
+#: never be OOMed by one pathological batch.
+DEFAULT_SESSION_BYTES = 256 * 1024 * 1024
 
 
 class VerifyFastpathDivergence(AssertionError):
     """check-mode caught a fast-path report differing from the reference."""
+
+
+def _value_nbytes(value) -> int:
+    """Total array payload bytes of a cache value (group output list,
+    positional oracle slice, or any nesting of lists/tuples/dicts)."""
+    total = 0
+    stack = [value]
+    while stack:
+        v = stack.pop()
+        if isinstance(v, (list, tuple)):
+            stack.extend(v)
+        elif isinstance(v, dict):
+            stack.extend(v.values())
+        elif hasattr(v, "nbytes"):
+            total += int(v.nbytes)
+    return total
+
+
+def _bytes_equal(a, b) -> bool:
+    na, nb = np.asarray(a), np.asarray(b)
+    return (na.dtype == nb.dtype and na.shape == nb.shape
+            and na.tobytes() == nb.tobytes())
+
+
+# ----------------------------------------------------------------------
+# engine-owned shared layer
+# ----------------------------------------------------------------------
+
+class _Shard:
+    __slots__ = ("lock", "entries")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        # key -> [seq, value, nbytes]
+        self.entries: Dict[tuple, list] = {}
+
+
+class SharedVerifyCache:
+    """Byte-capped LRU for verification artifacts, shared across jobs.
+
+    Keys are ``("group", group_fp)`` (value: positional group outputs) and
+    ``("oracle", oracle_fp)`` (value: positional prep slice). Thread-safe
+    with the same sharded-lock structure as ``ResultStore``: CRC32-routed
+    shards, a store-wide monotonic stamp sequence, and a lazy ``(seq, key)``
+    min-heap for recency (stale stamps are skipped at eviction; the heap is
+    compacted in place when it outgrows the live entry count). Lock order:
+    evict > shard > seq.
+
+    ``put`` refuses values larger than the whole cap outright — inserting
+    and immediately self-evicting would just churn every other entry out.
+    """
+
+    def __init__(self, max_bytes: int, shards: int = 8):
+        self.max_bytes = max(0, int(max_bytes))
+        self._shards = tuple(_Shard() for _ in range(max(1, int(shards))))
+        self._seq_lock = threading.Lock()
+        self._evict_lock = threading.Lock()
+        self._seq = 0
+        self._count = 0
+        self._bytes = 0
+        self._recency: List[Tuple[int, tuple]] = []
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -- internals ------------------------------------------------------
+    def _shard(self, key: tuple) -> _Shard:
+        return self._shards[zlib.crc32(repr(key).encode())
+                            % len(self._shards)]
+
+    def _stamp(self, key: tuple) -> int:
+        """Allocate a recency stamp (caller may hold a shard lock; shard >
+        seq is the documented order)."""
+        with self._seq_lock:
+            self._seq += 1
+            heapq.heappush(self._recency, (self._seq, key))
+            if len(self._recency) > max(64, 8 * self._count):
+                # drop stale duplicate stamps in place: keep only the
+                # newest stamp per key (no shard locks needed — dead keys
+                # are skipped at eviction anyway)
+                best: Dict[tuple, int] = {}
+                for seq, k in self._recency:
+                    if best.get(k, -1) < seq:
+                        best[k] = seq
+                self._recency = [(s, k) for k, s in best.items()]
+                heapq.heapify(self._recency)
+            return self._seq
+
+    # -- public surface -------------------------------------------------
+    def get(self, key: tuple):
+        shard = self._shard(key)
+        with shard.lock:
+            rec = shard.entries.get(key)
+            if rec is None:
+                with self._seq_lock:
+                    self.misses += 1
+                return None
+            rec[0] = self._stamp(key)
+            value = rec[1]
+        with self._seq_lock:
+            self.hits += 1
+        return value
+
+    def put(self, key: tuple, value) -> bool:
+        nbytes = _value_nbytes(value)
+        if self.max_bytes <= 0 or nbytes > self.max_bytes:
+            return False
+        shard = self._shard(key)
+        with shard.lock:
+            rec = shard.entries.get(key)
+            if rec is not None:
+                delta = nbytes - rec[2]
+                rec[0] = self._stamp(key)
+                rec[1] = value
+                rec[2] = nbytes
+                with self._seq_lock:
+                    self._bytes += delta
+            else:
+                shard.entries[key] = [self._stamp(key), value, nbytes]
+                with self._seq_lock:
+                    self._count += 1
+                    self._bytes += nbytes
+        self._evict()
+        return True
+
+    def _evict(self):
+        with self._evict_lock:
+            while True:
+                with self._seq_lock:
+                    if self._bytes <= self.max_bytes or not self._recency:
+                        return
+                    seq, key = heapq.heappop(self._recency)
+                shard = self._shard(key)
+                with shard.lock:
+                    rec = shard.entries.get(key)
+                    if rec is None or rec[0] != seq:
+                        continue  # refreshed or already gone: stale stamp
+                    shard.entries.pop(key)
+                    with self._seq_lock:
+                        self._count -= 1
+                        self._bytes -= rec[2]
+                        self.evictions += 1
+
+    def total_bytes(self) -> int:
+        with self._seq_lock:
+            return self._bytes
+
+    def __len__(self) -> int:
+        with self._seq_lock:
+            return self._count
+
+    def __contains__(self, key: tuple) -> bool:
+        shard = self._shard(key)
+        with shard.lock:
+            return key in shard.entries
+
+    def clear(self):
+        for shard in self._shards:
+            shard.lock.acquire()
+        try:
+            for shard in self._shards:
+                shard.entries.clear()
+            with self._seq_lock:
+                self._count = 0
+                self._bytes = 0
+                self._recency = []
+        finally:
+            for shard in self._shards:
+                shard.lock.release()
+
+    def stats_dict(self) -> Dict[str, int]:
+        with self._seq_lock:
+            return {"entries": self._count, "bytes": self._bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
+
+
+# ----------------------------------------------------------------------
+# oracle-prep positional slices (cross-graph rebinding)
+# ----------------------------------------------------------------------
+
+def _oracle_slice(graph, prep) -> tuple:
+    """Name-free positional form of a prep triple, storable under the
+    rename-invariant oracle key: inputs in ``graph.inputs()`` order, params
+    in ``graph.params()`` order, oracle outputs in ``graph.outputs`` order."""
+    inputs, params, oracle = prep
+    return ([inputs[n.name] for n in graph.inputs()],
+            [params[n.name] for n in graph.params()],
+            [oracle[o] for o in graph.outputs])
+
+
+def _rebind_oracle_slice(graph, slice_) -> Optional[tuple]:
+    """Rebind a positional slice to ``graph``'s own names. Canonical-equal
+    graphs agree positionally by construction; a length mismatch means the
+    slice cannot belong to this key — treat as a miss, never guess."""
+    ins, ps, outs = slice_
+    in_nodes, p_nodes = graph.inputs(), graph.params()
+    if (len(ins) != len(in_nodes) or len(ps) != len(p_nodes)
+            or len(outs) != len(graph.outputs)):
+        return None
+    return ({n.name: a for n, a in zip(in_nodes, ins)},
+            {n.name: a for n, a in zip(p_nodes, ps)},
+            dict(zip(graph.outputs, outs)))
 
 
 @dataclasses.dataclass
@@ -77,6 +309,8 @@ class VerifySessionStats:
     oracle_misses: int = 0
     screened: int = 0           # correctness deferred by the cost screen
     deferred_runs: int = 0      # deferred correctness lazily executed
+    shared_group_hits: int = 0  # group executions served by the shared layer
+    shared_oracle_hits: int = 0  # oracle preps rebound from the shared layer
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -86,31 +320,33 @@ class VerifySession:
     """Per-job memo for the verification fast path (see module docstring).
 
     Not thread-safe by design: the engine runs one job on one worker
-    (thread or process), and sessions never cross jobs.
+    (thread or process), and sessions never cross jobs. The optional
+    ``shared`` :class:`SharedVerifyCache` *is* thread-safe and is the only
+    state that crosses jobs — the session reads through it on local misses
+    and writes back everything it executes.
     """
 
-    def __init__(self, max_group_entries: int = 1024):
+    def __init__(self, max_group_entries: int = 1024,
+                 shared: Optional[SharedVerifyCache] = None,
+                 check_shared: bool = False,
+                 max_group_bytes: int = DEFAULT_SESSION_BYTES,
+                 max_oracle_bytes: int = DEFAULT_SESSION_BYTES):
         self.max_group_entries = max(1, int(max_group_entries))
+        self.max_group_bytes = max(1, int(max_group_bytes))
+        self.max_oracle_bytes = max(1, int(max_oracle_bytes))
         self.stats = VerifySessionStats()
+        self._shared = shared
+        self.check_shared = bool(check_shared)
         # fp -> [(position-in-group.nodes, array), ...]
         self._groups: Dict[str, List[Tuple[int, Any]]] = {}
+        self._groups_nbytes: Dict[str, int] = {}
+        self._groups_total = 0
         self._traces: set = set()
         self._structure: Dict[Tuple[str, str], List[str]] = {}
         self._costs: Dict[str, Any] = {}
         self._oracle: Dict[str, tuple] = {}
-        self._binding_token: Optional[tuple] = None
-
-    # -- binding safety -------------------------------------------------
-    def _check_binding(self, inputs, params):
-        """Value fingerprints assume one fixed inputs/params binding per
-        session. If a different binding ever shows up (misuse: a session
-        shared across jobs), drop every value-derived cache."""
-        token = (id(inputs), id(params) if params else None)
-        if self._binding_token is None:
-            self._binding_token = token
-        elif self._binding_token != token:
-            self._groups.clear()
-            self._binding_token = token
+        self._oracle_nbytes: Dict[str, int] = {}
+        self._oracle_total = 0
 
     # -- group execution memo -------------------------------------------
     def _get_group(self, fp: str) -> Optional[List[Tuple[int, Any]]]:
@@ -122,10 +358,37 @@ class VerifySession:
         return got
 
     def _put_group(self, fp: str, outputs: List[Tuple[int, Any]]):
-        if len(self._groups) >= self.max_group_entries:
-            # FIFO trim: drop the oldest entry (dict order = insertion)
-            self._groups.pop(next(iter(self._groups)))
+        if fp in self._groups:
+            return
+        nbytes = _value_nbytes(outputs)
         self._groups[fp] = outputs
+        self._groups_nbytes[fp] = nbytes
+        self._groups_total += nbytes
+        # FIFO trim over either cap (dict order = insertion); the entry
+        # just inserted is never trimmed, so progress is always possible
+        while len(self._groups) > 1 and (
+                len(self._groups) > self.max_group_entries
+                or self._groups_total > self.max_group_bytes):
+            old = next(iter(self._groups))
+            if old == fp:
+                break
+            self._groups.pop(old)
+            self._groups_total -= self._groups_nbytes.pop(old)
+
+    def _get_group_shared(self, fp: str, validate=None):
+        """Read-through to the shared layer on a local miss. In check mode
+        ``validate`` re-executes the group locally and byte-compares before
+        the entry is adopted."""
+        if self._shared is None:
+            return None
+        got = self._shared.get(("group", fp))
+        if got is None:
+            return None
+        if self.check_shared and validate is not None:
+            validate(got)
+        self.stats.shared_group_hits += 1
+        self._put_group(fp, got)
+        return got
 
     # -- abstract-trace memo --------------------------------------------
     def trace_known_good(self, program: KernelProgram) -> bool:
@@ -172,19 +435,68 @@ class VerifySession:
         return self.program_cost(cost_model, program).total_s
 
     # -- oracle-prep memo -----------------------------------------------
+    def _put_oracle(self, key: str, prep: tuple):
+        if key in self._oracle:
+            return
+        nbytes = _value_nbytes(prep)
+        self._oracle[key] = prep
+        self._oracle_nbytes[key] = nbytes
+        self._oracle_total += nbytes
+        while (len(self._oracle) > 1
+               and self._oracle_total > self.max_oracle_bytes):
+            old = next(iter(self._oracle))
+            if old == key:
+                break
+            self._oracle.pop(old)
+            self._oracle_total -= self._oracle_nbytes.pop(old)
+
     def oracle_prep(self, graph, compute) -> tuple:
         """Memoized (inputs, params, oracle_outputs) for the trusted
         harness: a replay fallback re-prepares the identical context, so
-        the second full oracle evaluation is pure waste."""
+        the second full oracle evaluation is pure waste. On a local miss
+        the shared layer is probed under the rename-invariant oracle key —
+        a hit rebinds the positional slice to this graph's names, so
+        renamed family twins across jobs share one oracle evaluation."""
         key = graph_exact_fingerprint(graph)
         got = self._oracle.get(key)
         if got is not None:
             self.stats.oracle_hits += 1
             return got
         self.stats.oracle_misses += 1
-        prep = compute(graph)
-        self._oracle[key] = prep
+        prep = None
+        okey = None
+        if self._shared is not None:
+            okey = ("oracle", graph_oracle_fingerprint(graph))
+            slice_ = self._shared.get(okey)
+            if slice_ is not None:
+                prep = _rebind_oracle_slice(graph, slice_)
+                if prep is not None:
+                    if self.check_shared:
+                        self._validate_shared_oracle(graph, compute, prep)
+                    self.stats.shared_oracle_hits += 1
+        if prep is None:
+            prep = compute(graph)
+            if self._shared is not None:
+                self._shared.put(okey, _oracle_slice(graph, prep))
+        self._put_oracle(key, prep)
         return prep
+
+    def _validate_shared_oracle(self, graph, compute, prep):
+        """check mode: a shared oracle hit must be byte-identical to a
+        fresh local prep — positionally rebound arrays that drifted mean a
+        corrupt cache or a fingerprint collision, and either must fail
+        loudly, not skew every downstream correctness verdict."""
+        ref = compute(graph)
+        for label, got_d, ref_d in zip(("inputs", "params", "oracle"),
+                                       prep, ref):
+            if set(got_d) != set(ref_d):
+                raise VerifyFastpathDivergence(
+                    f"shared oracle prep {label} names diverged: "
+                    f"{sorted(got_d)} vs {sorted(ref_d)}")
+            for name in ref_d:
+                if not _bytes_equal(got_d[name], ref_d[name]):
+                    raise VerifyFastpathDivergence(
+                        f"shared oracle prep diverged at {label}[{name!r}]")
 
 
 # ----------------------------------------------------------------------
@@ -200,8 +512,10 @@ def run_program_cached(program: KernelProgram,
     ``run_group`` dispatch, or replays arrays a previous identical dispatch
     produced (JAX CPU execution is deterministic). Cached outputs are
     stored positionally and rebound to the consuming program's node names,
-    so renamed structural twins share entries."""
-    session._check_binding(inputs, params)
+    so renamed structural twins share entries — input/param leaves are
+    content-addressed (the bytes of the bound array, not its name), which
+    extends that sharing across *jobs* through ``session``'s optional
+    :class:`SharedVerifyCache`."""
     graph = program.graph
     sched = program.schedule
     compute_dtype = jnp.dtype(sched.compute_dtype)
@@ -214,9 +528,11 @@ def run_program_cached(program: KernelProgram,
             env[n.name] = params[n.name]
         elif n.op == "const":
             env[n.name] = jnp.asarray(n.attrs["value"], jnp.dtype(n.dtype))
+            value_fps[n.name] = leaf_fingerprint(n)
+            continue
         else:
             continue
-        value_fps[n.name] = leaf_fingerprint(n)
+        value_fps[n.name] = content_leaf_fingerprint(n, env[n.name])
     for g in group_order(graph, sched.groups):
         sig = group_exec_signature(graph, g, use_pallas=use_pallas)
         gfp = group_fingerprint(graph, g, value_fps,
@@ -225,10 +541,26 @@ def run_program_cached(program: KernelProgram,
         positions = {name: i for i, name in enumerate(g.nodes)}
         cached = session._get_group(gfp)
         if cached is None:
+            def _validate(entry, _g=g, _gfp=gfp):
+                ref = run_group(graph, _g, env, compute_dtype,
+                                use_pallas=use_pallas, interpret=interpret)
+                want = {_g.nodes[i]: v for i, v in entry}
+                if set(want) != set(ref):
+                    raise VerifyFastpathDivergence(
+                        f"shared group {_gfp[:12]} output names diverged")
+                for name, v in want.items():
+                    if not _bytes_equal(v, ref[name]):
+                        raise VerifyFastpathDivergence(
+                            f"shared group {_gfp[:12]} diverged at "
+                            f"output {name!r}")
+            cached = session._get_group_shared(gfp, validate=_validate)
+        if cached is None:
             out = run_group(graph, g, env, compute_dtype,
                             use_pallas=use_pallas, interpret=interpret)
-            session._put_group(gfp, [(positions[k], v)
-                                     for k, v in out.items()])
+            entry = [(positions[k], v) for k, v in out.items()]
+            session._put_group(gfp, entry)
+            if session._shared is not None:
+                session._shared.put(("group", gfp), entry)
         else:
             out = {g.nodes[i]: v for i, v in cached}
         env.update(out)

@@ -19,7 +19,9 @@ from __future__ import annotations
 import hashlib
 import json
 import weakref
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.ir.graph import Graph
 from repro.ir.schedule import KernelProgram, Schedule
@@ -249,6 +251,71 @@ def leaf_fingerprint(node) -> str:
                               list(node.shape), str(node.dtype)])
     return _hash_payload([node.op, node.name, list(node.shape),
                           str(node.dtype)])
+
+
+# Content fingerprints are memoized per array *object*: within a job the
+# seeded inputs/params are fixed array instances, and across jobs the shared
+# oracle slice hands the very same objects to every consumer, so the byte
+# digest is paid once per distinct array. Keyed by id() with a weakref
+# liveness guard — id reuse after collection can never serve a stale digest
+# because the weakref callback evicts the entry first (and a dead ref is
+# re-checked with ``ref() is arr`` regardless).
+_ARRAY_FP_CACHE: Dict[int, Tuple[Any, str]] = {}
+
+
+def array_content_fingerprint(arr) -> str:
+    """Content digest of an array: dtype + shape + raw little-endian bytes.
+    Two arrays digest equal iff they are bit-identical with the same shape
+    and dtype — the value identity the cross-job verification cache keys on
+    (:mod:`repro.core.verify_cache`)."""
+    key = id(arr)
+    hit = _ARRAY_FP_CACHE.get(key)
+    if hit is not None and hit[0]() is arr:
+        return hit[1]
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    fp = h.hexdigest()
+    try:
+        ref = weakref.ref(arr, lambda _r, _k=key: _ARRAY_FP_CACHE.pop(_k, None))
+    except TypeError:
+        return fp  # not weakref-able: correct, just unmemoized
+    _ARRAY_FP_CACHE[key] = (ref, fp)
+    return fp
+
+
+def content_leaf_fingerprint(node, arr) -> str:
+    """Value fingerprint of an input/param leaf bound to an actual array.
+    Unlike :func:`leaf_fingerprint` this addresses the *content*, not the
+    name: two jobs whose leaves hold bit-identical arrays produce identical
+    downstream group keys regardless of which job seeded them — the property
+    that lets renamed family twins share one oracle execution."""
+    return _hash_payload(["leaf", array_content_fingerprint(arr),
+                          list(node.shape), str(node.dtype)])
+
+
+def graph_oracle_fingerprint(graph: Graph) -> str:
+    """Rename-invariant key for shared oracle prep (seeded inputs/params +
+    f32 oracle outputs). Canonical-equal graphs seed bit-identical arrays
+    positionally: sources drain from the toposort FIFO in insertion order
+    before any computed node, ``make_inputs``/``make_params`` iterate that
+    same order splitting PRNG keys per position, and names never feed the
+    PRNG — so a prep stored as positional lists rebinds exactly to any
+    canonical twin's names."""
+    return _hash_payload(["oracle", graph_canonical(graph)])
+
+
+def program_exec_fingerprint(program: KernelProgram) -> str:
+    """Rename-invariant digest of everything that determines a program's
+    initial verification slice: canonical graph + canonical schedule. Jobs
+    with equal digests seed positionally identical arrays and walk identical
+    group-execution keys — the batch planner's dedup key
+    (:meth:`repro.core.engine.OptimizationEngine.run_batch`)."""
+    nm = cached_canonical_name_map(program.graph)
+    return _hash_payload([graph_canonical(program.graph, nm),
+                          schedule_canonical(program.schedule, nm)])
 
 
 def group_value_fingerprint(group_fp: str, position: int) -> str:

@@ -152,6 +152,47 @@ def greedy_fused_schedule(graph: Graph) -> Schedule:
     return sched
 
 
+def rename_program(program: "KernelProgram", rename) -> "KernelProgram":
+    """Deep-copy ``program`` with every graph node renamed through
+    ``rename`` (a ``str`` prefix or a ``name -> new_name`` callable).
+
+    Fingerprints are name-invariant (canonical renaming normalizes names
+    away), so the twin shares the original's exact/family/exec/oracle
+    fingerprints while carrying entirely different node names. That is the
+    shape the cross-job shared verify cache is built for: name-*bound* keys
+    (the pre-content-addressing leaf fingerprints) miss across the pair,
+    content-addressed and canonical keys hit — making this the standard
+    twin-builder for the shared-cache tests and the batch benchmark.
+
+    Nodes are rebuilt in insertion order (the toposort tie-breaks on it,
+    so order must survive for canonical forms to stay bit-identical)."""
+    from repro.ir.graph import Node
+
+    if isinstance(rename, str):
+        prefix = rename
+        rename = lambda name, _p=prefix: f"{_p}{name}"
+    mapping = {name: rename(name) for name in program.graph.nodes}
+    if len(set(mapping.values())) != len(mapping):
+        raise ValueError("rename collapsed distinct node names")
+    g = Graph(program.graph.name)
+    for n in program.graph.nodes.values():
+        g.nodes[mapping[n.name]] = Node(
+            name=mapping[n.name], op=n.op,
+            inputs=[mapping[i] for i in n.inputs],
+            attrs=dict(n.attrs), shape=tuple(n.shape), dtype=str(n.dtype))
+    g.outputs = [mapping[o] for o in program.graph.outputs]
+    g.reseed_counter()
+    sched = program.schedule.copy()
+    for grp in sched.groups:
+        grp.nodes = [mapping[n] for n in grp.nodes]
+        grp.root = mapping[grp.root]
+        grp.operand_layouts = {mapping.get(k, k): v
+                               for k, v in grp.operand_layouts.items()}
+    return KernelProgram(name=program.name, graph=g, schedule=sched,
+                         original_flops=program.original_flops,
+                         meta=dict(program.meta))
+
+
 @dataclasses.dataclass
 class KernelProgram:
     """The unit the pipeline optimizes: graph + schedule (+ provenance)."""

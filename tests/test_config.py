@@ -28,6 +28,8 @@ ALT_VALUES = {
     "cache_max_entries": 16,
     "dump_dir": "/tmp/dumps",
     "verify_fastpath": "check",
+    "shared_verify_cache_bytes": 0,
+    "batch_exec_planning": False,
 }
 
 
@@ -54,7 +56,8 @@ def test_operational_fields_do_not_change_signature():
     base = ForgeConfig()
     assert {f.name for f in ForgeConfig.operational_fields()} == {
         "workers", "execution_backend", "cache_path", "cache_max_entries",
-        "dump_dir", "verify_fastpath"}
+        "dump_dir", "verify_fastpath", "shared_verify_cache_bytes",
+        "batch_exec_planning"}
     for f in ForgeConfig.operational_fields():
         changed = base.replace(**{f.name: ALT_VALUES[f.name]})
         assert changed.policy_signature() == base.policy_signature(), f.name

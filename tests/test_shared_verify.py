@@ -1,0 +1,320 @@
+"""Cross-job oracle sharing: content-addressed fingerprints, the engine's
+SharedVerifyCache (byte-LRU exactness, read-through/write-back sessions,
+positional oracle rebinding), the batch execution planner, backend
+equivalence with planning on, and check-mode detection of poisoned shared
+entries."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import KernelJob
+from repro.core.pipeline import prepare_oracle
+from repro.core.verify_cache import (SharedVerifyCache,
+                                     VerifyFastpathDivergence, VerifySession,
+                                     run_program_cached)
+from repro.forge import Forge, ForgeConfig
+from repro.ir import GraphBuilder
+from repro.ir.cost import graph_flops
+from repro.ir.fingerprint import (array_content_fingerprint,
+                                  content_leaf_fingerprint,
+                                  graph_oracle_fingerprint,
+                                  program_exec_fingerprint)
+from repro.ir.interpreter import make_inputs, make_params
+from repro.ir.schedule import (KernelProgram, PallasConfig, eager_schedule,
+                               rename_program)
+
+
+def _gemm(name, m, n, k, dtype="float32"):
+    b = GraphBuilder(name, dtype=dtype)
+    x = b.input((m, k), name="x")
+    w = b.param((k, n), name="w")
+    mm = b.matmul(x, w, name="mm")
+    g = b.done(b.gelu(mm, name="act"))
+    sched = eager_schedule(g)
+    for grp in sched.groups:
+        if grp.root == "mm":
+            grp.impl = "pallas_naive"
+            grp.config = PallasConfig(128, 128, 32, num_stages=1)
+    return KernelProgram(name, g, sched, original_flops=graph_flops(g))
+
+
+def _arr(fill, n=25):
+    return np.full(n, fill, dtype=np.float32)  # 100 bytes each
+
+
+# ----------------------------------------------------------------------
+# content-addressed fingerprints
+# ----------------------------------------------------------------------
+
+def test_array_content_fingerprint_tracks_values():
+    a = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)
+    b = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)   # distinct object
+    assert a is not b
+    assert array_content_fingerprint(a) == array_content_fingerprint(b)
+    # memo is id-keyed: the same object returns the same digest
+    assert array_content_fingerprint(a) == array_content_fingerprint(a)
+
+    flipped = np.asarray(a).copy()
+    flipped.flat[0] = np.nextafter(flipped.flat[0], np.float32(np.inf))
+    assert (array_content_fingerprint(jnp.asarray(flipped))
+            != array_content_fingerprint(a))
+    # shape and dtype participate even when the bytes agree
+    assert (array_content_fingerprint(a.reshape(4, 3))
+            != array_content_fingerprint(a))
+    assert (array_content_fingerprint(jnp.zeros(4, jnp.float32))
+            != array_content_fingerprint(jnp.zeros(8, jnp.float16)))
+
+
+def test_content_leaf_fingerprint_is_name_free():
+    """Two leaves with different names bound to bit-identical arrays share
+    one fingerprint — the property cross-job group sharing rests on."""
+    p = _gemm("p", 64, 64, 32)
+    t = rename_program(p, "z_")
+    val = make_inputs(p.graph)["x"]
+    a = content_leaf_fingerprint(p.graph.node("x"), val)
+    b = content_leaf_fingerprint(t.graph.node("z_x"), val)
+    assert a == b
+    bumped = np.asarray(val).copy()
+    bumped.flat[0] += 1
+    assert content_leaf_fingerprint(p.graph.node("x"),
+                                    jnp.asarray(bumped)) != a
+
+
+# ----------------------------------------------------------------------
+# cross-session sharing through SharedVerifyCache
+# ----------------------------------------------------------------------
+
+def test_renamed_twin_shares_group_executions_across_sessions():
+    p = _gemm("p", 64, 64, 32)
+    t = rename_program(p, "z_")
+    n_groups = len(p.schedule.groups)
+    shared = SharedVerifyCache(64 * 1024 * 1024)
+
+    sa = VerifySession(shared=shared)
+    out_a = run_program_cached(p, make_inputs(p.graph), make_params(p.graph),
+                               sa)
+    assert sa.stats.group_misses == n_groups
+    assert sa.stats.shared_group_hits == 0
+
+    # the twin's seeded arrays are bit-identical (seeding is positional,
+    # names never feed the PRNG), so every group key matches
+    sb = VerifySession(shared=shared)
+    out_b = run_program_cached(t, make_inputs(t.graph), make_params(t.graph),
+                               sb)
+    assert sb.stats.shared_group_hits == n_groups
+    np.testing.assert_array_equal(np.asarray(out_a["act"]),
+                                  np.asarray(out_b["z_act"]))
+
+
+def test_one_bit_input_difference_defeats_sharing():
+    p = _gemm("p", 64, 64, 32)
+    shared = SharedVerifyCache(64 * 1024 * 1024)
+    inputs, params = make_inputs(p.graph), make_params(p.graph)
+    run_program_cached(p, inputs, params, VerifySession(shared=shared))
+
+    bumped = dict(inputs)
+    x = np.asarray(bumped["x"]).copy()
+    x.flat[0] = np.nextafter(x.flat[0], np.float32(np.inf))
+    bumped["x"] = jnp.asarray(x)
+    sc = VerifySession(shared=shared)
+    run_program_cached(p, bumped, params, sc)
+    # the first group's key moved, and so did every downstream key
+    assert sc.stats.shared_group_hits == 0
+    assert sc.stats.group_misses == len(p.schedule.groups)
+
+
+def test_oracle_prep_rebinds_positionally_across_renamed_twins():
+    p = _gemm("p", 64, 64, 32)
+    t = rename_program(p, "z_")
+    assert (graph_oracle_fingerprint(p.graph)
+            == graph_oracle_fingerprint(t.graph))
+    shared = SharedVerifyCache(64 * 1024 * 1024)
+    calls = []
+
+    def compute(g):
+        calls.append(g.name)
+        return prepare_oracle(g)
+
+    prep_p = VerifySession(shared=shared).oracle_prep(p.graph, compute)
+    sb = VerifySession(shared=shared)
+    prep_t = sb.oracle_prep(t.graph, compute)
+    assert calls == [p.graph.name]            # one oracle evaluation total
+    assert sb.stats.shared_oracle_hits == 1
+    # rebound to the twin's own names, values positionally identical
+    assert set(prep_t[0]) == {n.name for n in t.graph.inputs()}
+    assert set(prep_t[1]) == {n.name for n in t.graph.params()}
+    np.testing.assert_array_equal(np.asarray(prep_p[2]["act"]),
+                                  np.asarray(prep_t[2]["z_act"]))
+
+
+# ----------------------------------------------------------------------
+# SharedVerifyCache byte-LRU exactness
+# ----------------------------------------------------------------------
+
+def test_shared_cache_eviction_exact_under_stamp_churn():
+    cache = SharedVerifyCache(max_bytes=400, shards=3)
+    for i in range(4):
+        assert cache.put(("group", f"k{i}"), [(0, _arr(i))])
+    assert len(cache) == 4 and cache.total_bytes() == 400
+    for _ in range(30):                       # pile up stale stamps
+        cache.get(("group", "k0"))
+        cache.get(("group", "k1"))
+    assert cache.put(("group", "k4"), [(0, _arr(4))])   # evicts k2 (LRU)
+    assert ("group", "k2") not in cache
+    assert cache.put(("group", "k5"), [(0, _arr(5))])   # evicts k3
+    assert ("group", "k3") not in cache
+    for key in ("k0", "k1", "k4", "k5"):
+        assert cache.get(("group", key)) is not None
+    assert len(cache) == 4
+    assert cache.total_bytes() == 400
+    assert cache.evictions == 2
+
+
+def test_shared_cache_refuses_oversized_and_refreshes_in_place():
+    cache = SharedVerifyCache(max_bytes=400)
+    assert not cache.put(("group", "big"), [(0, np.zeros(200, np.float32))])
+    assert len(cache) == 0
+    assert cache.put(("group", "a"), [(0, _arr(1))])
+    # re-put under the same key replaces bytes, not duplicates them
+    assert cache.put(("group", "a"), [(0, _arr(2)), (1, _arr(3))])
+    assert len(cache) == 1 and cache.total_bytes() == 200
+    got = cache.get(("group", "a"))
+    np.testing.assert_array_equal(got[0][1], _arr(2))
+
+
+def test_shared_cache_zero_cap_disables_writes():
+    cache = SharedVerifyCache(max_bytes=0)
+    assert not cache.put(("group", "a"), [(0, _arr(1))])
+    assert cache.get(("group", "a")) is None
+    assert cache.stats_dict()["entries"] == 0
+
+
+# ----------------------------------------------------------------------
+# per-session byte caps
+# ----------------------------------------------------------------------
+
+def test_session_group_memo_trims_fifo_over_byte_cap():
+    s = VerifySession(max_group_bytes=250)
+    for i, fp in enumerate(("a", "b", "c")):
+        s._put_group(fp, [(0, _arr(i))])
+    assert "a" not in s._groups               # oldest trimmed
+    assert set(s._groups) == {"b", "c"}
+    assert s._groups_total == 200
+    # a single over-cap entry is kept (progress beats the cap)
+    s2 = VerifySession(max_group_bytes=50)
+    s2._put_group("only", [(0, _arr(9))])
+    assert set(s2._groups) == {"only"}
+
+
+def test_session_oracle_memo_trims_fifo_over_byte_cap():
+    s = VerifySession(max_oracle_bytes=250)
+    for i, key in enumerate(("a", "b", "c")):
+        s._put_oracle(key, ([_arr(i)], [], []))
+    assert set(s._oracle) == {"b", "c"}
+    assert s._oracle_total == 200
+
+
+# ----------------------------------------------------------------------
+# engine integration: planner + backend equivalence
+# ----------------------------------------------------------------------
+
+def _twin_jobs(n_twins=2):
+    ci = _gemm("lead", 128, 128, 64)
+    bench = _gemm("lead", 1024, 1024, 256)
+    jobs = [KernelJob("lead", ci, bench, tags=("gemm",))]
+    for i in range(n_twins):
+        jobs.append(KernelJob(f"tw{i}", rename_program(ci, f"t{i}_"),
+                              rename_program(bench, f"t{i}_"),
+                              tags=("gemm",)))
+    assert len({program_exec_fingerprint(j.ci_program) for j in jobs}) == 1
+    return jobs
+
+
+def _views(report):
+    return {r.job.name: (r.result.transform_log.to_list(),
+                         r.result.optimized_time,
+                         r.result.original_time,
+                         round(r.result.speedup, 9))
+            for r in report.results}
+
+
+def test_planner_dedupes_twin_signatures_serial():
+    with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                           verify_fastpath="on")) as forge:
+        report = forge.optimize_batch(_twin_jobs())
+    v = report.verify
+    assert v is not None
+    assert v.planner_signatures == 1          # one duplicated signature
+    assert v.planner_deduped_jobs == 2        # both twins warm-started
+    assert v.shared_oracle_hits >= 1
+    assert v.shared_group_hits >= 1
+
+
+def test_backend_equivalence_with_planning_on():
+    jobs = _twin_jobs()
+    views = {}
+    for backend in ("serial", "thread", "process"):
+        with Forge(ForgeConfig(execution_backend=backend, workers=2,
+                               verify_fastpath="on")) as forge:
+            views[backend] = _views(forge.optimize_batch(jobs))
+    assert views["thread"] == views["serial"]
+    assert views["process"] == views["serial"]
+
+
+def test_planning_off_produces_identical_results():
+    jobs = _twin_jobs()
+    views = {}
+    for label, overrides in (
+            ("pr5", dict(shared_verify_cache_bytes=0,
+                         batch_exec_planning=False)),
+            ("shared", {})):
+        with Forge(ForgeConfig(execution_backend="serial", workers=1,
+                               verify_fastpath="on", **overrides)) as forge:
+            views[label] = _views(forge.optimize_batch(jobs))
+    assert views["shared"] == views["pr5"]
+
+
+# ----------------------------------------------------------------------
+# check mode: poisoned shared entries must fail loudly
+# ----------------------------------------------------------------------
+
+def _poison(cache, kind):
+    poisoned = 0
+    for shard in cache._shards:
+        for key, rec in shard.entries.items():
+            if key[0] != kind:
+                continue
+            if kind == "group":
+                rec[1] = [(pos, v + 1) for pos, v in rec[1]]
+            else:
+                rec[1] = tuple([v + 1 for v in part] for part in rec[1])
+            poisoned += 1
+    return poisoned
+
+
+def test_check_mode_detects_poisoned_shared_group():
+    p = _gemm("p", 64, 64, 32)
+    shared = SharedVerifyCache(64 * 1024 * 1024)
+    inputs, params = make_inputs(p.graph), make_params(p.graph)
+    run_program_cached(p, inputs, params, VerifySession(shared=shared))
+    assert _poison(shared, "group") > 0
+    checked = VerifySession(shared=shared, check_shared=True)
+    with pytest.raises(VerifyFastpathDivergence):
+        run_program_cached(p, inputs, params, checked)
+    # without check mode the poisoned entry would have been adopted silently
+    trusting = VerifySession(shared=shared)
+    out = run_program_cached(p, inputs, params, trusting)
+    assert trusting.stats.shared_group_hits >= 1 and out
+
+
+def test_check_mode_detects_poisoned_shared_oracle():
+    p = _gemm("p", 64, 64, 32)
+    t = rename_program(p, "z_")
+    shared = SharedVerifyCache(64 * 1024 * 1024)
+    VerifySession(shared=shared).oracle_prep(p.graph, prepare_oracle)
+    assert _poison(shared, "oracle") == 1
+    checked = VerifySession(shared=shared, check_shared=True)
+    with pytest.raises(VerifyFastpathDivergence):
+        checked.oracle_prep(t.graph, prepare_oracle)
