@@ -31,8 +31,18 @@ improvement), on any cross-configuration result divergence, or if a
 ``verify_fastpath="check"`` pass over the same batch (every shared hit
 byte-compared against a fresh execution) raises.
 
-``BENCH_pipeline.json`` records both scenarios (the batch one under a
-``"batch"`` key, including the shared run's verify/planner counters).
+**Search** — proposals-per-win (stage-loop proposals ÷ improved jobs) for
+cold, warm-prior, and transfer scenario runs under two search policies: the
+PR 6 baseline (``prior_policy="counts"``, no cost ranking) and the learned
+policy (mined priors + cost-ranked proposals, the defaults). Gated: the
+learned policy must be strictly below the baseline on the warm-prior
+scenario, at least ``--min-transfer-reduction`` (default 20%) below it on
+the transfer scenario, never regress any per-job speedup, and stay under
+``--max-proposals-per-win`` when that absolute cap is set.
+
+``BENCH_pipeline.json`` records all scenarios (the batch one under a
+``"batch"`` key, including the shared run's verify/planner counters, and
+the search one under a ``"search"`` key).
 
 A small untimed warmup job runs first so one-time JAX tracing/compilation
 costs don't inflate whichever mode happens to run first.
@@ -220,6 +230,137 @@ def run_batch_scenario(min_improvement: float, twins: int = 3):
     return section, failed
 
 
+def _search_rows(results):
+    rows = {}
+    for r in results:
+        rows[r.job.name] = {
+            "proposals": r.result.proposals,
+            "improved": r.result.optimized_time < r.result.original_time,
+            "speedup": round(r.result.speedup, 9),
+            "transfer": r.transfer,
+        }
+    return rows
+
+
+def _proposals_per_win(rows: dict) -> float:
+    proposals = sum(v["proposals"] for v in rows.values())
+    wins = sum(1 for v in rows.values() if v["improved"])
+    return proposals / wins if wins else float("inf")
+
+
+def run_search_policy(policy: str, cost_rank: bool):
+    """Cold, warm-prior, and transfer scenario runs under one search policy
+    (serial backend throughout, so proposal counts are deterministic).
+
+    * cold     — empty store, empty history: ordering falls back to the
+                 cost model alone (or KB order under the legacy policy).
+    * warm     — fresh store, history mined from the cold run: pure
+                 prior-ordering effect, no replay/transfer.
+    * transfer — the cold run's store serves the family twin through the
+                 graded ladder (different dims, same builders).
+    """
+    from repro.core import ForgeConfig, ForgePipeline, OptimizationEngine
+    from repro.core.history import History
+
+    def make_engine(hist):
+        cfg = ForgeConfig(execution_backend="serial", workers=1,
+                          prior_policy=policy,
+                          cost_rank_proposals=cost_rank)
+        return OptimizationEngine(ForgePipeline(config=cfg, history=hist),
+                                  config=cfg)
+
+    jobs = build_jobs()
+    base, twin = jobs[:-1], jobs[-1]
+    hist = History()
+
+    cold_eng = make_engine(hist)
+    cold = _search_rows(cold_eng.run_batch(base))
+
+    warm = _search_rows(make_engine(hist).run_batch(build_jobs()[:-1]))
+
+    transfer_res = cold_eng.submit(twin)
+    transfer = _search_rows([transfer_res])
+
+    return {
+        "cold": cold, "warm": warm, "transfer": transfer,
+        "ppw": {"cold": _proposals_per_win(cold),
+                "warm": _proposals_per_win(warm),
+                "transfer": _proposals_per_win(transfer)},
+        "transfer_hit": bool(transfer_res.transfer),
+    }
+
+
+def run_search_scenario(max_ppw: float, min_transfer_reduction: float = 0.2):
+    """Learned-search gate: proposals-per-win under the learned policy
+    (mined priors + cost-ranked proposals, the defaults) must beat the
+    PR 6 baseline policy (flat counts, KB candidate order) strictly on the
+    warm-prior scenario and by ``min_transfer_reduction`` on the transfer
+    scenario — with every per-job speedup unchanged or better. Returns
+    (artifact_section, failed)."""
+    print("\n== learned search (proposals-per-win: cold / warm-prior / "
+          "transfer, serial backend) ==")
+    legacy = run_search_policy("counts", cost_rank=False)
+    learned = run_search_policy("mined", cost_rank=True)
+    for tag, res in (("counts+kb-order (PR 6)", legacy),
+                     ("mined+cost-rank", learned)):
+        p = res["ppw"]
+        print(f"  {tag:24s} cold {p['cold']:5.2f}  warm {p['warm']:5.2f}  "
+              f"transfer {p['transfer']:5.2f}")
+
+    problems = []
+    if not learned["transfer_hit"]:
+        problems.append("learned transfer scenario did not take the "
+                        "family-ladder path")
+    if not (learned["ppw"]["warm"] < legacy["ppw"]["warm"]):
+        problems.append(
+            f"warm proposals-per-win {learned['ppw']['warm']:.2f} not "
+            f"strictly below the baseline {legacy['ppw']['warm']:.2f}")
+    transfer_bar = legacy["ppw"]["transfer"] * (1.0 - min_transfer_reduction)
+    if not (learned["ppw"]["transfer"] <= transfer_bar):
+        problems.append(
+            f"transfer proposals-per-win {learned['ppw']['transfer']:.2f} "
+            f"above the {min_transfer_reduction:.0%}-reduction bar "
+            f"{transfer_bar:.2f} (baseline "
+            f"{legacy['ppw']['transfer']:.2f})")
+    if max_ppw > 0:
+        worst = max(learned["ppw"]["warm"], learned["ppw"]["transfer"])
+        if worst > max_ppw:
+            problems.append(f"learned warm/transfer proposals-per-win "
+                            f"{worst:.2f} above --max-proposals-per-win "
+                            f"{max_ppw:.2f}")
+    # search ordering may only change *how fast* a win is found, never make
+    # any job slower than the baseline policy found it
+    for scen in ("cold", "warm", "transfer"):
+        for name, row in learned[scen].items():
+            base_speedup = legacy[scen][name]["speedup"]
+            if row["speedup"] < base_speedup * (1 - 1e-9):
+                problems.append(
+                    f"{scen}:{name} speedup regressed "
+                    f"{base_speedup} -> {row['speedup']}")
+    for p in problems:
+        print(f"  FAIL(search): {p}")
+    if not problems:
+        print(f"  search ordering OK (warm "
+              f"{legacy['ppw']['warm']:.2f} -> {learned['ppw']['warm']:.2f}, "
+              f"transfer {legacy['ppw']['transfer']:.2f} -> "
+              f"{learned['ppw']['transfer']:.2f})")
+
+    section = {
+        "baseline": {"policy": "counts", "cost_rank_proposals": False,
+                     "ppw": legacy["ppw"], "jobs": {
+                         "cold": legacy["cold"], "warm": legacy["warm"],
+                         "transfer": legacy["transfer"]}},
+        "learned": {"policy": "mined", "cost_rank_proposals": True,
+                    "ppw": learned["ppw"], "jobs": {
+                        "cold": learned["cold"], "warm": learned["warm"],
+                        "transfer": learned["transfer"]}},
+        "min_transfer_reduction": min_transfer_reduction,
+        "max_proposals_per_win": max_ppw,
+        "problems": problems,
+    }
+    return section, bool(problems)
+
+
 def run_mode(mode: str):
     """Cold run of the whole job set (fresh Forge, no store on disk)."""
     from repro.forge import Forge, ForgeConfig
@@ -269,6 +410,13 @@ def main() -> int:
                          "in the shared-family batch scenario")
     ap.add_argument("--twins", type=int, default=3,
                     help="renamed twins in the batch scenario")
+    ap.add_argument("--max-proposals-per-win", type=float, default=0.0,
+                    help="fail if the learned policy's warm/transfer "
+                         "proposals-per-win exceeds this (0 = no absolute "
+                         "cap; the relative gates always apply)")
+    ap.add_argument("--min-transfer-reduction", type=float, default=0.2,
+                    help="required proposals-per-win reduction vs the "
+                         "baseline policy on the transfer scenario")
     ap.add_argument("--out", default="BENCH_pipeline.json")
     ap.add_argument("--skip-warmup", action="store_true",
                     help="skip the untimed JAX warmup job")
@@ -299,6 +447,9 @@ def main() -> int:
     batch_section, batch_failed = run_batch_scenario(
         args.min_batch_improvement, twins=args.twins)
 
+    search_section, search_failed = run_search_scenario(
+        args.max_proposals_per_win, args.min_transfer_reduction)
+
     artifact = {
         "job_set": list(GATE_SPECS) + [f"{GATE_SPECS[0]}_twin"],
         "off_s": off_s,
@@ -311,6 +462,7 @@ def main() -> int:
                         "transfer": on_rows[name]["transfer"]}
                  for name in sorted(on_rows)},
         "batch": batch_section,
+        "search": search_section,
     }
     pathlib.Path(args.out).write_text(json.dumps(artifact, indent=2))
     print(f"\nwrote {args.out}: fast path {speedup:.2f}x "
@@ -332,10 +484,16 @@ def main() -> int:
               f"equivalent={batch_section['equivalent']}, "
               f"check_ok={batch_section['check_ok']})")
         failed = True
+    if search_failed:
+        print(f"FAIL: search scenario "
+              f"({len(search_section['problems'])} problem(s); see "
+              f"FAIL(search) lines above)")
+        failed = True
     if failed:
         return 1
     print(f"pipeline throughput OK (cold >= {args.min_speedup:.2f}x, "
-          f"batch marginal >= {args.min_batch_improvement:.2f}x)")
+          f"batch marginal >= {args.min_batch_improvement:.2f}x, "
+          f"search proposals-per-win gated)")
     return 0
 
 

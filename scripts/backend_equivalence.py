@@ -2,11 +2,15 @@
 """CI gate: serial / thread / process backends must be result-equivalent.
 
 Runs a small fixed job set (one per structural family, plus a family twin so
-the in-batch transfer path is exercised) through a fresh Forge per backend
-and fails if any per-kernel TransformLog, fingerprint, optimized time, or
-canonical schedule diverges from the serial reference. This is the
-executable form of the engine's core contract: *where* a job ran can never
-change *what* it produced.
+the in-batch transfer path is exercised) through two rounds per backend —
+cold (empty history: cost-ranked ordering only) and warm-prior (fresh store,
+history mined from the cold round: the mined-prior ordering is live) — and
+fails if any per-kernel TransformLog, fingerprint, optimized time, or
+canonical schedule diverges from the serial reference in either round. This
+is the executable form of the engine's core contract: *where* a job ran can
+never change *what* it produced — including under the learned search policy,
+whose priors are batch-frozen precisely so completion order can't leak into
+candidate ordering.
 
     PYTHONPATH=src python scripts/backend_equivalence.py [--workers N]
                                                          [--backends a,b,c]
@@ -31,25 +35,38 @@ from benchmarks.pipeline_throughput import GATE_SPECS, build_jobs  # noqa: E402
 
 
 def run_backend(backend: str, workers: int):
-    from repro.forge import Forge, ForgeConfig
+    from repro.core import ForgeConfig, ForgePipeline, OptimizationEngine
+    from repro.core.history import History
     from repro.ir.fingerprint import program_canonical
 
     t0 = time.monotonic()
-    with Forge(ForgeConfig(execution_backend=backend,
-                           workers=workers)) as forge:
-        report = forge.optimize_batch(build_jobs())
-    rows = {}
-    for r in report.results:
-        rows[r.job.name] = {
-            "fingerprint": r.fingerprint,
-            "transform_log": r.result.transform_log.to_list(),
-            "speedup": round(r.result.speedup, 9),
-            "optimized_time": r.result.optimized_time,
-            "canonical_schedule": program_canonical(
-                r.result.bench_program)["schedule"],
-            "cache_hit": r.cache_hit,
-            "transfer": r.transfer,
-        }
+    cfg = ForgeConfig(execution_backend=backend, workers=workers)
+    hist = History()
+
+    def one_round(tag: str, rows: dict):
+        # fresh engine/store per round; the history is shared, so the warm
+        # round's mined priors are fed by the cold round's records (on the
+        # process backend those records round-tripped the results queue)
+        eng = OptimizationEngine(ForgePipeline(config=cfg, history=hist),
+                                 config=cfg)
+        try:
+            for r in eng.run_batch(build_jobs()):
+                rows[f"{r.job.name}#{tag}"] = {
+                    "fingerprint": r.fingerprint,
+                    "transform_log": r.result.transform_log.to_list(),
+                    "speedup": round(r.result.speedup, 9),
+                    "optimized_time": r.result.optimized_time,
+                    "canonical_schedule": program_canonical(
+                        r.result.bench_program)["schedule"],
+                    "cache_hit": r.cache_hit,
+                    "transfer": r.transfer,
+                }
+        finally:
+            eng.close()
+
+    rows: dict = {}
+    one_round("cold", rows)
+    one_round("warm", rows)
     return rows, time.monotonic() - t0
 
 
@@ -64,14 +81,14 @@ def main() -> int:
     if len(backends) < 2:
         ap.error("need at least two backends to compare")
 
-    print(f"== backend equivalence gate ({len(GATE_SPECS) + 1} jobs, "
-          f"workers={args.workers}) ==")
+    print(f"== backend equivalence gate ({len(GATE_SPECS) + 1} jobs x "
+          f"cold+warm-prior rounds, workers={args.workers}) ==")
     results = {}
     for backend in backends:
         rows, dt = run_backend(backend, args.workers)
         results[backend] = rows
         transfers = sum(1 for v in rows.values() if v["transfer"])
-        print(f"  {backend:8s} {dt:6.1f}s  {len(rows)} kernels, "
+        print(f"  {backend:8s} {dt:6.1f}s  {len(rows)} kernel rounds, "
               f"{transfers} transfer(s)")
 
     ref_name, ref = backends[0], results[backends[0]]

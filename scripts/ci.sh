@@ -143,16 +143,20 @@ run_gate backend-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python scripts/backend_equivalence.py --workers 2 || exit
 
-# Verification fast-path gate, two scenarios (writes BENCH_pipeline.json,
+# Verification fast-path gate, three scenarios (writes BENCH_pipeline.json,
 # uploaded as a CI artifact): the memoized verify + cost-screened dispatch
 # must keep its >=1.5x cold-run speedup with bit-identical results vs the
-# uncached cascade, and the cross-job shared cache + batch planner must cut
+# uncached cascade; the cross-job shared cache + batch planner must cut
 # the marginal cost of a structurally identical twin by >=1.4x vs per-job
-# sessions (also bit-identical, plus a check-mode pass over the batch).
+# sessions (also bit-identical, plus a check-mode pass over the batch);
+# and the learned search policy (mined priors + cost-ranked proposals)
+# must keep proposals-per-win strictly below the counts-policy baseline on
+# the warm-prior scenario, >=20% below it on the transfer scenario, and
+# under the absolute cap — without regressing any per-job speedup.
 run_gate pipeline-throughput \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python -m benchmarks.pipeline_throughput --min-speedup 1.5 \
-    --min-batch-improvement 1.4 || exit
+    --min-batch-improvement 1.4 --max-proposals-per-win 5.0 || exit
 
 # Cache warm-up (ROADMAP): CI restores results/warm_store.json from the
 # actions cache; when the exact cache key missed, the workflow sets

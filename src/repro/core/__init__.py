@@ -4,8 +4,9 @@ plus the fleet-scale engine (batching, caching, concurrency) layered on
 top of it."""
 
 from repro.core.analyzer import analyze
-from repro.core.config import (EXECUTION_BACKENDS, VERIFY_FASTPATH_MODES,
-                               ForgeConfig)
+from repro.core.config import (EXECUTION_BACKENDS, PRIOR_POLICIES,
+                               VERIFY_FASTPATH_MODES, ForgeConfig)
+from repro.core.history import History, PatternStats, PriorSnapshot
 from repro.core.job_codec import (decode_job, decode_pipeline_result,
                                   decode_program, encode_job,
                                   encode_pipeline_result, encode_program)
@@ -40,7 +41,8 @@ __all__ = [
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",
     "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",
-    "EXECUTION_BACKENDS",
+    "EXECUTION_BACKENDS", "PRIOR_POLICIES",
+    "History", "PatternStats", "PriorSnapshot",
     "encode_job", "decode_job", "encode_program", "decode_program",
     "encode_pipeline_result", "decode_pipeline_result",
     "StageSpec", "StageRegistry", "StageRegistryError", "DEFAULT_REGISTRY",

@@ -29,7 +29,7 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 __all__ = ["ForgeConfig", "EXECUTION_BACKENDS", "VERIFY_FASTPATH_MODES",
-           "POLICY_SIGNATURE_VERSION"]
+           "PRIOR_POLICIES", "POLICY_SIGNATURE_VERSION"]
 
 # where the engine runs jobs; validated here so a typo'd backend fails at
 # config construction, not deep inside a batch
@@ -41,6 +41,12 @@ EXECUTION_BACKENDS = ("serial", "thread", "process")
 # (raises on divergence — the fast path's executable contract)
 VERIFY_FASTPATH_MODES = ("off", "on", "check")
 
+# how candidate-ordering priors are mined from History: "counts" is the
+# legacy flat success-count ordering (bit-exact compatibility mode), "mined"
+# uses per-(stage, pattern) statistics + cost-model ranking. Single source
+# of truth lives next to the mining code.
+from repro.core.history import PRIOR_POLICIES  # noqa: E402
+
 # bumped when the signature *format* changes (field encoding, separator…);
 # participates in the signature so format changes can never alias old keys
 POLICY_SIGNATURE_VERSION = 1
@@ -50,6 +56,19 @@ def _operational(**kw):
     """An operational (non-policy) field: excluded from the cache signature
     because it cannot change what the pipeline produces for a job."""
     return dataclasses.field(metadata={"policy": False}, **kw)
+
+
+def _search_policy(**kw):
+    """A policy field that shapes *search order only*: it participates in
+    the exact-result cache signature (a changed ordering can change which
+    candidate a fresh search accepts first), but is excluded from the
+    *transfer* signature — a transferred TransformLog is re-verified step
+    by step at the receiving job, so search-order knobs can never make a
+    transferred result wrong, and excluding them keeps family keys (and
+    ladder keys) byte-compatible with stores written before the knob
+    existed."""
+    return dataclasses.field(metadata={"policy": True, "transfer": False},
+                             **kw)
 
 
 def _canon(value) -> str:
@@ -108,6 +127,14 @@ class ForgeConfig:
     stages_enabled: Optional[Tuple[str, ...]] = None
     use_llm: bool = False
 
+    # learned-search knobs (policy for the exact cache, excluded from the
+    # transfer signature — see _search_policy): how priors are mined from
+    # History, and whether stage candidate lists are cost-ranked before the
+    # first verification (with early stop once the residual candidates are
+    # roofline-dominated)
+    prior_policy: str = _search_policy(default="mined")
+    cost_rank_proposals: bool = _search_policy(default=True)
+
     workers: int = _operational(default=1)
     execution_backend: str = _operational(default="thread")
     cache_path: Optional[str] = _operational(default=None)
@@ -139,6 +166,10 @@ class ForgeConfig:
             raise ValueError(
                 f"unknown verify_fastpath {self.verify_fastpath!r}; "
                 f"choose one of {list(VERIFY_FASTPATH_MODES)}")
+        if self.prior_policy not in PRIOR_POLICIES:
+            raise ValueError(
+                f"unknown prior_policy {self.prior_policy!r}; "
+                f"choose one of {list(PRIOR_POLICIES)}")
         if self.best_of_k < 1:
             raise ValueError("best_of_k must be >= 1")
         if self.workers < 1:
@@ -182,6 +213,26 @@ class ForgeConfig:
         don't shuffle cache keys; versioned so format changes can't alias."""
         parts = [f"{f.name}={_canon(getattr(self, f.name))}"
                  for f in sorted(self.policy_fields(), key=lambda f: f.name)]
+        return f"forge-v{POLICY_SIGNATURE_VERSION};" + ";".join(parts)
+
+    @classmethod
+    def transfer_fields(cls) -> List[dataclasses.Field]:
+        """Policy fields that also scope *transfer* (family/ladder) keys —
+        everything policy except search-order knobs marked
+        ``metadata={"transfer": False}``."""
+        return [f for f in cls.policy_fields()
+                if f.metadata.get("transfer", True)]
+
+    def transfer_policy_signature(self) -> str:
+        """Signature for family/ladder (transfer) keys. Search-order knobs
+        are excluded: transferred logs are re-verified step by step, so
+        ordering policy can't invalidate a neighbor's trajectory — and for
+        the default search knobs this string is byte-identical to the full
+        pre-knob signature, keeping stores written before this PR
+        transferable."""
+        parts = [f"{f.name}={_canon(getattr(self, f.name))}"
+                 for f in sorted(self.transfer_fields(),
+                                 key=lambda f: f.name)]
         return f"forge-v{POLICY_SIGNATURE_VERSION};" + ";".join(parts)
 
     # ------------------------------------------------------------------

@@ -24,7 +24,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.context import ProblemContext
 from repro.core.proposers import BaseProposer, Candidate
-from repro.core.verify import (VerifyReport, run_correctness,
+from repro.core.verify import (MIN_SPEEDUP, VerifyReport, run_correctness,
                                verify_candidate)
 from repro.core.verify_cache import VerifySession
 from repro.ir.cost import CostModel
@@ -103,6 +103,10 @@ class StageResult:
     trajectory: Trajectory
     accepted: Optional[Candidate] = None
     fallback_used: bool = False
+    # pattern_ids of every candidate the agent popped (including ones whose
+    # transform errored), in attempt order — the attempt denominator the
+    # history's mined success-rate priors are computed from
+    tried_pattern_ids: List[str] = dataclasses.field(default_factory=list)
 
 
 class CoVeRAgent:
@@ -139,6 +143,7 @@ class CoVeRAgent:
         if start_offset:
             cands = cands[start_offset:] + cands[:start_offset]
         tried: List[Tuple[Candidate, KernelProgram, KernelProgram, VerifyReport]] = []
+        tried_ids: List[str] = []
 
         i = 0
         while i < self.T:
@@ -150,7 +155,18 @@ class CoVeRAgent:
                 cands = [c for c in fresh if c.description not in seen] or cands
             if not cands:
                 break
+            # cost-ranked early stop: when every residual candidate carries a
+            # roofline estimate that cannot clear the acceptance bar
+            # (verify's performance gate rejects exactly this predicate), the
+            # remaining verify budget is provably wasted — end the stage.
+            # Estimates are only present under cost-ranked ordering, so the
+            # legacy path never takes this branch.
+            if all(c.cost_estimate is not None
+                   and c.cost_estimate[0] * MIN_SPEEDUP >= incumbent_time
+                   for c in cands):
+                break
             cand = cands.pop(0)
+            tried_ids.append(cand.pattern_id)
             try:
                 new_ci = cand.transform(ci_program)
                 new_bench = cand.transform(bench_program)
@@ -170,7 +186,8 @@ class CoVeRAgent:
             tried.append((cand, new_ci, new_bench, report))
             if report.ok:
                 return StageResult(self.stage, True, new_ci, new_bench, report,
-                                   i + 1, trajectory, accepted=cand)
+                                   i + 1, trajectory, accepted=cand,
+                                   tried_pattern_ids=tried_ids)
             i += 1
 
         # ---- fallback: ChainOfThought extraction over the trajectory ------
@@ -200,11 +217,14 @@ class CoVeRAgent:
             if report.ok:  # e.g. modeled time noise — accept if it now passes
                 return StageResult(self.stage, True, new_ci, new_bench, report,
                                    self.T, trajectory, accepted=cand,
-                                   fallback_used=True)
+                                   fallback_used=True,
+                                   tried_pattern_ids=tried_ids)
             break
         self._dump_failure(ci_program, trajectory)
         return StageResult(self.stage, False, ci_program, bench_program, None,
-                           min(i, self.T), trajectory, fallback_used=bool(tried))
+                           min(i, self.T), trajectory,
+                           fallback_used=bool(tried),
+                           tried_pattern_ids=tried_ids)
 
     # ------------------------------------------------------------------
     def _dump_failure(self, program: KernelProgram, trajectory: Trajectory):

@@ -70,8 +70,9 @@ from repro.core.result_store import ResultCache, ResultStore
 from repro.core.stage_scheduler import TransformLog
 from repro.core.verify_cache import (SharedVerifyCache, VerifySession,
                                      run_program_cached)
-from repro.ir.fingerprint import (fingerprint_family, fingerprint_job,
-                                  program_canonical,
+from repro.ir.fingerprint import (fingerprint_family,
+                                  fingerprint_family_ladder, fingerprint_job,
+                                  job_dims_vector, program_canonical,
                                   program_exec_fingerprint)
 from repro.ir.schedule import KernelProgram
 
@@ -105,6 +106,18 @@ class KernelJob:
         return fingerprint_family(self.ci_program, self.bench_program,
                                   spec_name, self.target_dtype, self.tags,
                                   meta=self.meta, policy=policy)
+
+    def family_ladder(self, spec_name: str, policy: str = "") -> tuple:
+        """Graded ``((tier, key), ...)`` transfer keys, finest tier first;
+        the last pair is exactly :meth:`family_fingerprint`."""
+        return fingerprint_family_ladder(self.ci_program, self.bench_program,
+                                         spec_name, self.target_dtype,
+                                         self.tags, meta=self.meta,
+                                         policy=policy)
+
+    def dims_vector(self) -> tuple:
+        """Concrete shape-extent vector for neighbor distance ranking."""
+        return job_dims_vector(self.ci_program, self.bench_program)
 
 
 @dataclasses.dataclass
@@ -185,11 +198,14 @@ class VerifyStats:
 # ----------------------------------------------------------------------
 
 def compute_job_keys(pipeline: ForgePipeline, job: KernelJob) -> tuple:
-    """(exact store key, family key) for a job against a pipeline. The exact
-    key folds in the KB content hash so a KB edit turns every previously-
-    exact hit into a miss; the family key deliberately does not (transferred
-    seeds are re-verified step-by-step, so stale ones are safe, just
-    weaker).
+    """(exact store key, family key, family ladder, dims vector) for a job
+    against a pipeline. The exact key folds in the KB content hash so a KB
+    edit turns every previously-exact hit into a miss; the transfer keys
+    deliberately do not (transferred seeds are re-verified step-by-step, so
+    stale ones are safe, just weaker). Transfer keys are also scoped by the
+    *transfer* policy signature, which excludes search-order knobs — so
+    stores written under the pre-knob signature stay transferable. The
+    family key is the ladder's coarsest ("rank") tier.
 
     Module-level on purpose: the parent engine and spawned workers must
     derive bit-identical keys from the same inputs (the job codec's wire
@@ -200,7 +216,8 @@ def compute_job_keys(pipeline: ForgePipeline, job: KernelJob) -> tuple:
     fp = job.fingerprint(spec, policy)
     kb_hash = pipeline.kb.content_hash()
     exact = hashlib.sha256(f"{fp}|kb={kb_hash}".encode()).hexdigest()
-    return exact, job.family_fingerprint(spec, policy)
+    ladder = job.family_ladder(spec, pipeline.transfer_policy_signature())
+    return exact, ladder[-1][1], ladder, job.dims_vector()
 
 
 def entry_for_result(result: PipelineResult) -> Dict[str, Any]:
@@ -264,8 +281,8 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
                 priors: Mapping[str, int],
                 shared: Optional[SharedVerifyCache] = None):
     """Replay-or-optimize one job. ``entry`` is the exact store entry (or
-    None); ``seed_pairs`` is the frozen ``(neighbor_key, log_list)`` family
-    snapshot for this job's phase; ``shared`` is the cross-job verification
+    None); ``seed_pairs`` is the frozen ``(neighbor_key, log_list)`` graded
+    family-ladder snapshot for this job's phase (closest neighbor first); ``shared`` is the cross-job verification
     cache the job's session reads through / writes back (engine-owned on
     the in-process backends, per-worker on the process backend). Returns
     ``(PipelineResult, outcome)`` where ``outcome`` carries the store/stat
@@ -337,7 +354,7 @@ class SerialExecutor:
         # cache directly, which the planner already pre-populated
         for i in phase:
             results[i] = self.engine._run_job(jobs[i], keys[i], priors,
-                                              seeds)
+                                              seeds.get(i, ()))
 
     def end_batch(self):
         pass
@@ -368,11 +385,12 @@ class ThreadExecutor:
         engine = self.engine
         if engine.workers <= 1 or len(phase) <= 1:
             for i in phase:
-                results[i] = engine._run_job(jobs[i], keys[i], priors, seeds)
+                results[i] = engine._run_job(jobs[i], keys[i], priors,
+                                             seeds.get(i, ()))
             return
         with ThreadPoolExecutor(max_workers=engine.workers) as pool:
             futures = [(i, pool.submit(engine._run_job, jobs[i], keys[i],
-                                       priors, seeds))
+                                       priors, seeds.get(i, ())))
                        for i in phase]
             for i, f in futures:
                 results[i] = f.result()
@@ -424,9 +442,10 @@ def _process_worker_main(config_dict: Dict[str, Any],
                 job = job_codec.decode_job(task[2])
                 event_q.put(("keys", idx, compute_job_keys(pipeline, job)))
                 continue
-            _, _, job_wire, exact_key, family_key, priors, entry, \
+            _, _, job_wire, exact_key, family_key, priors_wire, entry, \
                 seed_pairs, warm_wire = task
             job = job_codec.decode_job(job_wire)
+            priors = job_codec.decode_priors(priors_wire)
             if warm_wire is not None and shared is not None:
                 for key, value in job_codec.decode_verify_slice(warm_wire):
                     shared.put(key, value)
@@ -583,7 +602,7 @@ class ProcessExecutor:
                  and self._wires[0] == id(jobs) else None)
         pending: Dict[int, KernelJob] = {}
         for i in wave:
-            exact_key, family_key = keys[i]
+            exact_key, family_key = keys[i][0], keys[i][1]
             wire = wires[i] if wires else job_codec.encode_job(jobs[i])
             # warm slice: the planner-recorded shared-cache entries for this
             # job's oracle slice, snapshotted parent-side at dispatch — the
@@ -596,9 +615,10 @@ class ProcessExecutor:
                 if items:
                     warm_wire = job_codec.encode_verify_slice(items)
             self._task_q.put(("job", i, wire,
-                              exact_key, family_key, dict(priors),
+                              exact_key, family_key,
+                              job_codec.encode_priors(priors),
                               engine.cache.get(exact_key),
-                              list(seeds.get(family_key, ())), warm_wire))
+                              list(seeds.get(i, ())), warm_wire))
             pending[i] = jobs[i]
         history_records: Dict[int, List[dict]] = {}
         while pending:
@@ -611,11 +631,12 @@ class ProcessExecutor:
                     hook(job_name, job_codec.decode_stage_record(record))
             elif kind == "result":
                 _, idx, payload = event
-                exact_key, family_key = keys[idx]
+                exact_key, family_key = keys[idx][0], keys[idx][1]
                 outcome = payload["outcome"]
                 if payload["entry"] is not None:
                     engine.cache.put(exact_key, payload["entry"],
-                                     family=family_key, flush=False)
+                                     family=family_key, flush=False,
+                                     ladder=keys[idx][2], dims=keys[idx][3])
                 engine._apply_outcome(outcome)
                 result = job_codec.decode_pipeline_result(payload["result"])
                 eres = EngineResult(pending.pop(idx), result, exact_key,
@@ -788,9 +809,10 @@ class OptimizationEngine:
 
     # ------------------------------------------------------------------
     def _keys(self, job: KernelJob) -> tuple:
-        """(exact store key, family key) — see :func:`compute_job_keys`.
-        Kept as the single-job convenience; batch dispatch goes through the
-        executor's ``compute_keys`` so the work can run worker-side."""
+        """(exact key, family key, ladder, dims) — see
+        :func:`compute_job_keys`. Kept as the single-job convenience; batch
+        dispatch goes through the executor's ``compute_keys`` so the work
+        can run worker-side."""
         return compute_job_keys(self.pipeline, job)
 
     # ------------------------------------------------------------------
@@ -810,7 +832,8 @@ class OptimizationEngine:
         against the pre-batch store; remaining family members run in phase 2
         seeded from a snapshot taken at the phase boundary, so a cold leader
         can seed its in-batch siblings without making results racy."""
-        priors = (self.pipeline.history.snapshot_priors()
+        cfg = self.pipeline.config
+        priors = (self.pipeline.history.snapshot_priors(cfg.prior_policy)
                   if self.pipeline.warm_start else {})
         executor = self._get_executor()
         try:
@@ -826,15 +849,21 @@ class OptimizationEngine:
             leaders: List[int] = []
             followers: List[int] = []
             seen = set()
-            for i, (_, fam) in enumerate(keys):
+            for i, k in enumerate(keys):
+                # group by the coarsest (rank) tier: any finer-tier match
+                # implies a rank match, so every potential in-batch seed
+                # relationship crosses the phase boundary
+                fam = k[1]
                 (followers if fam in seen else leaders).append(i)
                 seen.add(fam)
             results: List[Optional[EngineResult]] = [None] * len(jobs)
             for phase in (leaders, followers):
                 if not phase:
                     continue
-                seeds = {fam: self.cache.family_members(fam)
-                         for fam in {keys[i][1] for i in phase}}
+                # per-job graded neighbor snapshot, frozen at the phase
+                # boundary (deterministic under any backend/worker count)
+                seeds = {i: self.cache.ladder_members(keys[i][2], keys[i][3])
+                         for i in phase}
                 executor.run_phase(jobs, phase, keys, priors, seeds, results,
                                    plan=plan)
             return results
@@ -926,29 +955,28 @@ class OptimizationEngine:
     # ------------------------------------------------------------------
     def _run_job(self, job: KernelJob, keys: tuple,
                  priors: Mapping[str, int],
-                 seeds: Mapping[str, list]) -> EngineResult:
-        exact_key, family_key = keys
+                 seed_pairs: Sequence) -> EngineResult:
+        exact_key = keys[0]
         with self._inflight_lock:
             job_lock = self._inflight.setdefault(exact_key, threading.Lock())
         with job_lock:
-            eres = self._run_job_locked(job, exact_key, family_key, priors,
-                                        seeds)
+            eres = self._run_job_locked(job, keys, priors, seed_pairs)
         if self.on_result is not None:
             with self._notify_lock:
                 self.on_result(eres)
         return eres
 
-    def _run_job_locked(self, job: KernelJob, exact_key: str,
-                        family_key: str, priors: Mapping[str, int],
-                        seeds: Mapping[str, list]) -> EngineResult:
+    def _run_job_locked(self, job: KernelJob, keys: tuple,
+                        priors: Mapping[str, int],
+                        seed_pairs: Sequence) -> EngineResult:
+        exact_key, family_key = keys[0], keys[1]
         entry = self.cache.get(exact_key)
         result, outcome = execute_job(self.pipeline, job, entry,
-                                      seeds.get(family_key, ()),
-                                      exact_key, priors,
+                                      seed_pairs, exact_key, priors,
                                       shared=self.verify_shared)
         if outcome["entry"] is not None:
             self.cache.put(exact_key, outcome["entry"], family=family_key,
-                           flush=False)
+                           flush=False, ladder=keys[2], dims=keys[3])
         self._apply_outcome(outcome)
         return EngineResult(job, result, exact_key,
                             cache_hit=outcome["cache_hit"],

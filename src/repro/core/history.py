@@ -1,25 +1,216 @@
 """Optimization history (paper §VIII future work, implemented).
 
-Successful (stage, pattern_id) transformations are recorded per run. The
-history is the *warm-start provider* for the stage scheduler: success-count
-priors reorder each stage proposer's candidates so historically productive
+(Stage, pattern_id) outcomes are recorded per run. The history is the
+*warm-start provider* for the stage scheduler: priors mined from past
+records reorder each stage proposer's candidates so historically productive
 patterns are tried first on future kernels ("learning from optimization
 history" as few-shot priority rather than free generation).
 
+Two prior policies (``ForgeConfig.prior_policy``):
+
+``"counts"``  — the original flat success counts. :meth:`snapshot_priors`
+                returns a :class:`PriorSnapshot` whose *Mapping* interface
+                is exactly the legacy ``{pattern_id: successes}`` dict, so
+                every pre-existing consumer (and candidate ordering) is
+                bit-exact with the old behavior.
+``"mined"``   — per-(stage, pattern) statistics: success rate, mean
+                log-speedup, mean iterations-to-accept. The scheduler turns
+                these into a scalar score per candidate
+                (:meth:`PriorSnapshot.score`).
+
+Persistence is append-only JSONL — one record per line, appended under the
+lock — instead of rewriting the whole file per record. Files written by the
+old format (a single JSON object ``{"records": [...]}``) are detected on
+load and transparently migrated to JSONL on the first write.
+
 Thread-safety: the fleet engine records from concurrent workers, so all
-mutation happens under a lock. ``snapshot_priors`` returns an immutable-by-
-convention copy — the engine freezes one snapshot per batch so serial and
-concurrent runs see identical candidate orderings regardless of completion
-order.
+mutation happens under a lock. ``snapshot_priors`` returns a frozen
+snapshot — the engine freezes one per batch so serial and concurrent runs
+see identical candidate orderings regardless of completion order. Mined
+statistics are folded over records in a canonical sort order, so float sums
+cannot depend on the (backend-dependent) order records arrived in.
 """
 
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import threading
 from collections import defaultdict
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+PRIOR_POLICIES = ("counts", "mined")
+
+# Mined-score weights: success rate dominates, log-speedup rewards patterns
+# that win big, iterations-to-accept penalizes patterns that historically
+# needed many proposals before landing.
+_W_RATE = 1.0
+_W_LOG_SPEEDUP = 0.5
+_W_ITERATIONS = 0.05
+
+
+def _canonical_record_order(records: Iterable[dict]) -> List[dict]:
+    """Records sorted by their canonical JSON serialization. Mined stats
+    fold floating-point sums over this order, so the snapshot is identical
+    no matter which backend (and completion order) produced the records."""
+    return sorted(records,
+                  key=lambda r: json.dumps(r, sort_keys=True, default=str))
+
+
+class PatternStats:
+    """Accumulated outcomes for one (stage, pattern_id) cell."""
+
+    __slots__ = ("attempts", "successes", "log_speedup_sum", "iterations_sum")
+
+    def __init__(self):
+        self.attempts = 0
+        self.successes = 0
+        self.log_speedup_sum = 0.0
+        self.iterations_sum = 0
+
+    @property
+    def success_rate(self) -> float:
+        return self.successes / self.attempts if self.attempts else 0.0
+
+    @property
+    def mean_log_speedup(self) -> float:
+        return (self.log_speedup_sum / self.successes
+                if self.successes else 0.0)
+
+    @property
+    def mean_iterations(self) -> float:
+        return (self.iterations_sum / self.successes
+                if self.successes else 0.0)
+
+    def to_dict(self) -> dict:
+        return {"attempts": self.attempts, "successes": self.successes,
+                "log_speedup_sum": self.log_speedup_sum,
+                "iterations_sum": self.iterations_sum}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PatternStats":
+        s = cls()
+        s.attempts = int(d.get("attempts", 0))
+        s.successes = int(d.get("successes", 0))
+        s.log_speedup_sum = float(d.get("log_speedup_sum", 0.0))
+        s.iterations_sum = int(d.get("iterations_sum", 0))
+        return s
+
+    def __eq__(self, other):
+        if not isinstance(other, PatternStats):
+            return NotImplemented
+        return self.to_dict() == other.to_dict()
+
+    def __repr__(self):
+        return (f"PatternStats(attempts={self.attempts}, "
+                f"successes={self.successes})")
+
+
+class PriorSnapshot(Mapping):
+    """Batch-frozen prior. As a Mapping it IS the legacy flat success-count
+    dict (``snapshot["pat_x"]`` == number of successes), which keeps every
+    counts-mode consumer bit-exact; the mined statistics live alongside and
+    are reached through :meth:`score`."""
+
+    def __init__(self, counts: Dict[str, int],
+                 stats: Dict[Tuple[str, str], PatternStats],
+                 policy: str = "counts"):
+        if policy not in PRIOR_POLICIES:
+            raise ValueError(f"unknown prior policy {policy!r}; "
+                             f"expected one of {PRIOR_POLICIES}")
+        self._counts = dict(counts)
+        self._stats = dict(stats)
+        self.policy = policy
+
+    # -- Mapping interface: the legacy counts dict, bit-exact ------------
+    def __getitem__(self, key: str) -> int:
+        return self._counts[key]
+
+    def __iter__(self):
+        return iter(self._counts)
+
+    def __len__(self) -> int:
+        return len(self._counts)
+
+    def __bool__(self) -> bool:
+        # Truthiness gates warm-start wrapping (``if priors:``): an empty
+        # history must stay a passthrough under both policies.
+        return bool(self._counts) or bool(self._stats)
+
+    def __eq__(self, other):
+        if isinstance(other, PriorSnapshot):
+            return (self._counts == other._counts
+                    and self._stats == other._stats
+                    and self.policy == other.policy)
+        if isinstance(other, dict):
+            # Legacy comparisons (tests assert snapshot == snapshot and
+            # historically snapshot == dict) see the counts view.
+            return self._counts == other
+        return NotImplemented
+
+    def __repr__(self):
+        return (f"PriorSnapshot(policy={self.policy!r}, "
+                f"patterns={len(self._counts)}, cells={len(self._stats)})")
+
+    # -- mined statistics ------------------------------------------------
+    def stats(self, stage: str, pattern_id: str) -> Optional[PatternStats]:
+        return self._stats.get((stage, pattern_id))
+
+    def score(self, stage: str, pattern_id: str) -> float:
+        """Scalar mined prior for one candidate: higher is better. 0.0 for
+        never-tried patterns (they rank on the cost model alone)."""
+        s = self._stats.get((stage, pattern_id))
+        if s is None or not s.attempts:
+            return 0.0
+        return (_W_RATE * s.success_rate
+                + _W_LOG_SPEEDUP * s.mean_log_speedup
+                - _W_ITERATIONS * s.mean_iterations)
+
+    def to_dict(self) -> dict:
+        """JSON-safe form (process-backend wire; see job_codec)."""
+        return {
+            "policy": self.policy,
+            "counts": dict(self._counts),
+            "stats": [[stage, pid, st.to_dict()]
+                      for (stage, pid), st in sorted(self._stats.items())],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PriorSnapshot":
+        stats = {(stage, pid): PatternStats.from_dict(st)
+                 for stage, pid, st in d.get("stats", [])}
+        return cls(d.get("counts", {}), stats, d.get("policy", "counts"))
+
+
+def _fold_stats(records: Iterable[dict]) -> Dict[Tuple[str, str], PatternStats]:
+    """Mined statistics over a record set, folded in canonical order.
+
+    Success rate needs attempt counts per pattern, not just wins: each
+    record carries the ``tried`` list of pattern_ids the stage proposed
+    before (and including) the accepted one. Legacy records without the
+    field degrade to counting only the accepted pattern. Records with an
+    empty ``pattern_id`` AND no tried list contribute nothing (the
+    "stop counting empty-pattern records" rule)."""
+    stats: Dict[Tuple[str, str], PatternStats] = defaultdict(PatternStats)
+    for rec in _canonical_record_order(records):
+        stage = rec.get("stage", "")
+        accepted = rec.get("pattern_id", "") or ""
+        tried = rec.get("tried")
+        if tried is None:
+            tried = [accepted] if accepted else []
+        for pid in tried:
+            if not pid:
+                continue
+            stats[(stage, pid)].attempts += 1
+        if rec.get("improved") and accepted:
+            cell = stats[(stage, accepted)]
+            cell.successes += 1
+            speedup = rec.get("speedup")
+            if speedup and speedup > 0:
+                cell.log_speedup_sum += math.log(speedup)
+            cell.iterations_sum += int(rec.get("iterations", 0) or 0)
+    return dict(stats)
 
 
 class History:
@@ -28,35 +219,84 @@ class History:
         self.records: List[dict] = []
         self.success_counts: Dict[str, int] = defaultdict(int)
         self._lock = threading.Lock()
+        # True while self.path holds the legacy whole-file JSON format; the
+        # first write rewrites it as JSONL and clears the flag.
+        self._needs_migration = False
         if self.path and self.path.exists():
-            data = json.loads(self.path.read_text())
-            self.records = data.get("records", [])
+            self.records = self._load_file(self.path)
             for r in self.records:
                 if r.get("improved") and r.get("pattern_id"):
                     self.success_counts[r.get("pattern_id", "")] += 1
 
+    # -- persistence (append-only JSONL with legacy-JSON migration) ------
+    def _load_file(self, path: pathlib.Path) -> List[dict]:
+        text = path.read_text()
+        if not text.strip():
+            return []
+        # Legacy format: the whole file is one JSON object
+        # {"records": [...]}. A JSONL file also starts with "{", so the
+        # discriminator is a successful whole-file parse with a "records"
+        # key (individual records never carry that key). Legacy files are
+        # loadable as-is; the flag makes the first write migrate to JSONL.
+        try:
+            obj = json.loads(text)
+        except json.JSONDecodeError:
+            obj = None
+        if isinstance(obj, dict) and "records" in obj:
+            self._needs_migration = True
+            return list(obj["records"])
+        records = []
+        for line in text.splitlines():
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+        return records
+
+    def _append_locked(self, new_records: List[dict]):
+        """Persist ``new_records``; caller holds the lock. Appends JSONL
+        lines, except when migrating a legacy file (or creating a new one),
+        where the full record list is written once as JSONL."""
+        if not self.path:
+            return
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        if self._needs_migration or not self.path.exists():
+            with self.path.open("w") as f:
+                for rec in self.records:
+                    f.write(json.dumps(rec, sort_keys=True) + "\n")
+            self._needs_migration = False
+            return
+        with self.path.open("a") as f:
+            for rec in new_records:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    # -- recording -------------------------------------------------------
     def record(self, problem: str, stage: str, pattern_id: str,
-               improved: bool, speedup: Optional[float], iterations: int):
+               improved: bool, speedup: Optional[float], iterations: int,
+               tried: Optional[List[str]] = None):
         rec = {"problem": problem, "stage": stage, "pattern_id": pattern_id,
                "improved": improved, "speedup": speedup,
                "iterations": iterations}
+        if tried is not None:
+            rec["tried"] = [str(t) for t in tried if t]
         with self._lock:
             self.records.append(rec)
             if improved and pattern_id:
                 self.success_counts[pattern_id] += 1
-            if self.path:
-                self.path.parent.mkdir(parents=True, exist_ok=True)
-                self.path.write_text(json.dumps({"records": self.records},
-                                                indent=2))
+            self._append_locked([rec])
 
     def priority(self, pattern_id: str) -> int:
         return self.success_counts.get(pattern_id, 0)
 
     # ------------------------------------------------------------------
-    def snapshot_priors(self) -> Dict[str, int]:
-        """Frozen copy of the success counts, safe to share across a batch."""
+    def snapshot_priors(self, policy: str = "counts") -> PriorSnapshot:
+        """Frozen prior snapshot, safe to share across a batch. The Mapping
+        view is always the flat success counts (bit-exact legacy behavior);
+        ``policy="mined"`` additionally activates the per-(stage, pattern)
+        statistics consumers reach through :meth:`PriorSnapshot.score`."""
         with self._lock:
-            return dict(self.success_counts)
+            counts = dict(self.success_counts)
+            stats = _fold_stats(self.records) if policy == "mined" else {}
+        return PriorSnapshot(counts, stats, policy)
 
     def merge(self, other: "History"):
         """Fold another history's records in (engine workers can record to
@@ -69,11 +309,10 @@ class History:
         back, and the parent merges them here. Success counts are additive,
         so merge order never changes ``snapshot_priors``."""
         with self._lock:
+            added = []
             for rec in records:
                 self.records.append(rec)
+                added.append(rec)
                 if rec.get("improved") and rec.get("pattern_id"):
                     self.success_counts[rec["pattern_id"]] += 1
-            if self.path:
-                self.path.parent.mkdir(parents=True, exist_ok=True)
-                self.path.write_text(json.dumps({"records": self.records},
-                                                indent=2))
+            self._append_locked(added)

@@ -48,6 +48,7 @@ __all__ = [
     "encode_pipeline_result", "decode_pipeline_result",
     "encode_array", "decode_array",
     "encode_verify_slice", "decode_verify_slice",
+    "encode_priors", "decode_priors",
     "job_fingerprint_from_wire",
 ]
 
@@ -221,6 +222,23 @@ def decode_verify_slice(wire: Dict[str, Any]) -> List[tuple]:
                           for part in e["value"])
         items.append(((e["kind"], e["fp"]), value))
     return items
+
+
+def encode_priors(priors) -> Dict[str, Any]:
+    """Wire form of a batch-frozen prior: either a legacy flat counts dict
+    or a :class:`repro.core.history.PriorSnapshot` (mined statistics ride
+    along so worker-side candidate ordering matches the parent's)."""
+    to_dict = getattr(priors, "to_dict", None)
+    if to_dict is not None:
+        return {"version": WIRE_VERSION, "snapshot": to_dict()}
+    return {"version": WIRE_VERSION, "counts": dict(priors or {})}
+
+
+def decode_priors(wire: Dict[str, Any]):
+    if "snapshot" in wire:
+        from repro.core.history import PriorSnapshot
+        return PriorSnapshot.from_dict(wire["snapshot"])
+    return dict(wire.get("counts", {}))
 
 
 def job_fingerprint_from_wire(wire: Dict[str, Any], spec_name: str,

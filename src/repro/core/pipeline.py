@@ -175,6 +175,12 @@ class ForgePipeline:
         never be silently omitted."""
         return self.config.policy_signature()
 
+    def transfer_policy_signature(self) -> str:
+        """Signature scoping the *transfer* (family/ladder) keys: policy
+        minus search-order knobs — see
+        :meth:`ForgeConfig.transfer_policy_signature`."""
+        return self.config.transfer_policy_signature()
+
     # ------------------------------------------------------------------
     def make_verify_session(self, shared=None) -> Optional[VerifySession]:
         """A fresh per-job verification memo, or ``None`` when the fast
@@ -197,8 +203,8 @@ class ForgePipeline:
         """Build a StageScheduler with this pipeline's configuration. The
         engine calls this too, so every policy knob lives in one place."""
         if priors is None:
-            priors = (self.history.snapshot_priors() if self.warm_start
-                      else {})
+            priors = (self.history.snapshot_priors(self.config.prior_policy)
+                      if self.warm_start else {})
         return StageScheduler(self.kb, self.cost_model,
                               max_iterations=self.T, llm=self.llm,
                               dump_dir=self.dump_dir,
@@ -209,7 +215,10 @@ class ForgePipeline:
                               on_stage_complete=(on_stage_complete
                                                  or self.on_stage_complete),
                               verify_fastpath=self.config.verify_fastpath,
-                              session=session)
+                              session=session,
+                              prior_policy=self.config.prior_policy,
+                              cost_rank_proposals=(
+                                  self.config.cost_rank_proposals))
 
     # observer hook threaded into every scheduler this pipeline builds;
     # the Forge facade sets it, old-style callers leave it None

@@ -16,7 +16,7 @@ applied by the agent to both the ci- and bench-shaped programs so correctness
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterator, List
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.context import ProblemContext
 from repro.core.issues import Issue
@@ -33,6 +33,11 @@ class Candidate:
     description: str
     transform: Callable[[KernelProgram], KernelProgram]
     pattern_id: str = ""
+    # roofline (total_s, hbm_bytes) of the transformed program, filled by the
+    # scheduler's cost-ranked ordering pass; None when unranked (transform
+    # failed to apply, or cost ranking disabled). The scheduler's early stop
+    # reads total_s to prove a residual candidate can't beat the incumbent.
+    cost_estimate: Optional[Tuple[float, float]] = None
 
 
 Trajectory = List[Dict[str, str]]   # entries: {thought, tool, args, observation}

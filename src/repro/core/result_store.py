@@ -54,7 +54,9 @@ import os
 import pathlib
 import threading
 import zlib
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.ir.fingerprint import dims_log_distance
 
 log = logging.getLogger(__name__)
 
@@ -64,6 +66,20 @@ STORE_VERSION = 2
 # seq lock. No path ever holds two shard locks at once — except clear(),
 # which (under the evict lock) takes every shard lock in index order so a
 # concurrent put can't leave the entry count and the shards disagreeing.
+
+
+def _entry_index_keys(entry: Dict[str, Any]) -> List[str]:
+    """Every transfer-index key an entry is reachable under: its (rank)
+    family key plus any graded ladder keys. The ladder's "rank" tier is
+    byte-identical to the family key, so pre-ladder entries (no
+    ``family_ladder`` field) are simply reachable at the coarsest tier."""
+    keys = dict.fromkeys([entry.get("family")] if entry.get("family") else [])
+    ladder = entry.get("family_ladder")
+    if isinstance(ladder, dict):
+        for fam in ladder.values():
+            if fam:
+                keys.setdefault(fam)
+    return list(keys)
 
 
 class _Shard:
@@ -138,7 +154,8 @@ class ResultStore:
             # file order is LRU->MRU; sequential stamps reproduce it
             self._shard(key).entries[key] = [self._stamp(key), entry]
             self._count += 1
-            self._index_family(key, entry.get("family"))
+            for fam in _entry_index_keys(entry):
+                self._index_family(key, fam)
         # honor this instance's cap even against a larger on-disk file
         # (a replay-only run would otherwise never reach put's eviction)
         self._evict()
@@ -171,13 +188,24 @@ class ResultStore:
             return rec[1]
 
     def put(self, key: str, entry: Dict[str, Any],
-            family: Optional[str] = None, flush: bool = True):
-        """Insert/refresh an entry. ``family`` threads the transfer index;
-        ``flush=False`` defers the disk write (the engine batches inserts and
-        flushes once per ``run_batch``)."""
-        if family:
+            family: Optional[str] = None, flush: bool = True,
+            ladder: Optional[Sequence[Tuple[str, str]]] = None,
+            dims: Optional[Sequence[int]] = None):
+        """Insert/refresh an entry. ``family`` threads the (rank) transfer
+        index; ``ladder`` is the graded ``((tier, key), ...)`` sequence from
+        :func:`repro.ir.fingerprint.fingerprint_family_ladder` and ``dims``
+        the concrete shape vector — both optional (older callers and
+        pre-ladder store files keep working, reachable at the rank tier).
+        ``flush=False`` defers the disk write (the engine batches inserts
+        and flushes once per ``run_batch``)."""
+        if family or ladder or dims is not None:
             entry = dict(entry)
+        if family:
             entry["family"] = family
+        if ladder:
+            entry["family_ladder"] = {tier: fam for tier, fam in ladder}
+        if dims is not None:
+            entry["dims"] = [int(d) for d in dims]
         sh = self._shard(key)
         with sh.lock:
             old = sh.entries.pop(key, None)
@@ -188,13 +216,15 @@ class ResultStore:
                 # and the count update
                 with self._seq_lock:
                     self._count += 1
+        new_fams = set(_entry_index_keys(entry))
         if old is not None:
-            # re-put under a different (or no) family: drop the stale
-            # index entry so get_family never serves a disowned key
-            old_fam = old[1].get("family")
-            if old_fam and old_fam != entry.get("family"):
-                self._unindex_family(key, old_fam)
-        self._index_family(key, entry.get("family"))
+            # re-put under different (or no) transfer keys: drop the stale
+            # index entries so get_family never serves a disowned key
+            for old_fam in _entry_index_keys(old[1]):
+                if old_fam not in new_fams:
+                    self._unindex_family(key, old_fam)
+        for fam in _entry_index_keys(entry):
+            self._index_family(key, fam)
         self._evict()
         if flush:
             self.flush()
@@ -245,7 +275,8 @@ class ResultStore:
                     entry = sh.entries.pop(key)[1]
                     with self._seq_lock:
                         self._count -= 1
-                self._unindex_family(key, entry.get("family"))
+                for fam in _entry_index_keys(entry):
+                    self._unindex_family(key, fam)
                 self.evictions += 1
                 rebuilt = False                   # progress: allow re-repair
 
@@ -318,6 +349,46 @@ class ResultStore:
         concurrent job finished first."""
         return [(k, list(e.get("transform_log", [])))
                 for k, e in self._ranked_family(family_key)]
+
+    def ladder_members(self, ladder: Sequence[Tuple[str, str]],
+                       dims: Optional[Sequence[int]] = None) -> List:
+        """Graded neighbor selection: ``(exact_key, transform_log)`` pairs
+        walking the family-key ladder finest tier first (same dims > same
+        aspect ratios > same ranks), deduped by exact key. Within a tier,
+        neighbors rank by (dim log-distance asc, transform-log length desc,
+        recorded speedup desc, exact key asc) — the closest, richest
+        trajectory seeds first; entries recorded before dims were stored
+        rank last in their tier (distance ``inf``) but are never dropped.
+        Deterministic like :meth:`family_members`: recency never
+        participates, so concurrent completion order can't leak into which
+        neighbor seeds a later run."""
+        seen = set()
+        out = []
+        for _tier, fam_key in ladder:
+            with self._family_lock:
+                keys = list(self._family.get(fam_key, []))
+            members = []
+            for key in keys:
+                if key in seen:
+                    continue
+                entry = self._get_entry(key)
+                if entry is not None:
+                    members.append((key, entry))
+
+            def rank(item):
+                key, e = item
+                dist = (dims_log_distance(dims, e.get("dims"))
+                        if dims is not None else 0.0)
+                orig = float(e.get("original_time") or 0.0)
+                opt = float(e.get("optimized_time") or 0.0)
+                speedup = orig / opt if orig > 0 and opt > 0 else 1.0
+                log_len = len(e.get("transform_log") or [])
+                return (dist, -log_len, -speedup, key)
+
+            for key, e in sorted(members, key=rank):
+                seen.add(key)
+                out.append((key, list(e.get("transform_log", []))))
+        return out
 
     # ------------------------------------------------------------------
     def family_sizes(self) -> Dict[str, int]:

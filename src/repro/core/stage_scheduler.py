@@ -126,24 +126,58 @@ class TransformLog:
 
 
 class WarmStartProposer(BaseProposer):
-    """Stable-reorders a proposer's candidates by historical success counts.
+    """Reorders a proposer's candidates by historical priors.
 
     With empty priors this is a transparent pass-through, so cold runs are
-    bit-identical to the un-warmed pipeline.
+    bit-identical to the un-warmed pipeline. Two ranking policies:
+
+    ``"counts"`` — the original stable sort by flat success count (ties keep
+    the proposer's deterministic order): bit-exact legacy behavior.
+    ``"mined"``  — total-order ranking by (mined prior score desc, roofline
+    cost estimate asc, pattern_id asc, proposal index asc). The ``estimator``
+    callable (``(candidate, program) -> (total_s, hbm_bytes) | None``) fills
+    each candidate's ``cost_estimate`` before ranking, so the downstream
+    agent can early-stop once every residual candidate is dominated.
     """
 
-    def __init__(self, inner: BaseProposer, priors: Mapping[str, int]):
+    def __init__(self, inner: BaseProposer, priors: Mapping[str, int],
+                 policy: str = "counts", estimator=None):
         self.inner = inner
         self.stage = inner.stage
         self.kb = inner.kb
         self.ctx = inner.ctx
         self.priors = priors
+        self.policy = policy
+        self.estimator = estimator
+
+    def _prior_score(self, pattern_id: str) -> float:
+        score = getattr(self.priors, "score", None)
+        if score is not None:
+            return score(self.stage, pattern_id)
+        return float(self.priors.get(pattern_id, 0))
 
     def candidates(self, program, issues, trajectory):
         cands = list(self.inner.candidates(program, issues, trajectory))
-        if self.priors:
-            cands.sort(key=lambda c: -self.priors.get(c.pattern_id, 0))
-        return iter(cands)
+        if self.policy != "mined":
+            # legacy stable sort; empty priors = bit-exact passthrough
+            if self.priors:
+                cands.sort(key=lambda c: -self.priors.get(c.pattern_id, 0))
+            return iter(cands)
+        if self.estimator is not None:
+            for c in cands:
+                if c.cost_estimate is None:
+                    c.cost_estimate = self.estimator(c, program)
+        elif not self.priors:
+            return iter(cands)  # nothing to rank by
+
+        def rank(pair):
+            idx, c = pair
+            est = (c.cost_estimate if c.cost_estimate is not None
+                   else (float("inf"), float("inf")))
+            return (-self._prior_score(c.pattern_id), est[0], est[1],
+                    c.pattern_id, idx)
+
+        return iter(c for _, c in sorted(enumerate(cands), key=rank))
 
 
 @dataclasses.dataclass
@@ -175,7 +209,9 @@ class StageScheduler:
                  priors: Optional[Mapping[str, int]] = None,
                  on_stage_complete=None,
                  verify_fastpath: str = "off",
-                 session: Optional[VerifySession] = None):
+                 session: Optional[VerifySession] = None,
+                 prior_policy: str = "counts",
+                 cost_rank_proposals: bool = False):
         self.kb = kb
         self.cost_model = cost_model
         self.T = max_iterations
@@ -184,7 +220,12 @@ class StageScheduler:
         self.use_pallas_exec = use_pallas_exec
         self.stages_enabled = stages_enabled
         self.use_planner = use_planner
-        self.priors = dict(priors or {})
+        # PriorSnapshot carries mined stats alongside the counts view; keep
+        # it intact rather than flattening to the counts dict
+        self.priors = (priors if isinstance(priors, Mapping) and priors
+                       else dict(priors or {}))
+        self.prior_policy = prior_policy
+        self.cost_rank_proposals = cost_rank_proposals
         # observer hook: called with (job_name, StageRecord) after every
         # stage execution (search, replay, and seeded-transfer steps alike)
         self.on_stage_complete = on_stage_complete
@@ -205,9 +246,28 @@ class StageScheduler:
             return self.session.program_time(self.cost_model, program)
         return self.cost_model.program_time(program)
 
+    def _cost_estimate(self, cand: Candidate, program: KernelProgram):
+        """Roofline (total_s, hbm_bytes) of the candidate applied to
+        ``program``; None when the transform fails (ranked last — the agent
+        still pops it eventually and records the error observation)."""
+        try:
+            transformed = cand.transform(program)
+        except Exception:  # noqa: BLE001 — estimate failure is not an error
+            return None
+        if self.session is not None:
+            cost = self.session.program_cost(self.cost_model, transformed)
+            return (cost.total_s, cost.hbm_bytes)
+        return self.cost_model.program_rank_estimate(transformed)
+
     # ------------------------------------------------------------------
     def _make_proposer(self, stage: str, ctx: ProblemContext) -> BaseProposer:
         proposer = make_proposer(stage, self.kb, ctx)
+        if self.prior_policy == "mined" and (self.priors
+                                             or self.cost_rank_proposals):
+            return WarmStartProposer(
+                proposer, self.priors, policy="mined",
+                estimator=(self._cost_estimate if self.cost_rank_proposals
+                           else None))
         if self.priors:
             return WarmStartProposer(proposer, self.priors)
         return proposer
@@ -262,7 +322,8 @@ class StageScheduler:
             if history is not None:
                 history.record(name, stage,
                                res.accepted.pattern_id if res.accepted else "",
-                               res.improved, speedup, res.iterations)
+                               res.improved, speedup, res.iterations,
+                               tried=res.tried_pattern_ids)
             if res.improved:
                 desc = res.accepted.description if res.accepted else ""
                 # canonicalize against the pre-transform graph — that's what

@@ -51,6 +51,12 @@ from repro.kb.loader import KnowledgeBase
 
 SUCCESS = "VERIFIED: correct and faster — all checks passed"
 
+# Acceptance threshold for the performance level: a candidate must beat the
+# incumbent by this factor. Shared with the scheduler's cost-ranked early
+# stop — a candidate whose roofline estimate can't clear this bar can never
+# be accepted, so verifying it is pure waste.
+MIN_SPEEDUP = 1.001
+
 
 @dataclasses.dataclass
 class VerifyReport:
@@ -271,7 +277,7 @@ def compile_and_verify(candidate_ci: KernelProgram,
                        ctx: ProblemContext,
                        kb: KnowledgeBase,
                        cost_model: Optional[CostModel] = None,
-                       min_speedup: float = 1.001,
+                       min_speedup: float = MIN_SPEEDUP,
                        use_pallas: bool = True,
                        session: Optional[VerifySession] = None,
                        cost_first: bool = False) -> VerifyReport:
@@ -348,7 +354,7 @@ def verify_candidate(candidate_ci: KernelProgram,
                      ctx: ProblemContext,
                      kb: KnowledgeBase,
                      cost_model: Optional[CostModel] = None,
-                     min_speedup: float = 1.001,
+                     min_speedup: float = MIN_SPEEDUP,
                      use_pallas: bool = True,
                      session: Optional[VerifySession] = None,
                      fastpath: str = "off") -> VerifyReport:

@@ -325,3 +325,11 @@ class CostModel:
 
     def program_time(self, program: KernelProgram) -> float:
         return self.program_cost(program).total_s
+
+    def program_rank_estimate(self, program: KernelProgram) -> Tuple[float, float]:
+        """(total_s, hbm_bytes) — the pair proposal ordering ranks candidates
+        by. The secondary HBM-traffic coordinate breaks ties between
+        candidates the roofline prices identically (e.g. two fusions with the
+        same dominant group) in favor of the one moving fewer bytes."""
+        cost = self.program_cost(program)
+        return (cost.total_s, cost.hbm_bytes)

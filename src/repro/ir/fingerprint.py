@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
 import weakref
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -189,6 +190,144 @@ def fingerprint_family(ci_program: KernelProgram,
     }
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ----------------------------------------------------------------------
+# Graded family-key ladder: progressively coarser transfer keys.
+#
+# The single rank-abstracted family key above treats every same-builder
+# neighbor as equally good; the ladder grades the match instead. Three tiers,
+# finest first:
+#
+#   "dims"   — family structure with *concrete* shapes and attr extents:
+#              collides only for jobs at identical dims (e.g. the same
+#              kernel re-submitted under a different policy signature, or a
+#              renamed twin).
+#   "aspect" — each shape reduced to its aspect ratio (dims divided by their
+#              gcd): a uniformly scaled twin (every dim halved) collides, a
+#              reshaped variant does not.
+#   "rank"   — exactly :func:`fingerprint_family` (byte-identical, so stores
+#              recorded before the ladder existed stay reachable at this
+#              tier).
+#
+# The engine's transfer path walks the tiers finest-to-coarsest and, within
+# a tier, ranks neighbors by dim log-distance + transform-log length
+# (``repro.core.result_store``).
+# ----------------------------------------------------------------------
+
+FAMILY_LADDER_TIERS = ("dims", "aspect", "rank")
+
+
+def _aspect(shape) -> List[int]:
+    """Shape reduced to its aspect ratio: every dim divided by the gcd of
+    all dims, so (4096, 1024) and (2048, 512) both map to (4, 1)."""
+    dims = [int(d) for d in shape]
+    positive = [d for d in dims if d > 0]
+    if not positive:
+        return dims
+    g = positive[0]
+    for d in positive[1:]:
+        while d:
+            g, d = d, g % d
+    return [d // g if d > 0 else d for d in dims]
+
+
+def _tier_canonical(program: KernelProgram, tier: str) -> Dict:
+    """Per-tier analogue of :func:`family_canonical`. The "rank" tier IS
+    ``family_canonical`` (kept byte-identical for store compatibility);
+    "dims" keeps concrete shapes/attr extents, "aspect" normalizes shapes
+    to ratios. Non-rank tiers tag the payload with the tier name so a
+    scalar-only program can never alias keys across tiers."""
+    if tier == "rank":
+        return family_canonical(program)
+    nm = canonical_name_map(program.graph)
+    attr_fn = _canon_attr if tier == "dims" else _family_attr
+    nodes = []
+    for n in program.graph.toposorted():
+        shape = (list(n.shape) if tier == "dims"
+                 else ["aspect", _aspect(n.shape)])
+        nodes.append([
+            nm[n.name], n.op,
+            [nm[i] for i in n.inputs],
+            {str(k): attr_fn(v) for k, v in sorted(n.attrs.items())},
+            shape, str(n.dtype),
+        ])
+    groups = []
+    for i, grp in enumerate(program.schedule.groups):
+        groups.append([
+            f"g{i}",
+            [nm[n] for n in grp.nodes],
+            nm[grp.root],
+            grp.impl,
+            grp.config is not None,
+            {str(k): str(v) for k, v in sorted(grp.operand_layouts.items())},
+            bool(grp.prefetch),
+        ])
+    return {
+        "tier": tier,
+        "graph": [nodes, [nm[o] for o in program.graph.outputs]],
+        "schedule": [groups, program.schedule.compute_dtype],
+        "meta": json.loads(json.dumps(program.meta, sort_keys=True,
+                                      default=str)),
+    }
+
+
+def fingerprint_family_ladder(ci_program: KernelProgram,
+                              bench_program: KernelProgram,
+                              spec_name: str,
+                              target_dtype: str,
+                              tags: Sequence[str] = (),
+                              meta: Optional[Dict] = None,
+                              policy: str = "") -> Tuple[Tuple[str, str], ...]:
+    """Ordered ``((tier, key), ...)`` pairs, finest tier first. The last
+    pair is always ``("rank", fingerprint_family(...))`` — byte-identical to
+    the pre-ladder family key, so entries recorded before the ladder existed
+    remain reachable at the coarsest tier."""
+    out = []
+    for tier in FAMILY_LADDER_TIERS:
+        if tier == "rank":
+            out.append((tier, fingerprint_family(
+                ci_program, bench_program, spec_name, target_dtype, tags,
+                meta=meta, policy=policy)))
+            continue
+        payload = {
+            "ci": _tier_canonical(ci_program, tier),
+            "bench": _tier_canonical(bench_program, tier),
+            "spec": spec_name,
+            "target_dtype": target_dtype,
+            "tags": sorted(str(t) for t in tags),
+            "meta": json.loads(json.dumps(meta or {}, sort_keys=True,
+                                          default=str)),
+            "policy": policy,
+        }
+        blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+        out.append((tier, hashlib.sha256(blob.encode()).hexdigest()))
+    return tuple(out)
+
+
+def job_dims_vector(ci_program: KernelProgram,
+                    bench_program: KernelProgram) -> Tuple[int, ...]:
+    """Concatenated concrete shape extents of both programs' nodes in topo
+    order — the rename-invariant coordinate the store's neighbor ranking
+    measures dim log-distance in. Same-rank family members produce vectors
+    of equal length, so the distance is always well-defined within a tier."""
+    dims: List[int] = []
+    for prog in (ci_program, bench_program):
+        for n in prog.graph.toposorted():
+            dims.extend(int(d) for d in n.shape)
+    return tuple(dims)
+
+
+def dims_log_distance(a: Sequence[int], b: Sequence[int]) -> float:
+    """Sum of |log(a_i / b_i)| over paired dims — 0.0 for identical dims,
+    small for near misses, ``inf`` for unknown/mismatched vectors (entries
+    recorded before dims were stored rank last within their tier)."""
+    if a is None or b is None or len(a) != len(b):
+        return float("inf")
+    dist = 0.0
+    for x, y in zip(a, b):
+        dist += abs(math.log(max(int(x), 1) / max(int(y), 1)))
+    return dist
 
 
 def fingerprint_program(program: KernelProgram,

@@ -22,6 +22,8 @@ ALT_VALUES = {
     "warm_start": False,
     "stages_enabled": ("fusion", "autotuning"),
     "use_llm": True,
+    "prior_policy": "counts",
+    "cost_rank_proposals": False,
     "workers": 4,
     "execution_backend": "process",
     "cache_path": "/tmp/store.json",

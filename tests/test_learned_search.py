@@ -1,0 +1,339 @@
+"""Learned search (PR 7): the graded family-key ladder, trajectory-mined
+priors (with the bit-exact ``counts`` compatibility mode), append-only JSONL
+history persistence, and the total-order warm-start comparator."""
+
+import json
+
+import pytest
+
+from repro.core.history import History, PatternStats, PriorSnapshot
+from repro.core.job_codec import decode_priors, encode_priors
+from repro.core.result_store import ResultStore
+from repro.core.stage_scheduler import WarmStartProposer
+from repro.core.proposers import Candidate
+from repro.ir import GraphBuilder
+from repro.ir.cost import graph_flops
+from repro.ir.fingerprint import (FAMILY_LADDER_TIERS, dims_log_distance,
+                                  fingerprint_family,
+                                  fingerprint_family_ladder, job_dims_vector)
+from repro.ir.schedule import KernelProgram, eager_schedule
+
+
+def _gemm(m, n, k, name="g"):
+    b = GraphBuilder(name)
+    x = b.input((m, k), name="x")
+    w = b.param((k, n), name="w")
+    g = b.done(b.gelu(b.matmul(x, w, name="mm"), name="act"))
+    return KernelProgram(name, g, eager_schedule(g),
+                        original_flops=graph_flops(g))
+
+
+def _ladder(m, n, k):
+    p = _gemm(m, n, k)
+    return fingerprint_family_ladder(p, p, "tpu_v5e", "bfloat16", ("gemm",))
+
+
+# ----------------------------------------------------------------------
+# Family-key ladder (ir/fingerprint.py)
+# ----------------------------------------------------------------------
+
+def test_ladder_tiers_finest_first_rank_matches_family():
+    lad = _ladder(512, 512, 256)
+    assert tuple(t for t, _ in lad) == FAMILY_LADDER_TIERS == \
+        ("dims", "aspect", "rank")
+    p = _gemm(512, 512, 256)
+    # the coarsest tier is byte-identical to the pre-ladder family key, so
+    # stores recorded before the ladder existed stay reachable
+    assert lad[-1][1] == fingerprint_family(p, p, "tpu_v5e", "bfloat16",
+                                            ("gemm",))
+
+
+def test_ladder_collision_grades_with_similarity():
+    base = dict(_ladder(512, 512, 256))
+    same = dict(_ladder(512, 512, 256))
+    scaled = dict(_ladder(1024, 1024, 512))      # uniform 2x: same aspect
+    other = dict(_ladder(512, 256, 256))         # different aspect
+    assert same == base
+    assert scaled["dims"] != base["dims"]
+    assert scaled["aspect"] == base["aspect"]
+    assert scaled["rank"] == base["rank"]
+    assert other["dims"] != base["dims"]
+    assert other["aspect"] != base["aspect"]
+    assert other["rank"] == base["rank"]
+
+
+def test_dims_vector_and_log_distance():
+    p1, p2 = _gemm(512, 512, 256), _gemm(1024, 1024, 512)
+    v1 = job_dims_vector(p1, p1)
+    v2 = job_dims_vector(p2, p2)
+    assert dims_log_distance(v1, v1) == 0.0
+    assert 0.0 < dims_log_distance(v1, v2) < float("inf")
+    assert dims_log_distance(v1, None) == float("inf")
+    assert dims_log_distance(v1, v1[:-1]) == float("inf")
+
+
+# ----------------------------------------------------------------------
+# Graded neighbor selection (core/result_store.py)
+# ----------------------------------------------------------------------
+
+QUERY_LADDER = (("dims", "D"), ("aspect", "A"), ("rank", "R"))
+
+
+def _entry(log_len=1, orig=2.0, opt=1.0):
+    return {"transform_log": [{"stage": "fusion", "pattern_id": f"p{i}",
+                               "description": "d"} for i in range(log_len)],
+            "original_time": orig, "optimized_time": opt}
+
+
+def test_ladder_members_same_dims_beats_aspect_beats_rank():
+    store = ResultStore()
+    # deliberately inserted coarsest-first: recency/insertion order must
+    # never beat tier order
+    store.put("k_rank", _entry(), family="R",
+              ladder=(("dims", "D3"), ("aspect", "A3"), ("rank", "R")),
+              dims=(400,))
+    store.put("k_aspect", _entry(), family="R",
+              ladder=(("dims", "D2"), ("aspect", "A"), ("rank", "R")),
+              dims=(200,))
+    store.put("k_dims", _entry(), family="R",
+              ladder=QUERY_LADDER, dims=(100,))
+    members = store.ladder_members(QUERY_LADDER, dims=(100,))
+    assert [k for k, _ in members] == ["k_dims", "k_aspect", "k_rank"]
+
+
+def test_ladder_members_within_tier_tie_breaks_are_total():
+    # all three sit at the same (rank) tier and the same dim distance:
+    # longer transform log wins, then higher speedup, then key ascending
+    lad = (("rank", "R"),)
+    for order in (("a", "b", "c"), ("c", "b", "a")):
+        store = ResultStore()
+        entries = {
+            "a": _entry(log_len=2, orig=2.0, opt=1.0),
+            "b": _entry(log_len=1, orig=4.0, opt=1.0),
+            "c": _entry(log_len=1, orig=2.0, opt=1.0),
+        }
+        for key in order:
+            store.put(key, entries[key], family="R",
+                      ladder=lad, dims=(100,))
+        members = store.ladder_members(lad, dims=(100,))
+        assert [k for k, _ in members] == ["a", "b", "c"], order
+
+
+def test_ladder_members_closer_dims_rank_first_within_tier():
+    store = ResultStore()
+    store.put("far", _entry(), family="R", ladder=(("rank", "R"),),
+              dims=(400,))
+    store.put("near", _entry(), family="R", ladder=(("rank", "R"),),
+              dims=(128,))
+    members = store.ladder_members((("rank", "R"),), dims=(100,))
+    assert [k for k, _ in members] == ["near", "far"]
+
+
+def test_pre_ladder_entries_surface_at_rank_tier():
+    """Entries put with only ``family=`` (the pre-PR call shape) surface at
+    the coarsest tier — ranked last (unknown dims -> distance inf) but
+    never dropped."""
+    store = ResultStore()
+    store.put("old", _entry(), family="R")
+    store.put("new", _entry(), family="R", ladder=QUERY_LADDER, dims=(100,))
+    members = store.ladder_members(QUERY_LADDER, dims=(100,))
+    assert [k for k, _ in members] == ["new", "old"]
+    # and the legacy family API still sees both
+    assert len(store.family_members("R")) == 2
+
+
+# ----------------------------------------------------------------------
+# Mined priors + counts compatibility (core/history.py)
+# ----------------------------------------------------------------------
+
+def _seed_history(hist):
+    hist.record("p1", "fusion", "pat_a", True, 2.0, 1, tried=["pat_a"])
+    hist.record("p2", "fusion", "pat_a", True, 4.0, 2,
+                tried=["pat_b", "pat_a"])
+    hist.record("p3", "fusion", "pat_b", False, None, 5,
+                tried=["pat_b"])
+    hist.record("p4", "autotuning", "pat_c", True, 1.5, 1,
+                tried=["pat_c"])
+
+
+def test_counts_snapshot_is_bitexact_legacy_dict():
+    hist = History()
+    _seed_history(hist)
+    snap = hist.snapshot_priors()
+    assert snap.policy == "counts"
+    # the Mapping view IS the legacy flat success-count dict
+    assert dict(snap) == {"pat_a": 2, "pat_c": 1}
+    assert snap == dict(hist.success_counts)
+    # counts mode carries no mined stats: score is always 0
+    assert snap.score("fusion", "pat_a") == 0.0
+
+
+def test_mined_snapshot_scores_rank_patterns():
+    hist = History()
+    _seed_history(hist)
+    snap = hist.snapshot_priors("mined")
+    a = snap.stats("fusion", "pat_a")
+    b = snap.stats("fusion", "pat_b")
+    assert (a.attempts, a.successes) == (2, 2)
+    assert (b.attempts, b.successes) == (2, 0)
+    assert snap.score("fusion", "pat_a") > snap.score("fusion", "pat_b")
+    assert snap.score("fusion", "never_tried") == 0.0
+    # stage-conditioned: pat_c's wins don't leak into fusion
+    assert snap.stats("fusion", "pat_c") is None
+
+
+def test_mined_snapshot_is_record_order_independent():
+    h1, h2 = History(), History()
+    _seed_history(h1)
+    hist_rev = History()
+    hist_rev.merge_records(list(reversed(h1.records)))
+    _seed_history(h2)
+    assert h2.snapshot_priors("mined") == hist_rev.snapshot_priors("mined")
+
+
+def test_empty_pattern_id_records_not_counted():
+    hist = History()
+    hist.record("p", "fusion", "", True, 2.0, 1)
+    hist.merge_records([{"problem": "q", "stage": "fusion", "pattern_id": "",
+                         "improved": True, "speedup": 2.0, "iterations": 1}])
+    assert dict(hist.snapshot_priors()) == {}
+    assert hist.snapshot_priors("mined").stats("fusion", "") is None
+
+
+def test_prior_snapshot_wire_roundtrip():
+    hist = History()
+    _seed_history(hist)
+    for policy in ("counts", "mined"):
+        snap = hist.snapshot_priors(policy)
+        clone = decode_priors(encode_priors(snap))
+        assert isinstance(clone, PriorSnapshot)
+        assert clone == snap
+    # plain-dict priors (legacy wire) roundtrip as dicts
+    assert decode_priors(encode_priors({"pat": 3})) == {"pat": 3}
+
+
+def test_pattern_stats_roundtrip():
+    s = PatternStats()
+    s.attempts, s.successes, s.log_speedup_sum, s.iterations_sum = 3, 2, 1.5, 4
+    assert PatternStats.from_dict(s.to_dict()) == s
+
+
+# ----------------------------------------------------------------------
+# Append-only JSONL history (satellite)
+# ----------------------------------------------------------------------
+
+def test_history_appends_jsonl_lines(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    hist = History(path)
+    _seed_history(hist)
+    lines = [ln for ln in path.read_text().splitlines() if ln.strip()]
+    assert len(lines) == 4
+    assert all(isinstance(json.loads(ln), dict) for ln in lines)
+    reloaded = History(path)
+    assert reloaded.records == hist.records
+    assert dict(reloaded.success_counts) == dict(hist.success_counts)
+    assert reloaded.snapshot_priors("mined") == hist.snapshot_priors("mined")
+
+
+def test_history_migrates_legacy_json_file(tmp_path):
+    path = tmp_path / "hist.json"
+    legacy = [{"problem": "p", "stage": "fusion", "pattern_id": "pat_a",
+               "improved": True, "speedup": 2.0, "iterations": 1}]
+    path.write_text(json.dumps({"records": legacy}))
+    hist = History(path)
+    assert hist.records == legacy
+    assert hist.success_counts["pat_a"] == 1
+    # first write rewrites the whole file as JSONL (old + new records)
+    hist.record("q", "fusion", "pat_b", True, 3.0, 2)
+    lines = [ln for ln in path.read_text().splitlines() if ln.strip()]
+    assert len(lines) == 2
+    assert History(path).records == hist.records
+
+
+def test_legacy_records_without_tried_degrade_to_accepted_only():
+    hist = History()
+    hist.merge_records([{"problem": "p", "stage": "fusion",
+                         "pattern_id": "pat_a", "improved": True,
+                         "speedup": 2.0, "iterations": 1}])
+    s = hist.snapshot_priors("mined").stats("fusion", "pat_a")
+    assert (s.attempts, s.successes) == (1, 1)
+
+
+# ----------------------------------------------------------------------
+# Total-order warm-start comparator (satellite)
+# ----------------------------------------------------------------------
+
+class _StubProposer:
+    def __init__(self, stage, cands):
+        self.stage = stage
+        self.kb = None
+        self.ctx = None
+        self._cands = cands
+
+    def candidates(self, program, issues, trajectory):
+        return iter(list(self._cands))
+
+
+def _cands(*pattern_ids):
+    return [Candidate(thought="", description=p, transform=lambda x: x,
+                      pattern_id=p) for p in pattern_ids]
+
+
+def test_counts_policy_ordering_is_legacy_stable_sort():
+    priors = {"pat_b": 3, "pat_c": 1}
+    cands = _cands("pat_a", "pat_b", "pat_c", "pat_d")
+    warm = WarmStartProposer(_StubProposer("fusion", cands), priors)
+    got = [c.pattern_id for c in warm.candidates(None, [], [])]
+    legacy = [c.pattern_id for c in
+              sorted(cands, key=lambda c: -priors.get(c.pattern_id, 0))]
+    assert got == legacy == ["pat_b", "pat_c", "pat_a", "pat_d"]
+
+
+def test_mined_policy_total_order_prior_then_cost_then_pattern_id():
+    hist = History()
+    _seed_history(hist)
+    snap = hist.snapshot_priors("mined")
+    costs = {"pat_x": (2.0, 20.0), "pat_y": (1.0, 10.0),
+             "pat_z": (1.0, 10.0), "pat_a": (9.0, 9.0)}
+
+    def estimator(cand, program):
+        return costs[cand.pattern_id]
+
+    cands = _cands("pat_z", "pat_x", "pat_y", "pat_a")
+    warm = WarmStartProposer(_StubProposer("fusion", cands), snap,
+                             policy="mined", estimator=estimator)
+    # pat_a has the only positive mined score (despite the worst cost
+    # estimate); x/y/z tie at score 0 and fall back to cost estimate, then
+    # pattern_id
+    got = [c.pattern_id for c in warm.candidates(None, [], [])]
+    assert got == ["pat_a", "pat_y", "pat_z", "pat_x"]
+
+
+def test_mined_policy_without_estimator_or_priors_is_passthrough():
+    cands = _cands("pat_b", "pat_a")
+    warm = WarmStartProposer(
+        _StubProposer("fusion", cands),
+        PriorSnapshot({}, {}, policy="mined"), policy="mined")
+    assert [c.pattern_id for c in warm.candidates(None, [], [])] \
+        == ["pat_b", "pat_a"]
+
+
+def test_mined_policy_ordering_independent_of_input_order():
+    hist = History()
+    _seed_history(hist)
+    snap = hist.snapshot_priors("mined")
+
+    def estimator(cand, program):
+        return (1.0, 1.0)
+
+    orders = []
+    for perm in (("pat_a", "pat_b", "pat_c"), ("pat_c", "pat_b", "pat_a")):
+        warm = WarmStartProposer(_StubProposer("fusion", _cands(*perm)),
+                                 snap, policy="mined", estimator=estimator)
+        orders.append([c.pattern_id for c in warm.candidates(None, [], [])])
+    assert orders[0] == orders[1]
+
+
+def test_invalid_prior_policy_rejected():
+    with pytest.raises(ValueError, match="prior policy"):
+        PriorSnapshot({}, {}, policy="nope")
