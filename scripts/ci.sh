@@ -16,6 +16,9 @@
 #   tier1-tests          the full pytest suite; with pytest-cov installed
 #                        (hosted CI) it also enforces >=60% line coverage
 #                        over repro.core
+#   forge-service        loopback Forge service e2e: submit two kernels via
+#                        ForgeClient (one duplicate), assert completion,
+#                        dedup, SSE stage events, and a graceful drain
 #   backend-equivalence  serial / thread / process engines must produce
 #                        identical per-kernel TransformLogs and speedups
 #   pipeline-throughput  the verification fast path must keep a >=1.5x
@@ -138,6 +141,14 @@ run_gate tier1-tests \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
   ${COV_ARGS[@]+"${COV_ARGS[@]}"} "$@" \
   || exit
+
+# Hosted-service gate: start the Forge service on loopback, drive it via
+# ForgeClient — two submits (one an exact duplicate), assert completion,
+# dedup (one engine execution, byte-identical reports), a nonzero SSE
+# stage-event stream matching the report, and a graceful drain.
+run_gate forge-service \
+  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python scripts/forge_service_gate.py || exit
 
 run_gate backend-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -1,0 +1,98 @@
+"""CI gate: the Forge service must serve a kernel end to end over HTTP.
+
+Starts the service in-process on a loopback ephemeral port, then drives it
+exactly the way a tenant would — through :class:`ForgeClient`:
+
+1. submit two kernels, the second an exact duplicate of the first;
+2. assert both complete and the duplicate was *coalesced* (one engine
+   execution, two byte-identical reports);
+3. assert the SSE stream replays a nonzero stage-event feed that matches
+   the report's stage records;
+4. drain: intake closes (503 on the next submit) while finished state
+   stays queryable.
+
+Exit 0 with a "FORGE-SERVICE GATE OK" trailer on success; any assertion
+failure exits nonzero (ci.sh stops at this gate).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.aibench import build_program, load_specs
+from repro.core.config import ForgeConfig
+from repro.core.engine import KernelJob
+from repro.serve.client import ForgeClient, ServiceError
+from repro.serve.http import ForgeServiceServer
+from repro.serve.service import ForgeService, ServiceConfig
+
+
+def _job(spec):
+    return KernelJob(spec.name,
+                     build_program(spec.builder, spec.dims("ci"), "naive",
+                                   meta=spec.meta),
+                     build_program(spec.builder, spec.dims("bench"), "naive",
+                                   meta=spec.meta),
+                     tags=tuple(spec.tags), target_dtype=spec.target_dtype,
+                     rtol=spec.rtol, atol=spec.atol, meta=dict(spec.meta))
+
+
+def main() -> int:
+    specs = sorted(load_specs(), key=lambda s: s.name)
+    spec = specs[0]
+    service = ForgeService(ForgeConfig(max_iterations=1),
+                           service_config=ServiceConfig(wave_size=2))
+    server = ForgeServiceServer(("127.0.0.1", 0), service)
+    server.serve_background()
+    print(f"[gate] service up at {server.url}")
+    try:
+        client = ForgeClient(server.url, api_key="ci-gate")
+        client.wait_ready(timeout=30)
+
+        r1 = client.submit(_job(spec))
+        r2 = client.submit(_job(spec))          # exact duplicate
+        print(f"[gate] submitted {r1['job_id']} + duplicate {r2['job_id']} "
+              f"(deduped={r2['deduped']})")
+        assert r2["deduped"], "duplicate submit was not coalesced"
+
+        s1 = client.wait(r1["job_id"], timeout=600)
+        s2 = client.wait(r2["job_id"], timeout=600)
+        assert s1["state"] == "done", f"primary ended {s1['state']}"
+        assert s2["state"] == "done", f"duplicate ended {s2['state']}"
+
+        canon = lambda d: json.dumps(d, sort_keys=True)  # noqa: E731
+        assert canon(s1["report"]) == canon(s2["report"]), \
+            "coalesced duplicate got a different report"
+        stats = client.stats()
+        assert stats["engine"]["jobs"] == 1, \
+            f"dedup failed: engine ran {stats['engine']['jobs']} jobs"
+
+        events = list(client.events(r1["job_id"]))
+        stages = [d for e, d in events if e == "stage"]
+        expected = s1["report"]["jobs"][0]["stages"]
+        assert stages, "SSE stream carried zero stage events"
+        assert stages == expected, \
+            f"SSE streamed {len(stages)} stage records, " \
+            f"report holds {len(expected)}"
+        print(f"[gate] {len(stages)} stage events streamed over SSE; "
+              f"speedup {s1['report']['jobs'][0]['speedup']:.2f}x")
+
+        client.drain()
+        try:
+            client.submit(_job(specs[1]))
+        except ServiceError as exc:
+            assert exc.status == 503, f"drained submit got {exc.status}"
+        else:
+            raise AssertionError("drained service accepted a submission")
+        assert client.status(r1["job_id"])["state"] == "done", \
+            "drain lost finished job state"
+        print("[gate] drain closed intake; finished state still served")
+    finally:
+        server.shutdown_all(drain=True)
+    print("FORGE-SERVICE GATE OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -128,6 +128,12 @@ class EngineResult:
     cache_hit: bool = False
     transfer: bool = False          # warm-started from a family neighbor
     seed_steps: int = 0             # neighbor steps that verified and stuck
+    replay_fallback: bool = False   # exact hit whose replay diverged
+    had_seed: bool = False          # a family seed was available for the run
+    # the job's VerifySessionStats dict (None when the fast path is off):
+    # lets a caller rebuild exactly the per-job stats delta the engine folded
+    # into its lifetime counters (see OptimizationReport.from_result)
+    verify: Optional[Dict[str, int]] = None
 
 
 @dataclasses.dataclass
@@ -239,19 +245,22 @@ def entry_for_result(result: PipelineResult) -> Dict[str, Any]:
 def replay_entry(pipeline: ForgePipeline, job: KernelJob,
                  entry: Dict[str, Any],
                  priors: Mapping[str, int],
-                 session=None) -> Optional[PipelineResult]:
+                 session=None, on_stage=None) -> Optional[PipelineResult]:
     """Replay a cached transform log onto this job's programs. Returns
     None (-> full optimization) on any divergence, including a replayed
     schedule that is not bit-identical to the cached canonical form.
     ``session`` is the job's verification memo: shared with the
     full-optimization fallback so a diverged replay's oracle prep and
-    verified prefix are not paid for twice."""
+    verified prefix are not paid for twice. ``on_stage`` is the per-job
+    stage observer (replayed steps emit stage records too)."""
     log = TransformLog.from_list(entry.get("transform_log", []))
     ctx = pipeline._prepare_ctx(job.name, job.ci_program, job.tags,
                                 job.target_dtype, job.rtol, job.atol,
                                 job.meta or {}, session=session)
     original_cost = pipeline.cost_model.program_cost(job.bench_program)
-    scheduler = pipeline.make_scheduler(priors, session=session)
+    scheduler = pipeline.make_scheduler(
+        priors, session=session,
+        on_stage_complete=pipeline.stage_hook(on_stage))
     out = scheduler.replay(log, job.ci_program.copy(),
                            job.bench_program.copy(), ctx)
     if out is None:
@@ -279,7 +288,8 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
                 seed_pairs: Sequence,
                 exact_key: str,
                 priors: Mapping[str, int],
-                shared: Optional[SharedVerifyCache] = None):
+                shared: Optional[SharedVerifyCache] = None,
+                on_stage=None):
     """Replay-or-optimize one job. ``entry`` is the exact store entry (or
     None); ``seed_pairs`` is the frozen ``(neighbor_key, log_list)`` graded
     family-ladder snapshot for this job's phase (closest neighbor first); ``shared`` is the cross-job verification
@@ -300,7 +310,7 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     session = pipeline.make_verify_session(shared=shared)
     if entry is not None:
         replayed = replay_entry(pipeline, job, entry, priors,
-                                session=session)
+                                session=session, on_stage=on_stage)
         if replayed is not None:
             outcome["cache_hit"] = True
             if session is not None:
@@ -321,7 +331,8 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     result = pipeline.optimize(
         job.name, job.ci_program, job.bench_program, tags=job.tags,
         target_dtype=job.target_dtype, rtol=job.rtol, atol=job.atol,
-        meta=job.meta, priors=priors, seed_log=seed_log, session=session)
+        meta=job.meta, priors=priors, seed_log=seed_log, session=session,
+        on_stage=on_stage)
     outcome["entry"] = entry_for_result(result)
     outcome["had_seed"] = seed_log is not None
     outcome["transferred"] = (seed_log is not None
@@ -349,18 +360,31 @@ class SerialExecutor:
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None):
+                  plan=None, on_stage=None):
         # plan is unused in-process: jobs read the engine-owned shared
         # cache directly, which the planner already pre-populated
         for i in phase:
             results[i] = self.engine._run_job(jobs[i], keys[i], priors,
-                                              seeds.get(i, ()))
+                                              seeds.get(i, ()),
+                                              on_stage=_index_stage_hook(
+                                                  on_stage, i))
 
     def end_batch(self):
         pass
 
     def close(self):
         pass
+
+
+def _index_stage_hook(on_stage, index: int):
+    """Bind a batch-level ``on_stage(index, job_name, record)`` callback to
+    one job's submission index — the per-job hook execute_job expects."""
+    if on_stage is None:
+        return None
+
+    def hook(job_name, record):
+        on_stage(index, job_name, record)
+    return hook
 
 
 class ThreadExecutor:
@@ -380,17 +404,20 @@ class ThreadExecutor:
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None):
+                  plan=None, on_stage=None):
         # plan unused here too — threads share the live engine-owned cache
         engine = self.engine
         if engine.workers <= 1 or len(phase) <= 1:
             for i in phase:
                 results[i] = engine._run_job(jobs[i], keys[i], priors,
-                                             seeds.get(i, ()))
+                                             seeds.get(i, ()),
+                                             on_stage=_index_stage_hook(
+                                                 on_stage, i))
             return
         with ThreadPoolExecutor(max_workers=engine.workers) as pool:
             futures = [(i, pool.submit(engine._run_job, jobs[i], keys[i],
-                                       priors, seeds.get(i, ())))
+                                       priors, seeds.get(i, ()),
+                                       _index_stage_hook(on_stage, i)))
                        for i in phase]
             for i, f in futures:
                 results[i] = f.result()
@@ -570,7 +597,7 @@ class ProcessExecutor:
 
     # ------------------------------------------------------------------
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None):
+                  plan=None, on_stage=None):
         with self._phase_lock:
             try:
                 self._ensure_pool()
@@ -587,7 +614,7 @@ class ProcessExecutor:
                 for wave in waves:
                     if wave:
                         self._run_wave(jobs, wave, keys, priors, seeds,
-                                       results, plan)
+                                       results, plan, on_stage=on_stage)
             except Exception:
                 # anything unexpected (a raising observer, a decode error, a
                 # dead worker) leaves undispatched tasks / undrained events
@@ -596,7 +623,8 @@ class ProcessExecutor:
                 self.close()
                 raise
 
-    def _run_wave(self, jobs, wave, keys, priors, seeds, results, plan=None):
+    def _run_wave(self, jobs, wave, keys, priors, seeds, results, plan=None,
+                  on_stage=None):
         engine = self.engine
         wires = (self._wires[1] if self._wires
                  and self._wires[0] == id(jobs) else None)
@@ -627,8 +655,12 @@ class ProcessExecutor:
             if kind == "stage":
                 _, idx, job_name, record = event
                 hook = engine.pipeline.on_stage_complete
-                if hook is not None:
-                    hook(job_name, job_codec.decode_stage_record(record))
+                if hook is not None or on_stage is not None:
+                    decoded = job_codec.decode_stage_record(record)
+                    if hook is not None:
+                        hook(job_name, decoded)
+                    if on_stage is not None:
+                        on_stage(idx, job_name, decoded)
             elif kind == "result":
                 _, idx, payload = event
                 exact_key, family_key = keys[idx][0], keys[idx][1]
@@ -642,7 +674,10 @@ class ProcessExecutor:
                 eres = EngineResult(pending.pop(idx), result, exact_key,
                                     cache_hit=outcome["cache_hit"],
                                     transfer=outcome["transferred"],
-                                    seed_steps=result.seed_steps_applied)
+                                    seed_steps=result.seed_steps_applied,
+                                    replay_fallback=outcome["replay_fallback"],
+                                    had_seed=outcome["had_seed"],
+                                    verify=outcome.get("verify"))
                 history_records[idx] = payload["history"]
                 results[idx] = eres
                 if engine.on_result is not None:
@@ -821,8 +856,19 @@ class OptimizationEngine:
         ``run_batch``."""
         return self.run_batch([job])[0]
 
-    def run_batch(self, jobs: Sequence[KernelJob]) -> List[EngineResult]:
+    def run_batch(self, jobs: Sequence[KernelJob],
+                  on_stage=None) -> List[EngineResult]:
         """Optimize a batch. Results come back in submission order.
+
+        ``on_stage`` is an optional per-batch stage observer called as
+        ``on_stage(index, job_name, record)`` with the job's *submission
+        index* — unlike the pipeline-global hook (which only carries the job
+        name), this identifies the exact submission even when two jobs in
+        the batch share a name, which is what per-request event fan-out
+        (the Forge service's SSE streams) needs. It fires on every backend;
+        on the process backend the events are the ones streamed back from
+        the workers. It is called from worker threads, unserialized — the
+        caller owns any locking.
 
         Determinism: priors are frozen once per batch and transfer seeds
         once per *phase*, so a job's candidate ordering never depends on
@@ -865,7 +911,7 @@ class OptimizationEngine:
                 seeds = {i: self.cache.ladder_members(keys[i][2], keys[i][3])
                          for i in phase}
                 executor.run_phase(jobs, phase, keys, priors, seeds, results,
-                                   plan=plan)
+                                   plan=plan, on_stage=on_stage)
             return results
         finally:
             executor.end_batch()
@@ -955,12 +1001,13 @@ class OptimizationEngine:
     # ------------------------------------------------------------------
     def _run_job(self, job: KernelJob, keys: tuple,
                  priors: Mapping[str, int],
-                 seed_pairs: Sequence) -> EngineResult:
+                 seed_pairs: Sequence, on_stage=None) -> EngineResult:
         exact_key = keys[0]
         with self._inflight_lock:
             job_lock = self._inflight.setdefault(exact_key, threading.Lock())
         with job_lock:
-            eres = self._run_job_locked(job, keys, priors, seed_pairs)
+            eres = self._run_job_locked(job, keys, priors, seed_pairs,
+                                        on_stage=on_stage)
         if self.on_result is not None:
             with self._notify_lock:
                 self.on_result(eres)
@@ -968,12 +1015,13 @@ class OptimizationEngine:
 
     def _run_job_locked(self, job: KernelJob, keys: tuple,
                         priors: Mapping[str, int],
-                        seed_pairs: Sequence) -> EngineResult:
+                        seed_pairs: Sequence, on_stage=None) -> EngineResult:
         exact_key, family_key = keys[0], keys[1]
         entry = self.cache.get(exact_key)
         result, outcome = execute_job(self.pipeline, job, entry,
                                       seed_pairs, exact_key, priors,
-                                      shared=self.verify_shared)
+                                      shared=self.verify_shared,
+                                      on_stage=on_stage)
         if outcome["entry"] is not None:
             self.cache.put(exact_key, outcome["entry"], family=family_key,
                            flush=False, ladder=keys[2], dims=keys[3])
@@ -981,4 +1029,7 @@ class OptimizationEngine:
         return EngineResult(job, result, exact_key,
                             cache_hit=outcome["cache_hit"],
                             transfer=outcome["transferred"],
-                            seed_steps=result.seed_steps_applied)
+                            seed_steps=result.seed_steps_applied,
+                            replay_fallback=outcome["replay_fallback"],
+                            had_seed=outcome["had_seed"],
+                            verify=outcome.get("verify"))

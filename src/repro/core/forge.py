@@ -106,6 +106,34 @@ class OptimizationReport:
     def transfers(self) -> int:
         return sum(1 for r in self.results if r.transfer)
 
+    @classmethod
+    def from_result(cls, result: EngineResult,
+                    config: ForgeConfig) -> "OptimizationReport":
+        """Rebuild the single-job report for one :class:`EngineResult` —
+        exactly the report a one-job :meth:`Forge.optimize` call would have
+        produced for the same outcome. The stats mirror
+        ``OptimizationEngine._apply_outcome`` field for field, and the
+        verify stats are the job's own session counters (a one-job batch
+        triggers no planner activity, so nothing is lost). The Forge
+        service uses this to hand every queued submission its own report
+        even when the dispatcher batched it into a multi-job wave."""
+        hit = bool(result.cache_hit)
+        stats = EngineStats(
+            jobs=1,
+            cache_hits=int(hit),
+            cache_misses=int(not hit),
+            replay_fallbacks=int(result.replay_fallback),
+            family_transfers=int(not hit and result.had_seed
+                                 and result.transfer),
+            transfer_fallbacks=int(not hit and result.had_seed
+                                   and not result.transfer))
+        verify = None
+        if config.verify_fastpath != "off":
+            verify = VerifyStats()
+            verify.add_session(result.verify or {})
+        return cls(results=[result], stats=stats, config=config,
+                   verify=verify)
+
     def as_dict(self) -> Dict[str, Any]:
         """JSON-safe summary (telemetry / artifact codec)."""
         return {
@@ -210,19 +238,26 @@ class Forge:
                         fn(result)
 
     # -- optimization ----------------------------------------------------
-    def optimize(self, job: KernelJob) -> OptimizationReport:
+    def optimize(self, job: KernelJob,
+                 on_stage=None) -> OptimizationReport:
         """Optimize one job (cache/transfer-aware)."""
-        return self.optimize_batch([job])
+        return self.optimize_batch([job], on_stage=on_stage)
 
-    def optimize_batch(self, jobs: Sequence[KernelJob]) -> OptimizationReport:
+    def optimize_batch(self, jobs: Sequence[KernelJob],
+                       on_stage=None) -> OptimizationReport:
         """Optimize a batch through the fleet engine; results come back in
         submission order inside a typed report. The report's stats are the
         *delta* this batch produced (a reused Forge accumulates lifetime
         counters on ``forge.stats``), so per-batch hit counts and engine
-        counters always describe the same jobs."""
+        counters always describe the same jobs.
+
+        ``on_stage(index, job_name, record)`` is an optional per-batch stage
+        observer keyed by submission index (see
+        ``OptimizationEngine.run_batch``); unlike registered observers it is
+        NOT serialized under the observer lock — the caller owns locking."""
         before = dataclasses.replace(self.engine.stats)
         vbefore = dataclasses.replace(self.engine.verify_stats)
-        results = self.engine.run_batch(list(jobs))
+        results = self.engine.run_batch(list(jobs), on_stage=on_stage)
         delta = EngineStats(**{
             f.name: getattr(self.engine.stats, f.name) - getattr(before, f.name)
             for f in dataclasses.fields(EngineStats)})

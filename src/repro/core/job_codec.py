@@ -42,6 +42,7 @@ from repro.ir.graph import Graph, Node
 from repro.ir.schedule import KernelProgram, Schedule
 
 __all__ = [
+    "WireDecodeError",
     "encode_graph", "decode_graph",
     "encode_program", "decode_program",
     "encode_job", "decode_job",
@@ -55,6 +56,48 @@ __all__ = [
 WIRE_VERSION = 1
 
 _TUPLE_TAG = "__tuple__"
+
+
+class WireDecodeError(ValueError):
+    """A wire payload could not be decoded: missing keys, wrong types, bad
+    base64, truncated array bytes, malformed nested structures.
+
+    The codec is the Forge *service's* input-validation boundary — payloads
+    arrive off an HTTP socket, not from our own encoder — so every decoder
+    converts the bare ``KeyError``/``TypeError``/``ValueError`` zoo a hostile
+    payload can trigger into this single typed error (the HTTP layer maps it
+    to a 400). Trusted in-process callers (the process-pool backend) are
+    unaffected: well-formed wire forms decode exactly as before."""
+
+
+def _wire_guard(kind: str):
+    """Decorator: any structural failure inside a decoder becomes one typed
+    :class:`WireDecodeError` naming the payload kind. A nested decoder's
+    WireDecodeError passes through untouched so the innermost (most
+    specific) context wins."""
+    def wrap(fn):
+        def guarded(wire, *args, **kwargs):
+            try:
+                return fn(wire, *args, **kwargs)
+            except WireDecodeError:
+                raise
+            except (KeyError, TypeError, ValueError, AttributeError,
+                    IndexError) as exc:
+                raise WireDecodeError(
+                    f"malformed {kind} wire payload: "
+                    f"{type(exc).__name__}: {exc}") from exc
+        guarded.__name__ = fn.__name__
+        guarded.__doc__ = fn.__doc__
+        return guarded
+    return wrap
+
+
+def _expect_mapping(wire, kind: str) -> Dict[str, Any]:
+    if not isinstance(wire, dict):
+        raise WireDecodeError(
+            f"malformed {kind} wire payload: expected a JSON object, "
+            f"got {type(wire).__name__}")
+    return wire
 
 
 def _enc_value(value):
@@ -98,11 +141,14 @@ def encode_graph(graph: Graph) -> Dict[str, Any]:
     }
 
 
+@_wire_guard("graph")
 def decode_graph(wire: Dict[str, Any]) -> Graph:
     """Re-assemble node-for-node: shapes/dtypes come off the wire verbatim
     (no re-inference), so decoding needs no jax evaluation."""
-    g = Graph(wire.get("name", "graph"))
+    _expect_mapping(wire, "graph")
+    g = Graph(str(wire.get("name", "graph")))
     for d in wire["nodes"]:
+        _expect_mapping(d, "graph node")
         g.nodes[d["name"]] = Node(
             name=d["name"], op=d["op"], inputs=list(d["inputs"]),
             attrs=_dec_value(d["attrs"]), shape=tuple(d["shape"]),
@@ -123,7 +169,9 @@ def encode_program(program: KernelProgram) -> Dict[str, Any]:
     }
 
 
+@_wire_guard("program")
 def decode_program(wire: Dict[str, Any]) -> KernelProgram:
+    _expect_mapping(wire, "program")
     return KernelProgram(
         name=wire["name"],
         graph=decode_graph(wire["graph"]),
@@ -152,11 +200,13 @@ def encode_job(job) -> Dict[str, Any]:
     }
 
 
+@_wire_guard("job")
 def decode_job(wire: Dict[str, Any]):
     from repro.core.engine import KernelJob
 
+    _expect_mapping(wire, "job")
     return KernelJob(
-        name=wire["name"],
+        name=str(wire["name"]),
         ci_program=decode_program(wire["ci_program"]),
         bench_program=decode_program(wire["bench_program"]),
         tags=tuple(wire.get("tags", ())),
@@ -190,9 +240,13 @@ def encode_array(arr) -> Dict[str, Any]:
             "data": base64.b64encode(a.tobytes()).decode("ascii")}
 
 
+@_wire_guard("array")
 def decode_array(wire: Dict[str, Any]):
     import jax.numpy as jnp
-    a = np.frombuffer(base64.b64decode(wire["data"]),
+    _expect_mapping(wire, "array")
+    # validate=True: reject junk characters instead of silently dropping
+    # them (the default) and decoding a truncated buffer
+    a = np.frombuffer(base64.b64decode(wire["data"], validate=True),
                       dtype=_np_dtype(wire["dtype"]))
     return jnp.asarray(a.reshape(tuple(wire["shape"])))
 
@@ -212,9 +266,12 @@ def encode_verify_slice(items: List[tuple]) -> Dict[str, Any]:
     return {"version": WIRE_VERSION, "entries": entries}
 
 
+@_wire_guard("verify slice")
 def decode_verify_slice(wire: Dict[str, Any]) -> List[tuple]:
+    _expect_mapping(wire, "verify slice")
     items = []
     for e in wire.get("entries", []):
+        _expect_mapping(e, "verify slice entry")
         if e["kind"] == "group":
             value = [(int(p), decode_array(a)) for p, a in e["value"]]
         else:
@@ -234,7 +291,9 @@ def encode_priors(priors) -> Dict[str, Any]:
     return {"version": WIRE_VERSION, "counts": dict(priors or {})}
 
 
+@_wire_guard("priors")
 def decode_priors(wire: Dict[str, Any]):
+    _expect_mapping(wire, "priors")
     if "snapshot" in wire:
         from repro.core.history import PriorSnapshot
         return PriorSnapshot.from_dict(wire["snapshot"])
@@ -258,7 +317,9 @@ def encode_stage_record(record: StageRecord) -> Dict[str, Any]:
     return dataclasses.asdict(record)
 
 
+@_wire_guard("stage record")
 def decode_stage_record(wire: Dict[str, Any]) -> StageRecord:
+    _expect_mapping(wire, "stage record")
     return StageRecord(**wire)
 
 
@@ -298,7 +359,9 @@ def encode_pipeline_result(result: PipelineResult) -> Dict[str, Any]:
     }
 
 
+@_wire_guard("pipeline result")
 def decode_pipeline_result(wire: Dict[str, Any]) -> PipelineResult:
+    _expect_mapping(wire, "pipeline result")
     log = wire.get("transform_log")
     return PipelineResult(
         name=wire["name"],

@@ -224,6 +224,22 @@ class ForgePipeline:
     # the Forge facade sets it, old-style callers leave it None
     on_stage_complete = None
 
+    def stage_hook(self, on_stage=None):
+        """Combine the pipeline-global ``on_stage_complete`` hook with a
+        per-call ``on_stage`` callback (the engine threads one through for
+        per-job event fan-out — e.g. the Forge service's SSE streams). The
+        global hook always fires first; either side may be None."""
+        base = self.on_stage_complete
+        if on_stage is None:
+            return base
+        if base is None:
+            return on_stage
+
+        def both(name, record):
+            base(name, record)
+            on_stage(name, record)
+        return both
+
     # ------------------------------------------------------------------
     def _prepare_ctx(self, name: str, ci_program: KernelProgram,
                      tags, target_dtype: str, rtol: float, atol: float,
@@ -255,7 +271,8 @@ class ForgePipeline:
                  meta: Optional[Dict] = None,
                  priors: Optional[Mapping[str, int]] = None,
                  seed_log: Optional[TransformLog] = None,
-                 session: Optional[VerifySession] = None) -> PipelineResult:
+                 session: Optional[VerifySession] = None,
+                 on_stage=None) -> PipelineResult:
         """Optimize a single kernel job. This is the thin single-job wrapper;
         fleet submission (batching, caching, concurrency) lives in
         ``OptimizationEngine.run_batch``, which funnels back into the same
@@ -265,13 +282,16 @@ class ForgePipeline:
         and falls back to the full search from wherever it diverges.
         ``session`` is the job's verification memo (the engine shares one
         between replay and this fallback); a fresh one is created when the
-        fast path is on and none was supplied."""
+        fast path is on and none was supplied. ``on_stage`` is an optional
+        per-call stage observer fired *in addition to* the pipeline-global
+        hook (see :meth:`stage_hook`)."""
         if session is None:
             session = self.make_verify_session()
         ctx = self._prepare_ctx(name, ci_program, tags, target_dtype,
                                 rtol, atol, meta or {}, session=session)
         original_cost = self.cost_model.program_cost(bench_program)
-        scheduler = self.make_scheduler(priors, session=session)
+        scheduler = self.make_scheduler(priors, session=session,
+                                        on_stage_complete=self.stage_hook(on_stage))
 
         # apply a transfer seed once, up front: apply_seed is deterministic
         # (same programs, same ctx), so re-locating and re-verifying the

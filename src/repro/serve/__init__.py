@@ -1,0 +1,60 @@
+"""Serving layer: the model serve engine and the Forge optimization
+service.
+
+Two related-but-separate subsystems live here:
+
+* :mod:`repro.serve.engine` — the slot-batched model *inference* engine
+  (prompt prefill + greedy decode) used by ``repro.launch.serve``.
+* :mod:`repro.serve.service` / :mod:`repro.serve.http` /
+  :mod:`repro.serve.client` — the hosted *kernel optimization* service:
+  multi-tenant job queue over one :class:`~repro.core.forge.Forge`, an
+  stdlib HTTP front-end with SSE stage streaming, and the Python client.
+  ``python -m repro.serve`` (or the ``forge-serve`` console script) runs
+  the server.
+
+Re-exports resolve lazily so importing the lightweight client never drags
+in the jax-backed inference engine (and vice versa).
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    # model inference engine
+    "Request", "ServeEngine",
+    # optimization service
+    "ForgeService", "ServiceConfig", "ServiceJob",
+    "RateLimited", "ServiceClosed", "QueueFull", "UnknownJob",
+    # HTTP layer
+    "ForgeServiceServer", "ForgeRequestHandler", "serve_forever",
+    # client
+    "ForgeClient", "ServiceError",
+]
+
+_EXPORTS = {
+    "Request": "repro.serve.engine",
+    "ServeEngine": "repro.serve.engine",
+    "ForgeService": "repro.serve.service",
+    "ServiceConfig": "repro.serve.service",
+    "ServiceJob": "repro.serve.service",
+    "RateLimited": "repro.serve.service",
+    "ServiceClosed": "repro.serve.service",
+    "QueueFull": "repro.serve.service",
+    "UnknownJob": "repro.serve.service",
+    "ForgeServiceServer": "repro.serve.http",
+    "ForgeRequestHandler": "repro.serve.http",
+    "serve_forever": "repro.serve.http",
+    "ForgeClient": "repro.serve.client",
+    "ServiceError": "repro.serve.client",
+}
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,96 @@
+"""``python -m repro.serve`` / ``forge-serve``: run the Forge service.
+
+Binds the stdlib HTTP front-end to a fresh :class:`ForgeService` and blocks
+until SIGINT/SIGTERM, then drains (in-queue jobs finish; intake stops)::
+
+    forge-serve --port 8787 --workers 4 --cache-path results/store.json \\
+                --rate-limit 2.0 --burst 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import threading
+
+from repro.core.config import EXECUTION_BACKENDS, ForgeConfig
+from repro.serve.http import ForgeServiceServer
+from repro.serve.service import ForgeService, ServiceConfig
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="forge-serve",
+        description="Hosted Forge kernel-optimization service "
+                    "(stdlib HTTP; see README 'Forge service').")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8787)
+    # optimization policy (forwarded to ForgeConfig)
+    p.add_argument("--spec", default="tpu_v5e", dest="spec_name",
+                   help="hardware spec name (ForgeConfig.spec_name)")
+    p.add_argument("--max-iterations", type=int, default=5)
+    p.add_argument("--workers", type=int, default=1,
+                   help="engine workers per wave")
+    p.add_argument("--backend", default="thread",
+                   choices=sorted(EXECUTION_BACKENDS),
+                   help="engine execution backend")
+    p.add_argument("--cache-path", default=None,
+                   help="persist the shared result store here")
+    # service shape
+    p.add_argument("--wave-size", type=int, default=4,
+                   help="max jobs batched into one engine wave")
+    p.add_argument("--max-queue-depth", type=int, default=1024,
+                   help="queued-job limit (0 = unbounded)")
+    p.add_argument("--rate-limit", type=float, default=0.0,
+                   help="per-client tokens/sec (0 disables rate limiting)")
+    p.add_argument("--burst", type=int, default=8,
+                   help="per-client token-bucket capacity")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress request logging")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    config = ForgeConfig(spec_name=args.spec_name,
+                         max_iterations=args.max_iterations,
+                         workers=args.workers,
+                         execution_backend=args.backend,
+                         cache_path=args.cache_path)
+    service = ForgeService(
+        config,
+        service_config=ServiceConfig(wave_size=args.wave_size,
+                                     max_queue_depth=args.max_queue_depth,
+                                     rate_per_sec=args.rate_limit,
+                                     burst=args.burst))
+    server = ForgeServiceServer((args.host, args.port), service)
+    if not args.quiet:
+        server.request_log = lambda line: print(f"[forge-serve] {line}",
+                                                file=sys.stderr)
+    stop = threading.Event()
+
+    def _on_signal(signum, frame):
+        print(f"[forge-serve] signal {signum}: draining...",
+              file=sys.stderr)
+        stop.set()
+
+    signal.signal(signal.SIGINT, _on_signal)
+    signal.signal(signal.SIGTERM, _on_signal)
+
+    thread = server.serve_background()
+    print(f"[forge-serve] listening on {server.url} "
+          f"(wave_size={args.wave_size}, workers={args.workers}, "
+          f"backend={args.backend})", file=sys.stderr)
+    try:
+        while not stop.is_set():
+            stop.wait(0.5)
+    finally:
+        server.shutdown_all(drain=True)
+        thread.join(timeout=5)
+        print("[forge-serve] drained and stopped", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,204 @@
+"""ForgeClient: the Python client for a running Forge service.
+
+Stdlib ``http.client`` — the client must import cleanly in environments
+that have nothing but Python (the CI gate runs it in a subprocess). The
+high-level call mirrors the local facade::
+
+    client = ForgeClient("http://127.0.0.1:8787", api_key="team-a")
+    report = client.optimize(job)          # submit -> wait -> report dict
+
+and the lower-level pieces (``submit`` / ``status`` / ``wait`` /
+``events``) expose the queue mechanics for tests and dashboards.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import time
+import urllib.parse
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core import job_codec
+from repro.core.engine import KernelJob
+
+__all__ = ["ForgeClient", "ServiceError"]
+
+
+class ServiceError(Exception):
+    """Non-2xx response from the service."""
+
+    def __init__(self, status: int, message: str,
+                 retry_after_s: Optional[float] = None):
+        self.status = status
+        self.retry_after_s = retry_after_s
+        super().__init__(f"HTTP {status}: {message}")
+
+
+class ForgeClient:
+    """Thin HTTP client for the Forge service. One connection per request
+    (the service's SSE responses are close-delimited, so pooling buys
+    nothing at this scale and keeps the client trivially thread-safe)."""
+
+    def __init__(self, base_url: str, api_key: Optional[str] = None,
+                 timeout: float = 60.0):
+        parsed = urllib.parse.urlsplit(base_url)
+        if parsed.scheme != "http":
+            raise ValueError(f"only http:// is supported, got {base_url!r}")
+        self.host = parsed.hostname or "127.0.0.1"
+        self.port = parsed.port or 80
+        self.api_key = api_key
+        self.timeout = timeout
+
+    # -- transport -------------------------------------------------------
+    def _headers(self) -> Dict[str, str]:
+        h = {"Accept": "application/json"}
+        if self.api_key:
+            h["X-API-Key"] = self.api_key
+        return h
+
+    def _request(self, method: str, path: str,
+                 body: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            headers = self._headers()
+            payload = None
+            if body is not None:
+                payload = json.dumps(body).encode("utf-8")
+                headers["Content-Type"] = "application/json"
+            conn.request(method, path, body=payload, headers=headers)
+            resp = conn.getresponse()
+            raw = resp.read()
+            try:
+                data = json.loads(raw) if raw else {}
+            except json.JSONDecodeError:
+                data = {"error": raw.decode("utf-8", "replace")}
+            if resp.status >= 400:
+                retry = resp.headers.get("Retry-After")
+                raise ServiceError(
+                    resp.status, data.get("error", "request failed"),
+                    retry_after_s=float(retry) if retry else None)
+            return data
+        finally:
+            conn.close()
+
+    # -- endpoints -------------------------------------------------------
+    def submit(self, job: KernelJob,
+               priority: Optional[int] = None) -> Dict[str, Any]:
+        """POST the job in wire form; returns the submission receipt
+        (``job_id``, ``state``, ``queue_position``, ``deduped``)."""
+        body: Dict[str, Any] = {"job": job_codec.encode_job(job)}
+        if priority is not None:
+            body["priority"] = priority
+        return self._request("POST", "/v1/jobs", body=body)
+
+    def submit_wire(self, wire: Dict[str, Any],
+                    priority: Optional[int] = None) -> Dict[str, Any]:
+        """POST an already-encoded job payload (malformed-input tests)."""
+        body: Dict[str, Any] = {"job": wire}
+        if priority is not None:
+            body["priority"] = priority
+        return self._request("POST", "/v1/jobs", body=body)
+
+    def status(self, job_id: str) -> Dict[str, Any]:
+        return self._request("GET", f"/v1/jobs/{job_id}")
+
+    def wait(self, job_id: str, timeout: float = 300.0,
+             poll_s: float = 0.2) -> Dict[str, Any]:
+        """Poll until the job is terminal; returns the final status dict
+        (``report`` included on success)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            status = self.status(job_id)
+            if status["state"] in ("done", "failed", "cancelled"):
+                return status
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"job {job_id} still {status['state']!r} "
+                    f"after {timeout}s")
+            time.sleep(poll_s)
+
+    def events(self, job_id: str, timeout: Optional[float] = None
+               ) -> Iterator[Tuple[str, Dict[str, Any]]]:
+        """Stream the job's SSE feed; yields ``(event, data)`` pairs and
+        returns after the terminal ``done`` event."""
+        conn = http.client.HTTPConnection(
+            self.host, self.port,
+            timeout=timeout if timeout is not None else self.timeout)
+        try:
+            conn.request("GET", f"/v1/jobs/{job_id}/events",
+                         headers=self._headers())
+            resp = conn.getresponse()
+            if resp.status >= 400:
+                raw = resp.read()
+                try:
+                    msg = json.loads(raw).get("error", "stream failed")
+                except json.JSONDecodeError:
+                    msg = raw.decode("utf-8", "replace")
+                raise ServiceError(resp.status, msg)
+            event, data_lines = None, []  # type: ignore[var-annotated]
+            for raw_line in resp:
+                line = raw_line.decode("utf-8").rstrip("\n").rstrip("\r")
+                if line.startswith("event:"):
+                    event = line[len("event:"):].strip()
+                elif line.startswith("data:"):
+                    data_lines.append(line[len("data:"):].strip())
+                elif not line and event is not None:
+                    yield event, json.loads("\n".join(data_lines) or "{}")
+                    if event == "done":
+                        return
+                    event, data_lines = None, []
+        finally:
+            conn.close()
+
+    def stats(self) -> Dict[str, Any]:
+        return self._request("GET", "/v1/stats")
+
+    def healthz(self) -> Dict[str, Any]:
+        return self._request("GET", "/v1/healthz")
+
+    def drain(self) -> Dict[str, Any]:
+        """Stop the service's intake (queued jobs still finish)."""
+        return self._request("POST", "/v1/admin/drain")
+
+    # -- high-level ------------------------------------------------------
+    def optimize(self, job: KernelJob, priority: Optional[int] = None,
+                 timeout: float = 300.0) -> Dict[str, Any]:
+        """Submit and block for the result; returns the service-side
+        ``OptimizationReport.as_dict()`` payload. Raises ``RuntimeError``
+        if the job failed server-side."""
+        receipt = self.submit(job, priority=priority)
+        status = self.wait(receipt["job_id"], timeout=timeout)
+        if status["state"] != "done":
+            raise RuntimeError(
+                f"job {receipt['job_id']} ended {status['state']!r}: "
+                f"{status.get('error', 'no detail')}")
+        return status["report"]
+
+    def optimize_many(self, jobs: List[KernelJob],
+                      timeout: float = 600.0) -> List[Dict[str, Any]]:
+        """Submit all jobs up front (so the service can batch/dedup), then
+        collect every report in submission order."""
+        receipts = [self.submit(j) for j in jobs]
+        out = []
+        for r in receipts:
+            status = self.wait(r["job_id"], timeout=timeout)
+            if status["state"] != "done":
+                raise RuntimeError(
+                    f"job {r['job_id']} ended {status['state']!r}: "
+                    f"{status.get('error', 'no detail')}")
+            out.append(status["report"])
+        return out
+
+    def wait_ready(self, timeout: float = 30.0, poll_s: float = 0.2
+                   ) -> Dict[str, Any]:
+        """Block until /v1/healthz answers (server startup handshake)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self.healthz()
+            except (ConnectionError, OSError, ServiceError):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(poll_s)

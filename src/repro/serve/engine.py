@@ -9,8 +9,9 @@ cells rather than this CPU-scale engine.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import List
+from typing import Deque, List
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +39,9 @@ class ServeEngine:
         self.flags = flags
         self.max_len = max_len
         self.slots = slots
-        self.queue: List[Request] = []
+        # deque: wave admission pops from the head (popleft is O(1); the
+        # old list.pop(0) shifted the whole backlog per admitted request)
+        self.queue: Deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos, flags),
@@ -49,7 +52,7 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _run_wave(self):
-        wave = [self.queue.pop(0)
+        wave = [self.queue.popleft()
                 for _ in range(min(self.slots, len(self.queue)))]
         if not wave:
             return

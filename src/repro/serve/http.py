@@ -1,0 +1,233 @@
+"""HTTP front-end for :class:`~repro.serve.service.ForgeService`.
+
+Stdlib-only (``http.server.ThreadingHTTPServer``): one handler thread per
+connection, which is exactly right for this service's scale — the heavy
+work happens on the dispatcher thread, handlers just move JSON and block on
+condition variables. Endpoints:
+
+* ``POST /v1/jobs`` — submit a wire-form kernel job
+  (``{"job": <encode_job(...)>, "priority": int?}``); returns 202 with the
+  job id and queue position. Malformed payloads are 400 with the
+  :class:`WireDecodeError` message; over-budget clients get 429 with
+  ``Retry-After``; a draining service answers 503.
+* ``GET /v1/jobs/{id}`` — status, including the full
+  ``OptimizationReport.as_dict()`` once the job is done.
+* ``GET /v1/jobs/{id}/events`` — Server-Sent-Events stream of the job's
+  stage records (buffered ones replay first), terminated by one ``done``
+  event carrying the final status.
+* ``GET /v1/stats`` — service + engine + verify + store counters.
+* ``GET /v1/healthz`` — liveness (``{"ok": true, ...}``).
+* ``POST /v1/admin/drain`` — stop intake; in-queue jobs still finish.
+
+Clients identify themselves with ``X-API-Key: <token>`` (or
+``Authorization: Bearer <token>``); without one they share the
+``anonymous`` rate bucket.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.job_codec import WireDecodeError
+from repro.serve.service import (DEFAULT_CLIENT, ForgeService, QueueFull,
+                                 RateLimited, ServiceClosed, UnknownJob)
+
+__all__ = ["ForgeServiceServer", "ForgeRequestHandler", "serve_forever"]
+
+_MAX_BODY = 32 * 1024 * 1024    # 32 MiB — wire jobs embed base64 arrays
+
+
+class ForgeRequestHandler(BaseHTTPRequestHandler):
+    """Routes /v1/* onto the owning server's ForgeService."""
+
+    server_version = "forge-serve/1.0"
+    protocol_version = "HTTP/1.1"
+
+    # quiet by default; the server can install a logger
+    def log_message(self, fmt, *args):  # noqa: A003
+        log = getattr(self.server, "request_log", None)
+        if log is not None:
+            log(fmt % args)
+
+    @property
+    def service(self) -> ForgeService:
+        return self.server.service  # type: ignore[attr-defined]
+
+    # -- plumbing --------------------------------------------------------
+    def _client_token(self) -> str:
+        tok = self.headers.get("X-API-Key")
+        if not tok:
+            auth = self.headers.get("Authorization", "")
+            if auth.startswith("Bearer "):
+                tok = auth[len("Bearer "):].strip()
+        return tok or DEFAULT_CLIENT
+
+    def _send_json(self, code: int, payload: Dict[str, Any],
+                   headers: Optional[Dict[str, str]] = None):
+        body = json.dumps(payload).encode("utf-8")
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str,
+               headers: Optional[Dict[str, str]] = None):
+        self._send_json(code, {"error": message}, headers=headers)
+
+    def _read_json(self) -> Dict[str, Any]:
+        length = int(self.headers.get("Content-Length") or 0)
+        if length <= 0:
+            raise WireDecodeError("empty request body")
+        if length > _MAX_BODY:
+            raise WireDecodeError(f"request body exceeds {_MAX_BODY} bytes")
+        raw = self.rfile.read(length)
+        try:
+            payload = json.loads(raw)
+        except json.JSONDecodeError as exc:
+            raise WireDecodeError(f"request body is not JSON: {exc}")
+        if not isinstance(payload, dict):
+            raise WireDecodeError("request body must be a JSON object")
+        return payload
+
+    def _job_route(self) -> Optional[Tuple[str, Optional[str]]]:
+        """Parse ``/v1/jobs/{id}[/events]`` -> (job_id, sub) or None."""
+        parts = [p for p in self.path.split("?", 1)[0].split("/") if p]
+        if len(parts) < 3 or parts[0] != "v1" or parts[1] != "jobs":
+            return None
+        if len(parts) == 3:
+            return parts[2], None
+        if len(parts) == 4:
+            return parts[2], parts[3]
+        return None
+
+    # -- verbs -----------------------------------------------------------
+    def do_GET(self):  # noqa: N802
+        path = self.path.split("?", 1)[0]
+        if path == "/v1/healthz":
+            svc = self.service
+            return self._send_json(200, {
+                "ok": True, "accepting": not svc.draining})
+        if path == "/v1/stats":
+            return self._send_json(200, self.service.stats())
+        route = self._job_route()
+        if route is not None:
+            job_id, sub = route
+            if sub is None:
+                return self._get_job(job_id)
+            if sub == "events":
+                return self._stream_events(job_id)
+        self._error(404, f"no such resource: {path}")
+
+    def do_POST(self):  # noqa: N802
+        path = self.path.split("?", 1)[0]
+        if path == "/v1/jobs":
+            return self._post_job()
+        if path == "/v1/admin/drain":
+            self.service.shutdown_intake()
+            return self._send_json(200, {"accepting": False})
+        self._error(404, f"no such resource: {path}")
+
+    # -- handlers --------------------------------------------------------
+    def _post_job(self):
+        client = self._client_token()
+        try:
+            payload = self._read_json()
+            wire = payload.get("job")
+            if not isinstance(wire, dict):
+                raise WireDecodeError('payload must carry a "job" object '
+                                      "(the encode_job wire form)")
+            priority = payload.get("priority")
+            if priority is not None and not isinstance(priority, int):
+                raise WireDecodeError('"priority" must be an integer')
+            receipt = self.service.submit_wire(wire, client=client,
+                                               priority=priority)
+        except WireDecodeError as exc:
+            return self._error(400, str(exc))
+        except RateLimited as exc:
+            return self._error(
+                429, str(exc),
+                headers={"Retry-After": f"{exc.retry_after_s:.2f}"})
+        except (ServiceClosed, QueueFull) as exc:
+            return self._error(503, str(exc))
+        self._send_json(202, receipt)
+
+    def _get_job(self, job_id: str):
+        try:
+            status = self.service.status(job_id)
+        except UnknownJob:
+            return self._error(404, f"unknown job: {job_id}")
+        self._send_json(200, status)
+
+    def _stream_events(self, job_id: str):
+        try:
+            stream = self.service.events(job_id)
+        except UnknownJob:
+            return self._error(404, f"unknown job: {job_id}")
+        self.send_response(200)
+        self.send_header("Content-Type", "text/event-stream")
+        self.send_header("Cache-Control", "no-cache")
+        # SSE is open-ended: no Content-Length, so close delimits the body
+        self.send_header("Connection", "close")
+        self.end_headers()
+        try:
+            for event, data in stream:
+                chunk = (f"event: {event}\n"
+                         f"data: {json.dumps(data)}\n\n")
+                self.wfile.write(chunk.encode("utf-8"))
+                self.wfile.flush()
+        except (BrokenPipeError, ConnectionResetError):
+            pass    # client hung up mid-stream; nothing to clean up
+        self.close_connection = True
+
+
+class ForgeServiceServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer bound to one ForgeService.
+
+    ``daemon_threads`` so a lingering SSE reader can't block process exit;
+    ``serve/close`` are explicit so callers (CLI, CI gate, tests) control
+    the lifecycle. Known limitation, by design: this is the stdlib server —
+    no TLS, HTTP/1.1 only, thread-per-connection. See ROADMAP ("hosted
+    service" item) for the production-transport follow-ups.
+    """
+
+    daemon_threads = True
+    allow_reuse_address = True
+    request_log = None          # callable(str) or None
+
+    def __init__(self, address: Tuple[str, int], service: ForgeService):
+        super().__init__(address, ForgeRequestHandler)
+        self.service = service
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        return f"http://{host}:{port}"
+
+    def serve_background(self) -> threading.Thread:
+        """Run ``serve_forever`` on a daemon thread; returns the thread."""
+        t = threading.Thread(target=self.serve_forever, daemon=True,
+                             name="forge-serve-http")
+        t.start()
+        return t
+
+    def shutdown_all(self, drain: bool = True):
+        """Stop the HTTP loop, then drain-and-stop the service."""
+        self.shutdown()
+        self.server_close()
+        self.service.shutdown(drain=drain)
+
+
+def serve_forever(service: ForgeService, host: str = "127.0.0.1",
+                  port: int = 8787) -> None:
+    """Blocking convenience runner (the ``__main__`` entry uses it)."""
+    server = ForgeServiceServer((host, port), service)
+    try:
+        server.serve_forever()
+    finally:
+        server.shutdown_all(drain=True)

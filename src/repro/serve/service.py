@@ -1,0 +1,535 @@
+"""ForgeService: the multi-tenant hosted optimization backend.
+
+The engine already speaks every protocol a service needs — a JSON-safe wire
+codec (:mod:`repro.core.job_codec`), typed :class:`OptimizationReport`\\ s,
+per-job stage observers, and in-flight coalescing — but it only runs as a
+script. This module is the long-running layer on top: one
+:class:`ForgeService` owns one :class:`~repro.core.forge.Forge` and turns
+submissions from many clients into engine batches:
+
+* **Priority async job queue** — submissions land in a heap ordered by
+  (priority desc, arrival seq asc); a single dispatcher thread drains it
+  into ``optimize_batch`` waves of up to ``ServiceConfig.wave_size`` jobs.
+  Parallelism *inside* a wave belongs to the engine (``ForgeConfig.workers``
+  + execution backend); keeping one dispatcher keeps every determinism
+  guarantee the engine makes (priors frozen per batch, leader/follower
+  transfer phases) intact for service traffic too.
+
+* **Cross-request dedup by exact cache key** — the engine's ``_inflight``
+  coalescing only spans one batch; the service extends it to service
+  lifetime. A submission whose exact store key matches a queued/running job
+  *attaches* to it: no second engine run, live stage events mirrored as
+  they happen, and an identical per-job report on completion. (A resubmit
+  *after* completion goes to the engine and replays from the shared store —
+  that path is already cheap and keeps reports fresh.)
+
+* **Per-client token-bucket rate limiting** — clients are identified by API
+  token (the HTTP layer reads ``X-API-Key`` / ``Authorization: Bearer``);
+  each token gets a private bucket (``rate_per_sec``, ``burst``) and an
+  over-budget submit raises :class:`RateLimited` (HTTP 429) with a
+  retry-after hint.
+
+* **Shared multi-tenant ResultStore** — all clients optimize through one
+  Forge, so one client's verified optimization warms every later request:
+  an exact resubmit replays, a family neighbor transfers. ``stats()``
+  surfaces the store/engine/verify counters so the warming is observable.
+
+* **Per-job event fan-out** — every job buffers its stage records (the
+  ``on_stage`` plumbing threaded through ``Forge.optimize_batch`` carries
+  the submission index, so two in-flight jobs with the same kernel name
+  can't cross streams). SSE readers replay the buffer, then follow live.
+
+Everything is stdlib; the HTTP layer lives in :mod:`repro.serve.http`.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import heapq
+import threading
+import time
+import traceback
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core import job_codec
+from repro.core.config import ForgeConfig
+from repro.core.engine import KernelJob, compute_job_keys
+from repro.core.forge import Forge, OptimizationReport
+
+__all__ = ["ForgeService", "ServiceConfig", "ServiceJob", "JOB_STATES",
+           "RateLimited", "ServiceClosed", "QueueFull", "UnknownJob",
+           "DEFAULT_CLIENT"]
+
+#: job lifecycle: queued -> running -> done | failed; queued -> cancelled
+JOB_STATES = ("queued", "running", "done", "failed", "cancelled")
+_TERMINAL = ("done", "failed", "cancelled")
+
+DEFAULT_CLIENT = "anonymous"
+
+
+class RateLimited(Exception):
+    """A client exhausted its token bucket; retry after ``retry_after_s``."""
+
+    def __init__(self, client: str, retry_after_s: float):
+        self.client = client
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"client {client!r} is rate-limited; retry in "
+            f"{retry_after_s:.2f}s")
+
+
+class ServiceClosed(Exception):
+    """Submission rejected: the service is draining or shut down."""
+
+
+class QueueFull(Exception):
+    """Submission rejected: the queue is at ``max_queue_depth``."""
+
+
+class UnknownJob(KeyError):
+    """No job with the requested id exists on this service."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service-level knobs (the optimization policy itself lives in
+    :class:`ForgeConfig` — this object only shapes *how requests queue*)."""
+
+    wave_size: int = 4              # max jobs per optimize_batch wave
+    max_queue_depth: int = 1024     # queued (non-attached) jobs; 0 = unbounded
+    rate_per_sec: float = 0.0       # per-client token refill; 0 disables
+    burst: int = 8                  # per-client bucket capacity
+    default_priority: int = 0       # higher drains first; FIFO within a level
+
+    def __post_init__(self):
+        if self.wave_size < 1:
+            raise ValueError("wave_size must be >= 1")
+        if self.max_queue_depth < 0:
+            raise ValueError("max_queue_depth must be >= 0 (0 = unbounded)")
+        if self.rate_per_sec < 0:
+            raise ValueError("rate_per_sec must be >= 0 (0 disables)")
+        if self.burst < 1:
+            raise ValueError("burst must be >= 1")
+
+
+class _TokenBucket:
+    """Classic token bucket; one per client token. Self-locking so refill
+    arithmetic never races between HTTP handler threads."""
+
+    def __init__(self, rate_per_sec: float, burst: int):
+        self.rate = float(rate_per_sec)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t = time.monotonic()
+        self._lock = threading.Lock()
+
+    def try_acquire(self) -> Tuple[bool, float]:
+        """Take one token. Returns ``(ok, retry_after_s)``."""
+        with self._lock:
+            now = time.monotonic()
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self._t) * self.rate)
+            self._t = now
+            if self.tokens >= 1.0:
+                self.tokens -= 1.0
+                return True, 0.0
+            return False, (1.0 - self.tokens) / self.rate
+
+
+class ServiceJob:
+    """One submission's service-side record. All mutable fields are guarded
+    by the service's single condition variable."""
+
+    def __init__(self, job_id: str, job: KernelJob, client: str,
+                 priority: int, exact_key: str,
+                 attached_to: Optional[str] = None):
+        self.id = job_id
+        self.job = job
+        self.client = client
+        self.priority = priority
+        self.exact_key = exact_key
+        self.attached_to = attached_to      # primary job id when deduped
+        self.state = "queued"
+        self.created_s = time.time()
+        self.started_s: Optional[float] = None
+        self.finished_s: Optional[float] = None
+        self.events: List[Dict[str, Any]] = []   # stage records, in order
+        self.report: Optional[Dict[str, Any]] = None
+        self.error: Optional[str] = None
+
+    def status_dict(self, queue_position: Optional[int] = None
+                    ) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "id": self.id,
+            "name": self.job.name,
+            "client": self.client,
+            "state": self.state,
+            "priority": self.priority,
+            "deduped": self.attached_to is not None,
+            "attached_to": self.attached_to,
+            "created_s": self.created_s,
+            "started_s": self.started_s,
+            "finished_s": self.finished_s,
+            "events": len(self.events),
+        }
+        if queue_position is not None:
+            d["queue_position"] = queue_position
+        if self.error is not None:
+            d["error"] = self.error
+        if self.report is not None:
+            d["report"] = self.report
+        return d
+
+
+class ForgeService:
+    """The hosted optimization backend: one Forge, many clients.
+
+    ``start()`` launches the dispatcher thread (``autostart=True`` does it
+    from the constructor); ``shutdown(drain=True)`` stops intake, drains
+    the queue, and closes the Forge. Thread-safe throughout: submissions
+    arrive from HTTP handler threads, events fan out from engine worker
+    threads, SSE readers block on the same condition variable.
+    """
+
+    def __init__(self, config: Optional[ForgeConfig] = None, *,
+                 forge: Optional[Forge] = None,
+                 service_config: Optional[ServiceConfig] = None,
+                 autostart: bool = True):
+        self.forge = forge if forge is not None else Forge(config
+                                                           or ForgeConfig())
+        self.service_config = service_config or ServiceConfig()
+        # ONE lock+condition guards every piece of mutable service state
+        # (job records, queue heap, dedup map, counters). Fan-out and SSE
+        # wake-ups share it too — no lock ordering to get wrong, and at
+        # service scale (handfuls of in-flight jobs) contention is noise.
+        self._cv = threading.Condition()
+        self._jobs: Dict[str, ServiceJob] = {}
+        self._order: List[str] = []               # submission order (stats)
+        self._heap: List[Tuple[int, int, str]] = []   # (-prio, seq, job_id)
+        self._seq = 0
+        self._inflight_keys: Dict[str, str] = {}  # exact key -> primary id
+        self._attached: Dict[str, List[str]] = {}  # primary id -> attached
+        self._buckets: Dict[str, _TokenBucket] = {}
+        self._clients: Dict[str, Dict[str, int]] = {}
+        self._accepting = True
+        self._stopping = False
+        self._started_s = time.time()
+        self._dispatcher: Optional[threading.Thread] = None
+        if autostart:
+            self.start()
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "ForgeService":
+        """Launch the dispatcher thread (idempotent)."""
+        with self._cv:
+            if self._dispatcher is None:
+                self._dispatcher = threading.Thread(
+                    target=self._drain_loop, daemon=True,
+                    name="forge-service-dispatcher")
+                self._dispatcher.start()
+        return self
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Graceful stop: refuse new submissions, then either finish every
+        queued job (``drain=True``) or cancel the queue and only finish the
+        wave already running. Joins the dispatcher and closes the Forge.
+        Idempotent."""
+        with self._cv:
+            self._accepting = False
+            self._stopping = True
+            if not drain:
+                while self._heap:
+                    _, _, jid = heapq.heappop(self._heap)
+                    sj = self._jobs[jid]
+                    if sj.state == "queued":
+                        self._finish_locked(sj, "cancelled",
+                                            error="cancelled at shutdown")
+            self._cv.notify_all()
+        if self._dispatcher is not None:
+            self._dispatcher.join(timeout)
+        self.forge.close()
+
+    def shutdown_intake(self) -> None:
+        """Stop accepting submissions but keep draining what's queued (the
+        ``POST /v1/admin/drain`` semantics — the dispatcher stays alive so
+        SSE streams and ``wait()`` calls still complete)."""
+        with self._cv:
+            self._accepting = False
+            self._cv.notify_all()
+
+    @property
+    def draining(self) -> bool:
+        return not self._accepting
+
+    def __enter__(self) -> "ForgeService":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.shutdown(drain=True)
+
+    # -- submission ------------------------------------------------------
+    def submit_wire(self, wire: Dict[str, Any],
+                    client: str = DEFAULT_CLIENT,
+                    priority: Optional[int] = None) -> Dict[str, Any]:
+        """Submit a wire-form kernel job (the HTTP entry point). Raises
+        :class:`~repro.core.job_codec.WireDecodeError` on a malformed
+        payload — the caller maps it to a 400."""
+        job = job_codec.decode_job(wire)
+        return self.submit_job(job, client=client, priority=priority)
+
+    def submit_job(self, job: KernelJob, client: str = DEFAULT_CLIENT,
+                   priority: Optional[int] = None) -> Dict[str, Any]:
+        """Queue one :class:`KernelJob`; returns the submission receipt
+        (job id, state, queue position, dedup info). Raises
+        :class:`RateLimited` / :class:`ServiceClosed` / :class:`QueueFull`.
+        """
+        client = client or DEFAULT_CLIENT
+        if priority is None:
+            priority = self.service_config.default_priority
+        self._check_rate_limit(client)
+        # exact key outside the lock: fingerprinting walks the graphs
+        keys = compute_job_keys(self.forge.pipeline, job)
+        exact_key = keys[0]
+        with self._cv:
+            if not self._accepting:
+                self._count(client, "rejected")
+                raise ServiceClosed("service is draining; not accepting jobs")
+            self._count(client, "submitted")
+            jid = f"job-{len(self._jobs):06d}"
+            primary_id = self._inflight_keys.get(exact_key)
+            if primary_id is not None:
+                # cross-request dedup: attach to the in-flight primary
+                primary = self._jobs[primary_id]
+                sj = ServiceJob(jid, job, client, priority, exact_key,
+                                attached_to=primary_id)
+                sj.state = primary.state
+                sj.started_s = primary.started_s
+                sj.events = [dict(e) for e in primary.events]
+                self._jobs[jid] = sj
+                self._order.append(jid)
+                self._attached.setdefault(primary_id, []).append(jid)
+                self._count(client, "deduped")
+                self._cv.notify_all()
+                return {"job_id": jid, "state": sj.state, "deduped": True,
+                        "attached_to": primary_id, "queue_position": None}
+            depth = self.service_config.max_queue_depth
+            if depth and len(self._heap) >= depth:
+                self._count(client, "rejected")
+                raise QueueFull(f"queue depth limit {depth} reached")
+            sj = ServiceJob(jid, job, client, priority, exact_key)
+            self._jobs[jid] = sj
+            self._order.append(jid)
+            self._inflight_keys[exact_key] = jid
+            self._seq += 1
+            heapq.heappush(self._heap, (-priority, self._seq, jid))
+            pos = self._queue_position_locked(jid)
+            self._cv.notify_all()
+            return {"job_id": jid, "state": "queued", "deduped": False,
+                    "attached_to": None, "queue_position": pos}
+
+    def _check_rate_limit(self, client: str):
+        cfg = self.service_config
+        if cfg.rate_per_sec <= 0:
+            return
+        with self._cv:
+            bucket = self._buckets.get(client)
+            if bucket is None:
+                bucket = self._buckets[client] = _TokenBucket(
+                    cfg.rate_per_sec, cfg.burst)
+        ok, retry_after = bucket.try_acquire()
+        if not ok:
+            with self._cv:
+                self._count(client, "rate_limited")
+            raise RateLimited(client, retry_after)
+
+    def _count(self, client: str, key: str, n: int = 1):
+        c = self._clients.setdefault(
+            client, {"submitted": 0, "deduped": 0, "rate_limited": 0,
+                     "rejected": 0, "completed": 0, "failed": 0})
+        c[key] += n
+
+    def _queue_position_locked(self, job_id: str) -> Optional[int]:
+        """1-based drain position among queued jobs (heap order)."""
+        entries = [e for e in self._heap
+                   if self._jobs[e[2]].state == "queued"]
+        for pos, (_, _, jid) in enumerate(sorted(entries), start=1):
+            if jid == job_id:
+                return pos
+        return None
+
+    # -- inspection ------------------------------------------------------
+    def status(self, job_id: str) -> Dict[str, Any]:
+        with self._cv:
+            sj = self._jobs.get(job_id)
+            if sj is None:
+                raise UnknownJob(job_id)
+            pos = (self._queue_position_locked(job_id)
+                   if sj.state == "queued" and sj.attached_to is None
+                   else None)
+            return sj.status_dict(queue_position=pos)
+
+    def wait(self, job_id: str,
+             timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Block until the job reaches a terminal state; returns its final
+        status dict. Raises :class:`TimeoutError` on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            if job_id not in self._jobs:
+                raise UnknownJob(job_id)
+            while self._jobs[job_id].state not in _TERMINAL:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"job {job_id} still {self._jobs[job_id].state!r} "
+                        f"after {timeout}s")
+                self._cv.wait(remaining if remaining is not None else 1.0)
+        return self.status(job_id)
+
+    def events(self, job_id: str,
+               poll_s: float = 0.25) -> Iterator[Tuple[str, Dict[str, Any]]]:
+        """Yield ``(event, data)`` pairs for one job: every buffered stage
+        record (so late subscribers replay from the start), then live ones
+        as they land, then exactly one terminal ``("done", status)``.
+
+        :class:`UnknownJob` raises *eagerly* (not on first ``next()``) so
+        the HTTP layer can answer 404 before committing to SSE headers."""
+        with self._cv:
+            if job_id not in self._jobs:
+                raise UnknownJob(job_id)
+        return self._event_stream(job_id, poll_s)
+
+    def _event_stream(self, job_id: str,
+                      poll_s: float) -> Iterator[Tuple[str, Dict[str, Any]]]:
+        cursor = 0
+        while True:
+            with self._cv:
+                sj = self._jobs[job_id]
+                while (cursor >= len(sj.events)
+                       and sj.state not in _TERMINAL):
+                    self._cv.wait(poll_s)
+                pending = [dict(e) for e in sj.events[cursor:]]
+                cursor += len(pending)
+                terminal = (sj.state in _TERMINAL
+                            and cursor >= len(sj.events))
+                final = sj.status_dict() if terminal else None
+            for rec in pending:         # yield outside the lock
+                yield "stage", rec
+            if terminal:
+                yield "done", final
+                return
+
+    def stats(self) -> Dict[str, Any]:
+        """Service + engine + verify + store counters in one JSON-safe view
+        (the ``GET /v1/stats`` payload)."""
+        with self._cv:
+            by_state = {s: 0 for s in JOB_STATES}
+            for sj in self._jobs.values():
+                by_state[sj.state] += 1
+            clients = {c: dict(v) for c, v in self._clients.items()}
+            queue_depth = sum(1 for e in self._heap
+                              if self._jobs[e[2]].state == "queued")
+        engine = self.forge.stats.as_dict()
+        store_entries = len(self.forge.cache)
+        return {
+            "uptime_s": time.time() - self._started_s,
+            "accepting": self._accepting,
+            "queue_depth": queue_depth,
+            "jobs_total": len(self._jobs),
+            "jobs_by_state": by_state,
+            "engine": engine,
+            "verify": self.forge.verify_stats.as_dict(),
+            "store": {
+                "entries": store_entries,
+                "families": len(self.forge.cache.family_sizes()),
+                # replay/transfer hits = requests served warm by earlier
+                # (possibly other-client) submissions — the multi-tenant
+                # warming story in one number
+                "warm_serves": engine["cache_hits"]
+                + engine["family_transfers"],
+            },
+            "clients": clients,
+        }
+
+    # -- dispatcher ------------------------------------------------------
+    def _drain_loop(self):
+        while True:
+            wave = self._next_wave()
+            if wave is None:
+                return
+            if wave:
+                self._run_wave(wave)
+
+    def _next_wave(self) -> Optional[List[ServiceJob]]:
+        """Block for queued jobs; pop up to ``wave_size`` in priority order.
+        Returns None when stopping and nothing is left to drain."""
+        with self._cv:
+            while not self._heap and not self._stopping:
+                self._cv.wait(0.5)
+            if not self._heap:
+                return None          # stopping and drained
+            wave: List[ServiceJob] = []
+            now = time.time()
+            while self._heap and len(wave) < self.service_config.wave_size:
+                _, _, jid = heapq.heappop(self._heap)
+                sj = self._jobs[jid]
+                if sj.state != "queued":
+                    continue
+                sj.state = "running"
+                sj.started_s = now
+                for aid in self._attached.get(jid, ()):
+                    self._jobs[aid].state = "running"
+                    self._jobs[aid].started_s = now
+                wave.append(sj)
+            self._cv.notify_all()
+            return wave
+
+    def _run_wave(self, wave: List[ServiceJob]):
+        jobs = [sj.job for sj in wave]
+
+        def on_stage(idx, job_name, record):
+            rec = dataclasses.asdict(record)
+            with self._cv:
+                sinks = [wave[idx]]
+                sinks += [self._jobs[a]
+                          for a in self._attached.get(wave[idx].id, ())]
+                for sink in sinks:
+                    sink.events.append(dict(rec))
+                self._cv.notify_all()
+
+        try:
+            report = self.forge.optimize_batch(jobs, on_stage=on_stage)
+        except Exception:   # noqa: BLE001 — a wave failure must not kill
+            tb = traceback.format_exc()     # the dispatcher
+            with self._cv:
+                for sj in wave:
+                    self._finish_locked(sj, "failed", error=tb)
+                self._cv.notify_all()
+            return
+        with self._cv:
+            for sj, eres in zip(wave, report.results):
+                per_job = OptimizationReport.from_result(
+                    eres, self.forge.config).as_dict()
+                self._finish_locked(sj, "done", report=per_job)
+            self._cv.notify_all()
+
+    def _finish_locked(self, sj: ServiceJob, state: str,
+                       report: Optional[Dict[str, Any]] = None,
+                       error: Optional[str] = None):
+        """Move a primary job (and everything attached to it) to a terminal
+        state. Attached jobs get a deep copy of the report — identical
+        content, no shared mutable aliasing between tenants."""
+        now = time.time()
+        stat = "completed" if state == "done" else "failed"
+        for target in [sj] + [self._jobs[a]
+                              for a in self._attached.pop(sj.id, ())]:
+            target.state = state
+            target.finished_s = now
+            target.error = error
+            target.report = (None if report is None
+                             else copy.deepcopy(report))
+            if state != "cancelled":
+                self._count(target.client, stat)
+        self._inflight_keys.pop(sj.exact_key, None)

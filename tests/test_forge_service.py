@@ -1,0 +1,350 @@
+"""Forge service: queue priority, cross-request dedup, per-client rate
+limiting, SSE stage streaming, wire hardening (400s), and graceful drain.
+
+The module-scoped server runs one real optimization over HTTP and the
+byte-equivalence test compares its report against a direct
+``Forge.optimize`` call with the same config — the service must be a
+transparent remote facade, not a lossy summary of one.
+"""
+
+import json
+import threading
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.core.job_codec import WireDecodeError, decode_job, encode_job
+from repro.forge import Forge, ForgeConfig, KernelJob
+from repro.serve import (ForgeClient, ForgeService, ForgeServiceServer,
+                         QueueFull, RateLimited, ServiceClosed,
+                         ServiceConfig, ServiceError, UnknownJob)
+
+SPECS = {s.name: s for s in load_specs()}
+
+# cheap policy for service tests: one CoVeR iteration per stage — the
+# service semantics under test are independent of search depth
+CONFIG = ForgeConfig(max_iterations=1)
+
+
+def _job(name):
+    s = SPECS[name]
+    return KernelJob(s.name,
+                     build_program(s.builder, s.dims("ci"), "naive",
+                                   meta=s.meta),
+                     build_program(s.builder, s.dims("bench"), "naive",
+                                   meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+_NAMES = sorted(SPECS)
+
+
+def _canon(payload):
+    return json.dumps(payload, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# module server: one kernel submitted twice (dedup) + the direct reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def served():
+    service = ForgeService(CONFIG,
+                           service_config=ServiceConfig(wave_size=2))
+    server = ForgeServiceServer(("127.0.0.1", 0), service)
+    server.serve_background()
+    client = ForgeClient(server.url, api_key="tenant-a")
+    client.wait_ready(timeout=30)
+    r1 = client.submit(_job(_NAMES[0]))
+    r2 = client.submit(_job(_NAMES[0]))      # exact duplicate, in flight
+    s1 = client.wait(r1["job_id"], timeout=300)
+    s2 = client.wait(r2["job_id"], timeout=300)
+    yield {"service": service, "server": server, "client": client,
+           "receipts": (r1, r2), "statuses": (s1, s2)}
+    server.shutdown_all(drain=True)
+
+
+def test_submit_receipt_shape(served):
+    r1, r2 = served["receipts"]
+    assert r1["deduped"] is False and r1["queue_position"] == 1
+    assert r1["job_id"] != r2["job_id"]
+
+
+def test_cross_request_dedup_attaches_and_runs_engine_once(served):
+    r1, r2 = served["receipts"]
+    s1, s2 = served["statuses"]
+    # the second submit attached to the first job instead of queueing
+    assert r2["deduped"] is True and r2["attached_to"] == r1["job_id"]
+    assert s2["deduped"] is True
+    # proven by engine stats: ONE engine execution served both requests
+    assert served["service"].forge.stats.jobs == 1
+    # ...and both clients got identical reports
+    assert _canon(s1["report"]) == _canon(s2["report"])
+
+
+def test_report_byte_equivalent_to_direct_forge(served):
+    s1, _ = served["statuses"]
+    with Forge(CONFIG) as forge:
+        direct = forge.optimize(_job(_NAMES[0])).as_dict()
+    assert _canon(s1["report"]) == _canon(direct)
+
+
+def test_sse_event_count_matches_stage_records(served):
+    r1, r2 = served["receipts"]
+    s1, _ = served["statuses"]
+    stage_dicts = s1["report"]["jobs"][0]["stages"]
+    assert stage_dicts, "expected at least one stage record"
+    for rid in (r1["job_id"], r2["job_id"]):    # attached job mirrors too
+        events = list(served["client"].events(rid))
+        stages = [d for e, d in events if e == "stage"]
+        assert len(stages) == len(stage_dicts)
+        assert stages == stage_dicts            # same records, same order
+        assert events[-1][0] == "done"
+        assert events[-1][1]["state"] == "done"
+
+
+def test_status_includes_queue_metadata(served):
+    s1, _ = served["statuses"]
+    assert s1["state"] == "done"
+    assert s1["name"] == _NAMES[0]
+    assert s1["client"] == "tenant-a"
+    assert s1["events"] == len(s1["report"]["jobs"][0]["stages"])
+
+
+def test_stats_endpoint_shows_multitenant_counters(served):
+    stats = served["client"].stats()
+    assert stats["engine"]["jobs"] == 1
+    assert stats["jobs_by_state"]["done"] == 2
+    c = stats["clients"]["tenant-a"]
+    assert c["submitted"] == 2 and c["deduped"] == 1 and c["completed"] == 2
+    assert stats["store"]["entries"] == 1
+    assert stats["accepting"] is True
+
+
+def test_healthz(served):
+    assert served["client"].healthz() == {"ok": True, "accepting": True}
+
+
+def test_unknown_job_404(served):
+    with pytest.raises(ServiceError) as ei:
+        served["client"].status("job-999999")
+    assert ei.value.status == 404
+    with pytest.raises(ServiceError) as ei:
+        list(served["client"].events("job-999999"))
+    assert ei.value.status == 404
+
+
+def test_unknown_route_404(served):
+    with pytest.raises(ServiceError) as ei:
+        served["client"]._request("GET", "/v2/nope")
+    assert ei.value.status == 404
+
+
+# ---------------------------------------------------------------------------
+# wire hardening: malformed payloads are 400s, never stack traces
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def paused():
+    """Server whose dispatcher never starts: queue/reject semantics only,
+    zero optimization cost."""
+    service = ForgeService(
+        CONFIG, autostart=False,
+        service_config=ServiceConfig(rate_per_sec=0.2, burst=1,
+                                     max_queue_depth=4))
+    server = ForgeServiceServer(("127.0.0.1", 0), service)
+    server.serve_background()
+    yield ForgeClient(server.url)
+    server.shutdown()
+    server.server_close()
+    service.forge.close()
+
+
+@pytest.mark.parametrize("wire", [
+    {},                                           # missing everything
+    {"name": "x"},                                # no programs
+    {"name": "x", "ci_program": 7, "bench_program": 7},   # wrong types
+    {"name": "x", "ci_program": {"graph": {"nodes": "nope"}},
+     "bench_program": {}},                        # nodes not a list
+])
+def test_malformed_job_wire_is_400(paused, wire):
+    with pytest.raises(ServiceError) as ei:
+        paused.submit_wire(wire)
+    assert ei.value.status == 400
+    assert "malformed" in str(ei.value) or "wire" in str(ei.value)
+
+
+def test_malformed_envelope_is_400(paused):
+    for body in [None, {"nope": 1}, {"job": "not-a-dict"},
+                 {"job": encode_job(_job(_NAMES[1])), "priority": "high"}]:
+        with pytest.raises(ServiceError) as ei:
+            paused._request("POST", "/v1/jobs", body=body)
+        assert ei.value.status == 400
+
+
+def test_decode_errors_are_typed():
+    # the codec satellite: every malformed decode is WireDecodeError (a
+    # ValueError), never a raw KeyError/TypeError leaking wire internals
+    for wire in [{}, {"name": 1, "ci_program": [], "bench_program": {}},
+                 {"name": "x", "ci_program": {"graph": {"nodes": [42]}},
+                  "bench_program": {}}]:
+        with pytest.raises(WireDecodeError) as ei:
+            decode_job(wire)
+        assert isinstance(ei.value, ValueError)
+        assert "malformed" in str(ei.value)
+
+
+def test_wire_roundtrip_still_exact():
+    job = _job(_NAMES[1])
+    again = decode_job(encode_job(job))
+    assert encode_job(again) == encode_job(job)
+
+
+# ---------------------------------------------------------------------------
+# rate limiting
+# ---------------------------------------------------------------------------
+
+
+def test_rate_limit_429_with_retry_after(paused):
+    wire = encode_job(_job(_NAMES[1]))
+    ok = paused._request("POST", "/v1/jobs",
+                         body={"job": wire})            # anonymous bucket
+    assert ok["state"] == "queued"
+    limited = ForgeClient(f"http://{paused.host}:{paused.port}",
+                          api_key="tenant-burst1")
+    limited.submit_wire(wire)                           # burst=1: takes it
+    with pytest.raises(ServiceError) as ei:
+        limited.submit_wire(wire)
+    assert ei.value.status == 429
+    assert ei.value.retry_after_s and ei.value.retry_after_s > 0
+    # buckets are per client token: a different tenant still gets through
+    other = ForgeClient(f"http://{paused.host}:{paused.port}",
+                        api_key="tenant-fresh")
+    assert other.submit_wire(wire)["job_id"]
+
+
+def test_queue_full_rejects_but_duplicates_attach():
+    svc = ForgeService(CONFIG, autostart=False,
+                       service_config=ServiceConfig(max_queue_depth=1))
+    try:
+        svc.submit_job(_job(_NAMES[2]))
+        with pytest.raises(QueueFull):
+            svc.submit_job(_job(_NAMES[3]))
+        # a duplicate of an in-flight job attaches even when the queue is
+        # full — attaching adds no engine work
+        receipt = svc.submit_job(_job(_NAMES[2]))
+        assert receipt["deduped"] is True
+    finally:
+        svc.forge.close()
+
+
+# ---------------------------------------------------------------------------
+# priority queue + graceful shutdown (in-process: queue mechanics only)
+# ---------------------------------------------------------------------------
+
+
+def test_priority_ordering_drains_high_first():
+    svc = ForgeService(CONFIG, autostart=False,
+                       service_config=ServiceConfig(wave_size=1))
+    low = svc.submit_job(_job(_NAMES[0]), priority=0)
+    high = svc.submit_job(_job(_NAMES[1]), priority=5)
+    mid = svc.submit_job(_job(_NAMES[2]), priority=5)
+    assert svc.status(high["job_id"])["queue_position"] == 1
+    assert svc.status(mid["job_id"])["queue_position"] == 2   # FIFO tie
+    assert svc.status(low["job_id"])["queue_position"] == 3
+    svc.start()
+    done = {jid: svc.wait(jid, timeout=300)
+            for jid in (low["job_id"], high["job_id"], mid["job_id"])}
+    assert all(d["state"] == "done" for d in done.values())
+    starts = {jid: d["started_s"] for jid, d in done.items()}
+    # wave_size=1: strictly sequential waves, so start times order the
+    # actual dispatch — high priority first, FIFO within a level, low last
+    assert starts[high["job_id"]] < starts[mid["job_id"]]
+    assert starts[mid["job_id"]] < starts[low["job_id"]]
+    svc.shutdown(drain=True)
+
+
+def test_graceful_shutdown_drains_queue():
+    svc = ForgeService(CONFIG, autostart=False,
+                       service_config=ServiceConfig(wave_size=2))
+    receipt = svc.submit_job(_job(_NAMES[3]))
+    svc.start()
+    svc.shutdown(drain=True)        # blocks until the queue is empty
+    status = svc.status(receipt["job_id"])
+    assert status["state"] == "done"
+    assert status["report"]["jobs"][0]["name"] == _NAMES[3]
+    with pytest.raises(ServiceClosed):
+        svc.submit_job(_job(_NAMES[3]))
+
+
+def test_shutdown_without_drain_cancels_queued():
+    svc = ForgeService(CONFIG, autostart=False)
+    receipt = svc.submit_job(_job(_NAMES[4]))
+    svc.shutdown(drain=False)
+    assert svc.status(receipt["job_id"])["state"] == "cancelled"
+
+
+def test_wait_unknown_and_timeout():
+    svc = ForgeService(CONFIG, autostart=False)
+    with pytest.raises(UnknownJob):
+        svc.wait("job-404")
+    receipt = svc.submit_job(_job(_NAMES[4]))
+    with pytest.raises(TimeoutError):
+        svc.wait(receipt["job_id"], timeout=0.05)   # dispatcher is off
+    svc.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# package surface + config validation
+# ---------------------------------------------------------------------------
+
+
+def test_serve_package_reexports():
+    import repro.serve as serve
+    for name in ("ForgeService", "ServiceConfig", "ForgeClient",
+                 "ForgeServiceServer", "RateLimited", "ServiceClosed",
+                 "QueueFull", "UnknownJob", "ServiceError", "Request",
+                 "ServeEngine"):
+        assert name in serve.__all__
+        assert getattr(serve, name) is not None
+
+
+def test_serve_engine_queue_is_deque():
+    import collections
+    import inspect
+
+    from repro.serve import engine
+    # the admission queue satellite: deque + popleft, not list.pop(0)
+    src = inspect.getsource(engine.ServeEngine)
+    assert "collections.deque()" in src
+    assert "self.queue.popleft()" in src
+    assert "self.queue.pop(0)" not in src
+    assert engine.collections is collections
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(wave_size=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(rate_per_sec=-1)
+    with pytest.raises(ValueError):
+        ServiceConfig(burst=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_queue_depth=-1)
+
+
+def test_rate_limited_exception_carries_retry_hint():
+    svc = ForgeService(CONFIG, autostart=False,
+                       service_config=ServiceConfig(rate_per_sec=0.1,
+                                                    burst=1))
+    svc.submit_job(_job(_NAMES[5]), client="t")
+    with pytest.raises(RateLimited) as ei:
+        svc.submit_job(_job(_NAMES[5]), client="t")
+    assert ei.value.client == "t"
+    assert 0 < ei.value.retry_after_s <= 10.0
+    stats = svc.stats()
+    assert stats["clients"]["t"]["rate_limited"] == 1
+    svc.shutdown(drain=False)
