@@ -1,5 +1,6 @@
 #!/usr/bin/env python
-"""CI gate: serial / thread / process backends must be result-equivalent.
+"""CI gate: serial / thread / process / remote backends must be
+result-equivalent.
 
 Runs a small fixed job set (one per structural family, plus a family twin so
 the in-batch transfer path is exercised) through two rounds per backend —
@@ -14,6 +15,11 @@ candidate ordering.
 
     PYTHONPATH=src python scripts/backend_equivalence.py [--workers N]
                                                          [--backends a,b,c]
+
+``--backends serial,remote`` spins up a loopback distributed fleet
+(``--workers`` forge-worker processes against an ephemeral coordinator
+port) and proves the remote backend produces the same bytes as serial —
+the ``remote-equivalence`` gate in ``scripts/ci.sh``.
 """
 
 from __future__ import annotations

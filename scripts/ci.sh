@@ -21,6 +21,8 @@
 #                        dedup, SSE stage events, and a graceful drain
 #   backend-equivalence  serial / thread / process engines must produce
 #                        identical per-kernel TransformLogs and speedups
+#   remote-equivalence   the same harness over a 2-worker loopback
+#                        distributed fleet: serial == remote, byte for byte
 #   pipeline-throughput  the verification fast path must keep a >=1.5x
 #                        end-to-end speedup over the uncached cascade with
 #                        bit-identical results, and cross-job sharing must
@@ -153,6 +155,15 @@ run_gate forge-service \
 run_gate backend-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python scripts/backend_equivalence.py --workers 2 || exit
+
+# Distributed-fleet gate: the same equivalence harness against a loopback
+# 2-worker fleet (coordinator on an ephemeral port, forge-worker processes
+# handshaking over the versioned wire protocol) — serial == remote on
+# both the cold and warm-prior rounds, byte for byte.
+run_gate remote-equivalence \
+  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python scripts/backend_equivalence.py --workers 2 \
+    --backends serial,remote || exit
 
 # Verification fast-path gate, three scenarios (writes BENCH_pipeline.json,
 # uploaded as a CI artifact): the memoized verify + cost-screened dispatch

@@ -14,7 +14,12 @@ from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
                                OptimizationEngine, VerifyStats)
-from repro.core.forge import Forge, ForgeObserver, OptimizationReport
+from repro.core.forge import Forge, OptimizationReport
+from repro.core.job_codec import (SUPPORTED_WIRE_VERSIONS, WIRE_VERSION,
+                                  WireDecodeError, WireVersionError)
+from repro.core.observers import (CallbackObserver, FanOutObserver,
+                                  ForgeObserver, JobEvent, StageEvent,
+                                  TransferEvent, as_observer)
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.issues import Issue, ISSUE_TO_STAGE, register_issue_type
 from repro.core.pipeline import ForgePipeline, PipelineResult, StageRecord
@@ -41,6 +46,10 @@ __all__ = [
     "ResultCache", "ResultStore", "StageScheduler", "TransformLog",
     "TransformStep",
     "Forge", "ForgeConfig", "ForgeObserver", "OptimizationReport",
+    "StageEvent", "JobEvent", "TransferEvent", "CallbackObserver",
+    "FanOutObserver", "as_observer",
+    "WIRE_VERSION", "SUPPORTED_WIRE_VERSIONS", "WireDecodeError",
+    "WireVersionError",
     "EXECUTION_BACKENDS", "PRIOR_POLICIES",
     "History", "PatternStats", "PriorSnapshot",
     "encode_job", "decode_job", "encode_program", "decode_program",

@@ -33,7 +33,7 @@ __all__ = ["ForgeConfig", "EXECUTION_BACKENDS", "VERIFY_FASTPATH_MODES",
 
 # where the engine runs jobs; validated here so a typo'd backend fails at
 # config construction, not deep inside a batch
-EXECUTION_BACKENDS = ("serial", "thread", "process")
+EXECUTION_BACKENDS = ("serial", "thread", "process", "remote")
 
 # how the verifier runs: "off" = the uncached reference cascade, "on" =
 # memoized incremental verify + cost-first screening, "check" = memoized and
@@ -155,6 +155,26 @@ class ForgeConfig:
     # reorders *where* an execution happens, never its result
     batch_exec_planning: bool = _operational(default=True)
 
+    # -- distributed fleet knobs (execution_backend="remote") ----------
+    # All operational: they shape where and how the fleet runs, never what
+    # a job produces (the remote backend is result-equivalent by the same
+    # contract as thread/process — gated by scripts/backend_equivalence.py).
+    # "host:port" the FleetCoordinator binds for worker connections; None
+    # binds 127.0.0.1 on an ephemeral port (loopback fleet). Port 0 asks
+    # the OS for a free port; read the resolved one off the coordinator.
+    fleet_address: Optional[str] = _operational(default=None)
+    # local `forge-worker` processes the coordinator spawns against its own
+    # address: None spawns `workers` of them (self-contained loopback
+    # fleet), 0 spawns none (external workers connect on their own — the
+    # multi-host topology), N spawns exactly N alongside any external ones
+    fleet_spawn_workers: Optional[int] = _operational(default=None)
+    # how long dispatch waits for the first worker to join before failing
+    fleet_connect_timeout_s: float = _operational(default=60.0)
+    # coordinator ping cadence; a worker silent for fleet_heartbeat_timeout_s
+    # is declared lost and its in-flight job is re-dispatched
+    fleet_heartbeat_s: float = _operational(default=2.0)
+    fleet_heartbeat_timeout_s: float = _operational(default=10.0)
+
     def __post_init__(self):
         if self.max_iterations < 1:
             raise ValueError("max_iterations must be >= 1")
@@ -179,6 +199,20 @@ class ForgeConfig:
         if self.shared_verify_cache_bytes < 0:
             raise ValueError("shared_verify_cache_bytes must be >= 0 "
                              "(0 disables cross-job sharing)")
+        if self.fleet_spawn_workers is not None and self.fleet_spawn_workers < 0:
+            raise ValueError("fleet_spawn_workers must be >= 0 "
+                             "(None spawns `workers` loopback processes)")
+        if self.fleet_connect_timeout_s <= 0:
+            raise ValueError("fleet_connect_timeout_s must be > 0")
+        if self.fleet_heartbeat_s <= 0:
+            raise ValueError("fleet_heartbeat_s must be > 0")
+        if self.fleet_heartbeat_timeout_s < self.fleet_heartbeat_s:
+            raise ValueError("fleet_heartbeat_timeout_s must be >= "
+                             "fleet_heartbeat_s")
+        if self.fleet_address is not None:
+            object.__setattr__(self, "fleet_address", str(self.fleet_address))
+            from repro.core.remote import parse_address
+            parse_address(self.fleet_address)  # fail fast on a bad address
         if self.stages_enabled is not None:
             # normalize list -> tuple so the config stays hashable/picklable
             object.__setattr__(self, "stages_enabled",

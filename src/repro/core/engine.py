@@ -18,8 +18,13 @@ The :class:`OptimizationEngine` fixes both axes:
     built from the picklable :class:`ForgeConfig`; jobs travel as the
     :mod:`repro.core.job_codec` wire form and results/observer events stream
     back through a results queue.
+  - ``remote`` — the same tagged worker protocol over TCP
+    (:mod:`repro.core.fleet`): a ``FleetCoordinator`` dispatches to N
+    ``forge-worker`` processes — loopback-spawned or connected from other
+    hosts — with heartbeat loss detection and automatic re-dispatch of
+    in-flight jobs.
 
-  All three are **result-equivalent**: cache keys, transform logs, and
+  All four are **result-equivalent**: cache keys, transform logs, and
   optimized schedules are identical whichever backend ran a batch (results
   always come back in submission order, priors are frozen once per batch and
   transfer seeds once per phase). ``scripts/backend_equivalence.py`` gates
@@ -65,6 +70,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 from repro.core import job_codec
 from repro.core.config import EXECUTION_BACKENDS
+from repro.core.observers import (JobEvent, StageEvent, TransferEvent,
+                                  as_observer)
 from repro.core.pipeline import ForgePipeline, PipelineResult, prepare_oracle
 from repro.core.result_store import ResultCache, ResultStore
 from repro.core.stage_scheduler import TransformLog
@@ -78,7 +85,8 @@ from repro.ir.schedule import KernelProgram
 
 __all__ = ["KernelJob", "EngineResult", "EngineStats", "VerifyStats",
            "OptimizationEngine", "ResultCache", "ResultStore", "execute_job",
-           "replay_entry", "entry_for_result", "compute_job_keys"]
+           "replay_entry", "entry_for_result", "compute_job_keys",
+           "fold_worker_result"]
 
 
 @dataclasses.dataclass
@@ -342,6 +350,35 @@ def execute_job(pipeline: ForgePipeline, job: KernelJob,
     return result, outcome
 
 
+def fold_worker_result(engine: "OptimizationEngine", job: KernelJob,
+                       keys: tuple, payload: Mapping[str, Any],
+                       notify=None) -> EngineResult:
+    """Fold one worker's result payload (``{"result", "entry", "outcome",
+    "history"}`` — the wire shape both process and remote workers return)
+    into the parent engine: store the entry, apply the outcome to the
+    stats, decode the result, and notify. The caller merges the history
+    delta (in submission order, after its whole wave lands). Shared by
+    the process and remote executors so the two transports cannot drift
+    in how results are merged — the parent stays the single owner of
+    store/stats/history on every backend."""
+    exact_key, family_key = keys[0], keys[1]
+    outcome = payload["outcome"]
+    if payload["entry"] is not None:
+        engine.cache.put(exact_key, payload["entry"], family=family_key,
+                         flush=False, ladder=keys[2], dims=keys[3])
+    engine._apply_outcome(outcome)
+    result = job_codec.decode_pipeline_result(payload["result"])
+    eres = EngineResult(job, result, exact_key,
+                        cache_hit=outcome["cache_hit"],
+                        transfer=outcome["transferred"],
+                        seed_steps=result.seed_steps_applied,
+                        replay_fallback=outcome["replay_fallback"],
+                        had_seed=outcome["had_seed"],
+                        verify=outcome.get("verify"))
+    engine._notify_result(eres, notify)
+    return eres
+
+
 # ----------------------------------------------------------------------
 # Execution backends. Each runs one scheduling *phase* (the engine's
 # leader/follower split) and writes EngineResults into ``results`` at the
@@ -360,14 +397,15 @@ class SerialExecutor:
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None, on_stage=None):
+                  plan=None, on_stage=None, notify=None):
         # plan is unused in-process: jobs read the engine-owned shared
         # cache directly, which the planner already pre-populated
         for i in phase:
             results[i] = self.engine._run_job(jobs[i], keys[i], priors,
                                               seeds.get(i, ()),
                                               on_stage=_index_stage_hook(
-                                                  on_stage, i))
+                                                  on_stage, i),
+                                              notify=notify)
 
     def end_batch(self):
         pass
@@ -404,7 +442,7 @@ class ThreadExecutor:
         return [compute_job_keys(self.engine.pipeline, job) for job in jobs]
 
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None, on_stage=None):
+                  plan=None, on_stage=None, notify=None):
         # plan unused here too — threads share the live engine-owned cache
         engine = self.engine
         if engine.workers <= 1 or len(phase) <= 1:
@@ -412,12 +450,14 @@ class ThreadExecutor:
                 results[i] = engine._run_job(jobs[i], keys[i], priors,
                                              seeds.get(i, ()),
                                              on_stage=_index_stage_hook(
-                                                 on_stage, i))
+                                                 on_stage, i),
+                                             notify=notify)
             return
         with ThreadPoolExecutor(max_workers=engine.workers) as pool:
             futures = [(i, pool.submit(engine._run_job, jobs[i], keys[i],
                                        priors, seeds.get(i, ()),
-                                       _index_stage_hook(on_stage, i)))
+                                       _index_stage_hook(on_stage, i),
+                                       notify))
                        for i in phase]
             for i, f in futures:
                 results[i] = f.result()
@@ -597,7 +637,7 @@ class ProcessExecutor:
 
     # ------------------------------------------------------------------
     def run_phase(self, jobs, phase, keys, priors, seeds, results,
-                  plan=None, on_stage=None):
+                  plan=None, on_stage=None, notify=None):
         with self._phase_lock:
             try:
                 self._ensure_pool()
@@ -614,7 +654,8 @@ class ProcessExecutor:
                 for wave in waves:
                     if wave:
                         self._run_wave(jobs, wave, keys, priors, seeds,
-                                       results, plan, on_stage=on_stage)
+                                       results, plan, on_stage=on_stage,
+                                       notify=notify)
             except Exception:
                 # anything unexpected (a raising observer, a decode error, a
                 # dead worker) leaves undispatched tasks / undrained events
@@ -624,7 +665,7 @@ class ProcessExecutor:
                 raise
 
     def _run_wave(self, jobs, wave, keys, priors, seeds, results, plan=None,
-                  on_stage=None):
+                  on_stage=None, notify=None):
         engine = self.engine
         wires = (self._wires[1] if self._wires
                  and self._wires[0] == id(jobs) else None)
@@ -663,26 +704,10 @@ class ProcessExecutor:
                         on_stage(idx, job_name, decoded)
             elif kind == "result":
                 _, idx, payload = event
-                exact_key, family_key = keys[idx][0], keys[idx][1]
-                outcome = payload["outcome"]
-                if payload["entry"] is not None:
-                    engine.cache.put(exact_key, payload["entry"],
-                                     family=family_key, flush=False,
-                                     ladder=keys[idx][2], dims=keys[idx][3])
-                engine._apply_outcome(outcome)
-                result = job_codec.decode_pipeline_result(payload["result"])
-                eres = EngineResult(pending.pop(idx), result, exact_key,
-                                    cache_hit=outcome["cache_hit"],
-                                    transfer=outcome["transferred"],
-                                    seed_steps=result.seed_steps_applied,
-                                    replay_fallback=outcome["replay_fallback"],
-                                    had_seed=outcome["had_seed"],
-                                    verify=outcome.get("verify"))
+                eres = fold_worker_result(engine, pending.pop(idx),
+                                          keys[idx], payload, notify=notify)
                 history_records[idx] = payload["history"]
                 results[idx] = eres
-                if engine.on_result is not None:
-                    with engine._notify_lock:
-                        engine.on_result(eres)
             else:  # "error"
                 _, idx, tb = event
                 raise RuntimeError(
@@ -748,10 +773,20 @@ class _RecordingSharedCache:
         return ok
 
 
+def _remote_executor(engine: "OptimizationEngine"):
+    """Lazy factory for the distributed-fleet executor. The fleet module
+    imports this one (for the worker protocol pieces), so registering the
+    class directly would be an import cycle; a runtime import is also what
+    keeps the socket stack out of every non-remote process."""
+    from repro.core.fleet import RemoteExecutor
+    return RemoteExecutor(engine)
+
+
 _EXECUTORS = {
     "serial": SerialExecutor,
     "thread": ThreadExecutor,
     "process": ProcessExecutor,
+    "remote": _remote_executor,
 }
 
 # single source of truth: ForgeConfig validates execution_backend against
@@ -778,7 +813,8 @@ class OptimizationEngine:
                  cache_max_entries: Optional[int] = None,
                  backend: Optional[str] = None,
                  config=None,
-                 on_result=None):
+                 on_result=None,
+                 observer=None):
         # explicit kwargs always win; config fills what was left unset
         if config is not None:
             pipeline = pipeline or ForgePipeline.from_config(config)
@@ -811,6 +847,11 @@ class OptimizationEngine:
         # observer hook: called with each EngineResult as it completes
         # (serialized under a lock — observers need not be thread-safe)
         self.on_result = on_result
+        # unified observer (core.observers.ForgeObserver or any legacy
+        # object — as_observer adapts both): receives StageEvent/JobEvent/
+        # TransferEvent for every batch this engine runs, serialized under
+        # the notify lock
+        self.observer = as_observer(observer)
         self._notify_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         # per-key in-flight locks: duplicate jobs submitted in one batch
@@ -857,17 +898,22 @@ class OptimizationEngine:
         return self.run_batch([job])[0]
 
     def run_batch(self, jobs: Sequence[KernelJob],
-                  on_stage=None) -> List[EngineResult]:
+                  on_stage=None, observer=None) -> List[EngineResult]:
         """Optimize a batch. Results come back in submission order.
 
-        ``on_stage`` is an optional per-batch stage observer called as
-        ``on_stage(index, job_name, record)`` with the job's *submission
-        index* — unlike the pipeline-global hook (which only carries the job
-        name), this identifies the exact submission even when two jobs in
-        the batch share a name, which is what per-request event fan-out
-        (the Forge service's SSE streams) needs. It fires on every backend;
-        on the process backend the events are the ones streamed back from
-        the workers. It is called from worker threads, unserialized — the
+        ``observer`` is an optional per-batch :class:`~repro.core.observers
+        .ForgeObserver` (or any legacy observer object — it is adapted via
+        ``as_observer``): it receives every ``StageEvent`` (with the job's
+        *submission index*), every ``JobEvent``, and ``TransferEvent``s for
+        this batch, serialized under the engine's notify lock alongside the
+        engine-level observer. This is the one observer surface new code
+        should use.
+
+        ``on_stage`` is the deprecated loose-callback form of the same
+        thing, called as ``on_stage(index, job_name, record)`` with the
+        job's submission index. It fires on every backend; on the process
+        and remote backends the events are the ones streamed back from the
+        workers. It is called unserialized (its original contract) — the
         caller owns any locking.
 
         Determinism: priors are frozen once per batch and transfer seeds
@@ -881,6 +927,10 @@ class OptimizationEngine:
         cfg = self.pipeline.config
         priors = (self.pipeline.history.snapshot_priors(cfg.prior_policy)
                   if self.pipeline.warm_start else {})
+        observers = [o for o in (self.observer, as_observer(observer))
+                     if o is not None]
+        stage_cb = self._stage_dispatcher(observers, on_stage)
+        notify = self._result_dispatcher(observers)
         executor = self._get_executor()
         try:
             # key computation is dispatched through the executor so it runs
@@ -911,7 +961,8 @@ class OptimizationEngine:
                 seeds = {i: self.cache.ladder_members(keys[i][2], keys[i][3])
                          for i in phase}
                 executor.run_phase(jobs, phase, keys, priors, seeds, results,
-                                   plan=plan, on_stage=on_stage)
+                                   plan=plan, on_stage=stage_cb,
+                                   notify=notify)
             return results
         finally:
             executor.end_batch()
@@ -978,6 +1029,59 @@ class OptimizationEngine:
         return plan
 
     # ------------------------------------------------------------------
+    def _stage_dispatcher(self, observers, on_stage):
+        """One internal ``(index, job_name, record)`` callback carrying both
+        observer surfaces: typed observers see a :class:`StageEvent` under
+        the notify lock; the deprecated loose ``on_stage`` callback fires
+        outside it (its documented contract: the caller owns locking).
+        ``None`` when nobody is listening, so backends can skip stage-event
+        decode entirely."""
+        if not observers and on_stage is None:
+            return None
+
+        def dispatch(index, job_name, record):
+            if observers:
+                event = StageEvent(job_name, record, index=index)
+                with self._notify_lock:
+                    for obs in observers:
+                        obs.on_stage(event)
+            if on_stage is not None:
+                on_stage(index, job_name, record)
+        return dispatch
+
+    def _result_dispatcher(self, observers):
+        """The per-batch job-completion dispatcher: legacy ``on_result``
+        hook first, then every observer's ``on_job``, then (for transfer-
+        seeded results) every observer's ``on_seed_transfer`` — the same
+        ordering the old Forge fan-out produced. All under the notify lock
+        so observers need not be thread-safe."""
+        if not observers and self.on_result is None:
+            return None
+
+        def dispatch(eres: EngineResult):
+            with self._notify_lock:
+                if self.on_result is not None:
+                    self.on_result(eres)
+                event = JobEvent(eres)
+                for obs in observers:
+                    obs.on_job(event)
+                if eres.transfer:
+                    tevent = TransferEvent(eres)
+                    for obs in observers:
+                        obs.on_seed_transfer(tevent)
+        return dispatch
+
+    def _notify_result(self, eres: EngineResult, notify=None):
+        """Deliver one completed result: through the batch dispatcher when
+        one is active, else straight to the legacy ``on_result`` hook (the
+        path for executors driven outside ``run_batch``)."""
+        if notify is not None:
+            notify(eres)
+        elif self.on_result is not None:
+            with self._notify_lock:
+                self.on_result(eres)
+
+    # ------------------------------------------------------------------
     def _apply_outcome(self, outcome: Mapping[str, Any]):
         """Fold one job's outcome flags into the engine stats (shared by the
         in-process paths and the process backend's parent-side accounting)."""
@@ -1001,16 +1105,15 @@ class OptimizationEngine:
     # ------------------------------------------------------------------
     def _run_job(self, job: KernelJob, keys: tuple,
                  priors: Mapping[str, int],
-                 seed_pairs: Sequence, on_stage=None) -> EngineResult:
+                 seed_pairs: Sequence, on_stage=None,
+                 notify=None) -> EngineResult:
         exact_key = keys[0]
         with self._inflight_lock:
             job_lock = self._inflight.setdefault(exact_key, threading.Lock())
         with job_lock:
             eres = self._run_job_locked(job, keys, priors, seed_pairs,
                                         on_stage=on_stage)
-        if self.on_result is not None:
-            with self._notify_lock:
-                self.on_result(eres)
+        self._notify_result(eres, notify)
         return eres
 
     def _run_job_locked(self, job: KernelJob, keys: tuple,

@@ -1,0 +1,581 @@
+"""Distributed worker fleet: the ``execution_backend="remote"`` executor.
+
+A :class:`FleetCoordinator` owns a listening socket plus a shared task
+queue; N ``forge-worker`` processes (``repro.core.remote_worker``) —
+spawned locally against the loopback address, launched by hand on other
+hosts, or both — connect, complete the version/policy handshake
+(:mod:`repro.core.remote`), and pull tasks. The task/event shapes are
+exactly the tagged tuples of the process backend (``("keys", idx,
+wire)`` / ``("job", idx, ...)`` down; ``("keys" | "stage" | "result" |
+"error", idx, ...)`` up), so :class:`RemoteExecutor` is the process
+executor with TCP in place of multiprocessing queues — and the parent
+engine stays the single owner of store/stats/history, which is what
+keeps ``serial == thread == process == remote`` result-equivalence.
+
+Robustness model:
+
+* **Worker loss** is detected by connection EOF/reset or by a missed
+  heartbeat window (the coordinator pings every ``fleet_heartbeat_s``;
+  a worker silent for ``fleet_heartbeat_timeout_s`` is declared lost).
+* **Re-dispatch** — a lost worker's in-flight task goes back on the
+  queue and runs on a surviving worker. This is idempotent by
+  construction: workers are stateless between tasks, the parent merges
+  each task's result exactly once (duplicate results are dropped), and
+  every task/event frame carries a run id so events from an aborted run
+  can never leak into a later one. Stage events from a job that was
+  re-dispatched mid-run are delivered at-least-once (the re-run repeats
+  them); results and store/stat/history merges stay exactly-once.
+* **Drain** — :meth:`FleetCoordinator.close` with ``graceful=True``
+  waits for the active run to finish its queued work, then sends every
+  worker a ``shutdown`` frame and reaps spawned processes.
+"""
+
+from __future__ import annotations
+
+import base64
+import collections
+import os
+import pathlib
+import pickle
+import queue as queue_mod
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import job_codec, remote
+from repro.core.engine import fold_worker_result
+
+__all__ = ["FleetError", "FleetCoordinator", "RemoteExecutor"]
+
+_HANDSHAKE_TIMEOUT_S = 30.0
+
+
+class FleetError(RuntimeError):
+    """Fleet-level failure: no workers, a worker job raised, or the
+    coordinator is closed."""
+
+
+class _Worker:
+    """Coordinator-side record of one connected worker."""
+
+    _next_id = 0
+
+    def __init__(self, sock: socket.socket, addr, pid, host):
+        _Worker._next_id += 1
+        self.id = _Worker._next_id
+        self.sock = sock
+        self.addr = addr
+        self.pid = pid
+        self.host = host
+        self.send_lock = threading.Lock()
+        self.alive = True
+        self.inflight: Optional[Tuple[int, tuple]] = None  # (run_id, task)
+        self.last_seen = time.monotonic()
+        self.last_ping = 0.0
+
+    def __repr__(self):
+        return f"<worker #{self.id} pid={self.pid} {self.host}>"
+
+
+class FleetCoordinator:
+    """Owns the fleet: listener, worker registry, shared task queue.
+
+    One ``run_tasks`` call is active at a time (the run lock); within a
+    run, idle workers are assigned tasks as events drain, results are
+    delivered through callbacks in arrival order, and lost workers'
+    tasks are re-queued. The coordinator never executes jobs itself —
+    it is pure dispatch, so the engine on top of it remains the single
+    owner of every piece of shared state.
+    """
+
+    def __init__(self, pipeline, config, spawn_workers: int = 0):
+        self.pipeline = pipeline
+        self.config = config
+        self.spawn_workers = spawn_workers
+        self.heartbeat_s = config.fleet_heartbeat_s
+        self.heartbeat_timeout_s = config.fleet_heartbeat_timeout_s
+        self.connect_timeout_s = config.fleet_connect_timeout_s
+        self._bind = remote.parse_address(config.fleet_address
+                                          or "127.0.0.1:0")
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._workers: List[_Worker] = []
+        self._procs: List[subprocess.Popen] = []
+        self._events: "queue_mod.Queue" = queue_mod.Queue()
+        self._lock = threading.Lock()
+        self._run_lock = threading.Lock()
+        self._run_id = 0
+        self._closed = False
+        self._config_frame_cache: Optional[dict] = None
+        # telemetry the tests and the service /stats endpoint read
+        self.workers_joined = 0
+        self.workers_lost = 0
+        self.workers_rejected = 0
+        self.tasks_redispatched = 0
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self) -> "FleetCoordinator":
+        if self._listener is not None:
+            return self
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind(self._bind)
+        listener.listen(64)
+        self._listener = listener
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True, name="fleet-accept")
+        self._accept_thread.start()
+        if self.spawn_workers > 0:
+            self._spawn_local(self.spawn_workers)
+        return self
+
+    @property
+    def address(self) -> str:
+        """The resolved ``host:port`` workers should ``--connect`` to."""
+        if self._listener is None:
+            raise FleetError("coordinator not started")
+        host, port = self._listener.getsockname()[:2]
+        if host == "0.0.0.0":
+            host = socket.gethostname()
+        return remote.format_address(host, port)
+
+    @property
+    def worker_count(self) -> int:
+        with self._lock:
+            return len(self._workers)
+
+    def wait_for_workers(self, n: int, timeout: float = 60.0) -> None:
+        """Block until at least *n* workers completed the handshake."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.worker_count >= n:
+                return
+            time.sleep(0.05)
+        raise FleetError(
+            f"only {self.worker_count}/{n} workers joined within {timeout}s")
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Graceful shutdown: queued work finishes, then workers stop."""
+        self.close(graceful=True, timeout=timeout)
+
+    def close(self, graceful: bool = True, timeout: float = 30.0) -> None:
+        if graceful:
+            # the run lock serializes with run_tasks: taking it means the
+            # active run has delivered every queued task before we drain
+            with self._run_lock:
+                self._shutdown(graceful=True, timeout=timeout)
+        else:
+            self._shutdown(graceful=False, timeout=timeout)
+
+    def _shutdown(self, graceful: bool, timeout: float) -> None:
+        self._closed = True
+        listener, self._listener = self._listener, None
+        if listener is not None:
+            try:
+                listener.close()
+            except OSError:
+                pass
+        with self._lock:
+            workers, self._workers = list(self._workers), []
+            for w in workers:
+                # deliberate shutdown, not a loss: the reader threads will
+                # see EOF when we close the sockets below and must not
+                # count these workers as lost
+                w.alive = False
+        for w in workers:
+            if graceful:
+                try:
+                    with w.send_lock:
+                        remote.send_frame(w.sock, {"type": "shutdown"})
+                except OSError:
+                    pass
+            try:
+                w.sock.close()
+            except OSError:
+                pass
+        procs, self._procs = list(self._procs), []
+        deadline = time.monotonic() + timeout
+        for p in procs:
+            try:
+                p.wait(timeout=max(0.1, deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                p.terminate()
+                try:
+                    p.wait(timeout=5)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    p.wait()
+
+    # -- worker intake -------------------------------------------------
+    def _spawn_local(self, n: int) -> None:
+        """Launch *n* loopback ``forge-worker`` processes against our own
+        address — through the real CLI entrypoint, so a spawned local
+        worker and a multi-host one are the same code path."""
+        import repro
+        # repro is a namespace package (__file__ is None) — derive the
+        # import root from its search path instead
+        src_root = str(pathlib.Path(list(repro.__path__)[0]).resolve().parent)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src_root)
+        for _ in range(n):
+            self._procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.core.remote_worker",
+                 "--connect", self.address],
+                env=env, stdout=subprocess.DEVNULL))
+
+    def _config_frame(self) -> dict:
+        if self._config_frame_cache is None:
+            self._config_frame_cache = {
+                "type": "config",
+                "protocol_version": remote.PROTOCOL_VERSION,
+                "wire_version": remote.WIRE_VERSION,
+                "config": self.config.to_dict(),
+                "kb": base64.b64encode(
+                    pickle.dumps(self.pipeline.kb)).decode("ascii"),
+                "policy_signature": self.pipeline.policy_signature(),
+                "kb_content_hash": self.pipeline.kb.content_hash(),
+                "heartbeat_s": self.heartbeat_s,
+            }
+        return self._config_frame_cache
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, addr = self._listener.accept()
+            except (OSError, AttributeError):
+                return  # listener closed
+            threading.Thread(target=self._serve_conn, args=(sock, addr),
+                             daemon=True, name="fleet-handshake").start()
+
+    def _serve_conn(self, sock: socket.socket, addr) -> None:
+        """Handshake one incoming connection; on success this thread
+        becomes the worker's reader loop."""
+        try:
+            sock.settimeout(_HANDSHAKE_TIMEOUT_S)
+            hello = remote.recv_frame(sock)
+            reason = remote.validate_hello(hello)
+            if reason is None and self._closed:
+                reason = "fleet is draining"
+            if reason is not None:
+                self.workers_rejected += 1
+                try:
+                    remote.send_frame(sock, {"type": "reject",
+                                             "reason": reason})
+                finally:
+                    sock.close()
+                return
+            remote.send_frame(sock, self._config_frame())
+            ready = remote.recv_frame(sock)
+            if not isinstance(ready, dict) or ready.get("type") != "ready":
+                self.workers_rejected += 1
+                sock.close()
+                return
+            frame = self._config_frame()
+            if (ready.get("policy_signature") != frame["policy_signature"]
+                    or ready.get("kb_content_hash")
+                    != frame["kb_content_hash"]):
+                self.workers_rejected += 1
+                try:
+                    remote.send_frame(sock, {
+                        "type": "reject",
+                        "reason": "policy signature / KB content hash "
+                                  "mismatch after worker-side rebuild"})
+                finally:
+                    sock.close()
+                return
+            sock.settimeout(None)
+        except (OSError, remote.RemoteProtocolError):
+            try:
+                sock.close()
+            except OSError:
+                pass
+            return
+        worker = _Worker(sock, addr, ready.get("pid"), ready.get("host"))
+        with self._lock:
+            if self._closed:
+                sock.close()
+                return
+            self._workers.append(worker)
+            self.workers_joined += 1
+        self._events.put(("joined", worker, None))
+        self._reader_loop(worker)
+
+    def _reader_loop(self, worker: _Worker) -> None:
+        while True:
+            try:
+                msg = remote.recv_frame(worker.sock)
+            except (OSError, remote.RemoteProtocolError) as exc:
+                self._mark_lost(worker, f"read failed: {exc}")
+                return
+            if msg is None:
+                self._mark_lost(worker, "connection closed")
+                return
+            worker.last_seen = time.monotonic()
+            if not isinstance(msg, dict):
+                continue
+            kind = msg.get("type")
+            if kind == "event":
+                event = msg.get("event")
+                if event and event[0] in ("keys", "result", "error"):
+                    # terminal for the worker's current task regardless of
+                    # run id: the worker is idle again either way
+                    with self._lock:
+                        worker.inflight = None
+                self._events.put(("event", worker, msg.get("run"), event))
+            # "pong" needs nothing beyond the last_seen update above
+
+    def _mark_lost(self, worker: _Worker, reason: str) -> None:
+        with self._lock:
+            if not worker.alive:
+                return
+            worker.alive = False
+            if worker in self._workers:
+                self._workers.remove(worker)
+            self.workers_lost += 1
+        try:
+            worker.sock.close()
+        except OSError:
+            pass
+        self._events.put(("lost", worker, reason))
+
+    def _send(self, worker: _Worker, msg: dict) -> bool:
+        try:
+            with worker.send_lock:
+                remote.send_frame(worker.sock, msg)
+            return True
+        except (OSError, remote.RemoteProtocolError) as exc:
+            self._mark_lost(worker, f"send failed: {exc}")
+            return False
+
+    # -- dispatch ------------------------------------------------------
+    def _dispatch(self, pending: collections.deque, run_id: int) -> bool:
+        """Hand queued tasks to idle workers. Returns True if anything
+        was dispatched (progress, for the no-worker deadline)."""
+        did = False
+        with self._lock:
+            workers = list(self._workers)
+        for w in workers:
+            if not pending:
+                break
+            with self._lock:
+                if not w.alive or w.inflight is not None:
+                    continue
+                task = pending.popleft()
+                w.inflight = (run_id, task)
+            # a failed send marks the worker lost; the run loop's "lost"
+            # handler re-queues the task off w.inflight — never clear it
+            # here or a racing loss event would drop the task on the floor
+            self._send(w, {"type": "task", "run": run_id, "task": task})
+            did = True
+        return did
+
+    def _heartbeat(self) -> None:
+        now = time.monotonic()
+        with self._lock:
+            workers = list(self._workers)
+        for w in workers:
+            if now - w.last_seen > self.heartbeat_timeout_s:
+                self._mark_lost(
+                    w, f"no heartbeat for {now - w.last_seen:.1f}s")
+            elif now - w.last_ping >= self.heartbeat_s:
+                w.last_ping = now
+                self._send(w, {"type": "ping"})
+
+    def _has_live_workers(self) -> bool:
+        with self._lock:
+            return bool(self._workers)
+
+    def run_tasks(self, tasks: Sequence[tuple],
+                  on_stage: Optional[Callable] = None,
+                  on_result: Optional[Callable] = None) -> Dict[int, Any]:
+        """Run one wave of tagged tasks across the fleet; returns ``{idx:
+        payload}`` for every task. ``on_stage(idx, job_name, record_wire)``
+        streams stage events live; ``on_result(idx, payload)`` fires once
+        per task as its terminal event arrives (arrival order — the same
+        live folding the process backend does). Raises :class:`FleetError`
+        if a worker job raised or no live worker remains for longer than
+        ``fleet_connect_timeout_s``."""
+        with self._run_lock:
+            if self._closed:
+                raise FleetError("fleet coordinator is closed")
+            self._run_id += 1
+            run_id = self._run_id
+            pending = collections.deque(tasks)
+            results: Dict[int, Any] = {}
+            want = len(tasks)
+            now = time.monotonic()
+            with self._lock:
+                for w in self._workers:
+                    # idle workers were silent between runs by design;
+                    # restart their heartbeat windows
+                    w.last_seen = now
+            last_progress = now
+            while len(results) < want:
+                if self._dispatch(pending, run_id):
+                    last_progress = time.monotonic()
+                try:
+                    item = self._events.get(
+                        timeout=min(0.2, self.heartbeat_s / 2))
+                except queue_mod.Empty:
+                    self._heartbeat()
+                    if (not self._has_live_workers()
+                            and time.monotonic() - last_progress
+                            > self.connect_timeout_s):
+                        raise FleetError(
+                            f"no live fleet workers for "
+                            f"{self.connect_timeout_s:.0f}s "
+                            f"({len(results)}/{want} tasks done, "
+                            f"{self.workers_lost} lost, "
+                            f"{self.workers_rejected} rejected)")
+                    continue
+                last_progress = time.monotonic()
+                kind = item[0]
+                if kind == "joined":
+                    continue
+                if kind == "lost":
+                    _, worker, reason = item
+                    with self._lock:
+                        inflight, worker.inflight = worker.inflight, None
+                    if (inflight is not None and inflight[0] == run_id
+                            and inflight[1][1] not in results):
+                        # idempotent re-dispatch: the task goes back on the
+                        # queue; the worker never returned a result for it,
+                        # so the re-run's result is the only one merged
+                        pending.appendleft(inflight[1])
+                        self.tasks_redispatched += 1
+                    continue
+                _, worker, event_run, event = item
+                if event_run != run_id or not event:
+                    continue  # stale event from an aborted run
+                ekind, idx = event[0], event[1]
+                if ekind == "stage":
+                    if on_stage is not None:
+                        on_stage(idx, event[2], event[3])
+                elif ekind in ("keys", "result"):
+                    if idx in results:
+                        continue  # duplicate (merge once)
+                    results[idx] = event[2]
+                    if on_result is not None:
+                        on_result(idx, event[2])
+                else:  # "error"
+                    raise FleetError(
+                        f"fleet worker task #{idx} failed "
+                        f"(worker {worker!r}):\n{event[2]}")
+            return results
+
+
+class RemoteExecutor:
+    """The engine executor for ``execution_backend="remote"``: the
+    process executor's dispatch shape (worker-side key computation,
+    duplicate-exact-key waves, streamed stage events, parent-side result
+    folding and history merge) over a :class:`FleetCoordinator`."""
+
+    name = "remote"
+
+    def __init__(self, engine):
+        if engine.pipeline.llm is not None:
+            raise ValueError(
+                "execution_backend='remote' cannot ship a live LLM client "
+                "to fleet workers; use the 'thread' backend")
+        self.engine = engine
+        cfg = engine.pipeline.config
+        spawn = cfg.fleet_spawn_workers
+        if spawn is None:
+            spawn = max(1, engine.workers)
+        self.fleet = FleetCoordinator(engine.pipeline, cfg,
+                                      spawn_workers=spawn)
+        self.fleet.start()
+        self._wires: Optional[tuple] = None     # (id(jobs), [wire, ...])
+        self._phase_lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def compute_keys(self, jobs) -> List[tuple]:
+        with self._phase_lock:
+            try:
+                wires = [job_codec.encode_job(job) for job in jobs]
+                self._wires = (id(jobs), wires)
+                out = self.fleet.run_tasks(
+                    [("keys", i, wires[i]) for i in range(len(jobs))])
+                return [tuple(out[i]) for i in range(len(jobs))]
+            except Exception:
+                self.close()
+                raise
+
+    # ------------------------------------------------------------------
+    def run_phase(self, jobs, phase, keys, priors, seeds, results,
+                  plan=None, on_stage=None, notify=None):
+        with self._phase_lock:
+            try:
+                # duplicate exact keys run as a second wave, mirroring the
+                # process backend: first occurrence computes, duplicates
+                # replay the stored entry
+                seen = set()
+                waves: List[List[int]] = [[], []]
+                for i in phase:
+                    waves[1 if keys[i][0] in seen else 0].append(i)
+                    seen.add(keys[i][0])
+                for wave in waves:
+                    if wave:
+                        self._run_wave(jobs, wave, keys, priors, seeds,
+                                       results, plan, on_stage=on_stage,
+                                       notify=notify)
+            except Exception:
+                # same policy as the process pool: a failed wave leaves
+                # in-flight state behind; tear the fleet down so the next
+                # batch starts from a clean coordinator
+                self.close()
+                raise
+
+    def _run_wave(self, jobs, wave, keys, priors, seeds, results, plan=None,
+                  on_stage=None, notify=None):
+        engine = self.engine
+        wires = (self._wires[1] if self._wires
+                 and self._wires[0] == id(jobs) else None)
+        priors_wire = job_codec.encode_priors(priors)
+        tasks = []
+        for i in wave:
+            exact_key, family_key = keys[i][0], keys[i][1]
+            wire = wires[i] if wires else job_codec.encode_job(jobs[i])
+            warm_wire = None
+            if plan and plan.get(i) and engine.verify_shared is not None:
+                items = [(key, val) for key in plan[i]
+                         if (val := engine.verify_shared.get(key)) is not None]
+                if items:
+                    warm_wire = job_codec.encode_verify_slice(items)
+            tasks.append(("job", i, wire, exact_key, family_key,
+                          priors_wire, engine.cache.get(exact_key),
+                          list(seeds.get(i, ())), warm_wire))
+        history_records: Dict[int, List[dict]] = {}
+
+        def stage_cb(idx, job_name, record_wire):
+            hook = engine.pipeline.on_stage_complete
+            if hook is None and on_stage is None:
+                return
+            record = job_codec.decode_stage_record(record_wire)
+            if hook is not None:
+                hook(job_name, record)
+            if on_stage is not None:
+                on_stage(idx, job_name, record)
+
+        def result_cb(idx, payload):
+            results[idx] = fold_worker_result(engine, jobs[idx], keys[idx],
+                                              payload, notify=notify)
+            history_records[idx] = payload["history"]
+
+        self.fleet.run_tasks(tasks, on_stage=stage_cb, on_result=result_cb)
+        # merge worker history deltas in submission order (additive counts,
+        # deterministic record list) — identical to the process backend
+        for i in sorted(history_records):
+            engine.pipeline.history.merge_records(history_records[i])
+
+    # ------------------------------------------------------------------
+    def end_batch(self):
+        self._wires = None
+
+    def close(self):
+        self._wires = None
+        self.fleet.close(graceful=True, timeout=15.0)

@@ -10,19 +10,21 @@ thread prints and counters through by hand. The facade collapses that to::
     report = forge.optimize_batch(jobs)        # -> OptimizationReport
     print(report.summary())
 
-Observer callbacks replace the driver-specific print/stat plumbing: attach
-any object with ``on_stage_complete(job_name, record)`` /
-``on_job_complete(engine_result)`` / ``on_transfer(engine_result)`` methods
-(all optional — :class:`ForgeObserver` is a no-op base to subclass).
-Callbacks fire as the fleet engine makes progress, serialized under a lock
-so observers need not be thread-safe even with ``workers > 1``.
+Observers replace the driver-specific print/stat plumbing: attach a
+:class:`~repro.core.observers.ForgeObserver` (typed events —
+:class:`StageEvent` / :class:`JobEvent` / :class:`TransferEvent`, all
+methods default no-op) or any legacy object exposing the old
+``on_stage_complete(job_name, record)`` / ``on_job_complete(result)`` /
+``on_transfer(result)`` names — :func:`repro.core.observers.as_observer`
+adapts either shape with identical event content and ordering. Events
+fire as the fleet engine makes progress, serialized under a lock so
+observers need not be thread-safe even with ``workers > 1``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-import threading
 from typing import Any, Dict, Iterable, List, Optional, Sequence
 
 from repro.core.config import ForgeConfig
@@ -30,29 +32,17 @@ from repro.core.engine import (EngineResult, EngineStats, KernelJob,
                                OptimizationEngine, VerifyStats)
 from repro.core.history import History
 from repro.core.llm import LLMClient
+from repro.core.observers import (CallbackObserver, FanOutObserver,
+                                  ForgeObserver, JobEvent, StageEvent,
+                                  TransferEvent, as_observer)
 from repro.core.pipeline import ForgePipeline
 from repro.core.result_store import ResultStore
-from repro.core.stage_scheduler import StageRecord
 from repro.ir.schedule import KernelProgram
 from repro.kb.loader import KnowledgeBase
 
-__all__ = ["Forge", "ForgeObserver", "OptimizationReport"]
-
-
-class ForgeObserver:
-    """No-op observer base. Subclass and override any subset; observers may
-    also be plain objects exposing the same method names."""
-
-    def on_stage_complete(self, job_name: str, record: StageRecord):
-        """One pipeline stage finished for ``job_name`` (search, replay and
-        seeded-transfer steps all emit)."""
-
-    def on_job_complete(self, result: EngineResult):
-        """One job finished (cold run, cache replay, or transfer)."""
-
-    def on_transfer(self, result: EngineResult):
-        """A job was warm-started from a family neighbor (fires after
-        ``on_job_complete`` for the same result)."""
+__all__ = ["Forge", "ForgeObserver", "OptimizationReport",
+           "StageEvent", "JobEvent", "TransferEvent", "CallbackObserver",
+           "as_observer"]
 
 
 @dataclasses.dataclass
@@ -199,65 +189,58 @@ class Forge:
             self.config = self.config.replace(use_llm=True)
         self.pipeline = ForgePipeline.from_config(self.config, kb=kb,
                                                   llm=llm, history=history)
-        self.pipeline.on_stage_complete = self._dispatch_stage
+        # registered observers fan out through one engine-held observer;
+        # the engine serializes all dispatch (stage events arrive straight
+        # from worker threads; job events via the notify path) so
+        # observers never need to be thread-safe
+        self._observers: List[Any] = []
+        self._fan = FanOutObserver()
         self.engine = OptimizationEngine(pipeline=self.pipeline,
                                          workers=self.config.workers,
                                          cache=cache,
                                          cache_path=self.config.cache_path,
                                          cache_max_entries=self.config.cache_max_entries,
                                          backend=self.config.execution_backend,
-                                         on_result=self._dispatch_result)
-        self._observers: List[Any] = list(observers)
-        # one lock serializes ALL observer dispatch (stage events arrive
-        # straight from worker threads; job events via the engine's notify
-        # hook) so observers never need to be thread-safe
-        self._observer_lock = threading.Lock()
+                                         observer=self._fan)
+        for obs in observers:
+            self.add_observer(obs)
 
     # -- observers -------------------------------------------------------
     def add_observer(self, observer) -> "Forge":
+        """Register an observer: a :class:`ForgeObserver`, or any legacy
+        object exposing ``on_stage_complete`` / ``on_job_complete`` /
+        ``on_transfer`` (adapted via :func:`as_observer`, same events,
+        same order)."""
         self._observers.append(observer)
+        self._fan.add(as_observer(observer))
         return self
 
-    def _dispatch_stage(self, job_name: str, record: StageRecord):
-        with self._observer_lock:
-            for obs in self._observers:
-                fn = getattr(obs, "on_stage_complete", None)
-                if fn is not None:
-                    fn(job_name, record)
-
-    def _dispatch_result(self, result: EngineResult):
-        with self._observer_lock:
-            for obs in self._observers:
-                fn = getattr(obs, "on_job_complete", None)
-                if fn is not None:
-                    fn(result)
-            if result.transfer:
-                for obs in self._observers:
-                    fn = getattr(obs, "on_transfer", None)
-                    if fn is not None:
-                        fn(result)
-
     # -- optimization ----------------------------------------------------
-    def optimize(self, job: KernelJob,
-                 on_stage=None) -> OptimizationReport:
+    def optimize(self, job: KernelJob, on_stage=None,
+                 observer=None) -> OptimizationReport:
         """Optimize one job (cache/transfer-aware)."""
-        return self.optimize_batch([job], on_stage=on_stage)
+        return self.optimize_batch([job], on_stage=on_stage,
+                                   observer=observer)
 
     def optimize_batch(self, jobs: Sequence[KernelJob],
-                       on_stage=None) -> OptimizationReport:
+                       on_stage=None, observer=None) -> OptimizationReport:
         """Optimize a batch through the fleet engine; results come back in
         submission order inside a typed report. The report's stats are the
         *delta* this batch produced (a reused Forge accumulates lifetime
         counters on ``forge.stats``), so per-batch hit counts and engine
         counters always describe the same jobs.
 
-        ``on_stage(index, job_name, record)`` is an optional per-batch stage
-        observer keyed by submission index (see
-        ``OptimizationEngine.run_batch``); unlike registered observers it is
-        NOT serialized under the observer lock — the caller owns locking."""
+        ``observer`` is an optional batch-scoped observer (new-protocol or
+        legacy; see :func:`as_observer`) dispatched alongside the
+        registered ones for this call only — its ``StageEvent.index`` is
+        the job's submission index. ``on_stage(index, job_name, record)``
+        is the deprecated loose-callback equivalent; unlike observers it
+        is NOT serialized under the dispatch lock — the caller owns
+        locking (unchanged historical contract)."""
         before = dataclasses.replace(self.engine.stats)
         vbefore = dataclasses.replace(self.engine.verify_stats)
-        results = self.engine.run_batch(list(jobs), on_stage=on_stage)
+        results = self.engine.run_batch(list(jobs), on_stage=on_stage,
+                                        observer=observer)
         delta = EngineStats(**{
             f.name: getattr(self.engine.stats, f.name) - getattr(before, f.name)
             for f in dataclasses.fields(EngineStats)})

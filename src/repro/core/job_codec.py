@@ -43,6 +43,10 @@ from repro.ir.schedule import KernelProgram, Schedule
 
 __all__ = [
     "WireDecodeError",
+    "WireVersionError",
+    "WIRE_VERSION",
+    "SUPPORTED_WIRE_VERSIONS",
+    "encode_value", "decode_value",
     "encode_graph", "decode_graph",
     "encode_program", "decode_program",
     "encode_job", "decode_job",
@@ -53,7 +57,15 @@ __all__ = [
     "job_fingerprint_from_wire",
 ]
 
+#: Version of the payload envelope format. Bump on any change to the
+#: wire shapes below; decoders refuse envelopes from other versions with
+#: a typed :class:`WireVersionError` so a stale peer (old worker binary,
+#: old client) can never silently mis-decode a payload.
 WIRE_VERSION = 1
+
+#: Every envelope version this build can decode. Currently just the
+#: native one; append here when a decoder grows back-compat branches.
+SUPPORTED_WIRE_VERSIONS = (1,)
 
 _TUPLE_TAG = "__tuple__"
 
@@ -68,6 +80,34 @@ class WireDecodeError(ValueError):
     payload can trigger into this single typed error (the HTTP layer maps it
     to a 400). Trusted in-process callers (the process-pool backend) are
     unaffected: well-formed wire forms decode exactly as before."""
+
+
+class WireVersionError(WireDecodeError):
+    """A wire envelope declares a ``wire_version`` this build does not
+    speak. Subclasses :class:`WireDecodeError` so every existing handler
+    (the HTTP 400 mapping, the ``_wire_guard`` pass-through) already
+    treats it as a malformed payload; the distinct type lets the fleet
+    handshake and tests tell a version skew apart from corruption."""
+
+    def __init__(self, kind: str, version):
+        super().__init__(
+            f"{kind} wire payload declares wire_version {version!r}; this "
+            f"build speaks {sorted(SUPPORTED_WIRE_VERSIONS)}")
+        self.kind = kind
+        self.version = version
+
+
+def _check_wire_version(wire: Dict[str, Any], kind: str) -> None:
+    """Reject envelopes from an unknown wire version.
+
+    A missing version field is accepted as the current version: nested
+    payloads (graphs, stage records) never carried one, and hand-built
+    dicts in tests/drivers predate the field. Legacy envelopes spelled
+    it ``version``; both spellings are honored.
+    """
+    version = wire.get("wire_version", wire.get("version"))
+    if version is not None and version not in SUPPORTED_WIRE_VERSIONS:
+        raise WireVersionError(kind, version)
 
 
 def _wire_guard(kind: str):
@@ -121,6 +161,14 @@ def _dec_value(value):
     return value
 
 
+# Public names for the tuple-fidelity value codec. The fleet transport
+# (``repro.core.remote``) runs every socket frame through these, so keys,
+# ladders, dims and seed pairs cross TCP with the same exactness the
+# process backend gets from pickle.
+encode_value = _enc_value
+decode_value = _dec_value
+
+
 # ----------------------------------------------------------------------
 # Graph / KernelProgram
 # ----------------------------------------------------------------------
@@ -160,7 +208,7 @@ def decode_graph(wire: Dict[str, Any]) -> Graph:
 
 def encode_program(program: KernelProgram) -> Dict[str, Any]:
     return {
-        "version": WIRE_VERSION,
+        "wire_version": WIRE_VERSION,
         "name": program.name,
         "graph": encode_graph(program.graph),
         "schedule": program.schedule.to_dict(),
@@ -172,6 +220,7 @@ def encode_program(program: KernelProgram) -> Dict[str, Any]:
 @_wire_guard("program")
 def decode_program(wire: Dict[str, Any]) -> KernelProgram:
     _expect_mapping(wire, "program")
+    _check_wire_version(wire, "program")
     return KernelProgram(
         name=wire["name"],
         graph=decode_graph(wire["graph"]),
@@ -188,7 +237,7 @@ def encode_job(job) -> Dict[str, Any]:
     """Wire form of a :class:`~repro.core.engine.KernelJob` (taken by duck
     type to avoid an import cycle with ``core.engine``)."""
     return {
-        "version": WIRE_VERSION,
+        "wire_version": WIRE_VERSION,
         "name": job.name,
         "ci_program": encode_program(job.ci_program),
         "bench_program": encode_program(job.bench_program),
@@ -205,6 +254,7 @@ def decode_job(wire: Dict[str, Any]):
     from repro.core.engine import KernelJob
 
     _expect_mapping(wire, "job")
+    _check_wire_version(wire, "job")
     return KernelJob(
         name=str(wire["name"]),
         ci_program=decode_program(wire["ci_program"]),
@@ -263,12 +313,13 @@ def encode_verify_slice(items: List[tuple]) -> Dict[str, Any]:
         else:  # "oracle": three positional array lists
             payload = [[encode_array(a) for a in part] for part in value]
         entries.append({"kind": kind, "fp": fp, "value": payload})
-    return {"version": WIRE_VERSION, "entries": entries}
+    return {"wire_version": WIRE_VERSION, "entries": entries}
 
 
 @_wire_guard("verify slice")
 def decode_verify_slice(wire: Dict[str, Any]) -> List[tuple]:
     _expect_mapping(wire, "verify slice")
+    _check_wire_version(wire, "verify slice")
     items = []
     for e in wire.get("entries", []):
         _expect_mapping(e, "verify slice entry")
@@ -287,13 +338,14 @@ def encode_priors(priors) -> Dict[str, Any]:
     along so worker-side candidate ordering matches the parent's)."""
     to_dict = getattr(priors, "to_dict", None)
     if to_dict is not None:
-        return {"version": WIRE_VERSION, "snapshot": to_dict()}
-    return {"version": WIRE_VERSION, "counts": dict(priors or {})}
+        return {"wire_version": WIRE_VERSION, "snapshot": to_dict()}
+    return {"wire_version": WIRE_VERSION, "counts": dict(priors or {})}
 
 
 @_wire_guard("priors")
 def decode_priors(wire: Dict[str, Any]):
     _expect_mapping(wire, "priors")
+    _check_wire_version(wire, "priors")
     if "snapshot" in wire:
         from repro.core.history import PriorSnapshot
         return PriorSnapshot.from_dict(wire["snapshot"])
@@ -342,7 +394,7 @@ def _decode_issue(wire: Dict[str, Any]) -> Issue:
 
 def encode_pipeline_result(result: PipelineResult) -> Dict[str, Any]:
     return {
-        "version": WIRE_VERSION,
+        "wire_version": WIRE_VERSION,
         "name": result.name,
         "original_time": result.original_time,
         "optimized_time": result.optimized_time,
@@ -362,6 +414,7 @@ def encode_pipeline_result(result: PipelineResult) -> Dict[str, Any]:
 @_wire_guard("pipeline result")
 def decode_pipeline_result(wire: Dict[str, Any]) -> PipelineResult:
     _expect_mapping(wire, "pipeline result")
+    _check_wire_version(wire, "pipeline result")
     log = wire.get("transform_log")
     return PipelineResult(
         name=wire["name"],

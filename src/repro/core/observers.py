@@ -1,0 +1,215 @@
+"""Unified observer API for Forge optimization runs.
+
+Historically Forge grew four ad-hoc callback surfaces:
+
+- ``on_stage_complete(job_name, record)`` observer method (per stage),
+- ``on_job_complete(result)`` observer method (per finished job),
+- ``on_transfer(result)`` observer method (family-transfer seeds),
+- the index-keyed ``on_stage=(index, job_name, record)`` batch kwarg
+  added for the service's per-job SSE sinks.
+
+This module replaces all four with a single typed protocol:
+:class:`ForgeObserver` with default-no-op methods taking frozen event
+dataclasses (:class:`StageEvent`, :class:`JobEvent`,
+:class:`TransferEvent`).  The old surfaces keep working unchanged —
+:func:`as_observer` wraps any legacy object (anything exposing the old
+method names) in an adapter, and :class:`CallbackObserver` adapts the
+old loose-callback kwargs — so existing drivers migrate without any
+behavior change.  Event *content* and *ordering* are identical across
+old and new surfaces (see ``tests/test_remote_fleet.py``).
+
+Dispatch is serialized by the engine (one event at a time under a
+lock), so observers never need their own locking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence
+
+__all__ = [
+    "StageEvent",
+    "JobEvent",
+    "TransferEvent",
+    "ForgeObserver",
+    "CallbackObserver",
+    "FanOutObserver",
+    "as_observer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageEvent:
+    """One pipeline stage finished for one job.
+
+    ``index`` is the job's position within the current batch (``None``
+    when the stage fired outside a batch context, e.g. a direct
+    ``pipeline.optimize`` call routed through an adapter).
+    """
+
+    job_name: str
+    record: Any  # StageRecord
+    index: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class JobEvent:
+    """One job finished (``result`` is the EngineResult)."""
+
+    result: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferEvent:
+    """A finished job was seeded by a family-fingerprint transfer."""
+
+    result: Any
+
+
+class ForgeObserver:
+    """Typed observer protocol: subclass and override what you need.
+
+    All methods are no-ops by default.  Events arrive serialized (the
+    engine holds a dispatch lock), in deterministic order: every
+    :meth:`on_stage` for a job precedes its :meth:`on_job`;
+    :meth:`on_seed_transfer` (if the job was transfer-seeded) follows
+    immediately after that job's :meth:`on_job`.
+
+    Legacy observers — objects exposing ``on_stage_complete(name,
+    record)`` / ``on_job_complete(result)`` / ``on_transfer(result)`` —
+    are still accepted everywhere an observer is and are adapted via
+    :func:`as_observer`; they see the same events in the same order.
+    """
+
+    def on_stage(self, event: StageEvent) -> None:  # pragma: no cover
+        """A stage completed for one job."""
+
+    def on_job(self, event: JobEvent) -> None:  # pragma: no cover
+        """A job completed (cache hit, replay, or fresh optimization)."""
+
+    def on_seed_transfer(self, event: TransferEvent) -> None:  # pragma: no cover
+        """A completed job had been seeded from a family neighbor."""
+
+
+def _wants(obj: Any, name: str) -> bool:
+    """True when *obj* provides a real (non-default) new-protocol method."""
+    fn = getattr(obj, name, None)
+    if not callable(fn):
+        return False
+    if isinstance(obj, ForgeObserver):
+        return getattr(type(obj), name, None) is not getattr(ForgeObserver, name)
+    return True
+
+
+class _Adapter(ForgeObserver):
+    """Route events to whichever surface (new or legacy) *obj* exposes.
+
+    New-protocol methods win when both are present, so a class can
+    migrate one method at a time.
+    """
+
+    def __init__(self, obj: Any):
+        self._obj = obj
+        self._stage_new = _wants(obj, "on_stage")
+        self._job_new = _wants(obj, "on_job")
+        self._transfer_new = _wants(obj, "on_seed_transfer")
+        self._stage_old = callable(getattr(obj, "on_stage_complete", None))
+        self._job_old = callable(getattr(obj, "on_job_complete", None))
+        self._transfer_old = callable(getattr(obj, "on_transfer", None))
+
+    def on_stage(self, event: StageEvent) -> None:
+        if self._stage_new:
+            self._obj.on_stage(event)
+        elif self._stage_old:
+            self._obj.on_stage_complete(event.job_name, event.record)
+
+    def on_job(self, event: JobEvent) -> None:
+        if self._job_new:
+            self._obj.on_job(event)
+        elif self._job_old:
+            self._obj.on_job_complete(event.result)
+
+    def on_seed_transfer(self, event: TransferEvent) -> None:
+        if self._transfer_new:
+            self._obj.on_seed_transfer(event)
+        elif self._transfer_old:
+            self._obj.on_transfer(event.result)
+
+
+class CallbackObserver(ForgeObserver):
+    """Adapter from the deprecated loose-callback kwargs.
+
+    ``on_stage_indexed`` is the batch-scoped ``(index, job_name,
+    record)`` callback (the service's original ``on_stage=`` kwarg).
+    """
+
+    def __init__(
+        self,
+        on_stage_complete: Optional[Callable[[str, Any], None]] = None,
+        on_job_complete: Optional[Callable[[Any], None]] = None,
+        on_transfer: Optional[Callable[[Any], None]] = None,
+        on_stage_indexed: Optional[Callable[[int, str, Any], None]] = None,
+    ):
+        self._stage = on_stage_complete
+        self._job = on_job_complete
+        self._transfer = on_transfer
+        self._stage_indexed = on_stage_indexed
+
+    def on_stage(self, event: StageEvent) -> None:
+        if self._stage is not None:
+            self._stage(event.job_name, event.record)
+        if self._stage_indexed is not None and event.index is not None:
+            self._stage_indexed(event.index, event.job_name, event.record)
+
+    def on_job(self, event: JobEvent) -> None:
+        if self._job is not None:
+            self._job(event.result)
+
+    def on_seed_transfer(self, event: TransferEvent) -> None:
+        if self._transfer is not None:
+            self._transfer(event.result)
+
+
+class FanOutObserver(ForgeObserver):
+    """Dispatch every event to an ordered list of observers.
+
+    Preserves the historical Forge ordering for multi-observer runs:
+    each event reaches every observer (in registration order) before
+    the next event is dispatched.
+    """
+
+    def __init__(self, observers: Sequence[ForgeObserver] = ()):
+        self._observers: List[ForgeObserver] = list(observers)
+
+    def add(self, observer: ForgeObserver) -> None:
+        self._observers.append(observer)
+
+    def __len__(self) -> int:
+        return len(self._observers)
+
+    def on_stage(self, event: StageEvent) -> None:
+        for obs in self._observers:
+            obs.on_stage(event)
+
+    def on_job(self, event: JobEvent) -> None:
+        for obs in self._observers:
+            obs.on_job(event)
+
+    def on_seed_transfer(self, event: TransferEvent) -> None:
+        for obs in self._observers:
+            obs.on_seed_transfer(event)
+
+
+def as_observer(obj: Any) -> Optional[ForgeObserver]:
+    """Coerce *obj* into a :class:`ForgeObserver` (``None`` passes through).
+
+    Accepts new-protocol observers, legacy observers (old method
+    names), and mixed objects; always wraps in :class:`_Adapter` so
+    legacy names keep firing even on ``ForgeObserver`` subclasses that
+    only define the old surface.
+    """
+    if obj is None:
+        return None
+    if isinstance(obj, (_Adapter, CallbackObserver, FanOutObserver)):
+        return obj
+    return _Adapter(obj)

@@ -1,0 +1,163 @@
+"""Socket transport for the distributed worker fleet.
+
+Frames are length-prefixed JSON over TCP: an 8-byte big-endian length
+header followed by a UTF-8 JSON document.  Every frame is passed
+through the job-codec value codec (:func:`repro.core.job_codec
+.encode_value` / :func:`decode_value`), so tuples — cache keys,
+ladders, dims, seed pairs — survive the socket boundary with the same
+bit-exact fidelity the process backend gets from pickle.  That is what
+lets the remote backend reuse the tagged ``("keys", ...)`` /
+``("job", ...)`` / ``("stage", ...)`` worker protocol from
+``core/engine.py`` unchanged.
+
+Handshake (worker connects to the coordinator):
+
+1. worker → ``hello``   {protocol_version, wire_version, pid, host}
+2. coord  → ``config``  {config, kb (b64 pickle), policy_signature,
+                         kb_content_hash, heartbeat_s, ...}
+            or ``reject`` {reason} when versions mismatch
+3. worker → ``ready``   {policy_signature, kb_content_hash}
+            or ``abort`` {reason} when its rebuilt pipeline disagrees
+4. coord  → drops the connection on a ``ready`` mismatch, else the
+            worker joins the fleet and starts pulling tasks.
+
+Both sides re-derive the policy signature and KB content hash from the
+shipped config independently and compare — a stale worker binary (old
+wire format, old policy fields) can never silently join and corrupt a
+fleet; it is rejected with a typed reason at step 2 or 4.
+
+After the handshake the coordinator sends ``task`` / ``ping`` /
+``shutdown`` frames; the worker answers with ``event`` / ``pong``.
+``task`` and ``event`` frames carry a run id so events from an aborted
+run can never be folded into a later one.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Any, Optional, Tuple
+
+from repro.core import job_codec
+from repro.core.job_codec import WIRE_VERSION
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "WIRE_VERSION",
+    "MAX_FRAME_BYTES",
+    "RemoteProtocolError",
+    "HandshakeRejected",
+    "send_frame",
+    "recv_frame",
+    "parse_address",
+    "format_address",
+    "hello_frame",
+    "validate_hello",
+]
+
+#: Version of the fleet *transport* protocol (framing + handshake +
+#: task/event message shapes).  Distinct from ``WIRE_VERSION``, which
+#: versions the job-codec payload envelopes carried inside frames.
+PROTOCOL_VERSION = 1
+
+#: Hard per-frame ceiling — a corrupt length header must not make the
+#: receiver try to allocate gigabytes.
+MAX_FRAME_BYTES = 256 * 1024 * 1024
+
+_HEADER = struct.Struct(">Q")
+
+
+class RemoteProtocolError(RuntimeError):
+    """A peer violated the fleet framing/handshake protocol."""
+
+
+class HandshakeRejected(RemoteProtocolError):
+    """The coordinator rejected this worker's handshake."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+def send_frame(sock: socket.socket, message: Any) -> None:
+    """Serialize *message* (tuple-fidelity preserved) and send one frame."""
+    data = json.dumps(job_codec.encode_value(message),
+                      separators=(",", ":")).encode("utf-8")
+    if len(data) > MAX_FRAME_BYTES:
+        raise RemoteProtocolError(
+            f"frame of {len(data)} bytes exceeds MAX_FRAME_BYTES")
+    sock.sendall(_HEADER.pack(len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly *n* bytes; None on clean EOF before the first byte."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise RemoteProtocolError(
+                f"connection dropped mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> Optional[Any]:
+    """Receive one frame; ``None`` on orderly connection close."""
+    header = _recv_exact(sock, _HEADER.size)
+    if header is None:
+        return None
+    (length,) = _HEADER.unpack(header)
+    if length > MAX_FRAME_BYTES:
+        raise RemoteProtocolError(
+            f"peer announced a {length}-byte frame (max {MAX_FRAME_BYTES})")
+    body = _recv_exact(sock, length)
+    if body is None:
+        raise RemoteProtocolError("connection dropped before frame body")
+    try:
+        return job_codec.decode_value(json.loads(body.decode("utf-8")))
+    except (ValueError, UnicodeDecodeError) as exc:
+        raise RemoteProtocolError(f"undecodable frame: {exc}") from exc
+
+
+def parse_address(address: str) -> Tuple[str, int]:
+    """``"host:port"`` → ``(host, port)`` (bare ``":port"`` binds all)."""
+    host, sep, port = address.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(f"fleet address must be 'host:port', got {address!r}")
+    return (host or "0.0.0.0", int(port))
+
+
+def format_address(host: str, port: int) -> str:
+    return f"{host}:{port}"
+
+
+def hello_frame(*, pid: int, host: str,
+                protocol_version: int = PROTOCOL_VERSION,
+                wire_version: int = WIRE_VERSION) -> dict:
+    return {
+        "type": "hello",
+        "protocol_version": protocol_version,
+        "wire_version": wire_version,
+        "pid": pid,
+        "host": host,
+    }
+
+
+def validate_hello(hello: Any) -> Optional[str]:
+    """Return a rejection reason for a worker ``hello``, or None if OK."""
+    if not isinstance(hello, dict) or hello.get("type") != "hello":
+        return "handshake must open with a 'hello' frame"
+    proto = hello.get("protocol_version")
+    if proto != PROTOCOL_VERSION:
+        return (f"protocol_version mismatch: worker speaks {proto!r}, "
+                f"coordinator speaks {PROTOCOL_VERSION}")
+    wire = hello.get("wire_version")
+    if wire != WIRE_VERSION:
+        return (f"wire_version mismatch: worker speaks {wire!r}, "
+                f"coordinator speaks {WIRE_VERSION}")
+    return None

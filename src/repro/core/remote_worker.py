@@ -1,0 +1,257 @@
+"""``forge-worker``: one fleet worker process.
+
+Connects to a :class:`repro.core.fleet.FleetCoordinator`, completes the
+versioned handshake (hello → config → ready), rebuilds a private
+:class:`~repro.core.pipeline.ForgePipeline` from the shipped ForgeConfig
+plus pickled knowledge base, and serves tagged tasks until a
+``shutdown`` frame or connection loss. The task loop is the process
+backend's ``_process_worker_main`` with a socket in place of
+multiprocessing queues: ``("keys", idx, job_wire)`` computes cache keys
+worker-side, ``("job", idx, ...)`` optimizes, stage records stream back
+as ``("stage", ...)`` events, and each finished job returns the same
+``{"result", "entry", "outcome", "history"}`` payload — so the parent
+engine folds remote results through the exact code path it uses for
+process workers.
+
+Workers are stateless between tasks (a fresh History per job, no store,
+no stats): a worker lost mid-job can be replaced by re-dispatching the
+job to any surviving worker with no state to reconcile.
+
+Usage::
+
+    forge-worker --connect HOST:PORT
+
+Exit codes: 0 orderly shutdown/drain, 2 handshake rejected by the
+coordinator, 3 worker-side policy/KB cross-check failed, 4 connection
+lost.
+"""
+
+from __future__ import annotations
+
+import argparse
+import base64
+import os
+import pickle
+import queue as queue_mod
+import socket
+import sys
+import threading
+import traceback
+from typing import Optional
+
+from repro.core import job_codec, remote
+
+__all__ = ["run_worker", "main"]
+
+#: Fault-injection exit code (``--die-after``), distinct from every
+#: legitimate exit so tests can assert the death was the injected one.
+DIE_EXIT_CODE = 17
+
+
+def run_worker(connect: str, die_after: Optional[int] = None,
+               hello_protocol_version: Optional[int] = None,
+               hello_wire_version: Optional[int] = None) -> int:
+    """Run the worker loop against coordinator *connect* ("host:port").
+
+    ``die_after`` is fault injection for the fleet tests: the worker
+    calls ``os._exit(17)`` upon receiving job task number ``die_after +
+    1`` (keys tasks don't count) — i.e. ``--die-after 0`` dies on its
+    first job, after dispatch but before any partial work. The
+    ``hello_*_version`` overrides exist solely to exercise handshake
+    rejection.
+    """
+    # heavy imports deferred past arg parsing so ``forge-worker --help``
+    # stays instant and import errors surface after the CLI contract
+    from repro.core.config import ForgeConfig
+    from repro.core.engine import compute_job_keys, execute_job
+    from repro.core.history import History
+    from repro.core.pipeline import ForgePipeline
+    from repro.core.verify_cache import SharedVerifyCache
+
+    host, port = remote.parse_address(connect)
+    try:
+        sock = socket.create_connection((host, port), timeout=30.0)
+    except OSError as exc:
+        print(f"forge-worker: cannot reach coordinator at {connect}: {exc}",
+              file=sys.stderr)
+        return 4
+    try:
+        sock.settimeout(60.0)  # handshake window
+        hello_kwargs = {"pid": os.getpid(), "host": socket.gethostname()}
+        if hello_protocol_version is not None:
+            hello_kwargs["protocol_version"] = hello_protocol_version
+        if hello_wire_version is not None:
+            hello_kwargs["wire_version"] = hello_wire_version
+        remote.send_frame(sock, remote.hello_frame(**hello_kwargs))
+        msg = remote.recv_frame(sock)
+        if msg is None:
+            print("forge-worker: coordinator closed during handshake",
+                  file=sys.stderr)
+            return 4
+        if isinstance(msg, dict) and msg.get("type") == "reject":
+            print(f"forge-worker: handshake rejected: {msg.get('reason')}",
+                  file=sys.stderr)
+            return 2
+        if not isinstance(msg, dict) or msg.get("type") != "config":
+            print(f"forge-worker: expected config frame, got "
+                  f"{type(msg).__name__}", file=sys.stderr)
+            return 4
+
+        config = ForgeConfig.from_dict(msg["config"])
+        kb = (pickle.loads(base64.b64decode(msg["kb"]))
+              if msg.get("kb") else None)
+        pipeline = ForgePipeline.from_config(config, kb=kb)
+        # independent cross-check: this build must derive the same policy
+        # signature and KB content hash the coordinator derived — a stale
+        # worker binary (old policy fields, old hashing) aborts here
+        # instead of silently joining and corrupting the fleet
+        signature = pipeline.policy_signature()
+        kb_hash = pipeline.kb.content_hash()
+        if (signature != msg.get("policy_signature")
+                or kb_hash != msg.get("kb_content_hash")):
+            remote.send_frame(sock, {
+                "type": "abort",
+                "reason": (f"policy/KB cross-check failed: worker derived "
+                           f"({signature!r}, {kb_hash!r}), coordinator sent "
+                           f"({msg.get('policy_signature')!r}, "
+                           f"{msg.get('kb_content_hash')!r})")})
+            print("forge-worker: policy/KB cross-check failed; this worker "
+                  "build disagrees with the coordinator", file=sys.stderr)
+            return 3
+        remote.send_frame(sock, {"type": "ready",
+                                 "policy_signature": signature,
+                                 "kb_content_hash": kb_hash,
+                                 "pid": os.getpid()})
+        sock.settimeout(None)
+    except (OSError, remote.RemoteProtocolError) as exc:
+        print(f"forge-worker: handshake failed: {exc}", file=sys.stderr)
+        sock.close()
+        return 4
+
+    send_lock = threading.Lock()
+
+    def send(message: dict) -> None:
+        with send_lock:
+            remote.send_frame(sock, message)
+
+    # reader thread: answers pings inline, funnels tasks to the main loop,
+    # turns shutdown/EOF into the None sentinel
+    tasks: "queue_mod.Queue" = queue_mod.Queue()
+
+    def reader() -> None:
+        while True:
+            try:
+                message = remote.recv_frame(sock)
+            except (OSError, remote.RemoteProtocolError):
+                message = None
+            if message is None or not isinstance(message, dict):
+                tasks.put(None)
+                return
+            kind = message.get("type")
+            if kind == "ping":
+                try:
+                    send({"type": "pong"})
+                except (OSError, remote.RemoteProtocolError):
+                    tasks.put(None)
+                    return
+            elif kind == "task":
+                tasks.put(message)
+            elif kind == "shutdown":
+                tasks.put(None)
+                return
+
+    threading.Thread(target=reader, daemon=True,
+                     name="forge-worker-reader").start()
+
+    shared = None
+    if (config.shared_verify_cache_bytes > 0
+            and config.verify_fastpath != "off"):
+        shared = SharedVerifyCache(config.shared_verify_cache_bytes)
+    jobs_seen = 0
+    while True:
+        message = tasks.get()
+        if message is None:
+            return 0
+        run_id = message.get("run")
+        task = message["task"]
+        kind, idx = task[0], task[1]
+
+        def emit(event, _run=run_id):
+            send({"type": "event", "run": _run, "event": event})
+
+        try:
+            if kind == "keys":
+                job = job_codec.decode_job(task[2])
+                emit(("keys", idx, compute_job_keys(pipeline, job)))
+                continue
+            if die_after is not None and jobs_seen >= die_after:
+                # fault injection: die after dispatch, before any work —
+                # the coordinator must detect the loss and re-dispatch
+                os._exit(DIE_EXIT_CODE)
+            jobs_seen += 1
+            _, _, job_wire, exact_key, family_key, priors_wire, entry, \
+                seed_pairs, warm_wire = task
+            job = job_codec.decode_job(job_wire)
+            priors = job_codec.decode_priors(priors_wire)
+            if warm_wire is not None and shared is not None:
+                for key, value in job_codec.decode_verify_slice(warm_wire):
+                    shared.put(key, value)
+            # fresh per-task history, streamed-back stage events, and the
+            # process-worker result payload — see _process_worker_main
+            pipeline.history = History()
+            pipeline.on_stage_complete = (
+                lambda name, rec, _idx=idx, _emit=emit: _emit(
+                    ("stage", _idx, name,
+                     job_codec.encode_stage_record(rec))))
+            result, outcome = execute_job(pipeline, job, entry, seed_pairs,
+                                          exact_key, priors, shared=shared)
+            emit(("result", idx, {
+                "result": job_codec.encode_pipeline_result(result),
+                "entry": outcome.pop("entry"),
+                "outcome": outcome,
+                "history": list(pipeline.history.records),
+            }))
+        except (OSError, remote.RemoteProtocolError):
+            return 4  # connection gone; nothing left to report to
+        except Exception:  # noqa: BLE001 — marshal the traceback up
+            try:
+                emit(("error", idx, traceback.format_exc()))
+            except (OSError, remote.RemoteProtocolError):
+                return 4
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="forge-worker",
+        description="Fleet worker for the Xe-Forge remote execution "
+                    "backend: connects to a coordinator, rebuilds the "
+                    "pipeline from the handshake, and serves optimization "
+                    "tasks until drained.")
+    parser.add_argument("--connect", required=True, metavar="HOST:PORT",
+                        help="coordinator fleet address")
+    parser.add_argument("--die-after", type=int, default=None,
+                        metavar="N",
+                        help="fault injection for fleet tests: exit(17) "
+                             "upon receiving job task N+1 (keys tasks "
+                             "don't count)")
+    # handshake-rejection test hooks
+    parser.add_argument("--hello-protocol-version", type=int, default=None,
+                        help=argparse.SUPPRESS)
+    parser.add_argument("--hello-wire-version", type=int, default=None,
+                        help=argparse.SUPPRESS)
+    return parser
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        return run_worker(
+            args.connect, die_after=args.die_after,
+            hello_protocol_version=args.hello_protocol_version,
+            hello_wire_version=args.hello_wire_version)
+    except KeyboardInterrupt:
+        return 130
+
+
+if __name__ == "__main__":
+    sys.exit(main())

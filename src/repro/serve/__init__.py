@@ -27,7 +27,7 @@ __all__ = [
     # HTTP layer
     "ForgeServiceServer", "ForgeRequestHandler", "serve_forever",
     # client
-    "ForgeClient", "ServiceError",
+    "ForgeClient", "ServiceError", "StreamInterrupted",
 ]
 
 _EXPORTS = {
@@ -45,6 +45,7 @@ _EXPORTS = {
     "serve_forever": "repro.serve.http",
     "ForgeClient": "repro.serve.client",
     "ServiceError": "repro.serve.client",
+    "StreamInterrupted": "repro.serve.client",
 }
 
 

@@ -37,6 +37,14 @@ def build_parser() -> argparse.ArgumentParser:
                    help="engine execution backend")
     p.add_argument("--cache-path", default=None,
                    help="persist the shared result store here")
+    # distributed fleet (--backend remote; see README 'Distributed fleet')
+    p.add_argument("--fleet-address", default=None, metavar="HOST:PORT",
+                   help="bind the fleet coordinator here so forge-worker "
+                        "processes on other hosts can join (default: "
+                        "loopback, ephemeral port)")
+    p.add_argument("--fleet-workers", type=int, default=None, metavar="N",
+                   help="local forge-worker processes to spawn (default: "
+                        "--workers; 0 = external workers only)")
     # service shape
     p.add_argument("--wave-size", type=int, default=4,
                    help="max jobs batched into one engine wave")
@@ -57,7 +65,9 @@ def main(argv=None) -> int:
                          max_iterations=args.max_iterations,
                          workers=args.workers,
                          execution_backend=args.backend,
-                         cache_path=args.cache_path)
+                         cache_path=args.cache_path,
+                         fleet_address=args.fleet_address,
+                         fleet_spawn_workers=args.fleet_workers)
     service = ForgeService(
         config,
         service_config=ServiceConfig(wave_size=args.wave_size,

@@ -13,6 +13,7 @@ and the lower-level pieces (``submit`` / ``status`` / ``wait`` /
 
 from __future__ import annotations
 
+import hashlib
 import http.client
 import json
 import time
@@ -22,7 +23,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 from repro.core import job_codec
 from repro.core.engine import KernelJob
 
-__all__ = ["ForgeClient", "ServiceError"]
+__all__ = ["ForgeClient", "ServiceError", "StreamInterrupted"]
 
 
 class ServiceError(Exception):
@@ -33,6 +34,35 @@ class ServiceError(Exception):
         self.status = status
         self.retry_after_s = retry_after_s
         super().__init__(f"HTTP {status}: {message}")
+
+
+class StreamInterrupted(ServiceError):
+    """An SSE stream ended before its terminal ``done`` event — the
+    connection dropped (server restart, network) rather than the job
+    finishing. Status 0: there was no HTTP error, the transport died."""
+
+    def __init__(self, job_id: str, events_seen: int):
+        super().__init__(0, f"event stream for job {job_id} dropped after "
+                            f"{events_seen} events without a 'done' event")
+        self.job_id = job_id
+        self.events_seen = events_seen
+
+
+def _poll_backoff(job_id: str, attempt: int, base_s: float = 0.05,
+                  cap_s: float = 2.0) -> float:
+    """Capped exponential backoff with *deterministic* jitter.
+
+    The jitter fraction is derived from ``sha256(job_id:attempt)`` — no
+    ``random``, so a given (job, attempt) always sleeps the same amount
+    (reproducible tests, debuggable traces) while distinct jobs polling
+    the same service desynchronize instead of stampeding in lockstep.
+    Sleeps grow ``base_s * 2^attempt`` and are scaled into
+    ``[0.5, 1.0) ×`` that, capped at ``cap_s``.
+    """
+    raw = min(cap_s, base_s * (2.0 ** attempt))
+    digest = hashlib.sha256(f"{job_id}:{attempt}".encode()).digest()
+    frac = int.from_bytes(digest[:8], "big") / 2.0 ** 64
+    return raw * (0.5 + 0.5 * frac)
 
 
 class ForgeClient:
@@ -105,10 +135,17 @@ class ForgeClient:
         return self._request("GET", f"/v1/jobs/{job_id}")
 
     def wait(self, job_id: str, timeout: float = 300.0,
-             poll_s: float = 0.2) -> Dict[str, Any]:
+             poll_s: Optional[float] = None) -> Dict[str, Any]:
         """Poll until the job is terminal; returns the final status dict
-        (``report`` included on success)."""
+        (``report`` included on success).
+
+        By default polling backs off exponentially (50ms doubling to a
+        2s cap) with deterministic per-job jitter — see
+        :func:`_poll_backoff` — instead of hammering the service on a
+        fixed short interval. Pass an explicit ``poll_s`` to restore a
+        fixed cadence (tests that need tight latency bounds)."""
         deadline = time.monotonic() + timeout
+        attempt = 0
         while True:
             status = self.status(job_id)
             if status["state"] in ("done", "failed", "cancelled"):
@@ -117,12 +154,17 @@ class ForgeClient:
                 raise TimeoutError(
                     f"job {job_id} still {status['state']!r} "
                     f"after {timeout}s")
-            time.sleep(poll_s)
+            sleep_s = (poll_s if poll_s is not None
+                       else _poll_backoff(job_id, attempt))
+            time.sleep(min(sleep_s, max(0.0, deadline - time.monotonic())))
+            attempt += 1
 
     def events(self, job_id: str, timeout: Optional[float] = None
                ) -> Iterator[Tuple[str, Dict[str, Any]]]:
         """Stream the job's SSE feed; yields ``(event, data)`` pairs and
-        returns after the terminal ``done`` event."""
+        returns after the terminal ``done`` event. A connection that
+        drops before ``done`` raises :class:`StreamInterrupted` instead
+        of silently ending the iterator."""
         conn = http.client.HTTPConnection(
             self.host, self.port,
             timeout=timeout if timeout is not None else self.timeout)
@@ -138,17 +180,25 @@ class ForgeClient:
                     msg = raw.decode("utf-8", "replace")
                 raise ServiceError(resp.status, msg)
             event, data_lines = None, []  # type: ignore[var-annotated]
-            for raw_line in resp:
-                line = raw_line.decode("utf-8").rstrip("\n").rstrip("\r")
-                if line.startswith("event:"):
-                    event = line[len("event:"):].strip()
-                elif line.startswith("data:"):
-                    data_lines.append(line[len("data:"):].strip())
-                elif not line and event is not None:
-                    yield event, json.loads("\n".join(data_lines) or "{}")
-                    if event == "done":
-                        return
-                    event, data_lines = None, []
+            seen = 0
+            try:
+                for raw_line in resp:
+                    line = raw_line.decode("utf-8").rstrip("\n").rstrip("\r")
+                    if line.startswith("event:"):
+                        event = line[len("event:"):].strip()
+                    elif line.startswith("data:"):
+                        data_lines.append(line[len("data:"):].strip())
+                    elif not line and event is not None:
+                        yield event, json.loads("\n".join(data_lines) or "{}")
+                        seen += 1
+                        if event == "done":
+                            return
+                        event, data_lines = None, []
+            except (ConnectionError, http.client.HTTPException,
+                    TimeoutError, OSError) as exc:
+                raise StreamInterrupted(job_id, seen) from exc
+            # orderly EOF without 'done': the server went away mid-stream
+            raise StreamInterrupted(job_id, seen)
         finally:
             conn.close()
 

@@ -8,8 +8,11 @@ condition variables. Endpoints:
 * ``POST /v1/jobs`` — submit a wire-form kernel job
   (``{"job": <encode_job(...)>, "priority": int?}``); returns 202 with the
   job id and queue position. Malformed payloads are 400 with the
-  :class:`WireDecodeError` message; over-budget clients get 429 with
-  ``Retry-After``; a draining service answers 503.
+  :class:`WireDecodeError` message — including
+  :class:`~repro.core.job_codec.WireVersionError` (a payload declaring a
+  ``wire_version`` this build does not speak), whose message names the
+  supported versions; over-budget clients get 429 with ``Retry-After``;
+  a draining service answers 503.
 * ``GET /v1/jobs/{id}`` — status, including the full
   ``OptimizationReport.as_dict()`` once the job is done.
 * ``GET /v1/jobs/{id}/events`` — Server-Sent-Events stream of the job's
@@ -31,7 +34,10 @@ import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Optional, Tuple
 
-from repro.core.job_codec import WireDecodeError
+# WireVersionError subclasses WireDecodeError, so a version-mismatched
+# payload takes the same 400 path as any other malformed wire form —
+# imported explicitly to pin that contract (tests import it from here)
+from repro.core.job_codec import WireDecodeError, WireVersionError  # noqa: F401
 from repro.serve.service import (DEFAULT_CLIENT, ForgeService, QueueFull,
                                  RateLimited, ServiceClosed, UnknownJob)
 

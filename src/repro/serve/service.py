@@ -34,9 +34,10 @@ submissions from many clients into engine batches:
   an exact resubmit replays, a family neighbor transfers. ``stats()``
   surfaces the store/engine/verify counters so the warming is observable.
 
-* **Per-job event fan-out** — every job buffers its stage records (the
-  ``on_stage`` plumbing threaded through ``Forge.optimize_batch`` carries
-  the submission index, so two in-flight jobs with the same kernel name
+* **Per-job event fan-out** — every job buffers its stage records (a
+  batch-scoped :class:`~repro.core.observers.ForgeObserver` threaded
+  through ``Forge.optimize_batch`` carries the submission index in each
+  :class:`StageEvent`, so two in-flight jobs with the same kernel name
   can't cross streams). SSE readers replay the buffer, then follow live.
 
 Everything is stdlib; the HTTP layer lives in :mod:`repro.serve.http`.
@@ -56,6 +57,7 @@ from repro.core import job_codec
 from repro.core.config import ForgeConfig
 from repro.core.engine import KernelJob, compute_job_keys
 from repro.core.forge import Forge, OptimizationReport
+from repro.core.observers import ForgeObserver, StageEvent
 
 __all__ = ["ForgeService", "ServiceConfig", "ServiceJob", "JOB_STATES",
            "RateLimited", "ServiceClosed", "QueueFull", "UnknownJob",
@@ -180,6 +182,29 @@ class ServiceJob:
         if self.report is not None:
             d["report"] = self.report
         return d
+
+
+class _WaveObserver(ForgeObserver):
+    """Batch-scoped observer for one dispatcher wave: mirrors every stage
+    record into the owning job's event buffer (and the buffers of all
+    attached jobs) keyed by ``StageEvent.index`` — the submission index,
+    so two in-flight jobs with the same kernel name can't cross streams."""
+
+    def __init__(self, service: "ForgeService", wave: List["ServiceJob"]):
+        self._service = service
+        self._wave = wave
+
+    def on_stage(self, event: StageEvent) -> None:
+        if event.index is None:
+            return
+        svc, primary = self._service, self._wave[event.index]
+        rec = dataclasses.asdict(event.record)
+        with svc._cv:
+            sinks = [primary]
+            sinks += [svc._jobs[a] for a in svc._attached.get(primary.id, ())]
+            for sink in sinks:
+                sink.events.append(dict(rec))
+            svc._cv.notify_all()
 
 
 class ForgeService:
@@ -488,19 +513,9 @@ class ForgeService:
 
     def _run_wave(self, wave: List[ServiceJob]):
         jobs = [sj.job for sj in wave]
-
-        def on_stage(idx, job_name, record):
-            rec = dataclasses.asdict(record)
-            with self._cv:
-                sinks = [wave[idx]]
-                sinks += [self._jobs[a]
-                          for a in self._attached.get(wave[idx].id, ())]
-                for sink in sinks:
-                    sink.events.append(dict(rec))
-                self._cv.notify_all()
-
         try:
-            report = self.forge.optimize_batch(jobs, on_stage=on_stage)
+            report = self.forge.optimize_batch(
+                jobs, observer=_WaveObserver(self, wave))
         except Exception:   # noqa: BLE001 — a wave failure must not kill
             tb = traceback.format_exc()     # the dispatcher
             with self._cv:

@@ -32,6 +32,11 @@ ALT_VALUES = {
     "verify_fastpath": "check",
     "shared_verify_cache_bytes": 0,
     "batch_exec_planning": False,
+    "fleet_address": "127.0.0.1:9444",
+    "fleet_spawn_workers": 2,
+    "fleet_connect_timeout_s": 30.0,
+    "fleet_heartbeat_s": 1.0,
+    "fleet_heartbeat_timeout_s": 5.0,
 }
 
 
@@ -59,7 +64,9 @@ def test_operational_fields_do_not_change_signature():
     assert {f.name for f in ForgeConfig.operational_fields()} == {
         "workers", "execution_backend", "cache_path", "cache_max_entries",
         "dump_dir", "verify_fastpath", "shared_verify_cache_bytes",
-        "batch_exec_planning"}
+        "batch_exec_planning", "fleet_address", "fleet_spawn_workers",
+        "fleet_connect_timeout_s", "fleet_heartbeat_s",
+        "fleet_heartbeat_timeout_s"}
     for f in ForgeConfig.operational_fields():
         changed = base.replace(**{f.name: ALT_VALUES[f.name]})
         assert changed.policy_signature() == base.policy_signature(), f.name

@@ -1,0 +1,424 @@
+"""Distributed worker fleet: remote-backend result equivalence, worker
+loss + re-dispatch, handshake version/policy rejection, graceful drain,
+the unified observer protocol, and the client-side wait/stream fixes."""
+
+import json
+import os
+import pathlib
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.aibench import build_program, load_specs
+from repro.core import (Forge, ForgeConfig, ForgeObserver, KernelJob,
+                        CallbackObserver, WireVersionError, job_codec)
+from repro.core import remote
+from repro.core.fleet import FleetCoordinator
+from repro.core.job_codec import WireDecodeError
+from repro.core.pipeline import ForgePipeline
+from repro.serve.client import StreamInterrupted, _poll_backoff
+
+SPECS = {s.name: s for s in load_specs()}
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _job(name, rename=None):
+    s = SPECS[name]
+    j = KernelJob(s.name,
+                  build_program(s.builder, s.dims("ci"), "naive", meta=s.meta),
+                  build_program(s.builder, s.dims("bench"), "naive",
+                                meta=s.meta),
+                  tags=tuple(s.tags), target_dtype=s.target_dtype,
+                  rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+    if rename:
+        j.name = rename
+    return j
+
+
+def _twin_job(name="gemm_bias_gelu_twin"):
+    s = SPECS["gemm_bias_gelu"]
+    dims = {k: max(64, v // 2) for k, v in s.dims("bench").items()}
+    ci = {k: max(32, v // 2) for k, v in s.dims("ci").items()}
+    return KernelJob(name,
+                     build_program(s.builder, ci, "naive", meta=s.meta),
+                     build_program(s.builder, dims, "naive", meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+def _jobs():
+    """Leader + unrelated job + family twin (transfer) + duplicate twin
+    (in-phase coalescing) — the same shape the process-backend test uses,
+    so every dispatch path crosses the socket."""
+    return [_job("gemm_bias_gelu"), _job("matmul_t_gelu"),
+            _twin_job(), _twin_job("gemm_bias_gelu_twin2")]
+
+
+def _comparable(report) -> str:
+    """Byte-comparable form of a report: the full as_dict minus the two
+    keys that legitimately differ across backends (config carries
+    execution_backend; verify counters depend on cache locality)."""
+    d = report.as_dict()
+    d.pop("config")
+    d.pop("verify_stats")
+    return json.dumps(d, sort_keys=True)
+
+
+def _spawn_worker(address, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(SRC) + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else str(SRC))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.core.remote_worker",
+         "--connect", address, *extra],
+        env=env, stdout=subprocess.DEVNULL)
+
+
+@pytest.fixture(scope="module")
+def serial_report():
+    """One serial reference run of the canonical job set (the remote
+    equivalence and worker-kill tests both compare against it)."""
+    forge = Forge(ForgeConfig(execution_backend="serial"))
+    report = forge.optimize_batch(_jobs())
+    forge.close()
+    return report
+
+
+# ----------------------------------------------------------------------
+# remote backend end-to-end: equivalence, streaming, warm replay, drain
+# ----------------------------------------------------------------------
+
+def test_remote_backend_end_to_end(serial_report):
+    events = []
+
+    class Obs(ForgeObserver):
+        def on_stage(self, e):
+            events.append(("stage", e.job_name, e.record.stage))
+
+        def on_job(self, e):
+            events.append(("job", e.result.job.name))
+
+        def on_seed_transfer(self, e):
+            events.append(("transfer", e.result.job.name))
+
+    forge = Forge(ForgeConfig(execution_backend="remote", workers=2),
+                  observers=[Obs()])
+    try:
+        cold = forge.optimize_batch(_jobs())
+        # cold run: byte-equivalent to the serial reference (everything
+        # except the backend name and the verify-cache counters)
+        assert _comparable(cold) == _comparable(serial_report)
+
+        # fleet telemetry: both spawned workers joined, none were lost
+        executor = forge.engine._get_executor()
+        assert executor.fleet.workers_joined == 2
+        assert executor.fleet.workers_lost == 0
+
+        # transfer and in-phase duplicate coalescing crossed the socket
+        assert cold.results[2].transfer == serial_report.results[2].transfer
+        assert cold.results[3].cache_hit
+
+        # stage events streamed back from workers; job events fired once
+        # per job; transfer events only for transferred jobs
+        assert [e for e in events if e[0] == "stage"]
+        assert len([e for e in events if e[0] == "job"]) == 4
+        if cold.transfers:
+            assert [e for e in events if e[0] == "transfer"]
+
+        # warm run replays from the parent-held store through the fleet
+        warm = forge.optimize_batch(_jobs())
+        assert all(r.cache_hit for r in warm.results)
+
+        # worker history deltas merged back into the parent history
+        assert forge.history.snapshot_priors()
+
+        procs = list(executor.fleet._procs)
+    finally:
+        forge.close()
+    # graceful drain: every spawned worker exited cleanly
+    assert [p.returncode for p in procs] == [0, 0]
+
+
+# ----------------------------------------------------------------------
+# robustness: worker killed mid-run -> re-dispatch, same bytes as serial
+# ----------------------------------------------------------------------
+
+def test_worker_kill_redispatch_byte_equivalent(serial_report):
+    cfg = ForgeConfig(execution_backend="remote", workers=2,
+                      fleet_spawn_workers=0, fleet_heartbeat_s=0.5,
+                      fleet_heartbeat_timeout_s=3.0)
+    forge = Forge(cfg)
+    healthy = doomed = None
+    try:
+        executor = forge.engine._get_executor()
+        fleet = executor.fleet
+        healthy = _spawn_worker(fleet.address)
+        # --die-after 0: exits (code 17) upon receiving its first job
+        # task — after dispatch, before any work, forcing a re-dispatch
+        doomed = _spawn_worker(fleet.address, "--die-after", "0")
+        fleet.wait_for_workers(2, timeout=120)
+
+        report = forge.optimize_batch(_jobs())
+
+        assert doomed.wait(timeout=30) == 17
+        assert fleet.workers_lost == 1
+        assert fleet.tasks_redispatched >= 1
+        # the re-dispatched job merged exactly once: the report is
+        # byte-equivalent to the serial reference
+        assert _comparable(report) == _comparable(serial_report)
+    finally:
+        forge.close()
+        # external workers exit on their own after the drain frame; give
+        # them a grace window before the hard-kill fallback
+        for p in (healthy, doomed):
+            if p is not None:
+                try:
+                    p.wait(timeout=30)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    p.wait()
+    assert healthy.returncode == 0
+
+
+# ----------------------------------------------------------------------
+# handshake: version and policy-signature rejection
+# ----------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def coordinator():
+    cfg = ForgeConfig()
+    coord = FleetCoordinator(ForgePipeline.from_config(cfg), cfg,
+                             spawn_workers=0).start()
+    yield coord
+    coord.close(graceful=False)
+
+
+def _handshake(coordinator, hello):
+    host, port = remote.parse_address(coordinator.address)
+    sock = socket.create_connection((host, port), timeout=10)
+    try:
+        sock.settimeout(10)
+        remote.send_frame(sock, hello)
+        return remote.recv_frame(sock)
+    finally:
+        sock.close()
+
+
+def test_handshake_rejects_wire_version_mismatch(coordinator):
+    reply = _handshake(coordinator, remote.hello_frame(
+        pid=1, host="test", wire_version=999))
+    assert reply["type"] == "reject"
+    assert "wire_version" in reply["reason"]
+    assert coordinator.worker_count == 0
+
+
+def test_handshake_rejects_protocol_version_mismatch(coordinator):
+    reply = _handshake(coordinator, remote.hello_frame(
+        pid=1, host="test", protocol_version=999))
+    assert reply["type"] == "reject"
+    assert "protocol_version" in reply["reason"]
+
+
+def test_handshake_rejects_non_hello(coordinator):
+    reply = _handshake(coordinator, {"type": "task"})
+    assert reply["type"] == "reject"
+
+
+def test_handshake_rejects_stale_policy_signature(coordinator):
+    host, port = remote.parse_address(coordinator.address)
+    sock = socket.create_connection((host, port), timeout=10)
+    try:
+        sock.settimeout(10)
+        remote.send_frame(sock, remote.hello_frame(pid=1, host="test"))
+        config_frame = remote.recv_frame(sock)
+        assert config_frame["type"] == "config"
+        # a stale worker build would re-derive a different signature
+        remote.send_frame(sock, {
+            "type": "ready",
+            "policy_signature": "stale-signature",
+            "kb_content_hash": config_frame["kb_content_hash"]})
+        reply = remote.recv_frame(sock)
+        assert reply["type"] == "reject"
+        assert "signature" in reply["reason"]
+    finally:
+        sock.close()
+    assert coordinator.worker_count == 0
+    assert coordinator.workers_rejected >= 1
+
+
+# ----------------------------------------------------------------------
+# graceful drain: queued work completes before workers shut down
+# ----------------------------------------------------------------------
+
+def test_drain_completes_queued_work():
+    cfg = ForgeConfig()
+    pipeline = ForgePipeline.from_config(cfg)
+    coord = FleetCoordinator(pipeline, cfg, spawn_workers=1).start()
+    procs = list(coord._procs)
+    try:
+        coord.wait_for_workers(1, timeout=120)
+        # more tasks than workers: with one worker, tasks queue up
+        wire = job_codec.encode_job(_job("gemm_bias_gelu"))
+        tasks = [("keys", i, wire) for i in range(4)]
+        out = {}
+        runner = threading.Thread(
+            target=lambda: out.update(coord.run_tasks(tasks)))
+        runner.start()
+        while coord._run_id == 0:     # run definitely underway
+            time.sleep(0.01)
+        coord.drain(timeout=60)       # blocks until the run finishes
+        runner.join(timeout=60)
+        assert not runner.is_alive()
+        assert sorted(out) == [0, 1, 2, 3]
+        # workers drained out with exit code 0, none were lost
+        assert [p.wait(timeout=30) for p in procs] == [0]
+        assert coord.workers_lost == 0
+        assert coord.worker_count == 0
+    finally:
+        coord.close(graceful=False)
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+
+
+def test_closed_coordinator_rejects_runs():
+    cfg = ForgeConfig()
+    coord = FleetCoordinator(ForgePipeline.from_config(cfg), cfg).start()
+    coord.close()
+    from repro.core.fleet import FleetError
+    with pytest.raises(FleetError, match="closed"):
+        coord.run_tasks([("keys", 0, {})])
+
+
+# ----------------------------------------------------------------------
+# unified observer protocol: adapters are event-for-event equivalent
+# ----------------------------------------------------------------------
+
+def test_observer_adapter_equivalence():
+    """Legacy observers (old method names), new-protocol observers, the
+    deprecated on_stage kwarg, and CallbackObserver all see identical
+    event sequences from one run."""
+    legacy_events, new_events, kw_stages, cb_stages = [], [], [], []
+
+    class Legacy:  # old duck-typed surface, no base class
+        def on_stage_complete(self, job_name, record):
+            legacy_events.append(("stage", job_name, record.stage))
+
+        def on_job_complete(self, result):
+            legacy_events.append(("job", result.job.name))
+
+        def on_transfer(self, result):
+            legacy_events.append(("transfer", result.job.name))
+
+    class New(ForgeObserver):
+        def on_stage(self, e):
+            new_events.append(("stage", e.job_name, e.record.stage))
+
+        def on_job(self, e):
+            new_events.append(("job", e.result.job.name))
+
+        def on_seed_transfer(self, e):
+            new_events.append(("transfer", e.result.job.name))
+
+    forge = Forge(ForgeConfig(execution_backend="serial"),
+                  observers=[Legacy(), New()])
+    report = forge.optimize_batch(
+        [_job("gemm_bias_gelu"), _twin_job()],
+        on_stage=lambda i, n, r: kw_stages.append((i, n, r.stage)),
+        observer=CallbackObserver(
+            on_stage_indexed=lambda i, n, r: cb_stages.append((i, n, r.stage))))
+    forge.close()
+
+    assert legacy_events and legacy_events == new_events
+    assert kw_stages and kw_stages == cb_stages
+    assert {i for i, _, _ in cb_stages} == {0, 1}
+    if report.transfers:
+        assert ("transfer", "gemm_bias_gelu_twin") in legacy_events
+    # ordering contract: all stage events for a job precede its job event
+    for name in ("gemm_bias_gelu", "gemm_bias_gelu_twin"):
+        job_at = legacy_events.index(("job", name))
+        assert all(legacy_events.index(e) < job_at
+                   for e in legacy_events
+                   if e[0] == "stage" and e[1] == name)
+
+
+def test_as_observer_passthrough_and_mixed():
+    from repro.core.observers import (FanOutObserver, JobEvent, StageEvent,
+                                      as_observer)
+    assert as_observer(None) is None
+    fan = FanOutObserver()
+    assert as_observer(fan) is fan
+
+    calls = []
+
+    class Mixed(ForgeObserver):  # new-style stage, legacy job
+        def on_stage(self, e):
+            calls.append(("new-stage", e.job_name))
+
+        def on_job_complete(self, result):
+            calls.append(("old-job", result))
+
+    obs = as_observer(Mixed())
+    obs.on_stage(StageEvent("k", record=None))
+
+    class R:
+        pass
+    obs.on_job(JobEvent(R()))
+    assert [c[0] for c in calls] == ["new-stage", "old-job"]
+
+
+# ----------------------------------------------------------------------
+# wire versioning (codec level)
+# ----------------------------------------------------------------------
+
+def test_wire_version_rejected_by_decoders():
+    wire = job_codec.encode_job(_job("gemm_bias_gelu"))
+    assert wire["wire_version"] == job_codec.WIRE_VERSION
+    wire["wire_version"] = 999
+    with pytest.raises(WireVersionError, match="999"):
+        job_codec.decode_job(wire)
+    # typed subclass: HTTP maps WireDecodeError -> 400, version mismatch
+    # rides the same path
+    assert issubclass(WireVersionError, WireDecodeError)
+    try:
+        job_codec.decode_job(wire)
+    except WireVersionError as exc:
+        assert exc.version == 999
+        assert "1" in str(exc)
+
+
+def test_legacy_envelopes_still_decode():
+    """Envelopes without a wire_version (hand-built fixtures, pre-version
+    stores) pass through; only an *unknown declared* version rejects."""
+    wire = job_codec.encode_job(_job("gemm_bias_gelu"))
+    del wire["wire_version"]
+    job = job_codec.decode_job(wire)
+    assert job.name == "gemm_bias_gelu"
+
+
+# ----------------------------------------------------------------------
+# client: deterministic backoff + typed stream interruption
+# ----------------------------------------------------------------------
+
+def test_poll_backoff_deterministic_and_capped():
+    a = [_poll_backoff("job-1", n) for n in range(12)]
+    b = [_poll_backoff("job-1", n) for n in range(12)]
+    assert a == b                         # no random: reproducible
+    assert a != [_poll_backoff("job-2", n) for n in range(12)]  # jittered
+    for n, v in enumerate(a):
+        raw = min(2.0, 0.05 * 2 ** n)
+        assert raw * 0.5 <= v < raw       # jitter range
+    assert max(a) < 2.0                   # capped
+
+
+def test_stream_interrupted_is_typed():
+    assert issubclass(StreamInterrupted, Exception)
+    exc = StreamInterrupted("j-1", 3)
+    assert exc.job_id == "j-1"
+    assert exc.events_seen == 3
+    assert "j-1" in str(exc)
