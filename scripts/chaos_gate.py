@@ -1,0 +1,194 @@
+"""CI chaos gate: seeded fault injection must not change results.
+
+Runs a fixed 3-kernel job set under three deterministic
+:class:`repro.core.faults.FaultPlan` scenarios and asserts every
+disturbed run produces reports **byte-equivalent** to an undisturbed
+serial baseline — with the recovery counters proving the faults actually
+fired (a green run can never mean "the crash never happened"):
+
+A. **Worker kill + auto-respawn** — spawned fleet worker 0 dies on its
+   first job (``kill_worker_after_jobs=0``); the coordinator re-dispatches
+   the orphaned task and respawns a replacement.
+B. **Coordinator crash mid-wave + journal recovery** — the coordinator
+   crashes right after journaling a completion; a successor Forge opens
+   the same fleet journal, recovers the in-flight tasks, resumes them,
+   and re-runs the batch to the baseline result.
+C. **Service restart mid-queue** — the service dispatcher crashes before
+   wave 1's terminal journal commit with three jobs accepted;
+   ``ForgeService.recover`` replays the submit journal and every job
+   completes exactly once on the restarted service.
+
+Every run is cold (no cache_path) so cache-hit flags match the baseline.
+Exit 0 with a "CHAOS GATE OK" trailer on success.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+from repro.aibench import build_program, load_specs
+from repro.core import Forge, ForgeConfig, OptimizationReport
+from repro.core.engine import KernelJob
+from repro.core.faults import FaultPlan, InjectedCrash
+from repro.serve.service import ForgeService, ServiceConfig
+
+MAX_ITERATIONS = 1      # chaos semantics are independent of search depth
+
+
+def _job(spec):
+    return KernelJob(spec.name,
+                     build_program(spec.builder, spec.dims("ci"), "naive",
+                                   meta=spec.meta),
+                     build_program(spec.builder, spec.dims("bench"), "naive",
+                                   meta=spec.meta),
+                     tags=tuple(spec.tags), target_dtype=spec.target_dtype,
+                     rtol=spec.rtol, atol=spec.atol, meta=dict(spec.meta))
+
+
+def _comparable(report_dict):
+    """Byte-comparable report form: drop the two keys that legitimately
+    differ across backends (config carries execution_backend; verify
+    counters depend on cache locality)."""
+    d = dict(report_dict)
+    d.pop("config", None)
+    d.pop("verify_stats", None)
+    return json.dumps(d, sort_keys=True)
+
+
+def scenario_a(specs, baseline_batch):
+    """Worker kill -> re-dispatch + auto-respawn, report unchanged."""
+    plan = FaultPlan(kill_worker_after_jobs=0, worker_index=0)
+    cfg = ForgeConfig(execution_backend="remote", workers=2,
+                      max_iterations=MAX_ITERATIONS,
+                      fleet_heartbeat_s=0.5, fleet_heartbeat_timeout_s=3.0,
+                      fault_spec=plan.to_json(), fleet_max_respawns=2)
+    forge = Forge(cfg)
+    try:
+        report = forge.optimize_batch([_job(s) for s in specs])
+        fleet = forge.engine._get_executor().fleet
+        deadline = time.monotonic() + 30
+        while fleet.workers_respawned < 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        tel = fleet.telemetry()
+    finally:
+        forge.close()
+    print(f"[chaos:A] telemetry {tel}")
+    assert tel["workers_lost"] >= 1, "worker kill never happened"
+    assert tel["tasks_redispatched"] >= 1, "no task was re-dispatched"
+    assert tel["workers_respawned"] >= 1, "no replacement was spawned"
+    assert _comparable(report.as_dict()) == baseline_batch, \
+        "scenario A report diverged from the serial baseline"
+
+
+def scenario_b(specs, baseline_batch, tmpdir):
+    """Coordinator crash after a journaled completion -> successor
+    recovers the in-flight tasks from the fleet journal."""
+    journal = os.path.join(tmpdir, "fleet.wal")
+    # completions are counted across runs: len(jobs) keys completions,
+    # then the crash lands on the first *job* completion of the next wave
+    plan = FaultPlan(crash_coordinator_after_completions=len(specs) + 1)
+    cfg = ForgeConfig(execution_backend="remote", workers=2,
+                      max_iterations=MAX_ITERATIONS,
+                      fault_spec=plan.to_json(), fleet_journal_path=journal)
+    forge1 = Forge(cfg)
+    crashed = False
+    try:
+        forge1.optimize_batch([_job(s) for s in specs])
+    except InjectedCrash as exc:
+        crashed = True
+        print(f"[chaos:B] injected: {exc}")
+    finally:
+        forge1.close()
+    assert crashed, "coordinator crash never fired"
+
+    cfg2 = ForgeConfig(execution_backend="remote", workers=2,
+                       max_iterations=MAX_ITERATIONS,
+                       fleet_journal_path=journal)
+    forge2 = Forge(cfg2)
+    try:
+        fleet = forge2.engine._get_executor().fleet
+        recovered = fleet.tasks_recovered
+        assert recovered > 0, "journal recovery found nothing in flight"
+        fleet.wait_for_workers(1, timeout=120)
+        resumed = fleet.resume_pending()
+        assert len(resumed) == recovered, \
+            f"resumed {len(resumed)}/{recovered} recovered tasks"
+        report = forge2.optimize_batch([_job(s) for s in specs])
+        tel = fleet.telemetry()
+    finally:
+        forge2.close()
+    print(f"[chaos:B] recovered {recovered} task(s); telemetry {tel}")
+    assert _comparable(report.as_dict()) == baseline_batch, \
+        "scenario B report diverged from the serial baseline"
+
+
+def scenario_c(specs, baseline_per_job, tmpdir):
+    """Service dispatcher crash mid-queue -> ForgeService.recover replays
+    the submit journal; every job completes exactly once."""
+    journal = os.path.join(tmpdir, "service.wal")
+    cfg = ForgeConfig(max_iterations=MAX_ITERATIONS)
+    plan = FaultPlan(crash_dispatcher_wave=1,
+                     crash_dispatcher_point="before-journal")
+    svc = ForgeService(cfg, service_config=ServiceConfig(wave_size=1),
+                       journal_path=journal, fault_plan=plan)
+    receipts = [svc.submit_job(_job(s), client="chaos") for s in specs]
+    deadline = time.monotonic() + 300
+    while not svc.dispatcher_crashed:
+        assert time.monotonic() < deadline, "dispatcher never crashed"
+        time.sleep(0.05)
+    svc.shutdown(drain=False)
+    assert plan.fired.get("crash_dispatcher:before-journal") == 1
+
+    svc2 = ForgeService.recover(journal, config=cfg,
+                                service_config=ServiceConfig(wave_size=1))
+    try:
+        js = svc2.journal_stats()
+        print(f"[chaos:C] recovery {js}")
+        assert js["jobs_recovered"] == len(specs)
+        assert js["jobs_requeued"] == len(specs), \
+            "recovery must requeue every non-terminal job"
+        for receipt, want in zip(receipts, baseline_per_job):
+            status = svc2.wait(receipt["job_id"], timeout=600)
+            assert status["state"] == "done", status
+            assert _comparable(status["report"]) == want, \
+                f"recovered job {status['name']} diverged from baseline"
+        # exactly once: the recovered engine ran each job a single time
+        assert svc2.forge.stats.jobs == len(specs), \
+            f"expected {len(specs)} engine runs, saw {svc2.forge.stats.jobs}"
+    finally:
+        svc2.shutdown(drain=True)
+
+
+def main() -> int:
+    specs = sorted(load_specs(), key=lambda s: s.name)[:3]
+    names = [s.name for s in specs]
+    print(f"[chaos] job set: {names}")
+
+    # undisturbed serial baselines (cold): one batch report for the fleet
+    # scenarios, per-job reports (same arrival order) for the service one
+    with Forge(ForgeConfig(execution_backend="serial",
+                           max_iterations=MAX_ITERATIONS)) as forge:
+        baseline_batch = _comparable(
+            forge.optimize_batch([_job(s) for s in specs]).as_dict())
+    with Forge(ForgeConfig(max_iterations=MAX_ITERATIONS)) as forge:
+        baseline_per_job = [
+            _comparable(forge.optimize(_job(s)).as_dict()) for s in specs]
+
+    with tempfile.TemporaryDirectory(prefix="chaos-gate-") as tmpdir:
+        scenario_a(specs, baseline_batch)
+        print("[chaos] scenario A (worker kill + respawn) OK")
+        scenario_b(specs, baseline_batch, tmpdir)
+        print("[chaos] scenario B (coordinator crash + journal) OK")
+        scenario_c(specs, baseline_per_job, tmpdir)
+        print("[chaos] scenario C (service restart mid-queue) OK")
+
+    print("CHAOS GATE OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,10 @@
 #                        identical per-kernel TransformLogs and speedups
 #   remote-equivalence   the same harness over a 2-worker loopback
 #                        distributed fleet: serial == remote, byte for byte
+#   chaos                seeded fault injection (worker kill + respawn,
+#                        coordinator crash + journal recovery, service
+#                        restart mid-queue) must leave every report
+#                        byte-equivalent to the undisturbed baseline
 #   pipeline-throughput  the verification fast path must keep a >=1.5x
 #                        end-to-end speedup over the uncached cascade with
 #                        bit-identical results, and cross-job sharing must
@@ -164,6 +168,16 @@ run_gate remote-equivalence \
   env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
   python scripts/backend_equivalence.py --workers 2 \
     --backends serial,remote || exit
+
+# Chaos gate: a fixed job set under seeded FaultPlans — worker kill with
+# auto-respawn, coordinator crash mid-wave with fleet-journal recovery,
+# and a service restart mid-queue recovered via ForgeService.recover —
+# each asserting reports byte-equivalent to the undisturbed serial
+# baseline, with workers_respawned / journal-recovery counters proving
+# the faults actually fired.
+run_gate chaos \
+  env PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  python scripts/chaos_gate.py || exit
 
 # Verification fast-path gate, three scenarios (writes BENCH_pipeline.json,
 # uploaded as a CI artifact): the memoized verify + cost-screened dispatch

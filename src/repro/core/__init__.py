@@ -14,6 +14,9 @@ from repro.core.context import ProblemContext
 from repro.core.cover import CoVeRAgent, Trajectory
 from repro.core.engine import (EngineResult, EngineStats, KernelJob,
                                OptimizationEngine, VerifyStats)
+from repro.core.faults import (FaultPlan, InjectedCrash,
+                               deterministic_backoff)
+from repro.core.journal import Journal, JournalCorruption, JournalError
 from repro.core.forge import Forge, OptimizationReport
 from repro.core.job_codec import (SUPPORTED_WIRE_VERSIONS, WIRE_VERSION,
                                   WireDecodeError, WireVersionError)
@@ -51,6 +54,8 @@ __all__ = [
     "WIRE_VERSION", "SUPPORTED_WIRE_VERSIONS", "WireDecodeError",
     "WireVersionError",
     "EXECUTION_BACKENDS", "PRIOR_POLICIES",
+    "FaultPlan", "InjectedCrash", "deterministic_backoff",
+    "Journal", "JournalError", "JournalCorruption",
     "History", "PatternStats", "PriorSnapshot",
     "encode_job", "decode_job", "encode_program", "decode_program",
     "encode_pipeline_result", "decode_pipeline_result",

@@ -174,6 +174,23 @@ class ForgeConfig:
     # is declared lost and its in-flight job is re-dispatched
     fleet_heartbeat_s: float = _operational(default=2.0)
     fleet_heartbeat_timeout_s: float = _operational(default=10.0)
+    # auto-respawn budget for coordinator-spawned workers: after a spawned
+    # worker is declared lost, the coordinator relaunches a replacement
+    # (capped deterministic backoff) up to this many times across the
+    # coordinator's lifetime; 0 disables respawning. Externally launched
+    # workers are never respawned — their lifecycle isn't ours.
+    fleet_max_respawns: int = _operational(default=3)
+    # crash-safe coordinator journal: dispatched task ids and merge-once
+    # completions are logged here so a coordinator restart re-dispatches
+    # the last wave's unfinished tasks instead of forgetting them; None
+    # disables journaling (purely in-memory fleet, the pre-PR-10 behavior)
+    fleet_journal_path: Optional[str] = _operational(default=None)
+    # deterministic fault injection: a repro.core.faults.FaultPlan in its
+    # to_json() form, threaded to the coordinator and its spawned workers
+    # (chaos gate / fleet tests only; None = no faults). A JSON string
+    # rather than a dict so the frozen config stays hashable; validated
+    # by parsing in __post_init__.
+    fault_spec: Optional[str] = _operational(default=None)
 
     def __post_init__(self):
         if self.max_iterations < 1:
@@ -209,6 +226,15 @@ class ForgeConfig:
         if self.fleet_heartbeat_timeout_s < self.fleet_heartbeat_s:
             raise ValueError("fleet_heartbeat_timeout_s must be >= "
                              "fleet_heartbeat_s")
+        if self.fleet_max_respawns < 0:
+            raise ValueError("fleet_max_respawns must be >= 0 "
+                             "(0 disables worker auto-respawn)")
+        if self.fleet_journal_path is not None:
+            object.__setattr__(self, "fleet_journal_path",
+                               str(self.fleet_journal_path))
+        if self.fault_spec is not None:
+            from repro.core.faults import FaultPlan
+            FaultPlan.from_json(self.fault_spec)  # fail fast on bad specs
         if self.fleet_address is not None:
             object.__setattr__(self, "fleet_address", str(self.fleet_address))
             from repro.core.remote import parse_address

@@ -1,0 +1,239 @@
+"""Deterministic fault injection for the durable Forge stack.
+
+Real crashes are the one failure mode CI can't schedule: a worker dies
+when the OOM killer feels like it, a dispatcher box reboots mid-wave,
+a disk tears the last journal record whenever the power goes. This
+module makes every one of those paths a *deterministic, reproducible*
+event instead: a :class:`FaultPlan` names the exact injection point
+(drop event frame N, kill the worker after K jobs, crash the service
+dispatcher before/after its journal commit, tear journal record M) and
+the sites that honor it — the service dispatcher in
+:mod:`repro.serve.service`, the fleet coordinator in
+:mod:`repro.core.fleet`, the worker loop in
+:mod:`repro.core.remote_worker`, and :class:`repro.core.journal.Journal`
+— fire it at precisely that point, every run, so the recovery paths the
+chaos gate asserts on are exercised on purpose rather than observed by
+luck.
+
+Injected crashes raise :class:`InjectedCrash`, which every normal
+``except Exception`` failure handler in the stack deliberately re-raises
+instead of absorbing: an injected crash must *kill* its thread the way a
+process death would, not be laundered into a tidy "job failed" record.
+
+The plan is JSON-codable (:meth:`FaultPlan.to_json` /
+:meth:`FaultPlan.from_json`) so it threads through every boundary the
+faults target: a ``ForgeConfig.fault_spec`` string reaches the fleet
+coordinator inside a remote-backend engine, and the coordinator forwards
+the plan to the spawned worker whose index matches
+``worker_index`` via the ``forge-worker --fault-plan`` flag
+(generalizing the older ``--die-after``).
+
+:func:`deterministic_backoff` also lives here: the capped-exponential,
+sha256-jittered sleep schedule introduced for ``ForgeClient.wait`` —
+now shared by worker ``--reconnect``, coordinator auto-respawn, and the
+client's 429 retry, so every retry loop in the stack desynchronizes
+identically and reproducibly (no ``random`` anywhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+from typing import Any, Dict, Optional
+
+__all__ = ["FaultPlan", "InjectedCrash", "DISPATCHER_CRASH_POINTS",
+           "deterministic_backoff"]
+
+#: Where the service dispatcher can be crashed relative to its terminal
+#: journal commit: "before-journal" leaves the wave's jobs with no
+#: completion record (recovery re-runs them), "after-journal" commits
+#: the completions first (recovery restores them as done).
+DISPATCHER_CRASH_POINTS = ("before-journal", "after-journal")
+
+
+class InjectedCrash(RuntimeError):
+    """A FaultPlan injection point fired. Simulates process death: normal
+    failure handlers must re-raise it, never convert it into a handled
+    job/wave failure."""
+
+
+def deterministic_backoff(key: str, attempt: int, base_s: float = 0.05,
+                          cap_s: float = 2.0) -> float:
+    """Capped exponential backoff with *deterministic* jitter.
+
+    The jitter fraction is derived from ``sha256(key:attempt)`` — no
+    ``random``, so a given (key, attempt) always sleeps the same amount
+    (reproducible tests, debuggable traces) while distinct keys retrying
+    against the same peer desynchronize instead of stampeding in
+    lockstep. Sleeps grow ``base_s * 2^attempt`` and are scaled into
+    ``[0.5, 1.0) ×`` that, capped at ``cap_s``.
+    """
+    raw = min(cap_s, base_s * (2.0 ** attempt))
+    digest = hashlib.sha256(f"{key}:{attempt}".encode()).digest()
+    frac = int.from_bytes(digest[:8], "big") / 2.0 ** 64
+    return raw * (0.5 + 0.5 * frac)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One deterministic set of injection points. Counters are internal
+    and lock-guarded, so concurrent sites (journal appends from handler
+    threads, completions from the coordinator run loop) see a single
+    consistent firing sequence. ``fired`` records which sites actually
+    triggered — the chaos gate asserts on it so a green run can't mean
+    "the fault never happened".
+
+    All triggers are 1-based counts, so a plan is reproducible from its
+    JSON form alone; ``seed`` keys the deterministic backoff jitter of
+    the paths the plan disturbs (respawn/reconnect) so two chaos runs
+    with different seeds explore different — but individually exact —
+    retry timings.
+    """
+
+    seed: int = 0
+    # -- worker-side (applied to the spawned worker at worker_index) ---
+    #: die with ``os._exit(DIE_EXIT_CODE)`` upon receiving job task
+    #: K+1 (keys tasks don't count) — exactly ``--die-after K``.
+    kill_worker_after_jobs: Optional[int] = None
+    #: sever the socket instead of sending outbound *event* frame N
+    #: (1-based; pongs don't count — ping cadence is timing-dependent),
+    #: then exit with ``DROP_EXIT_CODE``. The coordinator sees EOF,
+    #: marks the worker lost, and must re-dispatch its in-flight task.
+    drop_frame_after: Optional[int] = None
+    #: which coordinator-spawned worker receives the worker faults.
+    worker_index: int = 0
+    # -- service dispatcher --------------------------------------------
+    #: crash the ForgeService dispatcher on wave N (1-based) at
+    #: ``crash_dispatcher_point`` relative to the terminal journal
+    #: commit of that wave.
+    crash_dispatcher_wave: Optional[int] = None
+    crash_dispatcher_point: str = "before-journal"
+    # -- fleet coordinator ---------------------------------------------
+    #: crash the coordinator run loop right after journaling its Nth
+    #: merge-once completion (1-based, counted across runs — keys waves
+    #: included), leaving dispatched-but-incomplete tasks in the journal.
+    crash_coordinator_after_completions: Optional[int] = None
+    # -- journal --------------------------------------------------------
+    #: tear journal append N (1-based): write only half the record's
+    #: bytes, then raise InjectedCrash — the torn-tail tolerance path.
+    torn_write_record: Optional[int] = None
+
+    def __post_init__(self):
+        if self.crash_dispatcher_point not in DISPATCHER_CRASH_POINTS:
+            raise ValueError(
+                f"crash_dispatcher_point must be one of "
+                f"{DISPATCHER_CRASH_POINTS}, "
+                f"got {self.crash_dispatcher_point!r}")
+        for name in ("kill_worker_after_jobs", "drop_frame_after",
+                     "crash_dispatcher_wave",
+                     "crash_coordinator_after_completions",
+                     "torn_write_record"):
+            v = getattr(self, name)
+            if v is not None and v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+        if self.worker_index < 0:
+            raise ValueError("worker_index must be >= 0")
+        # runtime state (not part of the plan's identity/codec)
+        self._lock = threading.Lock()
+        self._frames = 0
+        self._waves = 0
+        self._completions = 0
+        self._records = 0
+        self.fired: Dict[str, int] = {}
+
+    # -- firing record --------------------------------------------------
+    def _fire(self, site: str) -> None:
+        self.fired[site] = self.fired.get(site, 0) + 1
+
+    # -- worker ----------------------------------------------------------
+    def worker_should_die(self, jobs_seen: int) -> bool:
+        """``--die-after`` semantics: die upon receiving job task K+1."""
+        if (self.kill_worker_after_jobs is not None
+                and jobs_seen >= self.kill_worker_after_jobs):
+            with self._lock:
+                self._fire("kill_worker")
+            return True
+        return False
+
+    def take_event_frame(self) -> bool:
+        """Count one outbound event frame; True = sever the socket now
+        instead of sending it."""
+        if self.drop_frame_after is None:
+            return False
+        with self._lock:
+            self._frames += 1
+            if self._frames == self.drop_frame_after:
+                self._fire("drop_frame")
+                return True
+        return False
+
+    # -- service dispatcher ----------------------------------------------
+    def next_wave(self) -> int:
+        """Register one dispatcher wave; returns its 1-based number."""
+        with self._lock:
+            self._waves += 1
+            return self._waves
+
+    def should_crash_dispatcher(self, wave_no: int, point: str) -> bool:
+        if (self.crash_dispatcher_wave is not None
+                and wave_no == self.crash_dispatcher_wave
+                and point == self.crash_dispatcher_point):
+            with self._lock:
+                self._fire(f"crash_dispatcher:{point}")
+            return True
+        return False
+
+    # -- coordinator ------------------------------------------------------
+    def take_completion(self) -> bool:
+        """Count one journaled merge-once completion; True = crash now."""
+        if self.crash_coordinator_after_completions is None:
+            return False
+        with self._lock:
+            self._completions += 1
+            if (self._completions
+                    == self.crash_coordinator_after_completions):
+                self._fire("crash_coordinator")
+                return True
+        return False
+
+    # -- journal ----------------------------------------------------------
+    def take_record(self) -> bool:
+        """Count one journal append; True = tear this record's write."""
+        if self.torn_write_record is None:
+            return False
+        with self._lock:
+            self._records += 1
+            if self._records == self.torn_write_record:
+                self._fire("torn_write")
+                return True
+        return False
+
+    # -- codec ------------------------------------------------------------
+    def has_worker_faults(self) -> bool:
+        return (self.kill_worker_after_jobs is not None
+                or self.drop_frame_after is not None)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FaultPlan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown FaultPlan fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        d = json.loads(text)
+        if not isinstance(d, dict):
+            raise ValueError("FaultPlan JSON must be an object")
+        return cls.from_dict(d)

@@ -46,7 +46,10 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import job_codec, remote
+from repro.core import journal as journal_mod
 from repro.core.engine import fold_worker_result
+from repro.core.faults import (FaultPlan, InjectedCrash,
+                               deterministic_backoff)
 
 __all__ = ["FleetError", "FleetCoordinator", "RemoteExecutor"]
 
@@ -91,13 +94,16 @@ class FleetCoordinator:
     owner of every piece of shared state.
     """
 
-    def __init__(self, pipeline, config, spawn_workers: int = 0):
+    def __init__(self, pipeline, config, spawn_workers: int = 0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 journal_path: Optional[str] = None):
         self.pipeline = pipeline
         self.config = config
         self.spawn_workers = spawn_workers
         self.heartbeat_s = config.fleet_heartbeat_s
         self.heartbeat_timeout_s = config.fleet_heartbeat_timeout_s
         self.connect_timeout_s = config.fleet_connect_timeout_s
+        self.max_respawns = config.fleet_max_respawns
         self._bind = remote.parse_address(config.fleet_address
                                           or "127.0.0.1:0")
         self._listener: Optional[socket.socket] = None
@@ -110,11 +116,82 @@ class FleetCoordinator:
         self._run_id = 0
         self._closed = False
         self._config_frame_cache: Optional[dict] = None
+        self._worker_env_cache: Optional[dict] = None
+        self._spawn_count = 0           # worker index (fault targeting)
+        self._respawn_attempts = 0
+        self._dispatch_logged: set = set()  # idxs journaled this run
+        # fault plan: explicit arg wins; else the config's JSON spec
+        # (how a remote-backend engine threads faults down to its fleet)
+        if fault_plan is None and config.fault_spec is not None:
+            fault_plan = FaultPlan.from_json(config.fault_spec)
+        self._fault_plan = fault_plan
         # telemetry the tests and the service /stats endpoint read
         self.workers_joined = 0
         self.workers_lost = 0
         self.workers_rejected = 0
         self.tasks_redispatched = 0
+        self.workers_respawned = 0
+        self.tasks_recovered = 0
+        # crash-safe dispatch journal: explicit arg wins, else the config
+        # knob. Opening replays it — the last wave's dispatched-but-
+        # incomplete tasks become _recovered_tasks for resume_pending().
+        self._journal: Optional[journal_mod.Journal] = None
+        self._recovered_tasks: List[tuple] = []
+        path = journal_path or config.fleet_journal_path
+        if path is not None:
+            self._journal = journal_mod.Journal(path,
+                                                fault_plan=self._fault_plan)
+            self._replay_journal()
+
+    def _replay_journal(self) -> None:
+        """Recover the last journaled wave: every task dispatched but not
+        completed before the crash must be re-dispatched. Earlier waves
+        need nothing — they either finished (their completes are all
+        present) or were superseded by the wave that followed."""
+        dispatched: Dict[Any, tuple] = {}
+        completed: set = set()
+        last_run = None
+        for rec in self._journal.records:
+            if not isinstance(rec, dict):
+                continue
+            kind = rec.get("kind")
+            if kind == "wave":
+                last_run = rec.get("run")
+                dispatched.clear()
+                completed.clear()
+            elif kind == "dispatch" and rec.get("run") == last_run:
+                task = rec.get("task")
+                if isinstance(task, tuple) and len(task) >= 2:
+                    dispatched[task[1]] = task
+            elif kind == "complete" and rec.get("run") == last_run:
+                completed.add(rec.get("idx"))
+        self._recovered_tasks = [dispatched[i] for i in sorted(dispatched)
+                                 if i not in completed]
+        self.tasks_recovered = len(self._recovered_tasks)
+        if not self._recovered_tasks:
+            self._journal.compact([])   # nothing in flight: start clean
+
+    def resume_pending(self, on_stage: Optional[Callable] = None,
+                       on_result: Optional[Callable] = None
+                       ) -> Dict[int, Any]:
+        """Re-dispatch the tasks recovered from the journal (the wave in
+        flight when the previous coordinator died) and return their
+        results, ``{idx: payload}``. No-op ``{}`` when nothing was
+        recovered. One-shot: the recovered list is consumed."""
+        tasks, self._recovered_tasks = self._recovered_tasks, []
+        if not tasks:
+            return {}
+        return self.run_tasks(tasks, on_stage=on_stage,
+                              on_result=on_result)
+
+    def telemetry(self) -> Dict[str, int]:
+        """Fleet counters in one JSON-safe view (chaos gate / dashboards)."""
+        return {"workers_joined": self.workers_joined,
+                "workers_lost": self.workers_lost,
+                "workers_rejected": self.workers_rejected,
+                "workers_respawned": self.workers_respawned,
+                "tasks_redispatched": self.tasks_redispatched,
+                "tasks_recovered": self.tasks_recovered}
 
     # -- lifecycle -----------------------------------------------------
     def start(self) -> "FleetCoordinator":
@@ -172,6 +249,11 @@ class FleetCoordinator:
 
     def _shutdown(self, graceful: bool, timeout: float) -> None:
         self._closed = True
+        if self._journal is not None:
+            # close the handle only — never compact here: after an
+            # injected (or real) mid-wave failure the journal is the one
+            # authoritative copy of what was still in flight
+            self._journal.close()
         listener, self._listener = self._listener, None
         if listener is not None:
             try:
@@ -210,22 +292,73 @@ class FleetCoordinator:
                     p.wait()
 
     # -- worker intake -------------------------------------------------
+    def _worker_env(self) -> dict:
+        if self._worker_env_cache is None:
+            import repro
+            # repro is a namespace package (__file__ is None) — derive the
+            # import root from its search path instead
+            src_root = str(
+                pathlib.Path(list(repro.__path__)[0]).resolve().parent)
+            env = dict(os.environ)
+            env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else src_root)
+            self._worker_env_cache = env
+        return self._worker_env_cache
+
     def _spawn_local(self, n: int) -> None:
         """Launch *n* loopback ``forge-worker`` processes against our own
         address — through the real CLI entrypoint, so a spawned local
         worker and a multi-host one are the same code path."""
-        import repro
-        # repro is a namespace package (__file__ is None) — derive the
-        # import root from its search path instead
-        src_root = str(pathlib.Path(list(repro.__path__)[0]).resolve().parent)
-        env = dict(os.environ)
-        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
-                             if env.get("PYTHONPATH") else src_root)
         for _ in range(n):
-            self._procs.append(subprocess.Popen(
-                [sys.executable, "-m", "repro.core.remote_worker",
-                 "--connect", self.address],
-                env=env, stdout=subprocess.DEVNULL))
+            self._spawn_one(with_faults=True)
+
+    def _spawn_one(self, with_faults: bool) -> None:
+        """Launch one worker. The fault plan's worker faults ride down to
+        exactly the spawned worker whose index matches ``worker_index``
+        — and never to a respawned replacement (``with_faults=False``),
+        or the replacement would just re-die on the same trigger."""
+        with self._lock:
+            idx = self._spawn_count
+            self._spawn_count += 1
+        cmd = [sys.executable, "-m", "repro.core.remote_worker",
+               "--connect", self.address]
+        if (with_faults and self._fault_plan is not None
+                and self._fault_plan.has_worker_faults()
+                and idx == self._fault_plan.worker_index):
+            cmd += ["--fault-plan", self._fault_plan.to_json()]
+        proc = subprocess.Popen(cmd, env=self._worker_env(),
+                                stdout=subprocess.DEVNULL)
+        with self._lock:
+            self._procs.append(proc)
+
+    def _maybe_respawn(self) -> None:
+        """Auto-respawn after a worker loss: replace one spawned worker,
+        up to ``fleet_max_respawns`` over the coordinator's lifetime,
+        after a capped deterministic backoff (the ForgeClient.wait
+        schedule). Fleets that spawned nothing never respawn — external
+        workers' lifecycles aren't ours to manage."""
+        with self._lock:
+            if (self._closed or self.spawn_workers <= 0
+                    or self._listener is None
+                    or self._respawn_attempts >= self.max_respawns):
+                return
+            attempt = self._respawn_attempts
+            self._respawn_attempts += 1
+        seed = self._fault_plan.seed if self._fault_plan is not None else 0
+        host, port = self._bind
+
+        def respawner():
+            time.sleep(deterministic_backoff(
+                f"respawn:{host}:{port}:{seed}", attempt,
+                base_s=0.05, cap_s=2.0))
+            if self._closed:
+                return
+            self._spawn_one(with_faults=False)
+            with self._lock:
+                self.workers_respawned += 1
+
+        threading.Thread(target=respawner, daemon=True,
+                         name="fleet-respawn").start()
 
     def _config_frame(self) -> dict:
         if self._config_frame_cache is None:
@@ -341,6 +474,7 @@ class FleetCoordinator:
         except OSError:
             pass
         self._events.put(("lost", worker, reason))
+        self._maybe_respawn()
 
     def _send(self, worker: _Worker, msg: dict) -> bool:
         try:
@@ -366,6 +500,15 @@ class FleetCoordinator:
                     continue
                 task = pending.popleft()
                 w.inflight = (run_id, task)
+            # journal the dispatch BEFORE the task frame leaves (WAL
+            # ordering: a crash after send but before journal would
+            # forget an in-flight task). First dispatch only — a
+            # re-dispatch after worker loss is not a new fact.
+            if self._journal is not None \
+                    and task[1] not in self._dispatch_logged:
+                self._dispatch_logged.add(task[1])
+                self._journal.append(
+                    journal_mod.dispatch_record(run_id, task))
             # a failed send marks the worker lost; the run loop's "lost"
             # handler re-queues the task off w.inflight — never clear it
             # here or a racing loss event would drop the task on the floor
@@ -404,6 +547,10 @@ class FleetCoordinator:
                 raise FleetError("fleet coordinator is closed")
             self._run_id += 1
             run_id = self._run_id
+            self._dispatch_logged = set()
+            if self._journal is not None:
+                self._journal.append(
+                    journal_mod.wave_record(run_id, len(tasks)))
             pending = collections.deque(tasks)
             results: Dict[int, Any] = {}
             want = len(tasks)
@@ -459,12 +606,26 @@ class FleetCoordinator:
                     if idx in results:
                         continue  # duplicate (merge once)
                     results[idx] = event[2]
+                    if self._journal is not None:
+                        # sync=False: losing a completion record only
+                        # costs a safe (idempotent) re-run on recovery
+                        self._journal.append(
+                            journal_mod.complete_record(run_id, idx),
+                            sync=False)
+                    if (self._fault_plan is not None
+                            and self._fault_plan.take_completion()):
+                        raise InjectedCrash(
+                            f"coordinator crash after journaling "
+                            f"completion #{idx} (run {run_id})")
                     if on_result is not None:
                         on_result(idx, event[2])
                 else:  # "error"
                     raise FleetError(
                         f"fleet worker task #{idx} failed "
                         f"(worker {worker!r}):\n{event[2]}")
+            if self._journal is not None:
+                # wave fully merged: nothing left to recover from it
+                self._journal.compact([])
             return results
 
 

@@ -1,0 +1,326 @@
+"""Append-only crash-safe journal: the durability substrate for the
+hosted service and the fleet coordinator.
+
+Both PR-8's :class:`~repro.serve.service.ForgeService` and PR-9's
+:class:`~repro.core.fleet.FleetCoordinator` kept their queues purely in
+memory: a process restart forgot every queued job and every in-flight
+wave. This module is the write-ahead log both now commit to *before*
+acknowledging work (the service journals a submit before its 202; the
+coordinator journals a dispatch before the task frame goes out), so a
+restart replays the journal and resumes instead of forgetting.
+
+On-disk format (all integers big-endian)::
+
+    header:  8s  magic   b"XEFORGEJ"
+             I   version (1)
+             I   reserved (0)
+    record:  I   payload length in bytes
+             I   CRC-32 of the payload bytes
+             Nx  payload — UTF-8 JSON of ``job_codec.encode_value(rec)``
+
+Payloads go through the same tuple-tagging value codec the process/fleet
+wire uses (:mod:`repro.core.job_codec`), so fleet task tuples and job
+wire forms round-trip the journal with the exact fidelity every other
+transport in the stack guarantees.
+
+Crash-tolerance contract, exercised by ``tests/test_journal.py`` and the
+chaos CI gate:
+
+* **Torn final record tolerated.** A crash mid-append (power loss, the
+  ``FaultPlan.torn_write_record`` injection) leaves a partial record at
+  the tail. Load detects it (short header, short payload, or a
+  CRC-mismatched *final* record), truncates the file back to the last
+  clean record, and continues — losing only the append that never
+  committed, which by protocol was never acknowledged to anyone.
+* **Corruption elsewhere is typed, never silent.** A CRC mismatch on any
+  record *with committed records after it* cannot be a torn tail — it is
+  bit rot or tampering, and load raises :class:`JournalCorruption`
+  rather than guessing which half of history to keep.
+* **fsync-on-commit.** Every ``append`` flushes and ``os.fsync``\\ s by
+  default (``sync=False`` opts a caller out where the record is merely
+  an optimization, e.g. completion records that only save replay work).
+* **Atomic compaction.** :meth:`Journal.compact` rewrites the journal as
+  header + the given records via temp-file + fsync + ``os.replace`` —
+  a crash at any point leaves either the old journal or the new one,
+  never a hybrid.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+import zlib
+from typing import Any, Dict, List, Optional
+
+from repro.core import job_codec
+from repro.core.faults import FaultPlan, InjectedCrash
+
+__all__ = ["Journal", "JournalError", "JournalCorruption",
+           "JOURNAL_MAGIC", "JOURNAL_VERSION"]
+
+JOURNAL_MAGIC = b"XEFORGEJ"
+JOURNAL_VERSION = 1
+
+_HEADER = struct.Struct(">8sII")    # magic, version, reserved
+_REC = struct.Struct(">II")         # payload length, payload crc32
+
+
+class JournalError(RuntimeError):
+    """The file is not a journal this build can read: bad magic, an
+    unsupported version, or an unreadable path."""
+
+
+class JournalCorruption(JournalError):
+    """A committed (non-final) record failed its CRC — bit rot or
+    tampering, not a torn tail, so load refuses rather than truncates."""
+
+
+def _encode_record(record: Any) -> bytes:
+    payload = json.dumps(job_codec.encode_value(record), sort_keys=True,
+                         separators=(",", ":")).encode("utf-8")
+    return _REC.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+class Journal:
+    """One open journal file. ``__init__`` scans and recovers (truncating
+    a torn tail); :attr:`records` holds everything recovered, in commit
+    order, and :meth:`append` extends both the file and the list.
+
+    Thread-safe: appends can arrive from HTTP handler threads (service
+    submits) while the dispatcher appends terminal records.
+    """
+
+    def __init__(self, path: str, fault_plan: Optional[FaultPlan] = None,
+                 sync: bool = True):
+        self.path = str(path)
+        self.sync = sync
+        self.fault_plan = fault_plan
+        self._lock = threading.Lock()
+        self._readonly = False
+        self.records: List[Any] = []
+        self.recovered = 0          # records present when the file opened
+        self.appended = 0
+        self.truncated_tail = False
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        fresh = (not os.path.exists(self.path)
+                 or os.path.getsize(self.path) < _HEADER.size)
+        if not fresh:
+            self._fh = open(self.path, "r+b")
+            self._scan()
+        else:
+            # missing, empty, or torn *header* (a crash during creation —
+            # nothing was ever committed to it): start clean
+            self.truncated_tail = os.path.exists(self.path) and \
+                os.path.getsize(self.path) > 0
+            self._fh = open(self.path, "w+b")
+            self._fh.write(_HEADER.pack(JOURNAL_MAGIC, JOURNAL_VERSION, 0))
+            self._commit()
+        self.recovered = len(self.records)
+
+    # -- load ----------------------------------------------------------
+    def _scan(self) -> None:
+        fh = self._fh
+        header = fh.read(_HEADER.size)
+        magic, version, _ = _HEADER.unpack(header)
+        if magic != JOURNAL_MAGIC:
+            fh.close()
+            raise JournalError(
+                f"{self.path}: not a forge journal (bad magic {magic!r})")
+        if version != JOURNAL_VERSION:
+            fh.close()
+            raise JournalError(
+                f"{self.path}: journal version {version} unsupported "
+                f"(this build reads {JOURNAL_VERSION})")
+        clean_end = _HEADER.size
+        pending: Optional[Any] = None   # last record, held back one step:
+        # a CRC failure is only "torn tail" if nothing committed after it
+        pending_bad = False
+        while True:
+            rec_header = fh.read(_REC.size)
+            if not rec_header:
+                break
+            if len(rec_header) < _REC.size:
+                self.truncated_tail = True          # torn record header
+                break
+            length, crc = _REC.unpack(rec_header)
+            payload = fh.read(length)
+            if len(payload) < length:
+                self.truncated_tail = True          # torn payload
+                break
+            if pending_bad:
+                fh.close()
+                raise JournalCorruption(
+                    f"{self.path}: CRC mismatch on a non-final record "
+                    f"(committed records follow it) — refusing to load")
+            if pending is not None:
+                self.records.append(pending)
+                pending = None
+            if zlib.crc32(payload) != crc:
+                pending_bad = True
+                continue
+            try:
+                pending = job_codec.decode_value(json.loads(payload))
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                # valid CRC but undecodable JSON: written corrupt, not
+                # torn — same refusal as a mid-file CRC failure
+                fh.close()
+                raise JournalCorruption(
+                    f"{self.path}: record passes CRC but is not valid "
+                    f"JSON — refusing to load")
+            clean_end = fh.tell()
+        if pending_bad:
+            # final record failed CRC with nothing after it: a torn tail
+            # where the payload bytes happened to land at full length
+            self.truncated_tail = True
+        elif pending is not None:
+            self.records.append(pending)
+        if self.truncated_tail and not self._readonly:
+            fh.truncate(clean_end)
+            self._commit()
+        fh.seek(0, os.SEEK_END)
+
+    @staticmethod
+    def load(path: str) -> List[Any]:
+        """Read-only scan: the recovered records of *path* (same torn-tail
+        tolerance as opening, but without keeping a handle or truncating
+        the file — safe on a journal another process owns)."""
+        j = Journal.__new__(Journal)
+        j.path = str(path)
+        j.records = []
+        j.truncated_tail = False
+        j._readonly = True
+        j._fh = open(path, "rb")
+        try:
+            j._scan()
+        finally:
+            try:
+                j._fh.close()
+            except (OSError, ValueError):
+                pass
+        return j.records
+
+    # -- append --------------------------------------------------------
+    def _commit(self) -> None:
+        self._fh.flush()
+        if self.sync:
+            os.fsync(self._fh.fileno())
+
+    def append(self, record: Any, sync: Optional[bool] = None) -> None:
+        """Encode, write, and (by default) fsync one record. With a
+        fault plan armed for this append, writes only half the record's
+        bytes and raises :class:`InjectedCrash` — the deterministic
+        stand-in for power loss mid-write."""
+        data = _encode_record(record)
+        with self._lock:
+            if self.fault_plan is not None and self.fault_plan.take_record():
+                self._fh.write(data[:max(1, len(data) // 2)])
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+                raise InjectedCrash(
+                    f"torn write injected on journal record "
+                    f"#{len(self.records) + 1}")
+            self._fh.write(data)
+            if sync if sync is not None else self.sync:
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+            else:
+                self._fh.flush()
+            self.records.append(record)
+            self.appended += 1
+
+    def compact(self, records: List[Any]) -> None:
+        """Atomically replace the journal's contents with *records*
+        (tmp file + fsync + ``os.replace``): either the old journal or
+        the new one exists at every instant, never a partial hybrid."""
+        tmp = self.path + ".tmp"
+        with self._lock:
+            with open(tmp, "wb") as out:
+                out.write(_HEADER.pack(JOURNAL_MAGIC, JOURNAL_VERSION, 0))
+                for record in records:
+                    out.write(_encode_record(record))
+                out.flush()
+                os.fsync(out.fileno())
+            os.replace(tmp, self.path)
+            try:  # persist the rename itself (best effort on odd FSes)
+                dir_fd = os.open(os.path.dirname(os.path.abspath(self.path))
+                                 or ".", os.O_RDONLY)
+                try:
+                    os.fsync(dir_fd)
+                finally:
+                    os.close(dir_fd)
+            except OSError:
+                pass
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = open(self.path, "r+b")
+            self._fh.seek(0, os.SEEK_END)
+            self.records = list(records)
+
+    def close(self) -> None:
+        with self._lock:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def stats(self) -> Dict[str, Any]:
+        return {"path": self.path, "records": len(self.records),
+                "recovered": self.recovered, "appended": self.appended,
+                "truncated_tail": self.truncated_tail}
+
+
+# ----------------------------------------------------------------------
+# Typed record constructors. Plain dicts with a "kind" discriminator —
+# the journal stores JSON-safe values, so "typed" here means "one
+# constructor per record shape, so every writer agrees on field names".
+# ----------------------------------------------------------------------
+
+def submit_record(job_id: str, wire: Dict[str, Any], client: str,
+                  priority: int, seq: int, created_s: float,
+                  attached_to: Optional[str] = None) -> Dict[str, Any]:
+    """Service: one accepted submission, committed *before* the 202.
+    Carries the full job wire form so recovery can re-enqueue without
+    any other state surviving the crash."""
+    return {"kind": "submit", "job_id": job_id, "job": wire,
+            "client": client, "priority": priority, "seq": seq,
+            "created_s": created_s, "attached_to": attached_to}
+
+
+def terminal_record(job_id: str, state: str,
+                    report: Optional[Dict[str, Any]] = None,
+                    error: Optional[str] = None,
+                    finished_s: float = 0.0) -> Dict[str, Any]:
+    """Service: a job reached a terminal state. Carries the report so a
+    restart serves completed jobs from the journal instead of re-running
+    them."""
+    return {"kind": "terminal", "job_id": job_id, "state": state,
+            "report": report, "error": error, "finished_s": finished_s}
+
+
+def wave_record(run_id: int, task_count: int) -> Dict[str, Any]:
+    """Coordinator: a ``run_tasks`` wave began. Scopes the dispatch and
+    complete records that follow it — recovery only resumes the *last*
+    wave (earlier waves either finished or were superseded)."""
+    return {"kind": "wave", "run": run_id, "tasks": task_count}
+
+
+def dispatch_record(run_id: int, task: tuple) -> Dict[str, Any]:
+    """Coordinator: one task handed to a worker (journaled on its first
+    dispatch; re-dispatches after worker loss aren't new facts). The task
+    tuple rides the tuple-tagging codec intact."""
+    return {"kind": "dispatch", "run": run_id, "task": task}
+
+
+def complete_record(run_id: int, idx: int) -> Dict[str, Any]:
+    """Coordinator: task *idx* of wave *run_id* merged its result (the
+    merge-once point). dispatched − completed = what a restart must
+    re-dispatch."""
+    return {"kind": "complete", "run": run_id, "idx": idx}

@@ -19,11 +19,13 @@ job to any surviving worker with no state to reconcile.
 
 Usage::
 
-    forge-worker --connect HOST:PORT
+    forge-worker --connect HOST:PORT [--reconnect N] [--fault-plan JSON]
 
 Exit codes: 0 orderly shutdown/drain, 2 handshake rejected by the
 coordinator, 3 worker-side policy/KB cross-check failed, 4 connection
-lost.
+lost (retried with capped deterministic backoff when ``--reconnect N``
+is given — deliberate drain/rejection never retries), 17/18 injected
+faults (kill / dropped-frame sever).
 """
 
 from __future__ import annotations
@@ -36,30 +38,42 @@ import queue as queue_mod
 import socket
 import sys
 import threading
+import time
 import traceback
 from typing import Optional
 
 from repro.core import job_codec, remote
+from repro.core.faults import FaultPlan, deterministic_backoff
 
 __all__ = ["run_worker", "main"]
 
-#: Fault-injection exit code (``--die-after``), distinct from every
-#: legitimate exit so tests can assert the death was the injected one.
+#: Fault-injection exit code (``--die-after`` / kill_worker_after_jobs),
+#: distinct from every legitimate exit so tests can assert the death was
+#: the injected one.
 DIE_EXIT_CODE = 17
+
+#: Fault-injection exit code for ``drop_frame_after``: the worker severed
+#: its socket instead of sending an event frame, then exited.
+DROP_EXIT_CODE = 18
 
 
 def run_worker(connect: str, die_after: Optional[int] = None,
                hello_protocol_version: Optional[int] = None,
-               hello_wire_version: Optional[int] = None) -> int:
+               hello_wire_version: Optional[int] = None,
+               fault_plan: Optional[FaultPlan] = None) -> int:
     """Run the worker loop against coordinator *connect* ("host:port").
 
-    ``die_after`` is fault injection for the fleet tests: the worker
-    calls ``os._exit(17)`` upon receiving job task number ``die_after +
-    1`` (keys tasks don't count) — i.e. ``--die-after 0`` dies on its
-    first job, after dispatch but before any partial work. The
-    ``hello_*_version`` overrides exist solely to exercise handshake
-    rejection.
+    ``die_after`` is the legacy fault-injection knob, kept for the fleet
+    tests: the worker calls ``os._exit(17)`` upon receiving job task
+    number ``die_after + 1`` (keys tasks don't count) — i.e.
+    ``--die-after 0`` dies on its first job, after dispatch but before
+    any partial work. ``fault_plan`` generalizes it
+    (:class:`repro.core.faults.FaultPlan`: kill-after-K-jobs, sever the
+    socket instead of sending event frame N). The ``hello_*_version``
+    overrides exist solely to exercise handshake rejection.
     """
+    if fault_plan is None and die_after is not None:
+        fault_plan = FaultPlan(kill_worker_after_jobs=die_after)
     # heavy imports deferred past arg parsing so ``forge-worker --help``
     # stays instant and import errors surface after the CLI contract
     from repro.core.config import ForgeConfig
@@ -177,6 +191,15 @@ def run_worker(connect: str, die_after: Optional[int] = None,
         kind, idx = task[0], task[1]
 
         def emit(event, _run=run_id):
+            if fault_plan is not None and fault_plan.take_event_frame():
+                # drop-frame injection: sever the socket instead of
+                # sending this event — the coordinator sees EOF, marks
+                # the worker lost, and must re-dispatch its task
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                os._exit(DROP_EXIT_CODE)
             send({"type": "event", "run": _run, "event": event})
 
         try:
@@ -184,7 +207,8 @@ def run_worker(connect: str, die_after: Optional[int] = None,
                 job = job_codec.decode_job(task[2])
                 emit(("keys", idx, compute_job_keys(pipeline, job)))
                 continue
-            if die_after is not None and jobs_seen >= die_after:
+            if fault_plan is not None \
+                    and fault_plan.worker_should_die(jobs_seen):
                 # fault injection: die after dispatch, before any work —
                 # the coordinator must detect the loss and re-dispatch
                 os._exit(DIE_EXIT_CODE)
@@ -234,6 +258,17 @@ def build_parser() -> argparse.ArgumentParser:
                         help="fault injection for fleet tests: exit(17) "
                              "upon receiving job task N+1 (keys tasks "
                              "don't count)")
+    parser.add_argument("--fault-plan", default=None, metavar="JSON",
+                        help="deterministic fault injection: a "
+                             "repro.core.faults.FaultPlan in to_json() "
+                             "form (generalizes --die-after; chaos gate "
+                             "and fleet tests only)")
+    parser.add_argument("--reconnect", type=int, default=0, metavar="N",
+                        help="on connection loss (exit code 4), retry the "
+                             "coordinator up to N times with capped "
+                             "deterministic backoff; deliberate drain "
+                             "(exit 0) and handshake rejection never "
+                             "retry")
     # handshake-rejection test hooks
     parser.add_argument("--hello-protocol-version", type=int, default=None,
                         help=argparse.SUPPRESS)
@@ -244,11 +279,29 @@ def build_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    fault_plan = (FaultPlan.from_json(args.fault_plan)
+                  if args.fault_plan else None)
+    attempt = 0
     try:
-        return run_worker(
-            args.connect, die_after=args.die_after,
-            hello_protocol_version=args.hello_protocol_version,
-            hello_wire_version=args.hello_wire_version)
+        while True:
+            rc = run_worker(
+                args.connect, die_after=args.die_after,
+                hello_protocol_version=args.hello_protocol_version,
+                hello_wire_version=args.hello_wire_version,
+                fault_plan=fault_plan)
+            # retry ONLY transport loss (4): a drain (0) is deliberate,
+            # and a rejection (2) / cross-check failure (3) would just
+            # repeat — this worker build can never join that fleet
+            if rc != 4 or attempt >= max(0, args.reconnect):
+                return rc
+            delay = deterministic_backoff(
+                f"reconnect:{args.connect}:{os.getpid()}", attempt,
+                base_s=0.2, cap_s=5.0)
+            print(f"forge-worker: connection lost; reconnect "
+                  f"{attempt + 1}/{args.reconnect} in {delay:.2f}s",
+                  file=sys.stderr)
+            time.sleep(delay)
+            attempt += 1
     except KeyboardInterrupt:
         return 130
 

@@ -37,6 +37,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="engine execution backend")
     p.add_argument("--cache-path", default=None,
                    help="persist the shared result store here")
+    p.add_argument("--journal", default=None, metavar="PATH",
+                   help="crash-safe job journal: submits are committed "
+                        "here before they are acknowledged, and starting "
+                        "against an existing journal recovers every "
+                        "queued/mid-wave job (see README 'Durability & "
+                        "fault injection')")
     # distributed fleet (--backend remote; see README 'Distributed fleet')
     p.add_argument("--fleet-address", default=None, metavar="HOST:PORT",
                    help="bind the fleet coordinator here so forge-worker "
@@ -73,7 +79,13 @@ def main(argv=None) -> int:
         service_config=ServiceConfig(wave_size=args.wave_size,
                                      max_queue_depth=args.max_queue_depth,
                                      rate_per_sec=args.rate_limit,
-                                     burst=args.burst))
+                                     burst=args.burst),
+        journal_path=args.journal)
+    if args.journal and not args.quiet:
+        js = service.journal_stats()
+        print(f"[forge-serve] journal {args.journal}: "
+              f"{js['jobs_recovered']} jobs recovered, "
+              f"{js['jobs_requeued']} requeued", file=sys.stderr)
     server = ForgeServiceServer((args.host, args.port), service)
     if not args.quiet:
         server.request_log = lambda line: print(f"[forge-serve] {line}",

@@ -13,7 +13,6 @@ and the lower-level pieces (``submit`` / ``status`` / ``wait`` /
 
 from __future__ import annotations
 
-import hashlib
 import http.client
 import json
 import time
@@ -22,6 +21,7 @@ from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.core import job_codec
 from repro.core.engine import KernelJob
+from repro.core.faults import deterministic_backoff
 
 __all__ = ["ForgeClient", "ServiceError", "StreamInterrupted"]
 
@@ -50,19 +50,12 @@ class StreamInterrupted(ServiceError):
 
 def _poll_backoff(job_id: str, attempt: int, base_s: float = 0.05,
                   cap_s: float = 2.0) -> float:
-    """Capped exponential backoff with *deterministic* jitter.
-
-    The jitter fraction is derived from ``sha256(job_id:attempt)`` — no
-    ``random``, so a given (job, attempt) always sleeps the same amount
-    (reproducible tests, debuggable traces) while distinct jobs polling
-    the same service desynchronize instead of stampeding in lockstep.
-    Sleeps grow ``base_s * 2^attempt`` and are scaled into
-    ``[0.5, 1.0) ×`` that, capped at ``cap_s``.
-    """
-    raw = min(cap_s, base_s * (2.0 ** attempt))
-    digest = hashlib.sha256(f"{job_id}:{attempt}".encode()).digest()
-    frac = int.from_bytes(digest[:8], "big") / 2.0 ** 64
-    return raw * (0.5 + 0.5 * frac)
+    """Capped exponential backoff with deterministic sha256 jitter —
+    now the shared :func:`repro.core.faults.deterministic_backoff`
+    schedule (this alias keeps the historical name and its byte-exact
+    sleep sequence: same formula, same digest keying)."""
+    return deterministic_backoff(job_id, attempt, base_s=base_s,
+                                 cap_s=cap_s)
 
 
 class ForgeClient:
@@ -71,7 +64,8 @@ class ForgeClient:
     nothing at this scale and keeps the client trivially thread-safe)."""
 
     def __init__(self, base_url: str, api_key: Optional[str] = None,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, retry_on_rate_limit: bool = False,
+                 rate_limit_retries: int = 5):
         parsed = urllib.parse.urlsplit(base_url)
         if parsed.scheme != "http":
             raise ValueError(f"only http:// is supported, got {base_url!r}")
@@ -79,6 +73,12 @@ class ForgeClient:
         self.port = parsed.port or 80
         self.api_key = api_key
         self.timeout = timeout
+        # opt-in: honor the server's Retry-After on a 429 instead of
+        # raising immediately, bounded to rate_limit_retries attempts —
+        # a client in a submit loop rides out its token bucket without
+        # hand-rolled sleep logic, but can never spin forever
+        self.retry_on_rate_limit = retry_on_rate_limit
+        self.rate_limit_retries = max(0, int(rate_limit_retries))
 
     # -- transport -------------------------------------------------------
     def _headers(self) -> Dict[str, str]:
@@ -89,6 +89,24 @@ class ForgeClient:
 
     def _request(self, method: str, path: str,
                  body: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        attempt = 0
+        while True:
+            try:
+                return self._request_once(method, path, body)
+            except ServiceError as exc:
+                if (not self.retry_on_rate_limit or exc.status != 429
+                        or exc.retry_after_s is None
+                        or attempt >= self.rate_limit_retries):
+                    raise
+                # the server's hint, capped so a pathological Retry-After
+                # can't park the client; no extra jitter needed — the
+                # hint already reflects this client's private bucket
+                time.sleep(min(max(0.0, exc.retry_after_s), 30.0))
+                attempt += 1
+
+    def _request_once(self, method: str, path: str,
+                      body: Optional[Dict[str, Any]] = None
+                      ) -> Dict[str, Any]:
         conn = http.client.HTTPConnection(self.host, self.port,
                                           timeout=self.timeout)
         try:

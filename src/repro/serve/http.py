@@ -117,8 +117,16 @@ class ForgeRequestHandler(BaseHTTPRequestHandler):
         path = self.path.split("?", 1)[0]
         if path == "/v1/healthz":
             svc = self.service
-            return self._send_json(200, {
-                "ok": True, "accepting": not svc.draining})
+            payload: Dict[str, Any] = {
+                "ok": True, "accepting": not svc.draining}
+            # journal key only when a journal is configured — a plain
+            # in-memory service answers exactly as before
+            js = svc.journal_stats()
+            if js is not None:
+                payload["journal"] = js
+                if getattr(svc, "dispatcher_crashed", False):
+                    payload["ok"] = False
+            return self._send_json(200, payload)
         if path == "/v1/stats":
             return self._send_json(200, self.service.stats())
         route = self._job_route()

@@ -54,8 +54,10 @@ import traceback
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from repro.core import job_codec
+from repro.core import journal as journal_mod
 from repro.core.config import ForgeConfig
 from repro.core.engine import KernelJob, compute_job_keys
+from repro.core.faults import FaultPlan, InjectedCrash
 from repro.core.forge import Forge, OptimizationReport
 from repro.core.observers import ForgeObserver, StageEvent
 
@@ -145,17 +147,24 @@ class ServiceJob:
 
     def __init__(self, job_id: str, job: KernelJob, client: str,
                  priority: int, exact_key: str,
-                 attached_to: Optional[str] = None):
+                 attached_to: Optional[str] = None, seq: int = 0):
         self.id = job_id
         self.job = job
         self.client = client
         self.priority = priority
         self.exact_key = exact_key
         self.attached_to = attached_to      # primary job id when deduped
+        self.seq = seq                      # arrival order (journal replay)
         self.state = "queued"
+        # wall-clock fields are display timestamps only; every *duration*
+        # is computed from the monotonic anchors below, so an NTP step
+        # can't skew reported wait/run times
         self.created_s = time.time()
         self.started_s: Optional[float] = None
         self.finished_s: Optional[float] = None
+        self._created_m = time.monotonic()
+        self._started_m: Optional[float] = None
+        self._finished_m: Optional[float] = None
         self.events: List[Dict[str, Any]] = []   # stage records, in order
         self.report: Optional[Dict[str, Any]] = None
         self.error: Optional[str] = None
@@ -173,6 +182,13 @@ class ServiceJob:
             "created_s": self.created_s,
             "started_s": self.started_s,
             "finished_s": self.finished_s,
+            # monotonic-derived durations (None until the anchor exists;
+            # jobs restored from a journal have no live anchors)
+            "wait_s": (self._started_m - self._created_m
+                       if self._started_m is not None else None),
+            "run_s": (self._finished_m - self._started_m
+                      if self._started_m is not None
+                      and self._finished_m is not None else None),
             "events": len(self.events),
         }
         if queue_position is not None:
@@ -220,7 +236,9 @@ class ForgeService:
     def __init__(self, config: Optional[ForgeConfig] = None, *,
                  forge: Optional[Forge] = None,
                  service_config: Optional[ServiceConfig] = None,
-                 autostart: bool = True):
+                 autostart: bool = True,
+                 journal_path: Optional[str] = None,
+                 fault_plan: Optional[FaultPlan] = None):
         self.forge = forge if forge is not None else Forge(config
                                                            or ForgeConfig())
         self.service_config = service_config or ServiceConfig()
@@ -239,10 +257,143 @@ class ForgeService:
         self._clients: Dict[str, Dict[str, int]] = {}
         self._accepting = True
         self._stopping = False
-        self._started_s = time.time()
+        self._started_s = time.time()          # display timestamp
+        self._started_m = time.monotonic()     # uptime anchor
         self._dispatcher: Optional[threading.Thread] = None
+        self._fault_plan = fault_plan
+        #: set when an injected dispatcher crash halted the drain loop —
+        #: the service is then "dead" the way a crashed process is, and
+        #: the journal is the only live copy of its state
+        self.dispatcher_crashed = False
+        self._journal: Optional[journal_mod.Journal] = None
+        self._recovered_jobs = 0
+        self._requeued_jobs = 0
+        if journal_path is not None:
+            # opening IS recovering: replay whatever the journal holds
+            # (nothing, for a fresh path), then compact it down to the
+            # equivalent minimal record set
+            self._journal = journal_mod.Journal(journal_path,
+                                                fault_plan=fault_plan)
+            self._replay_journal()
+            self._journal.compact(self._compaction_records())
         if autostart:
             self.start()
+
+    @classmethod
+    def recover(cls, journal_path: str,
+                config: Optional[ForgeConfig] = None,
+                **kwargs) -> "ForgeService":
+        """Rebuild a service from *journal_path*: every journaled job is
+        restored — terminal jobs with their reports, queued and mid-wave
+        jobs re-enqueued in original (priority, arrival) order. A thin
+        alias for constructing with ``journal_path`` (opening a journal
+        always replays it); exists so the restart-after-crash call site
+        reads as what it is."""
+        return cls(config, journal_path=journal_path, **kwargs)
+
+    # -- journal recovery ------------------------------------------------
+    def _replay_journal(self) -> None:
+        """Rebuild job records, dedup attachments, and the queue from the
+        journal. Runs from ``__init__`` only — no locking needed."""
+        terminals: Dict[str, Dict[str, Any]] = {}
+        submits: List[Dict[str, Any]] = []
+        for rec in self._journal.records:
+            if not isinstance(rec, dict):
+                continue
+            if rec.get("kind") == "submit":
+                submits.append(rec)
+            elif rec.get("kind") == "terminal":
+                terminals[rec["job_id"]] = rec
+        # pass 1: restore every job record and its terminal state
+        for rec in submits:
+            jid = rec["job_id"]
+            job = job_codec.decode_job(rec["job"])
+            # recompute the exact key instead of persisting it: key
+            # derivation is deterministic, and recomputing keeps a journal
+            # written under one build honest under the next
+            exact_key = compute_job_keys(self.forge.pipeline, job)[0]
+            sj = ServiceJob(jid, job, rec.get("client") or DEFAULT_CLIENT,
+                            int(rec.get("priority") or 0), exact_key,
+                            attached_to=rec.get("attached_to"),
+                            seq=int(rec.get("seq") or 0))
+            sj.created_s = float(rec.get("created_s") or sj.created_s)
+            term = terminals.get(jid)
+            if term is not None:
+                sj.state = term["state"]
+                sj.report = term.get("report")
+                sj.error = term.get("error")
+                sj.finished_s = term.get("finished_s")
+                if sj.report:
+                    jobs = sj.report.get("jobs") or []
+                    if jobs:    # replay the stage-event buffer: report
+                        # stages are the same StageRecord dicts SSE serves
+                        sj.events = [dict(s)
+                                     for s in jobs[0].get("stages", [])]
+            self._jobs[jid] = sj
+            self._order.append(jid)
+            self._seq = max(self._seq, sj.seq)
+        # pass 2: client counters, dedup attachments, re-enqueue
+        for rec in submits:
+            sj = self._jobs[rec["job_id"]]
+            self._count(sj.client, "submitted")
+            if sj.attached_to is not None:
+                self._count(sj.client, "deduped")
+                primary = self._jobs.get(sj.attached_to)
+                if sj.state not in _TERMINAL and primary is not None \
+                        and primary.state in _TERMINAL:
+                    # crash landed between the primary's terminal record
+                    # and this attachment's: mirror the primary
+                    sj.state = primary.state
+                    sj.report = copy.deepcopy(primary.report)
+                    sj.error = primary.error
+                    sj.finished_s = primary.finished_s
+                    sj.events = [dict(e) for e in primary.events]
+                if sj.state in _TERMINAL:
+                    if sj.state != "cancelled":
+                        self._count(sj.client, "completed"
+                                    if sj.state == "done" else "failed")
+                    continue
+                self._attached.setdefault(sj.attached_to, []).append(sj.id)
+                continue
+            if sj.state in _TERMINAL:
+                if sj.state != "cancelled":
+                    self._count(sj.client, "completed"
+                                if sj.state == "done" else "failed")
+                continue
+            # queued or mid-wave at crash time: both re-enqueue — a wave
+            # with no terminal record never committed, and re-running it
+            # is safe (deterministic engine, warm store makes it cheap)
+            sj.state = "queued"
+            self._inflight_keys[sj.exact_key] = sj.id
+            heapq.heappush(self._heap, (-sj.priority, sj.seq, sj.id))
+            self._requeued_jobs += 1
+        self._recovered_jobs = len(submits)
+
+    def _compaction_records(self) -> List[Dict[str, Any]]:
+        """The minimal record set whose replay reproduces current job
+        state: one submit per job (original order) plus one terminal per
+        finished job."""
+        recs: List[Dict[str, Any]] = []
+        for jid in self._order:
+            sj = self._jobs[jid]
+            recs.append(journal_mod.submit_record(
+                jid, job_codec.encode_job(sj.job), sj.client, sj.priority,
+                sj.seq, sj.created_s, attached_to=sj.attached_to))
+            if sj.state in _TERMINAL:
+                recs.append(journal_mod.terminal_record(
+                    jid, sj.state, sj.report, sj.error,
+                    sj.finished_s or 0.0))
+        return recs
+
+    def journal_stats(self) -> Optional[Dict[str, Any]]:
+        """Journal health for ``/v1/healthz`` and the chaos gate; None
+        when the service runs without a journal."""
+        if self._journal is None:
+            return None
+        s = self._journal.stats()
+        s["jobs_recovered"] = self._recovered_jobs
+        s["jobs_requeued"] = self._requeued_jobs
+        return s
 
     # -- lifecycle -------------------------------------------------------
     def start(self) -> "ForgeService":
@@ -264,7 +415,10 @@ class ForgeService:
         with self._cv:
             self._accepting = False
             self._stopping = True
-            if not drain:
+            # a crashed dispatcher is a simulated dead process: shutdown
+            # is then pure resource teardown — cancelling queued jobs here
+            # would journal state transitions the "dead" process never made
+            if not drain and not self.dispatcher_crashed:
                 while self._heap:
                     _, _, jid = heapq.heappop(self._heap)
                     sj = self._jobs[jid]
@@ -275,6 +429,13 @@ class ForgeService:
         if self._dispatcher is not None:
             self._dispatcher.join(timeout)
         self.forge.close()
+        if self._journal is not None:
+            if not self.dispatcher_crashed:
+                # a crashed dispatcher means the journal — not memory —
+                # is the authoritative state; never compact over it
+                with self._cv:
+                    self._journal.compact(self._compaction_records())
+            self._journal.close()
 
     def shutdown_intake(self) -> None:
         """Stop accepting submissions but keep draining what's queued (the
@@ -325,12 +486,20 @@ class ForgeService:
             jid = f"job-{len(self._jobs):06d}"
             primary_id = self._inflight_keys.get(exact_key)
             if primary_id is not None:
-                # cross-request dedup: attach to the in-flight primary
-                primary = self._jobs[primary_id]
+                # cross-request dedup: attach to the in-flight primary.
+                # The journal append comes before any acknowledgement
+                # (the receipt below IS the 202), so an accepted submit
+                # can never be forgotten by a crash.
                 sj = ServiceJob(jid, job, client, priority, exact_key,
-                                attached_to=primary_id)
+                                attached_to=primary_id, seq=self._seq)
+                if self._journal is not None:
+                    self._journal.append(journal_mod.submit_record(
+                        jid, job_codec.encode_job(job), client, priority,
+                        sj.seq, sj.created_s, attached_to=primary_id))
+                primary = self._jobs[primary_id]
                 sj.state = primary.state
                 sj.started_s = primary.started_s
+                sj._started_m = primary._started_m
                 sj.events = [dict(e) for e in primary.events]
                 self._jobs[jid] = sj
                 self._order.append(jid)
@@ -343,11 +512,19 @@ class ForgeService:
             if depth and len(self._heap) >= depth:
                 self._count(client, "rejected")
                 raise QueueFull(f"queue depth limit {depth} reached")
-            sj = ServiceJob(jid, job, client, priority, exact_key)
+            self._seq += 1
+            sj = ServiceJob(jid, job, client, priority, exact_key,
+                            seq=self._seq)
+            if self._journal is not None:
+                # commit to disk BEFORE the receipt: an InjectedCrash /
+                # real crash here loses a job the client was never told
+                # was accepted — the safe side of the ack boundary
+                self._journal.append(journal_mod.submit_record(
+                    jid, job_codec.encode_job(job), client, priority,
+                    sj.seq, sj.created_s))
             self._jobs[jid] = sj
             self._order.append(jid)
             self._inflight_keys[exact_key] = jid
-            self._seq += 1
             heapq.heappush(self._heap, (-priority, self._seq, jid))
             pos = self._queue_position_locked(jid)
             self._cv.notify_all()
@@ -458,8 +635,8 @@ class ForgeService:
                               if self._jobs[e[2]].state == "queued")
         engine = self.forge.stats.as_dict()
         store_entries = len(self.forge.cache)
-        return {
-            "uptime_s": time.time() - self._started_s,
+        out = {
+            "uptime_s": time.monotonic() - self._started_m,
             "accepting": self._accepting,
             "queue_depth": queue_depth,
             "jobs_total": len(self._jobs),
@@ -477,6 +654,9 @@ class ForgeService:
             },
             "clients": clients,
         }
+        if self._journal is not None:
+            out["journal"] = self.journal_stats()
+        return out
 
     # -- dispatcher ------------------------------------------------------
     def _drain_loop(self):
@@ -485,7 +665,17 @@ class ForgeService:
             if wave is None:
                 return
             if wave:
-                self._run_wave(wave)
+                try:
+                    self._run_wave(wave)
+                except InjectedCrash:
+                    # simulated process death: halt exactly as a killed
+                    # process would — no cleanup, no state repair. The
+                    # journal is now the only authoritative state;
+                    # recovery is ForgeService.recover(journal_path).
+                    with self._cv:
+                        self.dispatcher_crashed = True
+                        self._cv.notify_all()
+                    return
 
     def _next_wave(self) -> Optional[List[ServiceJob]]:
         """Block for queued jobs; pop up to ``wave_size`` in priority order.
@@ -497,6 +687,7 @@ class ForgeService:
                 return None          # stopping and drained
             wave: List[ServiceJob] = []
             now = time.time()
+            now_m = time.monotonic()
             while self._heap and len(wave) < self.service_config.wave_size:
                 _, _, jid = heapq.heappop(self._heap)
                 sj = self._jobs[jid]
@@ -504,18 +695,24 @@ class ForgeService:
                     continue
                 sj.state = "running"
                 sj.started_s = now
+                sj._started_m = now_m
                 for aid in self._attached.get(jid, ()):
                     self._jobs[aid].state = "running"
                     self._jobs[aid].started_s = now
+                    self._jobs[aid]._started_m = now_m
                 wave.append(sj)
             self._cv.notify_all()
             return wave
 
     def _run_wave(self, wave: List[ServiceJob]):
+        plan = self._fault_plan
+        wave_no = plan.next_wave() if plan is not None else 0
         jobs = [sj.job for sj in wave]
         try:
             report = self.forge.optimize_batch(
                 jobs, observer=_WaveObserver(self, wave))
+        except InjectedCrash:
+            raise   # simulated process death, not a job failure
         except Exception:   # noqa: BLE001 — a wave failure must not kill
             tb = traceback.format_exc()     # the dispatcher
             with self._cv:
@@ -523,12 +720,24 @@ class ForgeService:
                     self._finish_locked(sj, "failed", error=tb)
                 self._cv.notify_all()
             return
+        # _finish_locked commits the terminal journal records, so the two
+        # crash points bracket that commit: "before" leaves the wave's
+        # jobs journal-queued (recovery re-runs them), "after" leaves
+        # them journal-done (recovery restores the reports)
+        if plan is not None and plan.should_crash_dispatcher(
+                wave_no, "before-journal"):
+            raise InjectedCrash(
+                f"dispatcher crash before journal commit (wave {wave_no})")
         with self._cv:
             for sj, eres in zip(wave, report.results):
                 per_job = OptimizationReport.from_result(
                     eres, self.forge.config).as_dict()
                 self._finish_locked(sj, "done", report=per_job)
             self._cv.notify_all()
+        if plan is not None and plan.should_crash_dispatcher(
+                wave_no, "after-journal"):
+            raise InjectedCrash(
+                f"dispatcher crash after journal commit (wave {wave_no})")
 
     def _finish_locked(self, sj: ServiceJob, state: str,
                        report: Optional[Dict[str, Any]] = None,
@@ -537,14 +746,21 @@ class ForgeService:
         state. Attached jobs get a deep copy of the report — identical
         content, no shared mutable aliasing between tenants."""
         now = time.time()
+        now_m = time.monotonic()
         stat = "completed" if state == "done" else "failed"
         for target in [sj] + [self._jobs[a]
                               for a in self._attached.pop(sj.id, ())]:
             target.state = state
             target.finished_s = now
+            target._finished_m = now_m
             target.error = error
             target.report = (None if report is None
                              else copy.deepcopy(report))
             if state != "cancelled":
                 self._count(target.client, stat)
+            if self._journal is not None:
+                # one terminal record per target (attached included), so
+                # recovery restores each job's outcome independently
+                self._journal.append(journal_mod.terminal_record(
+                    target.id, state, target.report, error, now))
         self._inflight_keys.pop(sj.exact_key, None)

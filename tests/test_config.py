@@ -37,6 +37,9 @@ ALT_VALUES = {
     "fleet_connect_timeout_s": 30.0,
     "fleet_heartbeat_s": 1.0,
     "fleet_heartbeat_timeout_s": 5.0,
+    "fleet_max_respawns": 1,
+    "fleet_journal_path": "/tmp/fleet.wal",
+    "fault_spec": '{"kill_worker_after_jobs":1}',
 }
 
 
@@ -66,7 +69,8 @@ def test_operational_fields_do_not_change_signature():
         "dump_dir", "verify_fastpath", "shared_verify_cache_bytes",
         "batch_exec_planning", "fleet_address", "fleet_spawn_workers",
         "fleet_connect_timeout_s", "fleet_heartbeat_s",
-        "fleet_heartbeat_timeout_s"}
+        "fleet_heartbeat_timeout_s", "fleet_max_respawns",
+        "fleet_journal_path", "fault_spec"}
     for f in ForgeConfig.operational_fields():
         changed = base.replace(**{f.name: ALT_VALUES[f.name]})
         assert changed.policy_signature() == base.policy_signature(), f.name

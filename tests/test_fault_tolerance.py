@@ -120,3 +120,156 @@ def test_elastic_restore_different_structure_dtype(tmp_path):
     restored, step = mgr.restore(like)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------
+# Durable Forge service: journaled submits survive a dispatcher crash
+# and a restarted service resumes them — exactly once
+# ----------------------------------------------------------------------
+
+import json as _json
+import time as _time
+
+from repro.aibench import build_program, load_specs
+from repro.core.config import ForgeConfig
+from repro.core.engine import KernelJob
+from repro.core.faults import FaultPlan
+from repro.serve.service import ForgeService, ServiceConfig
+
+_SPECS = {s.name: s for s in load_specs()}
+_NAMES = sorted(_SPECS)
+_CONFIG = ForgeConfig(max_iterations=1)
+
+
+def _kernel_job(name):
+    s = _SPECS[name]
+    return KernelJob(s.name,
+                     build_program(s.builder, s.dims("ci"), "naive",
+                                   meta=s.meta),
+                     build_program(s.builder, s.dims("bench"), "naive",
+                                   meta=s.meta),
+                     tags=tuple(s.tags), target_dtype=s.target_dtype,
+                     rtol=s.rtol, atol=s.atol, meta=dict(s.meta))
+
+
+def _crash_service(journal, plan, submits):
+    """Run a service against *journal* with *plan* armed, submit the
+    given (name, client) pairs, wait for the injected dispatcher crash,
+    and tear down the dead process. Returns the receipts."""
+    svc = ForgeService(_CONFIG,
+                       service_config=ServiceConfig(wave_size=1),
+                       journal_path=str(journal), fault_plan=plan)
+    receipts = [svc.submit_job(_kernel_job(name), client=client)
+                for name, client in submits]
+    deadline = _time.monotonic() + 300
+    while not svc.dispatcher_crashed:
+        assert _time.monotonic() < deadline, "dispatcher never crashed"
+        _time.sleep(0.05)
+    svc.shutdown(drain=False)
+    return receipts
+
+
+def test_service_crash_restart_recovers_every_job_exactly_once(tmp_path):
+    """Crash before the wave's terminal journal commit: the journal still
+    says "queued", so a restarted service re-runs every job — each
+    exactly once, in the original order, ending done with a report."""
+    journal = tmp_path / "svc.wal"
+    plan = FaultPlan(crash_dispatcher_wave=1,
+                     crash_dispatcher_point="before-journal")
+    receipts = _crash_service(journal, plan,
+                              [(_NAMES[0], "t-a"), (_NAMES[1], "t-b")])
+    assert plan.fired.get("crash_dispatcher:before-journal") == 1
+
+    svc2 = ForgeService.recover(str(journal), config=_CONFIG,
+                                service_config=ServiceConfig(wave_size=1))
+    try:
+        js = svc2.journal_stats()
+        assert js["jobs_recovered"] == 2 and js["jobs_requeued"] == 2
+        statuses = [svc2.wait(r["job_id"], timeout=300) for r in receipts]
+        for st, (name, client) in zip(statuses,
+                                      [(_NAMES[0], "t-a"),
+                                       (_NAMES[1], "t-b")]):
+            assert st["state"] == "done"
+            assert st["name"] == name and st["client"] == client
+            assert st["report"] is not None
+            assert st["events"] == len(st["report"]["jobs"][0]["stages"])
+        # exactly once: the recovered service's engine ran 2 jobs — no
+        # job was lost, none ran twice
+        assert svc2.forge.stats.jobs == 2
+    finally:
+        svc2.shutdown(drain=True)
+
+
+def test_service_crash_after_journal_restores_done_without_rerun(tmp_path):
+    """Crash after the terminal commit: wave 1's job is journal-done, so
+    recovery restores its report without re-running it; only the still-
+    queued job re-executes."""
+    journal = tmp_path / "svc.wal"
+    plan = FaultPlan(crash_dispatcher_wave=1,
+                     crash_dispatcher_point="after-journal")
+    receipts = _crash_service(journal, plan,
+                              [(_NAMES[0], "t-a"), (_NAMES[1], "t-a")])
+
+    svc2 = ForgeService.recover(str(journal), config=_CONFIG,
+                                service_config=ServiceConfig(wave_size=1))
+    try:
+        js = svc2.journal_stats()
+        assert js["jobs_recovered"] == 2 and js["jobs_requeued"] == 1
+        first = svc2.status(receipts[0]["job_id"])
+        assert first["state"] == "done"          # served from the journal
+        assert first["report"] is not None
+        second = svc2.wait(receipts[1]["job_id"], timeout=300)
+        assert second["state"] == "done"
+        assert svc2.forge.stats.jobs == 1        # ONLY the queued job ran
+    finally:
+        svc2.shutdown(drain=True)
+
+
+def test_service_recovery_preserves_dedup_attachment(tmp_path):
+    """A deduped (attached) submission journals its attachment and, after
+    recovery, mirrors the primary's report — the engine still runs the
+    shared job once."""
+    journal = tmp_path / "svc.wal"
+    plan = FaultPlan(crash_dispatcher_wave=1,
+                     crash_dispatcher_point="before-journal")
+    receipts = _crash_service(
+        journal, plan,
+        [(_NAMES[0], "t-a"), (_NAMES[0], "t-b"), (_NAMES[1], "t-a")])
+    assert receipts[1]["deduped"] is True
+    assert receipts[1]["attached_to"] == receipts[0]["job_id"]
+
+    svc2 = ForgeService.recover(str(journal), config=_CONFIG,
+                                service_config=ServiceConfig(wave_size=1))
+    try:
+        js = svc2.journal_stats()
+        # 3 jobs recovered; 2 primaries requeued (the attachment rides
+        # its primary rather than queueing)
+        assert js["jobs_recovered"] == 3 and js["jobs_requeued"] == 2
+        s_primary = svc2.wait(receipts[0]["job_id"], timeout=300)
+        s_attached = svc2.wait(receipts[1]["job_id"], timeout=300)
+        s_other = svc2.wait(receipts[2]["job_id"], timeout=300)
+        assert {s_primary["state"], s_attached["state"],
+                s_other["state"]} == {"done"}
+        assert (_json.dumps(s_primary["report"], sort_keys=True)
+                == _json.dumps(s_attached["report"], sort_keys=True))
+        assert svc2.forge.stats.jobs == 2        # dedup held through crash
+    finally:
+        svc2.shutdown(drain=True)
+
+
+def test_service_monotonic_durations(tmp_path):
+    """wait_s / run_s come from the monotonic clock and survive into the
+    status dict; wall-clock timestamps remain for display."""
+    svc = ForgeService(_CONFIG,
+                       journal_path=str(tmp_path / "svc.wal"))
+    try:
+        r = svc.submit_job(_kernel_job(_NAMES[0]), client="t-a")
+        st = svc.wait(r["job_id"], timeout=300)
+        assert st["wait_s"] is not None and st["wait_s"] >= 0.0
+        assert st["run_s"] is not None and st["run_s"] > 0.0
+        assert st["created_s"] > 1e9             # wall clock, for display
+        stats = svc.stats()
+        assert stats["uptime_s"] >= 0.0
+        assert stats["journal"]["records"] >= 2  # submit + terminal
+    finally:
+        svc.shutdown(drain=True)

@@ -348,3 +348,70 @@ def test_rate_limited_exception_carries_retry_hint():
     stats = svc.stats()
     assert stats["clients"]["t"]["rate_limited"] == 1
     svc.shutdown(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# client 429 retry (opt-in) + journal-aware healthz
+# ---------------------------------------------------------------------------
+
+
+def test_client_retry_on_rate_limit_honors_retry_after():
+    service = ForgeService(
+        CONFIG, autostart=False,
+        service_config=ServiceConfig(rate_per_sec=5.0, burst=1))
+    server = ForgeServiceServer(("127.0.0.1", 0), service)
+    server.serve_background()
+    try:
+        wire = encode_job(_job(_NAMES[2]))
+        # default client: no retry — the second submit raises 429
+        plain = ForgeClient(server.url, api_key="bucket-a")
+        plain.submit_wire(wire)
+        with pytest.raises(ServiceError) as ei:
+            plain.submit_wire(wire)
+        assert ei.value.status == 429
+
+        # opt-in client: sleeps out the server's Retry-After and succeeds
+        patient = ForgeClient(server.url, api_key="bucket-b",
+                              retry_on_rate_limit=True)
+        patient.submit_wire(wire)
+        receipt = patient.submit_wire(wire)     # 429 -> wait -> attach
+        assert receipt["job_id"]
+
+        # bounded: zero retries allowed means the 429 surfaces unchanged
+        bounded = ForgeClient(server.url, api_key="bucket-c",
+                              retry_on_rate_limit=True,
+                              rate_limit_retries=0)
+        bounded.submit_wire(wire)
+        with pytest.raises(ServiceError) as ei:
+            bounded.submit_wire(wire)
+        assert ei.value.status == 429
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.forge.close()
+
+
+def test_healthz_reports_journal_when_configured(tmp_path):
+    service = ForgeService(CONFIG, autostart=False,
+                           journal_path=str(tmp_path / "svc.wal"))
+    server = ForgeServiceServer(("127.0.0.1", 0), service)
+    server.serve_background()
+    try:
+        client = ForgeClient(server.url)
+        health = client.healthz()
+        assert health["ok"] is True and health["accepting"] is True
+        assert health["journal"]["path"].endswith("svc.wal")
+        assert health["journal"]["jobs_requeued"] == 0
+        stats = client.stats()
+        assert stats["journal"]["records"] == 0
+    finally:
+        server.shutdown()
+        server.server_close()
+        service.forge.close()
+        service._journal.close()
+
+
+def test_status_dict_has_monotonic_durations(served):
+    s1, _ = served["statuses"]
+    assert s1["wait_s"] is not None and s1["wait_s"] >= 0.0
+    assert s1["run_s"] is not None and s1["run_s"] > 0.0

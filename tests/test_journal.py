@@ -1,0 +1,229 @@
+"""Journal durability contract: tuple-fidelity round-trips, torn-tail
+truncation, typed corruption refusal, atomic compaction, and the
+FaultPlan torn-write injection that drives the chaos gate."""
+
+import os
+import struct
+
+import pytest
+
+from repro.core.faults import FaultPlan, InjectedCrash, deterministic_backoff
+from repro.core.journal import (Journal, JournalCorruption, JournalError,
+                                JOURNAL_MAGIC, complete_record,
+                                dispatch_record, submit_record,
+                                terminal_record, wave_record)
+
+_REC = struct.Struct(">II")
+_HEADER_SIZE = struct.calcsize(">8sII")
+
+
+def _records(n=4):
+    """A representative mix: nested dicts, tuples (fleet task shape),
+    None, floats — everything the tuple-tagging codec must preserve."""
+    return [
+        submit_record("job-%06d" % i, {"name": f"k{i}", "v": 3},
+                      client=f"tenant-{i % 2}", priority=i, seq=i,
+                      created_s=1000.0 + i,
+                      attached_to=None if i % 2 else "job-000000")
+        for i in range(n)
+    ] + [dispatch_record(7, ("job", 2, {"w": 1}, "ek", "fk", None,
+                             None, [1, 2], None)),
+         wave_record(7, 3), complete_record(7, 2),
+         terminal_record("job-000001", "done", report={"jobs": []},
+                         finished_s=2000.0)]
+
+
+def test_roundtrip_preserves_tuples(tmp_path):
+    path = str(tmp_path / "a.wal")
+    j = Journal(path)
+    for rec in _records():
+        j.append(rec)
+    j.close()
+
+    j2 = Journal(path)
+    assert j2.records == _records()
+    # tuple fidelity: the fleet task tuple came back a tuple, not a list
+    task = j2.records[4]["task"]
+    assert isinstance(task, tuple) and task[0] == "job"
+    assert isinstance(task[7], list)
+    assert j2.recovered == len(_records()) and not j2.truncated_tail
+    j2.close()
+
+
+def test_torn_final_record_truncated_and_tolerated(tmp_path):
+    path = str(tmp_path / "torn.wal")
+    j = Journal(path)
+    for rec in _records(2):
+        j.append(rec)
+    j.close()
+    intact_size = os.path.getsize(path)
+    # simulate power loss mid-append: half a record at the tail
+    with open(path, "ab") as fh:
+        fh.write(_REC.pack(1000, 0) + b"x" * 7)
+
+    j2 = Journal(path)
+    assert j2.truncated_tail is True
+    assert j2.records == _records(2)        # only the torn append lost
+    assert os.path.getsize(path) == intact_size   # file healed in place
+    j2.append({"kind": "after", "ok": True})      # and appendable again
+    j2.close()
+    assert Journal.load(path)[-1] == {"kind": "after", "ok": True}
+
+
+def test_final_record_bad_crc_is_torn_tail(tmp_path):
+    """A full-length final record with a CRC mismatch is still a torn
+    tail (the bytes landed, the fsync didn't) — truncated, not fatal."""
+    path = str(tmp_path / "crc_tail.wal")
+    j = Journal(path)
+    for rec in _records(3):
+        j.append(rec)
+    j.close()
+    with open(path, "ab") as fh:
+        fh.write(_REC.pack(4, 12345) + b"hmm!")     # wrong crc, full length
+
+    j2 = Journal(path)
+    assert j2.truncated_tail is True
+    assert j2.records == _records(3)
+    j2.close()
+
+
+def test_mid_file_crc_corruption_raises_typed_error(tmp_path):
+    path = str(tmp_path / "rot.wal")
+    j = Journal(path)
+    for rec in _records():
+        j.append(rec)
+    j.close()
+    # flip one payload byte of the FIRST record: committed records follow
+    # it, so this is bit rot, never a torn tail
+    with open(path, "r+b") as fh:
+        fh.seek(_HEADER_SIZE + _REC.size + 2)
+        byte = fh.read(1)
+        fh.seek(-1, os.SEEK_CUR)
+        fh.write(bytes([byte[0] ^ 0xFF]))
+
+    with pytest.raises(JournalCorruption):
+        Journal(path)
+    with pytest.raises(JournalCorruption):
+        Journal.load(path)
+
+
+def test_bad_magic_raises_journal_error(tmp_path):
+    path = str(tmp_path / "not_a_journal.wal")
+    with open(path, "wb") as fh:
+        fh.write(b"NOTMAGIC" + b"\0" * 24)
+    with pytest.raises(JournalError):
+        Journal(path)
+
+
+def test_unsupported_version_raises(tmp_path):
+    path = str(tmp_path / "future.wal")
+    with open(path, "wb") as fh:
+        fh.write(struct.pack(">8sII", JOURNAL_MAGIC, 999, 0))
+    with pytest.raises(JournalError):
+        Journal(path)
+
+
+def test_compaction_preserves_byte_equivalent_replay(tmp_path):
+    """Compacting to the live records must replay identically to the
+    append-built journal — byte-for-byte identical files, in fact, since
+    both are header + the same canonical encodings."""
+    path_a = str(tmp_path / "appended.wal")
+    path_b = str(tmp_path / "compacted.wal")
+    recs = _records()
+    ja = Journal(path_a)
+    for rec in recs:
+        ja.append(rec)
+    ja.close()
+
+    jb = Journal(path_b)
+    jb.append({"kind": "noise", "n": 1})        # superseded history
+    jb.append({"kind": "noise", "n": 2})
+    jb.compact(recs)
+    assert jb.records == recs                   # live view swapped too
+    jb.append({"kind": "post", "p": 1})         # handle survives compact
+    jb.close()
+
+    with open(path_a, "rb") as fh:
+        bytes_a = fh.read()
+    with open(path_b, "rb") as fh:
+        bytes_b = fh.read()
+    assert bytes_b.startswith(bytes_a)          # same prefix, byte-exact
+    assert Journal.load(path_b) == recs + [{"kind": "post", "p": 1}]
+    assert not os.path.exists(path_b + ".tmp")  # no debris
+
+
+def test_fault_plan_torn_write_injection(tmp_path):
+    path = str(tmp_path / "inject.wal")
+    plan = FaultPlan(torn_write_record=3)
+    j = Journal(path, fault_plan=plan)
+    j.append({"kind": "a", "n": 1})
+    j.append({"kind": "b", "n": 2})
+    with pytest.raises(InjectedCrash):
+        j.append({"kind": "c", "n": 3})         # torn mid-write
+    j.close()
+    assert plan.fired.get("torn_write") == 1
+
+    # recovery: the torn third append is truncated away, first two intact
+    j2 = Journal(path)
+    assert j2.truncated_tail is True
+    assert j2.records == [{"kind": "a", "n": 1}, {"kind": "b", "n": 2}]
+    j2.close()
+
+
+def test_torn_header_means_fresh_journal(tmp_path):
+    """A crash during file creation (partial header, nothing committed)
+    starts clean instead of refusing."""
+    path = str(tmp_path / "stub.wal")
+    with open(path, "wb") as fh:
+        fh.write(JOURNAL_MAGIC[:5])
+    j = Journal(path)
+    assert j.records == [] and j.truncated_tail is True
+    j.append({"kind": "first"})
+    j.close()
+    assert Journal.load(path) == [{"kind": "first"}]
+
+
+def test_load_is_readonly(tmp_path):
+    """Journal.load never truncates — safe on a file another process
+    owns, even with a torn tail present."""
+    path = str(tmp_path / "ro.wal")
+    j = Journal(path)
+    j.append({"kind": "x"})
+    j.close()
+    with open(path, "ab") as fh:
+        fh.write(b"\x00\x01\x02")               # torn tail
+    size_before = os.path.getsize(path)
+    assert Journal.load(path) == [{"kind": "x"}]
+    assert os.path.getsize(path) == size_before
+
+
+def test_sync_false_appends_still_replay(tmp_path):
+    path = str(tmp_path / "nosync.wal")
+    j = Journal(path)
+    j.append(complete_record(1, 0), sync=False)
+    j.append(complete_record(1, 1), sync=False)
+    j.close()
+    assert Journal.load(path) == [complete_record(1, 0),
+                                  complete_record(1, 1)]
+
+
+def test_fault_plan_json_roundtrip():
+    plan = FaultPlan(seed=7, kill_worker_after_jobs=2, worker_index=1,
+                     crash_dispatcher_wave=3,
+                     crash_dispatcher_point="after-journal",
+                     torn_write_record=5)
+    again = FaultPlan.from_json(plan.to_json())
+    assert again.to_dict() == plan.to_dict()
+    with pytest.raises(ValueError):
+        FaultPlan.from_json('{"no_such_field": 1}')
+    with pytest.raises(ValueError):
+        FaultPlan(crash_dispatcher_point="sideways")
+
+
+def test_deterministic_backoff_shared_schedule():
+    """Reproducible, capped, and desynchronized across keys — the one
+    schedule every retry loop in the stack now shares."""
+    a = [deterministic_backoff("k1", n) for n in range(12)]
+    assert a == [deterministic_backoff("k1", n) for n in range(12)]
+    assert all(0 < s <= 2.0 for s in a)
+    assert a[6:] != [deterministic_backoff("k2", n) for n in range(12)][6:]

@@ -422,3 +422,120 @@ def test_stream_interrupted_is_typed():
     assert exc.job_id == "j-1"
     assert exc.events_seen == 3
     assert "j-1" in str(exc)
+
+
+# ----------------------------------------------------------------------
+# durability: fault-plan worker kill + auto-respawn, coordinator journal
+# recovery, worker --reconnect
+# ----------------------------------------------------------------------
+
+
+def test_fault_plan_kill_respawn_byte_equivalent(serial_report):
+    """FaultPlan generalization of --die-after, threaded through
+    ForgeConfig.fault_spec: spawned worker 0 dies on its first job; the
+    coordinator re-dispatches AND auto-respawns a replacement (without
+    the fault plan — it must not re-die), and the report stays
+    byte-equivalent to the serial reference."""
+    from repro.core.faults import FaultPlan
+    plan = FaultPlan(kill_worker_after_jobs=0, worker_index=0)
+    cfg = ForgeConfig(execution_backend="remote", workers=2,
+                      fleet_heartbeat_s=0.5, fleet_heartbeat_timeout_s=3.0,
+                      fault_spec=plan.to_json(), fleet_max_respawns=2)
+    forge = Forge(cfg)
+    try:
+        report = forge.optimize_batch(_jobs())
+        fleet = forge.engine._get_executor().fleet
+        deadline = time.monotonic() + 30
+        while (fleet.workers_respawned < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.05)
+        tel = fleet.telemetry()
+        assert tel["workers_lost"] >= 1
+        assert tel["tasks_redispatched"] >= 1
+        assert tel["workers_respawned"] >= 1
+        assert _comparable(report) == _comparable(serial_report)
+    finally:
+        forge.close()
+
+
+def test_drop_frame_fault_severs_and_redispatches():
+    """drop_frame_after: the fault worker severs its socket instead of
+    sending event frame 1 — the coordinator sees EOF and re-dispatches,
+    and every keys task still completes."""
+    from repro.core.faults import FaultPlan
+    cfg = ForgeConfig()
+    pipeline = ForgePipeline.from_config(cfg)
+    plan = FaultPlan(drop_frame_after=1, worker_index=0)
+    coord = FleetCoordinator(pipeline, cfg, spawn_workers=2,
+                             fault_plan=plan).start()
+    try:
+        coord.wait_for_workers(2, timeout=120)
+        wires = [job_codec.encode_job(_job(n))
+                 for n in sorted(SPECS)[:3]]
+        out = coord.run_tasks([("keys", i, w) for i, w in enumerate(wires)])
+        assert sorted(out) == [0, 1, 2]
+        # the fault fires inside the worker subprocess (its own FaultPlan
+        # copy), so the coordinator-side evidence is the loss+redispatch
+        assert coord.workers_lost >= 1
+        assert coord.tasks_redispatched >= 1
+    finally:
+        coord.close(graceful=True)
+
+
+def test_coordinator_journal_recovery_resumes_pending(tmp_path):
+    """Crash the coordinator mid-wave (after its first journaled
+    completion): a successor opening the same journal recovers the
+    dispatched-but-incomplete tasks and resume_pending() re-runs exactly
+    those."""
+    from repro.core.faults import FaultPlan, InjectedCrash
+    cfg = ForgeConfig()
+    pipeline = ForgePipeline.from_config(cfg)
+    journal = str(tmp_path / "fleet.wal")
+    plan = FaultPlan(crash_coordinator_after_completions=1)
+    coord = FleetCoordinator(pipeline, cfg, spawn_workers=2,
+                             fault_plan=plan, journal_path=journal).start()
+    wires = [job_codec.encode_job(_job(n)) for n in sorted(SPECS)[:3]]
+    tasks = [("keys", i, w) for i, w in enumerate(wires)]
+    try:
+        coord.wait_for_workers(2, timeout=120)
+        with pytest.raises(InjectedCrash):
+            coord.run_tasks(tasks)
+        assert plan.fired.get("crash_coordinator") == 1
+    finally:
+        coord.close(graceful=False)
+
+    coord2 = FleetCoordinator(pipeline, cfg, spawn_workers=2,
+                              journal_path=journal).start()
+    try:
+        # both workers held a dispatched task; one completion was
+        # journaled before the crash — the other must be recovered
+        assert coord2.tasks_recovered >= 1
+        coord2.wait_for_workers(1, timeout=120)
+        recovered = coord2.resume_pending()
+        assert len(recovered) == coord2.tasks_recovered
+        assert set(recovered) <= {0, 1, 2}
+        assert coord2.resume_pending() == {}    # one-shot
+        # resumed payloads are real keys results, not journal echoes
+        for payload in recovered.values():
+            assert len(tuple(payload)) >= 2
+    finally:
+        coord2.close(graceful=True)
+
+
+def test_worker_reconnect_retries_transport_loss_only():
+    """--reconnect N retries connection loss (exit 4) with deterministic
+    backoff, N times, then gives up with the same exit code."""
+    # grab a port nothing listens on
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]
+    probe.close()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(SRC) + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else str(SRC))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.remote_worker",
+         "--connect", f"127.0.0.1:{port}", "--reconnect", "2"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 4
+    assert proc.stderr.count("reconnect") == 2
